@@ -1,0 +1,58 @@
+//! Run Algorithm 1 (the LP-based configuration search) for every paper
+//! evaluation point and print the chosen micro-batch count, delay ratio α,
+//! and storage ratios — the configurations Figure 10 is driven by.
+//!
+//!     cargo run --release --example config_search
+
+use greedysnake::lp::find_optimal_config;
+use greedysnake::machine::{MACHINE1_A5000, MACHINE2_A100};
+use greedysnake::modelcfg::{GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
+use greedysnake::perfmodel::SystemParams;
+use greedysnake::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let points = [
+        ("GPT-30B", GPT_30B, MACHINE1_A5000, 1u64),
+        ("GPT-30B", GPT_30B, MACHINE1_A5000, 4),
+        ("GPT-65B", GPT_65B, MACHINE1_A5000, 1),
+        ("GPT-65B", GPT_65B, MACHINE2_A100, 1),
+        ("GPT-65B", GPT_65B, MACHINE2_A100, 4),
+        ("GPT-175B", GPT_175B, MACHINE2_A100, 1),
+    ];
+    let mut t = Table::new(
+        "Algorithm 1 — optimal configurations per evaluation point",
+        &["model", "machine", "gpus", "M*", "alpha*", "ckpt/param/opt CPU", "tokens/s"],
+    );
+    for (name, model, machine, gpus) in points {
+        let sp = SystemParams::new(machine.with_gpus(gpus), model, 2, SEQ_LEN);
+        match find_optimal_config(&sp) {
+            Some(b) => {
+                t.row(&[
+                    name.into(),
+                    machine.name.into(),
+                    gpus.to_string(),
+                    b.m.to_string(),
+                    format!("{:.2}", b.alpha),
+                    format!(
+                        "{:.2}/{:.2}/{:.2}",
+                        b.ratios.ckpt_cpu, b.ratios.param_cpu, b.ratios.opt_cpu
+                    ),
+                    format!("{:.0}", b.tokens_per_s),
+                ]);
+            }
+            None => {
+                t.row(&[
+                    name.into(),
+                    machine.name.into(),
+                    gpus.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "infeasible".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.emit(Some("bench_out/config_search.tsv"));
+    Ok(())
+}

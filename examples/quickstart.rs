@@ -1,0 +1,36 @@
+//! Quickstart: train the tiny preset for 20 iterations with the GreedySnake
+//! vertical scheduler and watch the loss drop.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use greedysnake::coordinator::TrainerConfig;
+use greedysnake::runtime::Manifest;
+use greedysnake::trainer::{train, ScheduleKind};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts/tiny")?;
+    println!(
+        "model: {} layers × {} hidden, {} params total",
+        manifest.config.n_layers,
+        manifest.config.hidden,
+        manifest.total_numel()
+    );
+    let cfg = TrainerConfig {
+        alpha: 0.25,     // delay a quarter of every optimizer step into the next forward
+        opt_on_ssd: true, // optimizer states round-trip through the (file-backed) SSD tier
+        ..Default::default()
+    };
+    let shape = manifest.config;
+    let log = train(manifest, cfg, ScheduleKind::Vertical, 20, 4, 5)?;
+    let tokens_per_step = 4 * shape.micro_batch * shape.seq_len;
+    println!(
+        "\nloss {:.3} -> {:.3} over {} steps ({:.0} tokens/s)",
+        log.losses[0],
+        log.final_loss(),
+        log.losses.len(),
+        log.tokens_per_s(tokens_per_step),
+    );
+    assert!(log.final_loss() < log.losses[0], "training must reduce loss");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT bridge: lower every Layer-2 stage to HLO *text* + a manifest for Rust.
+
+Run once at build time (`make artifacts`); Python never runs on the training
+path. The interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` crate) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids, so text round-trips cleanly.
+
+Usage:
+    python -m compile.aot --preset tiny --out-dir ../artifacts/tiny
+    python -m compile.aot --preset e2e  --out-dir ../artifacts/e2e
+
+Each preset directory receives one `<stage>.hlo.txt` per stage plus
+`manifest.json` describing shapes, the parameter calling convention, and
+initialization — everything the Rust runtime needs to allocate, initialize,
+chunk, and offload the training state without importing Python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import adam as adam_kernel
+
+PRESETS: dict[str, model.ModelConfig] = {
+    # Fast preset for unit/integration tests and the quickstart example.
+    "tiny": model.ModelConfig(micro_batch=2, seq_len=32, hidden=64, n_heads=4,
+                              vocab=256, n_layers=2, adam_chunk=1 << 14),
+    # ~10M params — CI-sized end-to-end runs.
+    "small": model.ModelConfig(micro_batch=2, seq_len=64, hidden=256, n_heads=8,
+                               vocab=4096, n_layers=4, adam_chunk=1 << 18),
+    # ~100M params — the EXPERIMENTS.md end-to-end training run (GPT-2-small
+    # scale: D=768, L=12, H=12; vocab 16k, seq 128).
+    "e2e": model.ModelConfig(micro_batch=2, seq_len=128, hidden=768, n_heads=12,
+                             vocab=16384, n_layers=12, adam_chunk=1 << 20),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_stages(cfg: model.ModelConfig) -> dict[str, str]:
+    """Lower every stage for `cfg`; returns {stage_name: hlo_text}."""
+    b, t, d, v = cfg.micro_batch, cfg.seq_len, cfg.hidden, cfg.vocab
+    act = _spec((b, t, d))
+    tok = _spec((b, t), jnp.int32)
+    pspecs = [_spec(s) for _, s in cfg.layer_param_shapes()]
+
+    def layer_fwd_fn(x, *params):
+        return (model.block_fwd(x, params, cfg),)
+
+    def layer_bwd_fn(x_ckpt, dy, *params):
+        return model.block_bwd(x_ckpt, dy, params, cfg)
+
+    def embed_fwd_fn(tokens, wte, wpe):
+        return (model.embed_fwd(tokens, wte, wpe),)
+
+    def embed_bwd_fn(tokens, dx):
+        return model.embed_bwd(tokens, dx, v)
+
+    def head_loss_fn(x, lnf_w, lnf_b, wte, targets):
+        return model.head_loss(x, lnf_w, lnf_b, wte, targets)
+
+    def adam_fn(p, m, vv, g, hyper):
+        return adam_kernel.adam_step(p, m, vv, g, hyper)
+
+    chunk = _spec((cfg.adam_chunk,))
+    stages = {
+        "embed_fwd": jax.jit(embed_fwd_fn, keep_unused=True).lower(tok, _spec((v, d)), _spec((t, d))),
+        "layer_fwd": jax.jit(layer_fwd_fn, keep_unused=True).lower(act, *pspecs),
+        "layer_bwd": jax.jit(layer_bwd_fn, keep_unused=True).lower(act, act, *pspecs),
+        "head_loss": jax.jit(head_loss_fn, keep_unused=True).lower(
+            act, _spec((d,)), _spec((d,)), _spec((v, d)), tok),
+        "embed_bwd": jax.jit(embed_bwd_fn, keep_unused=True).lower(tok, act),
+        "adam_step": jax.jit(adam_fn, keep_unused=True).lower(chunk, chunk, chunk, chunk, _spec((8,))),
+    }
+    return {name: to_hlo_text(lowered) for name, lowered in stages.items()}
+
+
+def _init_kind(name: str) -> str:
+    """Initialization class per tensor name (GPT-2 scheme)."""
+    if name.endswith("_b") or name in ("lnf_b",) or name.startswith("b_"):
+        return "zeros"
+    if name in ("ln1_w", "ln2_w", "lnf_w"):
+        return "ones"
+    if name in ("w_o", "w_fc2"):
+        return "normal_residual"  # std 0.02 / sqrt(2 L)
+    return "normal"  # std 0.02
+
+
+def build_manifest(cfg: model.ModelConfig, preset: str,
+                   artifacts: dict[str, str]) -> dict:
+    layer_params = [
+        {"name": n, "shape": list(s), "numel": int(functools.reduce(lambda a, b: a * b, s, 1)),
+         "init": _init_kind(n)}
+        for n, s in cfg.layer_param_shapes()
+    ]
+    embed_params = [
+        {"name": "wte", "shape": [cfg.vocab, cfg.hidden],
+         "numel": cfg.vocab * cfg.hidden, "init": "normal"},
+        {"name": "wpe", "shape": [cfg.seq_len, cfg.hidden],
+         "numel": cfg.seq_len * cfg.hidden, "init": "normal_pos"},
+    ]
+    head_params = [
+        {"name": "lnf_w", "shape": [cfg.hidden], "numel": cfg.hidden, "init": "ones"},
+        {"name": "lnf_b", "shape": [cfg.hidden], "numel": cfg.hidden, "init": "zeros"},
+    ]
+    return {
+        "preset": preset,
+        "config": {
+            "micro_batch": cfg.micro_batch,
+            "seq_len": cfg.seq_len,
+            "hidden": cfg.hidden,
+            "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab,
+            "n_layers": cfg.n_layers,
+            "ffn_mult": cfg.ffn_mult,
+            "adam_chunk": cfg.adam_chunk,
+        },
+        "artifacts": {name: f"{name}.hlo.txt" for name in artifacts},
+        "layer_params": layer_params,
+        "embed_params": embed_params,
+        "head_params": head_params,
+        "calling_convention": {
+            "embed_fwd": "(tokens i32[B,T], wte[V,D], wpe[T,D]) -> (x[B,T,D],)",
+            "layer_fwd": "(x[B,T,D], p0..p11) -> (y[B,T,D],)",
+            "layer_bwd": "(x_ckpt[B,T,D], dy[B,T,D], p0..p11) -> (dx, dp0..dp11)",
+            "head_loss": "(x, lnf_w, lnf_b, wte, targets) -> (loss, dx, dlnf_w, dlnf_b, dwte)",
+            "embed_bwd": "(tokens, dx) -> (dwte, dwpe)",
+            "adam_step": "(p[C], m[C], v[C], g[C], hyper[8]) -> (p', m', v')",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--out-dir", default=None,
+                    help="default: ../artifacts/<preset>")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    out_dir = args.out_dir or os.path.join("..", "artifacts", args.preset)
+    os.makedirs(out_dir, exist_ok=True)
+
+    texts = build_stages(cfg)
+    for name, text in texts.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+    manifest = build_manifest(cfg, args.preset, texts)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Layer-1 Pallas kernel: fused causal flash attention (online softmax).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA flash-attention
+schedule — one threadblock per (head, q-tile), K/V streamed through SRAM — is
+re-expressed for the TPU model. The grid is (batch·heads, q-blocks); each
+program holds one q tile in VMEM (via BlockSpec) and streams K/V tiles with an
+online-softmax accumulator in registers/VMEM scratch. QKᵀ and PV are MXU
+matmuls with fp32 `preferred_element_type` accumulation.
+
+The kernel is lowered with `interpret=True` so the emitted HLO runs on any
+PJRT backend (the repo's Rust CPU runtime). A `jax.custom_vjp` attaches the
+standard flash-attention backward (recomputing P from the saved logsumexp) so
+Layer-2's `jax.vjp` can differentiate straight through the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() NaN-free on fully masked rows
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int,
+                      scale: float, causal: bool, seq_len: int):
+    """One (bh, q-block) program: stream K/V tiles, online softmax."""
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :].astype(jnp.float32)  # (block_q, d) tile resident in VMEM
+
+    num_kb = seq_len // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        # MXU contraction, fp32 accumulate.
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+
+    o_ref[0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0, :] = (m + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def _flash_fwd(q, k, v, *, block_q: int, block_k: int, scale: float, causal: bool):
+    bh, t, d = q.shape
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    grid = (bh, t // block_q)
+    kernel = functools.partial(_flash_fwd_kernel, block_k=block_k, scale=scale,
+                               causal=causal, seq_len=t)
+    out_shapes = (
+        jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        jax.ShapeDtypeStruct((bh, t), jnp.float32),
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,  # CPU-PJRT executable HLO; Mosaic lowering is TPU-only
+    )(q, k, v)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Fused causal attention over (BH, T, d); equals `ref.attention`."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    o, _ = _flash_fwd(q, k, v, block_q=_pick_block(q.shape[1], DEFAULT_BLOCK_Q),
+                      block_k=_pick_block(q.shape[1], DEFAULT_BLOCK_K),
+                      scale=scale, causal=causal)
+    return o
+
+
+def _pick_block(t: int, preferred: int) -> int:
+    """Largest power-of-two block ≤ preferred that divides T."""
+    b = preferred
+    while b > 1 and t % b != 0:
+        b //= 2
+    return b
+
+
+def _fwd_rule(q, k, v, causal, scale):
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    o, lse = _flash_fwd(q, k, v, block_q=_pick_block(q.shape[1], DEFAULT_BLOCK_Q),
+                        block_k=_pick_block(q.shape[1], DEFAULT_BLOCK_K),
+                        scale=scale, causal=causal)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd_rule(causal, scale, res, do):
+    """Standard flash-attention backward: rebuild P row-blocks from lse.
+
+    Written in plain jnp (differentiation target is the kernel's math, the
+    backward itself needs no second kernel on this CPU substrate — see
+    DESIGN.md). Matches grad-of-`ref.attention` to fp32 tolerance.
+    """
+    q, k, v, o, lse = res
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    t = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, _NEG_INF)
+    p = jnp.exp(s - lse[..., None])  # exact softmax, recomputed from residual
+    dv = jnp.einsum("bqk,bqd->bkd", p, do)
+    dp = jnp.einsum("bqd,bkd->bqk", do, v)
+    delta = jnp.sum(do * o, axis=-1, keepdims=True)  # row dot(dO, O)
+    ds = p * (dp - delta)
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracles for every Pallas kernel (Layer 1).
+
+These are the *correctness ground truth*: pytest checks each Pallas kernel
+against the function of the same name here, and the JAX model (Layer 2) is
+unit-tested against compositions of these references.
+
+Everything is plain differentiable jax.numpy — no Pallas, no custom_vjp —
+so `jax.grad` through these definitions also serves as the oracle for the
+hand-written backward rules attached to the kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              scale: float | None = None) -> jax.Array:
+    """Scaled dot-product attention over (BH, T, d) tensors.
+
+    BH is the flattened batch*heads dimension. Matches the Pallas
+    flash-attention kernel's semantics (fp32 accumulation, causal mask).
+    """
+    _, t, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def attention_lse(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+                  scale: float | None = None) -> tuple[jax.Array, jax.Array]:
+    """Attention plus per-row logsumexp — the residuals the flash kernel saves."""
+    _, t, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    return jnp.einsum("bqk,bkd->bqd", p, v), lse
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis; x: (..., D), w/b: (D,)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xhat * w + b
+
+
+# ---------------------------------------------------------------------------
+# Adam (the cpu_adam analog)
+# ---------------------------------------------------------------------------
+
+
+def adam_step(p: jax.Array, m: jax.Array, v: jax.Array, g: jax.Array,
+              *, lr: float, beta1: float = 0.9, beta2: float = 0.999,
+              eps: float = 1e-8, weight_decay: float = 0.0,
+              bias_corr1: float = 1.0, bias_corr2: float = 1.0
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused Adam(W) update on flat fp32 vectors.
+
+    `bias_corr1/2` are the precomputed (1 - beta^t) factors — the paper's
+    cpu_adam precomputes these per step instead of calling pow in the loop.
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    m_hat = m_new / bias_corr1
+    v_hat = v_new / bias_corr2
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p
+    return p - lr * update, m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# GELU (used by the FFN; reference for the fused-FFN path)
+# ---------------------------------------------------------------------------
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximated GELU, the GPT-2/Megatron variant."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x ** 3)))

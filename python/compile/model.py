@@ -1,0 +1,165 @@
+"""Layer-2: GPT-style transformer stages in JAX, calling the Pallas kernels.
+
+The model is decomposed into *shape-uniform stages*, one AOT artifact each,
+which is exactly the unit the Rust coordinator schedules and offloads:
+
+    embed_fwd  (tokens, wte, wpe)                  -> x
+    layer_fwd  (x, p0..p11)                        -> y
+    layer_bwd  (x_ckpt, dy, p0..p11)               -> (dx, dp0..dp11)
+    head_loss  (x, lnf_w, lnf_b, wte, targets)     -> (loss, dx, dlnf_w, dlnf_b, dwte)
+    embed_bwd  (tokens, dx)                        -> (dwte, dwpe)
+    adam_step  (hyper, p, m, v, g)                 -> (p', m', v')
+
+`layer_bwd` is recompute-then-VJP: it takes the layer's *input activation
+checkpoint* (per-layer activation checkpointing, paper §2.2) plus the upstream
+gradient, replays the forward from the checkpoint, and emits the input
+gradient and per-parameter gradients. Gradient *accumulation* across
+micro-batches deliberately stays out of the graph — the vertical scheduler
+(paper §3.4) keeps one accumulation buffer per layer resident in GPU memory
+and adds each micro-batch's `dp` into it, so one compiled executable serves
+every (layer, micro-batch) pair.
+
+All transformer layers share one (B, T, D) shape, so a single `layer_fwd` /
+`layer_bwd` executable serves all L layers with parameters fed as inputs —
+the property (§6.2) that lets Ratel build a uniform prefetch pipeline, and
+that makes parameter offloading trivially correct here.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention
+from .kernels.layernorm import layernorm
+from .kernels import ref
+
+
+class ModelConfig(NamedTuple):
+    """Static shape configuration baked into the AOT artifacts."""
+
+    micro_batch: int      # B: per-micro-batch sequences
+    seq_len: int          # T
+    hidden: int           # D
+    n_heads: int          # H
+    vocab: int            # V
+    n_layers: int         # L (not baked into per-layer artifacts; for manifest)
+    ffn_mult: int = 4
+    adam_chunk: int = 1 << 20  # flat fp32 elements per optimizer-step call
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.n_heads == 0
+        return self.hidden // self.n_heads
+
+    def layer_param_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Ordered (name, shape) of the 12 per-layer parameter tensors.
+
+        The order here *is* the artifact calling convention: `layer_fwd`
+        args 1..12 and `layer_bwd` args 2..13 / outputs 1..12.
+        """
+        d, f = self.hidden, self.ffn_mult * self.hidden
+        return [
+            ("ln1_w", (d,)), ("ln1_b", (d,)),
+            ("w_qkv", (d, 3 * d)), ("b_qkv", (3 * d,)),
+            ("w_o", (d, d)), ("b_o", (d,)),
+            ("ln2_w", (d,)), ("ln2_b", (d,)),
+            ("w_fc1", (d, f)), ("b_fc1", (f,)),
+            ("w_fc2", (f, d)), ("b_fc2", (d,)),
+        ]
+
+    def layer_param_numel(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.layer_param_shapes())
+
+
+# ---------------------------------------------------------------------------
+# Transformer block
+# ---------------------------------------------------------------------------
+
+
+def block_fwd(x: jax.Array, params: tuple, cfg: ModelConfig) -> jax.Array:
+    """Pre-LN GPT block: x + Attn(LN(x)), then + FFN(LN(.))."""
+    (ln1_w, ln1_b, w_qkv, b_qkv, w_o, b_o,
+     ln2_w, ln2_b, w_fc1, b_fc1, w_fc2, b_fc2) = params
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    a = layernorm(x, ln1_w, ln1_b)
+    qkv = a @ w_qkv + b_qkv                                  # (B, T, 3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def to_heads(u):  # (B, T, D) -> (B*H, T, dh)
+        return u.reshape(b, t, h, dh).transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+
+    o = flash_attention(to_heads(q), to_heads(k), to_heads(v), True, None)
+    o = o.reshape(b, h, t, dh).transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + (o @ w_o + b_o)
+
+    f = layernorm(x, ln2_w, ln2_b)
+    f = ref.gelu(f @ w_fc1 + b_fc1) @ w_fc2 + b_fc2
+    return x + f
+
+
+def block_bwd(x_ckpt: jax.Array, dy: jax.Array, params: tuple, cfg: ModelConfig):
+    """Recompute the block from its input checkpoint, then VJP.
+
+    Returns (dx, dp0..dp11) — the per-micro-batch gradients the coordinator
+    accumulates into the layer's resident buffer.
+    """
+    _, vjp = jax.vjp(lambda xx, ps: block_fwd(xx, ps, cfg), x_ckpt, params)
+    dx, dps = vjp(dy)
+    return (dx, *dps)
+
+
+# ---------------------------------------------------------------------------
+# Embedding and head
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(tokens: jax.Array, wte: jax.Array, wpe: jax.Array) -> jax.Array:
+    """Token + learned positional embeddings; tokens i32 (B, T)."""
+    return wte[tokens] + wpe[None, : tokens.shape[1], :]
+
+
+def embed_bwd(tokens: jax.Array, dx: jax.Array, vocab: int):
+    """Scatter-add gradients back to the embedding tables (tied head adds its
+    own dwte contribution on the Rust side)."""
+    dwte = jnp.zeros((vocab, dx.shape[-1]), dtype=dx.dtype).at[tokens].add(dx)
+    dwpe = jnp.sum(dx, axis=0)
+    return dwte, dwpe
+
+
+def head_loss(x: jax.Array, lnf_w: jax.Array, lnf_b: jax.Array,
+              wte: jax.Array, targets: jax.Array):
+    """Final LN + tied LM head + mean token cross-entropy, with gradients.
+
+    Emits (loss, dx, dlnf_w, dlnf_b, dwte) in one artifact so the backward
+    pass can start immediately from the head (paper Fig. 2(b) step 1).
+    """
+
+    def loss_fn(xx, w, b, emb):
+        h = layernorm(xx, w, b)
+        logits = h @ emb.T                                   # (B, T, V)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3))(
+        x, lnf_w, lnf_b, wte)
+    return (loss, *grads)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used only by tests — never lowered for the runtime)
+# ---------------------------------------------------------------------------
+
+
+def full_forward_loss(tokens, targets, wte, wpe, lnf_w, lnf_b, layers, cfg: ModelConfig):
+    """End-to-end loss through all stages; oracle for integration tests."""
+    x = embed_fwd(tokens, wte, wpe)
+    for p in layers:
+        x = block_fwd(x, p, cfg)
+    loss, *_ = head_loss(x, lnf_w, lnf_b, wte, targets)
+    return loss

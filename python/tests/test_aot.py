@@ -1,0 +1,110 @@
+"""AOT bridge tests: artifacts lower, parse, and the manifest is consistent."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+TINY = aot.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def stages():
+    return aot.build_stages(TINY)
+
+
+class TestLowering:
+    def test_all_stages_present(self, stages):
+        assert set(stages) == {"embed_fwd", "layer_fwd", "layer_bwd",
+                               "head_loss", "embed_bwd", "adam_step"}
+
+    def test_hlo_text_has_entry(self, stages):
+        for name, text in stages.items():
+            assert "ENTRY" in text, name
+            assert "HloModule" in text, name
+
+    @staticmethod
+    def _entry_param_count(text: str) -> int:
+        """Count parameter() instructions inside the ENTRY computation only
+        (nested while-loop computations from the interpret-mode Pallas
+        lowering have their own parameters)."""
+        lines = text.splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        n = 0
+        for line in lines[start + 1:]:
+            if line.startswith("}"):
+                break
+            if " parameter(" in line:
+                n += 1
+        return n
+
+    def test_layer_fwd_signature(self, stages):
+        # 1 activation + 12 params = 13 parameters in the entry computation.
+        assert self._entry_param_count(stages["layer_fwd"]) == 13
+
+    def test_layer_bwd_signature(self, stages):
+        assert self._entry_param_count(stages["layer_bwd"]) == 14  # x, dy, 12 p
+
+    def test_adam_signature(self, stages):
+        assert self._entry_param_count(stages["adam_step"]) == 5
+
+    def test_no_custom_calls(self, stages):
+        """interpret=True Pallas must lower to plain HLO — a Mosaic
+        custom-call would be unexecutable on the CPU PJRT plugin."""
+        for name, text in stages.items():
+            assert "mosaic" not in text.lower(), name
+
+
+class TestManifest:
+    def test_roundtrip_and_consistency(self, stages, tmp_path):
+        man = aot.build_manifest(TINY, "tiny", stages)
+        path = tmp_path / "manifest.json"
+        path.write_text(json.dumps(man))
+        man2 = json.loads(path.read_text())
+        assert man2 == man
+        cfg = man["config"]
+        assert cfg["hidden"] % cfg["n_heads"] == 0
+        total = sum(p["numel"] for p in man["layer_params"])
+        assert total == TINY.layer_param_numel()
+        d, f = cfg["hidden"], cfg["ffn_mult"] * cfg["hidden"]
+        assert total == 12 * d * d // 1 + 0 + (4 * d + 2 * f + 3 * d + d + d + d + d) \
+            or total > 0  # exact identity checked below
+        # closed form: ln(4d) + qkv(3d^2+3d) + proj(d^2+d) + fc1(d f + f) + fc2(f d + d)
+        closed = 4 * d + 3 * d * d + 3 * d + d * d + d + d * f + f + f * d + d
+        assert total == closed
+
+    def test_init_kinds(self):
+        man = aot.build_manifest(TINY, "tiny", {})
+        kinds = {p["name"]: p["init"] for p in man["layer_params"]}
+        assert kinds["ln1_w"] == "ones"
+        assert kinds["b_qkv"] == "zeros"
+        assert kinds["w_o"] == "normal_residual"
+        assert kinds["w_qkv"] == "normal"
+
+    def test_presets_are_sane(self):
+        for name, cfg in aot.PRESETS.items():
+            assert cfg.hidden % cfg.n_heads == 0, name
+            assert cfg.seq_len % 2 == 0, name
+            assert cfg.adam_chunk & (cfg.adam_chunk - 1) == 0, name
+
+    def test_e2e_preset_is_about_100m_params(self):
+        cfg = aot.PRESETS["e2e"]
+        total = (cfg.n_layers * cfg.layer_param_numel()
+                 + cfg.vocab * cfg.hidden + cfg.seq_len * cfg.hidden
+                 + 2 * cfg.hidden)
+        assert 80e6 < total < 130e6, total
+
+
+class TestCLI:
+    def test_main_writes_artifacts(self, tmp_path, monkeypatch):
+        out = tmp_path / "arts"
+        monkeypatch.setattr("sys.argv",
+                            ["aot", "--preset", "tiny", "--out-dir", str(out)])
+        aot.main()
+        files = sorted(os.listdir(out))
+        assert "manifest.json" in files
+        assert sum(f.endswith(".hlo.txt") for f in files) == 6

@@ -1,0 +1,218 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the power-of-two block-picking logic) so the
+kernels are exercised well away from the single shape the AOT path bakes in.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.adam import BLOCK, adam_step, pack_hyper
+from compile.kernels.flash_attention import _pick_block, flash_attention
+from compile.kernels.layernorm import layernorm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("bh,t,d", [(1, 8, 4), (2, 32, 16), (3, 64, 16),
+                                        (4, 128, 32), (2, 256, 64)])
+    def test_fwd_matches_ref(self, bh, t, d):
+        ks = jax.random.split(jax.random.PRNGKey(t + d), 3)
+        q, k, v = (_rand(kk, (bh, t, d)) for kk in ks)
+        np.testing.assert_allclose(flash_attention(q, k, v),
+                                   ref.attention(q, k, v), atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_causal_flag(self, causal):
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q, k, v = (_rand(kk, (2, 64, 16)) for kk in ks)
+        got = flash_attention(q, k, v, causal, None)
+        want = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_custom_scale(self):
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q, k, v = (_rand(kk, (2, 32, 8)) for kk in ks)
+        np.testing.assert_allclose(flash_attention(q, k, v, True, 0.25),
+                                   ref.attention(q, k, v, scale=0.25),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_grad_matches_autodiff_of_ref(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q, k, v = (_rand(kk, (2, 64, 16)) for kk in ks)
+
+        def loss_kernel(q, k, v):
+            return jnp.sum(flash_attention(q, k, v) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.attention(q, k, v) ** 2)
+
+        g = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g, gr):
+            np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+    def test_first_row_attends_to_itself_only(self):
+        # Row 0 under causal masking = v[0] exactly.
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        q, k, v = (_rand(kk, (1, 32, 8)) for kk in ks)
+        o = flash_attention(q, k, v)
+        np.testing.assert_allclose(o[0, 0], v[0, 0], atol=1e-5, rtol=1e-5)
+
+    def test_softmax_rows_are_convex_combinations(self):
+        # With v == const, output must be that const (softmax sums to 1).
+        ks = jax.random.split(jax.random.PRNGKey(5), 2)
+        q, k = (_rand(kk, (2, 64, 16)) for kk in ks)
+        v = jnp.ones((2, 64, 16)) * 3.5
+        np.testing.assert_allclose(flash_attention(q, k, v), v, atol=1e-5)
+
+    def test_numerical_stability_large_logits(self):
+        ks = jax.random.split(jax.random.PRNGKey(6), 3)
+        q, k, v = (_rand(kk, (1, 32, 8)) * 30.0 for kk in ks)
+        o = flash_attention(q, k, v)
+        assert np.isfinite(np.asarray(o)).all()
+        np.testing.assert_allclose(o, ref.attention(q, k, v), atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(bh=st.integers(1, 4),
+           t_pow=st.integers(2, 7),
+           d=st.sampled_from([4, 8, 16, 32]))
+    def test_hypothesis_shape_sweep(self, bh, t_pow, d):
+        t = 1 << t_pow
+        ks = jax.random.split(jax.random.PRNGKey(bh * 1000 + t * 10 + d), 3)
+        q, k, v = (_rand(kk, (bh, t, d)) for kk in ks)
+        np.testing.assert_allclose(flash_attention(q, k, v),
+                                   ref.attention(q, k, v), atol=3e-5, rtol=3e-5)
+
+    @given(t=st.integers(1, 512), pref=st.sampled_from([32, 64, 128]))
+    @settings(max_examples=50, deadline=None)
+    def test_pick_block_divides(self, t, pref):
+        b = _pick_block(t, pref)
+        assert b >= 1 and (b == 1 or t % b == 0)
+        assert b <= pref
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+class TestLayerNorm:
+    @pytest.mark.parametrize("shape", [(4, 16), (2, 32, 48), (1, 8, 64), (3, 5, 7)])
+    def test_fwd_matches_ref(self, shape):
+        ks = jax.random.split(jax.random.PRNGKey(sum(shape)), 3)
+        x = _rand(ks[0], shape)
+        w, b = _rand(ks[1], shape[-1:]), _rand(ks[2], shape[-1:])
+        np.testing.assert_allclose(layernorm(x, w, b), ref.layernorm(x, w, b),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_output_rows_are_normalized(self):
+        x = _rand(jax.random.PRNGKey(0), (8, 128)) * 5 + 3
+        y = layernorm(x, jnp.ones(128), jnp.zeros(128))
+        np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.std(np.asarray(y), -1), 1.0, atol=1e-3)
+
+    def test_grads_match_ref_autodiff(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        x, w, b = _rand(ks[0], (4, 16, 32)), _rand(ks[1], (32,)), _rand(ks[2], (32,))
+
+        def f(fn):
+            return jax.grad(lambda x, w, b: jnp.sum(jnp.sin(fn(x, w, b))),
+                            argnums=(0, 1, 2))(x, w, b)
+
+        for a, bb in zip(f(layernorm), f(ref.layernorm)):
+            np.testing.assert_allclose(a, bb, atol=2e-4, rtol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(rows=st.integers(1, 33), d=st.sampled_from([8, 16, 48, 96, 128]))
+    def test_hypothesis_shape_sweep(self, rows, d):
+        ks = jax.random.split(jax.random.PRNGKey(rows * 1000 + d), 3)
+        x = _rand(ks[0], (rows, d))
+        w, b = _rand(ks[1], (d,)), _rand(ks[2], (d,))
+        np.testing.assert_allclose(layernorm(x, w, b), ref.layernorm(x, w, b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# adam
+# ---------------------------------------------------------------------------
+
+
+class TestAdam:
+    def _state(self, n, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        return (_rand(ks[0], (n,)), jnp.abs(_rand(ks[1], (n,))) * 0.1,
+                jnp.abs(_rand(ks[2], (n,))) * 0.01, _rand(ks[3], (n,)))
+
+    @pytest.mark.parametrize("n", [BLOCK, 4 * BLOCK, 256, 1 << 14])
+    def test_matches_ref(self, n):
+        p, m, v, g = self._state(n)
+        hy = pack_hyper(3e-4, step=5, weight_decay=0.1)
+        got = adam_step(p, m, v, g, hy)
+        want = ref.adam_step(p, m, v, g, lr=3e-4, weight_decay=0.1,
+                             bias_corr1=1 - 0.9 ** 5, bias_corr2=1 - 0.999 ** 5)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+
+    def test_partition_invariance(self):
+        """§6.5: results must not depend on how the vector is chunked."""
+        n = 4 * BLOCK
+        p, m, v, g = self._state(n, seed=1)
+        hy = pack_hyper(1e-3, step=2)
+        whole = adam_step(p, m, v, g, hy)
+        halves = [adam_step(p[i:i + n // 2], m[i:i + n // 2], v[i:i + n // 2],
+                            g[i:i + n // 2], hy) for i in (0, n // 2)]
+        for j in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(whole[j]),
+                np.concatenate([np.asarray(h[j]) for h in halves]))
+
+    def test_zero_grad_pure_decay(self):
+        n = BLOCK
+        p, m, v, _ = self._state(n, seed=2)
+        m = jnp.zeros(n)
+        v = jnp.zeros(n)
+        hy = pack_hyper(1e-2, step=1, weight_decay=0.5)
+        p2, m2, v2 = adam_step(p, m, v, jnp.zeros(n), hy)
+        np.testing.assert_allclose(p2, p * (1 - 1e-2 * 0.5), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(m2), np.zeros(n))
+        np.testing.assert_array_equal(np.asarray(v2), np.zeros(n))
+
+    def test_grad_scale_folded_in(self):
+        n = BLOCK
+        p, m, v, g = self._state(n, seed=3)
+        scaled = adam_step(p, m, v, g, pack_hyper(1e-3, step=1, grad_scale=0.5))
+        manual = adam_step(p, m, v, 0.5 * g, pack_hyper(1e-3, step=1))
+        for a, b in zip(scaled, manual):
+            np.testing.assert_allclose(a, b, atol=1e-7)
+
+    @settings(max_examples=10, deadline=None)
+    @given(step=st.integers(1, 1000),
+           lr=st.floats(1e-5, 1e-1),
+           n_pow=st.integers(8, 13))
+    def test_hypothesis_param_sweep(self, step, lr, n_pow):
+        n = 1 << n_pow
+        p, m, v, g = self._state(n, seed=step)
+        hy = pack_hyper(lr, step=step)
+        got = adam_step(p, m, v, g, hy)
+        want = ref.adam_step(p, m, v, g, lr=lr,
+                             bias_corr1=1 - 0.9 ** step,
+                             bias_corr2=1 - 0.999 ** step)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,230 @@
+"""L2 correctness: staged model vs monolithic oracle, schedule equivalence.
+
+The key property the Rust coordinator relies on is proved here in miniature:
+running stages (embed → layer×L → head → layer_bwd×L → embed_bwd) with
+gradient accumulation over micro-batches — in EITHER horizontal or vertical
+order — produces exactly the gradients of the monolithic loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.ModelConfig(micro_batch=2, seq_len=16, hidden=32, n_heads=4,
+                        vocab=64, n_layers=2, adam_chunk=1 << 10)
+
+
+def init_params(cfg: model.ModelConfig, key):
+    ks = iter(jax.random.split(key, 64))
+
+    def tensor(name, shape):
+        if name.startswith(("b_", "ln1_b", "ln2_b", "lnf_b")) or name.endswith("_b"):
+            return jnp.zeros(shape)
+        if name in ("ln1_w", "ln2_w", "lnf_w"):
+            return jnp.ones(shape)
+        std = 0.02 / (2 * cfg.n_layers) ** 0.5 if name in ("w_o", "w_fc2") else 0.02
+        return jax.random.normal(next(ks), shape) * std
+
+    layers = [tuple(tensor(n, s) for n, s in cfg.layer_param_shapes())
+              for _ in range(cfg.n_layers)]
+    wte = jax.random.normal(next(ks), (cfg.vocab, cfg.hidden)) * 0.02
+    wpe = jax.random.normal(next(ks), (cfg.seq_len, cfg.hidden)) * 0.01
+    lnf_w, lnf_b = jnp.ones(cfg.hidden), jnp.zeros(cfg.hidden)
+    return layers, wte, wpe, lnf_w, lnf_b
+
+
+def batch(cfg, key):
+    tokens = jax.random.randint(key, (cfg.micro_batch, cfg.seq_len), 0, cfg.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return tokens, targets
+
+
+class TestStages:
+    def setup_method(self):
+        self.layers, self.wte, self.wpe, self.lnf_w, self.lnf_b = \
+            init_params(CFG, jax.random.PRNGKey(0))
+        self.tokens, self.targets = batch(CFG, jax.random.PRNGKey(1))
+
+    def test_block_fwd_finite_and_shaped(self):
+        x = model.embed_fwd(self.tokens, self.wte, self.wpe)
+        y = model.block_fwd(x, self.layers[0], CFG)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_block_bwd_matches_autodiff(self):
+        x = model.embed_fwd(self.tokens, self.wte, self.wpe)
+        dy = jax.random.normal(jax.random.PRNGKey(2), x.shape)
+        outs = model.block_bwd(x, dy, self.layers[0], CFG)
+        # oracle: vjp of block_fwd directly
+        _, vjp = jax.vjp(lambda xx, ps: model.block_fwd(xx, ps, CFG),
+                         x, self.layers[0])
+        dx_ref, dps_ref = vjp(dy)
+        np.testing.assert_allclose(outs[0], dx_ref, atol=1e-5, rtol=1e-5)
+        for a, b in zip(outs[1:], dps_ref):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    def test_head_loss_gradients_match_numeric(self):
+        x = model.embed_fwd(self.tokens, self.wte, self.wpe)
+        loss, dx, dlnf_w, dlnf_b, dwte = model.head_loss(
+            x, self.lnf_w, self.lnf_b, self.wte, self.targets)
+        assert loss.shape == ()
+        # directional numerical check on dx
+        eps = 1e-3
+        direction = jax.random.normal(jax.random.PRNGKey(3), x.shape)
+        direction = direction / jnp.linalg.norm(direction)
+
+        def f(xx):
+            return model.head_loss(xx, self.lnf_w, self.lnf_b, self.wte,
+                                   self.targets)[0]
+
+        num = (f(x + eps * direction) - f(x - eps * direction)) / (2 * eps)
+        ana = jnp.vdot(dx, direction)
+        np.testing.assert_allclose(num, ana, atol=5e-4, rtol=5e-2)
+
+    def test_embed_bwd_scatter(self):
+        dx = jax.random.normal(jax.random.PRNGKey(4),
+                               (CFG.micro_batch, CFG.seq_len, CFG.hidden))
+        dwte, dwpe = model.embed_bwd(self.tokens, dx, CFG.vocab)
+        assert dwte.shape == (CFG.vocab, CFG.hidden)
+        assert dwpe.shape == (CFG.seq_len, CFG.hidden)
+        # rows of untouched vocab entries are zero
+        used = set(np.asarray(self.tokens).ravel().tolist())
+        unused = [i for i in range(CFG.vocab) if i not in used][:5]
+        for i in unused:
+            np.testing.assert_array_equal(np.asarray(dwte[i]), 0.0)
+        np.testing.assert_allclose(dwpe, dx.sum(0), atol=1e-6)
+
+    def test_staged_loss_equals_monolithic(self):
+        x = model.embed_fwd(self.tokens, self.wte, self.wpe)
+        for p in self.layers:
+            x = model.block_fwd(x, p, CFG)
+        loss_staged = model.head_loss(x, self.lnf_w, self.lnf_b, self.wte,
+                                      self.targets)[0]
+        loss_mono = model.full_forward_loss(
+            self.tokens, self.targets, self.wte, self.wpe, self.lnf_w,
+            self.lnf_b, self.layers, CFG)
+        np.testing.assert_allclose(loss_staged, loss_mono, atol=1e-6)
+
+
+class TestScheduleEquivalence:
+    """Horizontal and vertical gradient accumulation produce identical grads."""
+
+    def setup_method(self):
+        self.cfg = CFG
+        self.layers, self.wte, self.wpe, self.lnf_w, self.lnf_b = \
+            init_params(CFG, jax.random.PRNGKey(10))
+        keys = jax.random.split(jax.random.PRNGKey(11), 3)
+        self.mbs = [batch(CFG, k) for k in keys]  # 3 micro-batches
+
+    def _staged_grads(self, order: str):
+        """Run the staged pipeline with horizontal or vertical scheduling."""
+        cfg, L, M = self.cfg, self.cfg.n_layers, len(self.mbs)
+        ckpts = [[None] * (L + 1) for _ in range(M)]  # [mb][layer] input ckpt
+        # ---- forward ----
+        if order == "horizontal":
+            for m, (tok, _) in enumerate(self.mbs):
+                x = model.embed_fwd(tok, self.wte, self.wpe)
+                for l in range(L):
+                    ckpts[m][l] = x
+                    x = model.block_fwd(x, self.layers[l], cfg)
+                ckpts[m][L] = x
+        else:  # vertical: all micro-batches per layer, alternating order
+            xs = [model.embed_fwd(tok, self.wte, self.wpe) for tok, _ in self.mbs]
+            for l in range(L):
+                mb_order = range(M) if l % 2 == 0 else reversed(range(M))
+                for m in mb_order:
+                    ckpts[m][l] = xs[m]
+                    xs[m] = model.block_fwd(xs[m], self.layers[l], cfg)
+            for m in range(M):
+                ckpts[m][L] = xs[m]
+
+        # ---- head + backward with accumulation ----
+        acc = [None] * L
+        dwte_acc, dwpe_acc = 0.0, 0.0
+        dlnfw_acc, dlnfb_acc = 0.0, 0.0
+        dxs = [None] * M
+        loss_sum = 0.0
+        for m in range(M):
+            _, tgt = self.mbs[m]
+            loss, dx, dlw, dlb, dwte = model.head_loss(
+                ckpts[m][L], self.lnf_w, self.lnf_b, self.wte, tgt)
+            loss_sum += loss
+            dxs[m] = dx
+            dlnfw_acc += dlw
+            dlnfb_acc += dlb
+            dwte_acc += dwte
+
+        def bwd_layer(l, m):
+            nonlocal acc
+            outs = model.block_bwd(ckpts[m][l], dxs[m], self.layers[l], self.cfg)
+            dxs[m] = outs[0]
+            grads = outs[1:]
+            acc[l] = grads if acc[l] is None else tuple(
+                a + g for a, g in zip(acc[l], grads))
+
+        if order == "horizontal":
+            for m in range(M):
+                for l in reversed(range(L)):
+                    bwd_layer(l, m)
+        else:
+            for l in reversed(range(L)):
+                mb_order = range(M) if l % 2 == 0 else reversed(range(M))
+                for m in mb_order:
+                    bwd_layer(l, m)
+
+        for m in range(M):
+            tok, _ = self.mbs[m]
+            dwte_e, dwpe_e = model.embed_bwd(tok, dxs[m], self.cfg.vocab)
+            dwte_acc += dwte_e
+            dwpe_acc += dwpe_e
+        return loss_sum, acc, dwte_acc, dwpe_acc, dlnfw_acc, dlnfb_acc
+
+    def _monolithic_grads(self):
+        def total_loss(layers, wte, wpe, lnf_w, lnf_b):
+            s = 0.0
+            for tok, tgt in self.mbs:
+                s += model.full_forward_loss(tok, tgt, wte, wpe, lnf_w, lnf_b,
+                                             layers, self.cfg)
+            return s
+
+        return jax.value_and_grad(total_loss, argnums=(0, 1, 2, 3, 4))(
+            self.layers, self.wte, self.wpe, self.lnf_w, self.lnf_b)
+
+    @pytest.mark.parametrize("order", ["horizontal", "vertical"])
+    def test_schedule_matches_monolithic_autodiff(self, order):
+        loss, acc, dwte, dwpe, dlw, dlb = self._staged_grads(order)
+        loss_ref, (dlayers, dwte_ref, dwpe_ref, dlw_ref, dlb_ref) = \
+            self._monolithic_grads()
+        np.testing.assert_allclose(loss, loss_ref, atol=1e-5, rtol=1e-5)
+        for l in range(self.cfg.n_layers):
+            for a, b in zip(acc[l], dlayers[l]):
+                np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+        np.testing.assert_allclose(dwte, dwte_ref, atol=3e-5, rtol=3e-5)
+        np.testing.assert_allclose(dwpe, dwpe_ref, atol=3e-5, rtol=3e-5)
+        np.testing.assert_allclose(dlw, dlw_ref, atol=3e-5, rtol=3e-5)
+        np.testing.assert_allclose(dlb, dlb_ref, atol=3e-5, rtol=3e-5)
+
+    def test_horizontal_equals_vertical_exactly(self):
+        lh = self._staged_grads("horizontal")
+        lv = self._staged_grads("vertical")
+        np.testing.assert_allclose(lh[0], lv[0], atol=1e-6)
+        for l in range(self.cfg.n_layers):
+            for a, b in zip(lh[1][l], lv[1][l]):
+                # identical op sequence per accumulate -> tight tolerance
+                np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+
+
+class TestGelu:
+    def test_matches_tanh_formula(self):
+        x = jnp.linspace(-4, 4, 101)
+        got = ref.gelu(x)
+        want = 0.5 * x * (1 + np.tanh(np.sqrt(2 / np.pi) * (x + 0.044715 * x ** 3)))
+        np.testing.assert_allclose(got, np.asarray(want), atol=1e-6)

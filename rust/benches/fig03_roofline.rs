@@ -1,0 +1,35 @@
+//! Figure 3 — the roofline model of SSD-offloaded training.
+//! Prints the I/O-access line, the compute line, and the ideal envelope for
+//! GPT-65B on the A100 node (tokens/s vs batch size).
+
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::roofline::Roofline;
+use greedysnake::util::table::Table;
+
+fn main() {
+    let r = Roofline {
+        node: MACHINE2_A100.with_gpus(1),
+        model: GPT_65B,
+        micro_batch: 2,
+        seq_len: SEQ_LEN,
+    };
+    let mut t = Table::new(
+        "Fig. 3 — roofline, GPT-65B on A100-node (tokens/s)",
+        &["global batch", "I/O roofline", "compute roofline", "ideal envelope"],
+    );
+    for m in [1u64, 2, 4, 8, 16, 24, 32, 48, 64, 96, 128] {
+        t.row(&[
+            (m * 2).to_string(),
+            format!("{:.1}", r.io_bound_tokens_per_s(m)),
+            format!("{:.1}", r.compute_bound_tokens_per_s()),
+            format!("{:.1}", r.ideal_tokens_per_s(m)),
+        ]);
+    }
+    t.emit(Some("bench_out/fig03_roofline.tsv"));
+    println!(
+        "optimizer-state SSD round trip: {:.0}s/iter; ideal knee at global batch ≈ {:.0}",
+        r.t_io_opt_states(),
+        r.knee_m() * 2.0
+    );
+}

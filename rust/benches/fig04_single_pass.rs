@@ -1,0 +1,48 @@
+//! Figure 4 — batch-size scaling in the single forward-backward schedule
+//! (GPT-65B): max achievable batch and checkpoint traffic for per-layer vs
+//! attention/FFN checkpointing. Reproduces the §3.2 arithmetic: extra
+//! checkpoints buy ~1.5× batch at ~3× checkpoint traffic.
+
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::perfmodel::SystemParams;
+use greedysnake::traffic::Workload;
+use greedysnake::util::stats::fmt_bytes;
+use greedysnake::util::table::Table;
+
+fn main() {
+    let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+    let b_plain = sp.single_pass_max_batch(false);
+    let b_extra = sp.single_pass_max_batch(true);
+
+    let mut t = Table::new(
+        "Fig. 4 — single-pass batch scaling, GPT-65B (A100 40 GB)",
+        &["checkpointing", "max batch", "ckpt traffic/iter", "throughput tok/s"],
+    );
+    for (label, batch, extra) in [
+        ("per-layer", b_plain, false),
+        ("+attn/FFN boundary", b_extra, true),
+    ] {
+        let wl = Workload { model: GPT_65B, micro_batch: batch, seq_len: SEQ_LEN, m: 1, shards: 1 };
+        let traffic = wl.single_pass(extra);
+        let est = sp.single_pass_iter(batch, extra);
+        t.row(&[
+            label.into(),
+            batch.to_string(),
+            fmt_bytes((traffic.ckpt_load + traffic.ckpt_store) as f64),
+            format!("{:.1}", est.tokens_per_s),
+        ]);
+    }
+    t.emit(Some("bench_out/fig04_single_pass.tsv"));
+
+    let ratio_batch = b_extra as f64 / b_plain as f64;
+    let t_plain = Workload { model: GPT_65B, micro_batch: b_plain, seq_len: SEQ_LEN, m: 1, shards: 1 }
+        .single_pass(false);
+    let t_extra = Workload { model: GPT_65B, micro_batch: b_extra, seq_len: SEQ_LEN, m: 1, shards: 1 }
+        .single_pass(true);
+    let ratio_traffic =
+        (t_extra.ckpt_load + t_extra.ckpt_store) as f64 / (t_plain.ckpt_load + t_plain.ckpt_store) as f64;
+    println!(
+        "extra checkpoints: {ratio_batch:.2}x batch (paper ~1.5x) at {ratio_traffic:.2}x ckpt traffic (paper ~3x)"
+    );
+}

@@ -1,0 +1,37 @@
+//! Figure 5 — GPU load/offload traffic: horizontal vs vertical scheduling
+//! for GPT-65B (micro-batch 8, like the paper's §3.4 example), swept over
+//! the micro-batch count M.
+
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::traffic::Workload;
+use greedysnake::util::stats::fmt_bytes;
+use greedysnake::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Fig. 5 — per-iteration GPU traffic, GPT-65B mb=8 (load | offload)",
+        &["M", "horiz load", "horiz offload", "vert load", "vert offload", "reduction"],
+    );
+    for m in [2u64, 4, 8, 16, 32] {
+        let wl = Workload { model: GPT_65B, micro_batch: 8, seq_len: SEQ_LEN, m, shards: 1 };
+        let h = wl.horizontal();
+        let v = wl.vertical();
+        t.row(&[
+            m.to_string(),
+            fmt_bytes(h.total_load() as f64),
+            fmt_bytes(h.total_store() as f64),
+            fmt_bytes(v.total_load() as f64),
+            fmt_bytes(v.total_store() as f64),
+            format!("{:.2}x", h.total() as f64 / v.total() as f64),
+        ]);
+    }
+    t.emit(Some("bench_out/fig05_traffic.tsv"));
+
+    // the §3.4 element-count claim: layer ≈ 6× a micro-batch-8 checkpoint
+    let per_layer = GPT_65B.params_per_layer() as f64;
+    let ckpt = GPT_65B.ckpt_elems(8, SEQ_LEN) as f64;
+    println!(
+        "per-layer params {per_layer:.3e} vs mb-8 checkpoint {ckpt:.3e} elements = {:.1}x (paper: 6x)",
+        per_layer / ckpt
+    );
+}

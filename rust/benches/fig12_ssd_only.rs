@@ -1,0 +1,54 @@
+//! Figure 12 — 100 % SSD offloading vs the LP-optimal configuration
+//! (GPT-65B, 1×A100). The SSD-only curve climbs more slowly but reaches a
+//! similar saturated throughput — the evidence that vertical scheduling
+//! itself, not CPU caching, drives the win (§6.4). The footer prints the
+//! per-micro-batch time-credit arithmetic (paper: 16.4 s compute vs 1.1 s
+//! checkpoint I/O).
+
+use greedysnake::lp;
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::perfmodel::{StorageRatios, SystemParams};
+use greedysnake::sim::{simulate, Schedule};
+use greedysnake::util::table::Table;
+
+fn main() {
+    let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+    let mut t = Table::new(
+        "Fig. 12 — GPT-65B 1×A100: optimal config vs 100% SSD offload (tokens/s)",
+        &["global batch", "optimal config", "100% SSD"],
+    );
+    let mut last = (0.0, 0.0);
+    for m in [2u64, 4, 8, 16, 32, 48, 64, 96, 128, 192, 256] {
+        let best = lp::solve_config(&sp, m, 0.3)
+            .map(|r| r.ratios)
+            .unwrap_or(StorageRatios::ALL_SSD);
+        let opt = simulate(&sp, m, Schedule::GreedySnake { alpha: 0.3, x: best });
+        let ssd = simulate(
+            &sp,
+            m,
+            Schedule::GreedySnake { alpha: 0.3, x: StorageRatios::ALL_SSD },
+        );
+        t.row(&[
+            (m * 2).to_string(),
+            format!("{:.0}", opt.tokens_per_s),
+            format!("{:.0}", ssd.tokens_per_s),
+        ]);
+        last = (opt.tokens_per_s, ssd.tokens_per_s);
+    }
+    t.emit(Some("bench_out/fig12_ssd_only.tsv"));
+    println!(
+        "saturated: optimal {:.0} vs SSD-only {:.0} tokens/s ({:.0}% — paper: similar)",
+        last.0,
+        last.1,
+        100.0 * last.1 / last.0
+    );
+
+    // §6.4 time credit
+    let n = GPT_65B.n_layers as f64;
+    let compute = n * (sp.t_fwd_mb() + sp.t_bwd_mb());
+    let io = n * 5.0 * sp.c_bytes() / 24.0e9; // PCIe-staged checkpoints
+    println!(
+        "time credit per extra micro-batch: {compute:.1}s compute vs {io:.1}s ckpt I/O (paper: 16.4s vs 1.1s)"
+    );
+}

@@ -1,0 +1,112 @@
+//! Micro-benchmarks of the Layer-3 hot paths (the §Perf targets): fused
+//! Rust Adam, the AOT Pallas Adam kernel, PJRT stage dispatch, the
+//! SSD tier, the lane executor, and the LP solve. Drives the EXPERIMENTS.md
+//! §Perf before/after log.
+
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::memory::SsdStorage;
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::optimizer::{adam_step_hlo, adam_step_rust, AdamParams, AdamState};
+use greedysnake::perfmodel::SystemParams;
+use greedysnake::runtime::tensor::HostTensor;
+use greedysnake::runtime::{Manifest, Runtime, Stage};
+use greedysnake::sim::{simulate, Schedule};
+use greedysnake::util::bench::{black_box, Bench};
+use greedysnake::util::prng::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts/tiny")?;
+    let rt = Runtime::load(&manifest)?;
+    let mut rng = Prng::new(0);
+
+    // --- CPU Adam: rust fused loop vs AOT Pallas kernel -------------------
+    let n = 1 << 20;
+    let mut p = vec![0.0f32; n];
+    rng.fill_normal(&mut p, 1.0);
+    let mut g = vec![0.0f32; n];
+    rng.fill_normal(&mut g, 0.1);
+    let hp = AdamParams::default();
+
+    let mut b = Bench::new("adam").warmup(2).iters(8);
+    let mut st = AdamState::zeros(n);
+    b.run("rust_fused_1M", || {
+        adam_step_rust(&mut p, &mut st, &g, &hp, 1, 1.0, 0, n);
+        black_box(p[0])
+    });
+    let rust_mean = b.mean_of("rust_fused_1M").unwrap();
+    println!(
+        "  -> {:.2} Gelem/s ({:.1} GB/s of p/m/v/g state streamed)",
+        n as f64 / rust_mean / 1e9,
+        n as f64 * 28.0 / rust_mean / 1e9 // 4 streams in, 3 out, 4 B each
+    );
+    let mut st2 = AdamState::zeros(n);
+    let chunk = manifest.config.adam_chunk;
+    b.run("hlo_pallas_1M", || {
+        adam_step_hlo(&rt, chunk, &mut p, &mut st2, &g, &hp, 1, 1.0, 0, n).unwrap();
+        black_box(p[0])
+    });
+
+    // --- PJRT stage dispatch ----------------------------------------------
+    let c = manifest.config;
+    let mut x = HostTensor::zeros(&[c.micro_batch, c.seq_len, c.hidden]);
+    rng.fill_normal(&mut x.data, 1.0);
+    let params: Vec<HostTensor> = manifest
+        .layer_params
+        .iter()
+        .map(|s| HostTensor::init(s, c.n_layers, &mut rng))
+        .collect();
+    let lits: Vec<xla::Literal> = params.iter().map(|p| p.to_literal().unwrap()).collect();
+    let mut b2 = Bench::new("pjrt").warmup(3).iters(20);
+    b2.run("layer_fwd_tiny", || {
+        let mut inputs = vec![x.to_literal().unwrap()];
+        inputs.extend(lits.iter().map(|l| l.clone()));
+        black_box(rt.execute(Stage::LayerFwd, &inputs).unwrap())
+    });
+    b2.run("literal_upload_only", || {
+        let mut inputs = Vec::with_capacity(13);
+        inputs.push(x.to_literal().unwrap());
+        inputs.extend(lits.iter().map(|l| l.clone()));
+        black_box(inputs)
+    });
+
+    // --- SSD tier -----------------------------------------------------------
+    let ssd = SsdStorage::create_unthrottled(
+        std::env::temp_dir().join(format!("gs_bench_ssd_{}", std::process::id())),
+    )?;
+    let buf: Vec<f32> = vec![1.0; 1 << 20];
+    let mut out = Vec::new();
+    let mut b3 = Bench::new("ssd").warmup(2).iters(10);
+    b3.run("put_get_4MB", || {
+        ssd.put_f32("k", &buf).unwrap();
+        ssd.get_f32("k", &mut out).unwrap();
+        black_box(out.len())
+    });
+
+    // --- lane executor dispatch overhead ------------------------------------
+    let mut b4 = Bench::new("lanes").warmup(2).iters(10);
+    b4.run("1000_dependent_ops", || {
+        let mut ex = greedysnake::exec::LaneExecutor::new(&["a", "b"]);
+        let mut prev = None;
+        for i in 0..1000 {
+            let deps: Vec<_> = prev.into_iter().collect();
+            prev = Some(ex.submit(i % 2, &deps, || {}));
+        }
+        ex.wait_all();
+    });
+
+    // --- LP + simulator ------------------------------------------------------
+    let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+    let mut b5 = Bench::new("analytics").warmup(1).iters(5);
+    b5.run("lp_solve", || black_box(greedysnake::lp::solve_config(&sp, 16, 0.25)));
+    b5.run("sim_65b_m16", || {
+        black_box(simulate(
+            &sp,
+            16,
+            Schedule::GreedySnake {
+                alpha: 0.3,
+                x: greedysnake::perfmodel::StorageRatios::ALL_CPU,
+            },
+        ))
+    });
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Table 2 — the model zoo, with the derived per-layer quantities every
+//! analytic component depends on (params/layer, checkpoint size, optimizer
+//! state footprint, and the §3.4 layer-to-checkpoint ratio).
+
+use greedysnake::modelcfg::{SEQ_LEN, TABLE2};
+use greedysnake::util::stats::fmt_bytes;
+use greedysnake::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 2 — evaluated models (derived quantities at T=2048, mb=8)",
+        &[
+            "model", "#layers", "#heads", "hidden", "total params",
+            "params/layer", "opt state", "ckpt/mb/layer", "layer/ckpt ratio",
+        ],
+    );
+    for m in TABLE2 {
+        let ckpt = m.ckpt_elems(8, SEQ_LEN);
+        t.row(&[
+            m.name.into(),
+            m.n_layers.to_string(),
+            m.n_heads.to_string(),
+            m.hidden.to_string(),
+            format!("{:.1}B", m.params_total(SEQ_LEN) as f64 / 1e9),
+            format!("{:.2e}", m.params_per_layer() as f64),
+            fmt_bytes((m.n_layers * m.layer_opt_state_bytes()) as f64),
+            format!("{:.2e}", ckpt as f64),
+            format!("{:.1}x", m.params_per_layer() as f64 / ckpt as f64),
+        ]);
+    }
+    t.emit(Some("bench_out/tab02_models.tsv"));
+}

@@ -1,0 +1,163 @@
+//! Inter-layer Tensor Coordinator: activation checkpoints (forward) and
+//! inter-layer gradients (backward) share one store with CPU-or-SSD
+//! placement — the two data types have the same access pattern (§5).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::memory::SsdStorage;
+use crate::runtime::tensor::HostTensor;
+
+/// Keyed activation/gradient store.
+pub struct InterLayerCoordinator {
+    cpu: Mutex<HashMap<String, HostTensor>>,
+    ssd: Arc<SsdStorage>,
+    to_ssd: bool,
+    /// Stats: bytes moved through each path.
+    pub cpu_bytes: std::sync::atomic::AtomicU64,
+    pub ssd_bytes: std::sync::atomic::AtomicU64,
+}
+
+/// Key for a (layer, micro-batch) checkpoint.
+pub fn ckpt_key(layer: usize, mb: usize) -> String {
+    format!("ckpt_l{layer}_mb{mb}")
+}
+
+impl InterLayerCoordinator {
+    pub fn new(ssd: Arc<SsdStorage>, to_ssd: bool) -> Self {
+        InterLayerCoordinator {
+            cpu: Mutex::new(HashMap::new()),
+            ssd,
+            to_ssd,
+            cpu_bytes: Default::default(),
+            ssd_bytes: Default::default(),
+        }
+    }
+
+    /// Store a tensor (consumes it; the GPU-side buffer is released).
+    pub fn put(&self, key: &str, t: HostTensor) -> Result<()> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if self.to_ssd {
+            self.ssd_bytes.fetch_add(t.bytes(), Relaxed);
+            self.ssd.put_f32(&format!("ilc_{key}"), &t.data)?;
+            // shape needed for reconstruction
+            self.cpu.lock().unwrap().insert(
+                format!("{key}__shape"),
+                HostTensor::from_vec(
+                    &[t.shape.len()],
+                    t.shape.iter().map(|&d| d as f32).collect(),
+                )?,
+            );
+        } else {
+            self.cpu_bytes.fetch_add(t.bytes(), Relaxed);
+            self.cpu.lock().unwrap().insert(key.to_string(), t);
+        }
+        Ok(())
+    }
+
+    /// Fetch (and remove) a tensor.
+    pub fn take(&self, key: &str) -> Result<HostTensor> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if self.to_ssd {
+            let shape_t = self
+                .cpu
+                .lock()
+                .unwrap()
+                .remove(&format!("{key}__shape"))
+                .ok_or_else(|| anyhow!("no checkpoint '{key}'"))?;
+            let shape: Vec<usize> = shape_t.data.iter().map(|&d| d as usize).collect();
+            let mut data = Vec::new();
+            self.ssd.get_f32(&format!("ilc_{key}"), &mut data)?;
+            self.ssd.delete(&format!("ilc_{key}"));
+            let t = HostTensor::from_vec(&shape, data)?;
+            self.ssd_bytes.fetch_add(t.bytes(), Relaxed);
+            Ok(t)
+        } else {
+            self.cpu
+                .lock()
+                .unwrap()
+                .remove(key)
+                .ok_or_else(|| anyhow!("no checkpoint '{key}'"))
+        }
+    }
+
+    /// Non-destructive read (backward recompute needs the checkpoint that
+    /// forward stored, and it is consumed exactly once — `take` — but tests
+    /// and the horizontal schedule use peeks).
+    pub fn peek(&self, key: &str) -> Option<HostTensor> {
+        if self.to_ssd {
+            let shape: Vec<usize> = self
+                .cpu
+                .lock()
+                .unwrap()
+                .get(&format!("{key}__shape"))?
+                .data
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            let mut data = Vec::new();
+            self.ssd.get_f32(&format!("ilc_{key}"), &mut data).ok()?;
+            HostTensor::from_vec(&shape, data).ok()
+        } else {
+            self.cpu.lock().unwrap().get(key).cloned()
+        }
+    }
+
+    pub fn live_count(&self) -> usize {
+        let m = self.cpu.lock().unwrap();
+        if self.to_ssd {
+            m.keys().filter(|k| k.ends_with("__shape")).count()
+        } else {
+            m.len()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ssd() -> Arc<SsdStorage> {
+        Arc::new(
+            SsdStorage::create_unthrottled(
+                std::env::temp_dir().join(format!("gs_ckpt_test_{}", std::process::id())),
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn cpu_roundtrip() {
+        let c = InterLayerCoordinator::new(ssd(), false);
+        let t = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        c.put(&ckpt_key(0, 1), t.clone()).unwrap();
+        assert_eq!(c.live_count(), 1);
+        let back = c.take(&ckpt_key(0, 1)).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(c.live_count(), 0);
+        assert!(c.take(&ckpt_key(0, 1)).is_err());
+    }
+
+    #[test]
+    fn ssd_roundtrip_preserves_shape() {
+        let c = InterLayerCoordinator::new(ssd(), true);
+        let t = HostTensor::from_vec(&[2, 3, 4], (0..24).map(|i| i as f32).collect()).unwrap();
+        c.put("k", t.clone()).unwrap();
+        let back = c.take("k").unwrap();
+        assert_eq!(back, t);
+        assert!(c.ssd_bytes.load(std::sync::atomic::Ordering::Relaxed) >= 2 * t.bytes());
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let c = InterLayerCoordinator::new(ssd(), false);
+        let t = HostTensor::zeros(&[4]);
+        c.put("k", t.clone()).unwrap();
+        assert_eq!(c.peek("k").unwrap(), t);
+        assert_eq!(c.peek("k").unwrap(), t);
+        c.take("k").unwrap();
+        assert!(c.peek("k").is_none());
+    }
+}

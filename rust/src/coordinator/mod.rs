@@ -1,0 +1,32 @@
+//! The GreedySnake coordinator layer — the paper's system contribution,
+//! running for real over PJRT-executed AOT artifacts.
+//!
+//! §5 structures the system as three coordinators over a pipelined
+//! resource-time space; here they are:
+//!
+//! * [`ckpt::InterLayerCoordinator`] — activation checkpoints in the forward
+//!   pass and inter-layer gradients in the backward pass (same access
+//!   pattern, same store);
+//! * [`state::ParameterCoordinator`] (embedded in [`state::ModelState`]) —
+//!   parameter residency and update ordering: a layer's forward may not
+//!   start until its pending (eager and delayed) optimizer updates land;
+//! * [`opt::OptimizerStepCoordinator`] — gradient offload, optimizer-state
+//!   SSD round trips, the CPU Adam step (Rust fused loop on the overlap
+//!   worker, or the AOT Pallas kernel inline), and the delay-α split.
+//!
+//! Two schedulers drive them: [`vertical::VerticalScheduler`] (GreedySnake)
+//! and [`horizontal::HorizontalScheduler`] (the ZeRO-Infinity baseline).
+//! Both compute *identical* gradients (property-tested), so Figure 13's
+//! loss-equivalence experiment runs on this exact code.
+
+pub mod ckpt;
+pub mod horizontal;
+pub mod opt;
+pub mod state;
+pub mod vertical;
+
+pub use ckpt::InterLayerCoordinator;
+pub use horizontal::HorizontalScheduler;
+pub use opt::OptimizerStepCoordinator;
+pub use state::{ModelState, TrainerConfig};
+pub use vertical::VerticalScheduler;

@@ -1,0 +1,495 @@
+//! Optimizer Step Coordinator: gradient offload, optimizer-state SSD round
+//! trips, CPU Adam execution (worker-overlapped Rust path or inline AOT
+//! Pallas kernel), and the §4.4 delay-α split.
+//!
+//! Optimizer state for each (layer, tensor) is stored as two SSD objects,
+//! split at the α boundary — the *eager* part `[0, split)` updates during
+//! the backward pass (Fig. 7), the *delayed* part `[split, n)` during the
+//! next iteration's forward (Fig. 8) — so each part round-trips exactly its
+//! own bytes, like the paper's partial-state transfers.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::exec::pool::{TaskHandle, ThreadPool};
+use crate::memory::SsdStorage;
+use crate::optimizer::{adam_step_hlo, adam_step_rust, delay_split, AdamParams, AdamState, ClipMonitor};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::Runtime;
+
+use super::state::{ModelState, TrainerConfig};
+
+/// Which half of the α split an update covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Part {
+    Eager,
+    Delayed,
+}
+
+/// SSD key for a split moment object.
+pub fn part_key(layer: usize, tensor: usize, kind: char, part: Part) -> String {
+    let suffix = match part {
+        Part::Eager => "e",
+        Part::Delayed => "d",
+    };
+    format!("opt_{kind}_l{layer}_t{tensor}_{suffix}")
+}
+
+/// Pending update handles for one layer.
+#[derive(Default)]
+struct LayerPending {
+    eager: Option<TaskHandle<()>>,
+    delayed: Option<TaskHandle<()>>,
+    /// Gradients retained for the delayed part (§4.4's reclaimed memory).
+    held_grads: Option<Arc<Vec<HostTensor>>>,
+}
+
+/// The coordinator.
+pub struct OptimizerStepCoordinator {
+    pool: ThreadPool,
+    pending: Vec<Mutex<LayerPending>>,
+    embed_pending: Mutex<Option<TaskHandle<()>>>,
+    pub clip: Mutex<ClipMonitor>,
+    cfg: TrainerConfig,
+}
+
+impl OptimizerStepCoordinator {
+    pub fn new(state: &ModelState) -> Self {
+        let nl = state.manifest.config.n_layers;
+        OptimizerStepCoordinator {
+            pool: ThreadPool::new(1), // one CPU-optimizer lane, like cpu_adam
+            pending: (0..nl).map(|_| Mutex::new(LayerPending::default())).collect(),
+            embed_pending: Mutex::new(None),
+            clip: Mutex::new(ClipMonitor::new(state.cfg.clip_norm)),
+            cfg: state.cfg.clone(),
+        }
+    }
+
+    /// Seed the split SSD objects for all layers (called once at startup
+    /// when `opt_on_ssd`).
+    pub fn seed_ssd(&self, state: &ModelState) -> Result<()> {
+        if !self.cfg.opt_on_ssd {
+            return Ok(());
+        }
+        for l in 0..state.manifest.config.n_layers {
+            for (t, spec) in state.manifest.layer_params.iter().enumerate() {
+                let split = delay_split(spec.numel, self.cfg.alpha);
+                for kind in ['m', 'v'] {
+                    state.ssd.put_f32(&part_key(l, t, kind, Part::Eager), &vec![0.0; split])?;
+                    if spec.numel > split {
+                        state.ssd.put_f32(
+                            &part_key(l, t, kind, Part::Delayed),
+                            &vec![0.0; spec.numel - split],
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit the eager (1-α) update for layer `l` with its freshly
+    /// accumulated gradients. Overlaps on the worker unless configured
+    /// inline. The gradients are retained for the delayed part.
+    pub fn submit_eager(
+        &self,
+        state: &ModelState,
+        rt: Option<&Runtime>,
+        l: usize,
+        grads: Vec<HostTensor>,
+        step: u64,
+    ) -> Result<()> {
+        // speculative-clip accounting happens as gradients arrive
+        {
+            let mut clip = self.clip.lock().unwrap();
+            for g in &grads {
+                clip.accumulate(g.sq_sum());
+            }
+        }
+        let scale = self.clip.lock().unwrap().speculative_scale();
+        let grads = Arc::new(grads);
+        let mut pend = self.pending[l].lock().unwrap();
+        pend.held_grads = Some(Arc::clone(&grads));
+
+        if self.cfg.use_hlo_adam {
+            // PJRT is not Send: run inline through the AOT kernel.
+            let rt = rt.expect("use_hlo_adam requires a Runtime");
+            apply_update_hlo(state, rt, l, &grads, step, scale, Part::Eager, &self.cfg)?;
+            pend.eager = None;
+        } else if self.cfg.overlap {
+            let params = Arc::clone(&state.layers[l]);
+            let opts = Arc::clone(&state.layer_opt[l]);
+            let ssd = Arc::clone(&state.ssd);
+            let cfg = self.cfg.clone();
+            let g2 = Arc::clone(&grads);
+            pend.eager = Some(self.pool.submit(move || {
+                apply_update_rust(&params, &opts, &ssd, l, &g2, step, scale, Part::Eager, &cfg)
+                    .expect("eager optimizer update");
+            }));
+        } else {
+            apply_update_rust(
+                &state.layers[l],
+                &state.layer_opt[l],
+                &state.ssd,
+                l,
+                &grads,
+                step,
+                scale,
+                Part::Eager,
+                &self.cfg,
+            )?;
+            pend.eager = None;
+        }
+        Ok(())
+    }
+
+    /// Dispatch all delayed (α) updates — called at the start of the next
+    /// iteration so they overlap its forward pass (Fig. 8).
+    pub fn dispatch_delayed(
+        &self,
+        state: &ModelState,
+        rt: Option<&Runtime>,
+        step: u64,
+    ) -> Result<()> {
+        if self.cfg.alpha <= 0.0 {
+            return Ok(());
+        }
+        for l in 0..state.manifest.config.n_layers {
+            let mut pend = self.pending[l].lock().unwrap();
+            let Some(grads) = pend.held_grads.take() else {
+                continue; // first iteration: nothing accumulated yet
+            };
+            let scale = self.clip.lock().unwrap().speculative_scale();
+            if self.cfg.use_hlo_adam {
+                let rt = rt.expect("use_hlo_adam requires a Runtime");
+                apply_update_hlo(state, rt, l, &grads, step, scale, Part::Delayed, &self.cfg)?;
+            } else if self.cfg.overlap {
+                let params = Arc::clone(&state.layers[l]);
+                let opts = Arc::clone(&state.layer_opt[l]);
+                let ssd = Arc::clone(&state.ssd);
+                let cfg = self.cfg.clone();
+                pend.delayed = Some(self.pool.submit(move || {
+                    apply_update_rust(
+                        &params, &opts, &ssd, l, &grads, step, scale, Part::Delayed, &cfg,
+                    )
+                    .expect("delayed optimizer update");
+                }));
+            } else {
+                apply_update_rust(
+                    &state.layers[l],
+                    &state.layer_opt[l],
+                    &state.ssd,
+                    l,
+                    &grads,
+                    step,
+                    scale,
+                    Part::Delayed,
+                    &self.cfg,
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until layer `l`'s parameters are fully updated — the
+    /// "get the right data at the right time" dependency before its forward.
+    pub fn wait_layer(&self, l: usize) {
+        let (e, d) = {
+            let mut pend = self.pending[l].lock().unwrap();
+            (pend.eager.take(), pend.delayed.take())
+        };
+        if let Some(h) = e {
+            h.wait();
+        }
+        if let Some(h) = d {
+            h.wait();
+        }
+    }
+
+    /// Update the embedding/head group (no α split; runs like a layer).
+    pub fn submit_embed(
+        &self,
+        state: &ModelState,
+        grads: Vec<HostTensor>,
+        step: u64,
+    ) -> Result<()> {
+        {
+            let mut clip = self.clip.lock().unwrap();
+            for g in &grads {
+                clip.accumulate(g.sq_sum());
+            }
+        }
+        let scale = self.clip.lock().unwrap().speculative_scale();
+        let hp = self.cfg.adam;
+        let embed = Arc::clone(&state.embed);
+        let opts = Arc::clone(&state.embed_opt);
+        let job = move || {
+            let mut params = embed.lock().unwrap();
+            let mut opt = opts.lock().unwrap();
+            for (t, g) in grads.iter().enumerate() {
+                let n = g.numel();
+                adam_step_rust(
+                    &mut params[t].data,
+                    &mut opt[t],
+                    &g.data,
+                    &hp,
+                    step,
+                    scale,
+                    0,
+                    n,
+                );
+            }
+        };
+        if self.cfg.overlap && !self.cfg.use_hlo_adam {
+            *self.embed_pending.lock().unwrap() = Some(self.pool.submit(job));
+        } else {
+            job();
+        }
+        Ok(())
+    }
+
+    pub fn wait_embed(&self) {
+        if let Some(h) = self.embed_pending.lock().unwrap().take() {
+            h.wait();
+        }
+    }
+
+    /// Finish the iteration's clip bookkeeping; returns the global norm.
+    pub fn finish_iter(&self) -> f64 {
+        self.clip.lock().unwrap().finish_iter()
+    }
+}
+
+/// Range covered by a part for a tensor of `n` elements.
+fn part_range(n: usize, alpha: f64, part: Part) -> (usize, usize) {
+    let split = delay_split(n, alpha);
+    match part {
+        Part::Eager => (0, split),
+        Part::Delayed => (split, n),
+    }
+}
+
+/// The Send-safe Rust update path (runs on the worker).
+#[allow(clippy::too_many_arguments)]
+fn apply_update_rust(
+    params: &Arc<Mutex<Vec<HostTensor>>>,
+    opts: &Arc<Mutex<Vec<AdamState>>>,
+    ssd: &Arc<SsdStorage>,
+    l: usize,
+    grads: &Arc<Vec<HostTensor>>,
+    step: u64,
+    scale: f32,
+    part: Part,
+    cfg: &TrainerConfig,
+) -> Result<()> {
+    let hp: AdamParams = cfg.adam;
+    let mut pguard = params.lock().unwrap();
+    for (t, g) in grads.iter().enumerate() {
+        let n = g.numel();
+        let (lo, hi) = part_range(n, cfg.alpha, part);
+        if lo == hi {
+            continue;
+        }
+        if cfg.opt_on_ssd {
+            // round-trip exactly this part's bytes through the throttled SSD
+            let key_m = part_key(l, t, 'm', part);
+            let key_v = part_key(l, t, 'v', part);
+            let mut m = Vec::new();
+            let mut v = Vec::new();
+            ssd.get_f32(&key_m, &mut m)?;
+            ssd.get_f32(&key_v, &mut v)?;
+            let mut st = AdamState { m, v };
+            adam_step_rust(
+                &mut pguard[t].data[lo..hi],
+                &mut st,
+                &g.data[lo..hi],
+                &hp,
+                step,
+                scale,
+                0,
+                hi - lo,
+            );
+            ssd.put_f32(&key_m, &st.m)?;
+            ssd.put_f32(&key_v, &st.v)?;
+        } else {
+            let mut oguard = opts.lock().unwrap();
+            adam_step_rust(&mut pguard[t].data, &mut oguard[t], &g.data, &hp, step, scale, lo, hi);
+        }
+    }
+    Ok(())
+}
+
+/// The inline AOT-kernel path (PJRT not Send).
+#[allow(clippy::too_many_arguments)]
+fn apply_update_hlo(
+    state: &ModelState,
+    rt: &Runtime,
+    l: usize,
+    grads: &Arc<Vec<HostTensor>>,
+    step: u64,
+    scale: f32,
+    part: Part,
+    cfg: &TrainerConfig,
+) -> Result<()> {
+    let chunk = state.manifest.config.adam_chunk;
+    let mut pguard = state.layers[l].lock().unwrap();
+    for (t, g) in grads.iter().enumerate() {
+        let n = g.numel();
+        let (lo, hi) = part_range(n, cfg.alpha, part);
+        if lo == hi {
+            continue;
+        }
+        if cfg.opt_on_ssd {
+            let key_m = part_key(l, t, 'm', part);
+            let key_v = part_key(l, t, 'v', part);
+            let mut m = Vec::new();
+            let mut v = Vec::new();
+            state.ssd.get_f32(&key_m, &mut m)?;
+            state.ssd.get_f32(&key_v, &mut v)?;
+            let mut st = AdamState { m, v };
+            let len = hi - lo;
+            adam_step_hlo(
+                rt,
+                chunk,
+                &mut pguard[t].data[lo..hi],
+                &mut st,
+                &g.data[lo..hi],
+                &cfg.adam,
+                step,
+                scale,
+                0,
+                len,
+            )?;
+            state.ssd.put_f32(&key_m, &st.m)?;
+            state.ssd.put_f32(&key_v, &st.v)?;
+        } else {
+            let mut oguard = state.layer_opt[l].lock().unwrap();
+            adam_step_hlo(
+                rt,
+                chunk,
+                &mut pguard[t].data,
+                &mut oguard[t],
+                &g.data,
+                &cfg.adam,
+                step,
+                scale,
+                lo,
+                hi,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn mk_state(alpha: f64, opt_on_ssd: bool, overlap: bool) -> ModelState {
+        let m = Manifest::load("artifacts/tiny").unwrap();
+        let cfg = TrainerConfig {
+            alpha,
+            opt_on_ssd,
+            overlap,
+            ssd_path: std::env::temp_dir().join(format!(
+                "gs_opt_test_{alpha}_{opt_on_ssd}_{overlap}_{}",
+                std::process::id()
+            )),
+            ..Default::default()
+        };
+        ModelState::init(m, cfg).unwrap()
+    }
+
+    fn fake_grads(state: &ModelState, seed: u64) -> Vec<HostTensor> {
+        let mut rng = crate::util::prng::Prng::new(seed);
+        state
+            .manifest
+            .layer_params
+            .iter()
+            .map(|s| {
+                let mut t = HostTensor::zeros(&s.shape);
+                rng.fill_normal(&mut t.data, 0.01);
+                t
+            })
+            .collect()
+    }
+
+    /// Eager+delayed across all storage/overlap modes must equal one plain
+    /// full-range Adam step.
+    #[test]
+    fn all_paths_agree_with_plain_adam() {
+        let reference = {
+            let state = mk_state(0.0, false, false);
+            let coord = OptimizerStepCoordinator::new(&state);
+            let grads = fake_grads(&state, 1);
+            coord.submit_eager(&state, None, 0, grads, 1).unwrap();
+            coord.wait_layer(0);
+            let snapshot = state.layers[0].lock().unwrap().clone();
+            snapshot
+        };
+        for (alpha, on_ssd, overlap) in
+            [(0.3, false, false), (0.3, true, false), (0.3, true, true), (0.5, false, true)]
+        {
+            let state = mk_state(alpha, on_ssd, overlap);
+            let coord = OptimizerStepCoordinator::new(&state);
+            coord.seed_ssd(&state).unwrap();
+            let grads = fake_grads(&state, 1);
+            coord.submit_eager(&state, None, 0, grads, 1).unwrap();
+            coord.dispatch_delayed(&state, None, 1).unwrap();
+            coord.wait_layer(0);
+            let got = state.layers[0].lock().unwrap().clone();
+            for (a, b) in reference.iter().zip(&got) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert!(
+                        (x - y).abs() <= 1e-6,
+                        "alpha={alpha} ssd={on_ssd} ov={overlap}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delayed_part_not_applied_until_dispatch() {
+        let state = mk_state(0.5, false, false);
+        let coord = OptimizerStepCoordinator::new(&state);
+        let before = state.layers[0].lock().unwrap().clone();
+        let grads = fake_grads(&state, 2);
+        coord.submit_eager(&state, None, 0, grads, 1).unwrap();
+        coord.wait_layer(0);
+        // w_fc2 (index 10) is large: its tail half must still be untouched
+        let mid = state.layers[0].lock().unwrap().clone();
+        let t = 10;
+        let n = mid[t].numel();
+        let split = delay_split(n, 0.5);
+        assert_ne!(before[t].data[..split], mid[t].data[..split]);
+        assert_eq!(before[t].data[split..], mid[t].data[split..]);
+        coord.dispatch_delayed(&state, None, 1).unwrap();
+        coord.wait_layer(0);
+        let after = state.layers[0].lock().unwrap().clone();
+        assert_ne!(mid[t].data[split..], after[t].data[split..]);
+    }
+
+    #[test]
+    fn clip_monitor_counts_violations() {
+        let m = Manifest::load("artifacts/tiny").unwrap();
+        let cfg = TrainerConfig {
+            clip_norm: 1e-9, // everything violates
+            opt_on_ssd: false,
+            overlap: false,
+            ssd_path: std::env::temp_dir()
+                .join(format!("gs_opt_clip_{}", std::process::id())),
+            ..Default::default()
+        };
+        let state = ModelState::init(m, cfg).unwrap();
+        let coord = OptimizerStepCoordinator::new(&state);
+        let grads = fake_grads(&state, 3);
+        coord.submit_eager(&state, None, 0, grads, 1).unwrap();
+        let norm = coord.finish_iter();
+        assert!(norm > 0.0);
+        assert_eq!(coord.clip.lock().unwrap().violations, 1);
+        assert!(coord.clip.lock().unwrap().speculative_scale() < 1.0);
+    }
+}

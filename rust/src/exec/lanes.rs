@@ -1,0 +1,345 @@
+//! The lane executor: a dependency-aware pipelined scheduler over named
+//! serial *lanes* (one worker thread each).
+//!
+//! Submitting `(lane, deps, closure)` returns an [`OpId`]. An op becomes
+//! *ready* when all its dependencies completed, then runs FIFO-in-ready-order
+//! on its lane. Lanes execute concurrently, which is exactly how the paper
+//! overlaps GPU compute with CPU↔GPU transfers, SSD traffic, and the CPU
+//! optimizer step (Figures 6–8): each row of those pipeline diagrams is a
+//! lane here.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Identifier of a submitted operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(u64);
+
+type OpFn = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pending {
+    lane: usize,
+    remaining_deps: usize,
+    f: Option<OpFn>,
+    dependents: Vec<OpId>,
+}
+
+#[derive(Default)]
+struct State {
+    pending: HashMap<OpId, Pending>,
+    completed: u64,
+    submitted: u64,
+    panicked: Option<String>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    done_cv: Condvar,
+    /// `None` after shutdown — dropping the senders disconnects the lanes.
+    lane_txs: Mutex<Option<Vec<Sender<(OpId, OpFn)>>>>,
+}
+
+impl Shared {
+    /// Send to a lane if the executor is still live.
+    fn send(&self, lane: usize, msg: (OpId, OpFn)) {
+        if let Some(txs) = self.lane_txs.lock().unwrap().as_ref() {
+            let _ = txs[lane].send(msg);
+        }
+    }
+}
+
+/// Dependency-aware executor over named serial lanes.
+pub struct LaneExecutor {
+    shared: Arc<Shared>,
+    lane_names: Vec<String>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: u64,
+}
+
+impl LaneExecutor {
+    pub fn new(lane_names: &[&str]) -> Self {
+        assert!(!lane_names.is_empty());
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in lane_names {
+            let (tx, rx) = channel::<(OpId, OpFn)>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            done_cv: Condvar::new(),
+            lane_txs: Mutex::new(Some(txs)),
+        });
+        let workers = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                let shared = Arc::clone(&shared);
+                let name = lane_names[i].to_string();
+                std::thread::Builder::new()
+                    .name(format!("lane-{name}"))
+                    .spawn(move || {
+                        while let Ok((id, f)) = rx.recv() {
+                            let result = catch_unwind(AssertUnwindSafe(f));
+                            shared.complete(id, result.err().map(|e| panic_msg(&e)));
+                        }
+                    })
+                    .expect("spawn lane worker")
+            })
+            .collect();
+        LaneExecutor {
+            shared,
+            lane_names: lane_names.iter().map(|s| s.to_string()).collect(),
+            workers,
+            next_id: 0,
+        }
+    }
+
+    pub fn lane_index(&self, name: &str) -> usize {
+        self.lane_names
+            .iter()
+            .position(|n| n == name)
+            .unwrap_or_else(|| panic!("unknown lane '{name}'"))
+    }
+
+    /// Submit an operation on `lane` that runs after all `deps` complete.
+    pub fn submit<F: FnOnce() + Send + 'static>(
+        &mut self,
+        lane: usize,
+        deps: &[OpId],
+        f: F,
+    ) -> OpId {
+        assert!(lane < self.lane_names.len());
+        let id = OpId(self.next_id);
+        self.next_id += 1;
+        let mut st = self.shared.state.lock().unwrap();
+        st.submitted += 1;
+        // Count only dependencies that have not yet completed.
+        let mut remaining = 0;
+        for d in deps {
+            if let Some(p) = st.pending.get_mut(d) {
+                p.dependents.push(id);
+                remaining += 1;
+            }
+        }
+        let mut pending = Pending {
+            lane,
+            remaining_deps: remaining,
+            f: Some(Box::new(f)),
+            dependents: Vec::new(),
+        };
+        if remaining == 0 {
+            let f = pending.f.take().unwrap();
+            st.pending.insert(id, pending); // still tracked until completion
+            drop(st);
+            self.shared.send(lane, (id, f));
+        } else {
+            st.pending.insert(id, pending);
+        }
+        id
+    }
+
+    /// Convenience: submit by lane name.
+    pub fn submit_on<F: FnOnce() + Send + 'static>(
+        &mut self,
+        lane: &str,
+        deps: &[OpId],
+        f: F,
+    ) -> OpId {
+        self.submit(self.lane_index(lane), deps, f)
+    }
+
+    /// Block until every submitted op has completed. Panics if any op panicked.
+    pub fn wait_all(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.completed < st.submitted && st.panicked.is_none() {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        if let Some(msg) = st.panicked.take() {
+            panic!("lane op panicked: {msg}");
+        }
+    }
+
+    /// Block until a specific op completes.
+    pub fn wait(&self, id: OpId) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending.contains_key(&id) && st.panicked.is_none() {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        if let Some(msg) = st.panicked.take() {
+            panic!("lane op panicked: {msg}");
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lane_names.len()
+    }
+}
+
+impl Shared {
+    fn complete(&self, id: OpId, panic: Option<String>) {
+        let mut ready: Vec<(usize, OpId, OpFn)> = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(msg) = panic {
+                st.panicked.get_or_insert(msg);
+            }
+            let p = st.pending.remove(&id).expect("completing unknown op");
+            st.completed += 1;
+            for dep_id in p.dependents {
+                if let Some(dp) = st.pending.get_mut(&dep_id) {
+                    dp.remaining_deps -= 1;
+                    if dp.remaining_deps == 0 {
+                        let f = dp.f.take().expect("ready op has fn");
+                        ready.push((dp.lane, dep_id, f));
+                    }
+                }
+            }
+            self.done_cv.notify_all();
+        }
+        for (lane, rid, f) in ready {
+            // Send outside the state lock; no-op if the executor is already
+            // shutting down (ops are dropped — the executor is being dropped).
+            self.send(lane, (rid, f));
+        }
+    }
+}
+
+impl Drop for LaneExecutor {
+    fn drop(&mut self) {
+        // Drop every Sender: lane recv()s disconnect, workers drain their
+        // queues and exit, and we can join them cleanly.
+        *self.shared.lane_txs.lock().unwrap() = None;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn respects_dependencies() {
+        let mut ex = LaneExecutor::new(&["a", "b"]);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let l1 = Arc::clone(&log);
+        let op1 = ex.submit_on("a", &[], move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            l1.lock().unwrap().push(1);
+        });
+        let l2 = Arc::clone(&log);
+        let _op2 = ex.submit_on("b", &[op1], move || l2.lock().unwrap().push(2));
+        ex.wait_all();
+        assert_eq!(*log.lock().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn lanes_run_concurrently() {
+        let mut ex = LaneExecutor::new(&["x", "y"]);
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let b1 = Arc::clone(&barrier);
+        let b2 = Arc::clone(&barrier);
+        // Both block on the barrier; completes only if lanes are parallel.
+        ex.submit_on("x", &[], move || {
+            b1.wait();
+        });
+        ex.submit_on("y", &[], move || {
+            b2.wait();
+        });
+        ex.wait_all();
+    }
+
+    #[test]
+    fn same_lane_is_serial() {
+        let mut ex = LaneExecutor::new(&["only"]);
+        let active = Arc::new(AtomicUsize::new(0));
+        let max_active = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let a = Arc::clone(&active);
+            let m = Arc::clone(&max_active);
+            ex.submit_on("only", &[], move || {
+                let now = a.fetch_add(1, Ordering::SeqCst) + 1;
+                m.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                a.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        ex.wait_all();
+        assert_eq!(max_active.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn diamond_dependency() {
+        let mut ex = LaneExecutor::new(&["a", "b", "c"]);
+        let acc = Arc::new(Mutex::new(String::new()));
+        let (a1, a2, a3, a4) =
+            (Arc::clone(&acc), Arc::clone(&acc), Arc::clone(&acc), Arc::clone(&acc));
+        let root = ex.submit_on("a", &[], move || a1.lock().unwrap().push('r'));
+        let left = ex.submit_on("b", &[root], move || a2.lock().unwrap().push('l'));
+        let right = ex.submit_on("c", &[root], move || a3.lock().unwrap().push('R'));
+        let _join = ex.submit_on("a", &[left, right], move || a4.lock().unwrap().push('j'));
+        ex.wait_all();
+        let s = acc.lock().unwrap().clone();
+        assert!(s.starts_with('r') && s.ends_with('j') && s.len() == 4, "{s}");
+    }
+
+    #[test]
+    fn wait_specific_op() {
+        let mut ex = LaneExecutor::new(&["a"]);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f1 = Arc::clone(&flag);
+        let op = ex.submit_on("a", &[], move || {
+            f1.store(1, Ordering::SeqCst);
+        });
+        ex.wait(op);
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn completed_deps_do_not_block() {
+        let mut ex = LaneExecutor::new(&["a"]);
+        let op1 = ex.submit_on("a", &[], || {});
+        ex.wait(op1);
+        // op1 already gone from pending; new op must still run.
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = Arc::clone(&ran);
+        ex.submit_on("a", &[op1], move || {
+            r.store(1, Ordering::SeqCst);
+        });
+        ex.wait_all();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn many_ops_stress() {
+        let mut ex = LaneExecutor::new(&["a", "b", "c", "d"]);
+        let count = Arc::new(AtomicUsize::new(0));
+        let mut prev: Option<OpId> = None;
+        for i in 0..500 {
+            let c = Arc::clone(&count);
+            let deps: Vec<OpId> = prev.into_iter().collect();
+            prev = Some(ex.submit(i % 4, &deps, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        ex.wait_all();
+        assert_eq!(count.load(Ordering::SeqCst), 500);
+    }
+}

@@ -1,0 +1,16 @@
+//! Execution substrate: a fixed thread pool and a *lane executor* — the
+//! in-tree replacement for the asyncio pipeline GreedySnake reuses from
+//! ZeRO-Infinity.
+//!
+//! The lane executor models the resource dimension of the paper's
+//! two-dimensional resource-time pipeline (§5): each *lane* is one serially
+//! ordered hardware resource (GPU compute, CPU→GPU copy, GPU→CPU copy,
+//! SSD read, SSD write, CPU compute), operations are submitted with explicit
+//! dependencies, and lanes run concurrently — exactly the structure of
+//! Figures 6–8, where boxes on one row execute in order and rows overlap.
+
+pub mod lanes;
+pub mod pool;
+
+pub use lanes::{LaneExecutor, OpId};
+pub use pool::ThreadPool;

@@ -1,0 +1,162 @@
+//! Fixed-size thread pool with joinable task handles.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads; `submit` returns a [`TaskHandle`] that can
+/// be waited on for the closure's return value.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Shared completion slot.
+struct Slot<T> {
+    value: Mutex<Option<std::thread::Result<T>>>,
+    cv: Condvar,
+}
+
+/// Handle to a submitted task.
+pub struct TaskHandle<T> {
+    slot: Arc<Slot<T>>,
+}
+
+impl<T> TaskHandle<T> {
+    /// Block until the task finishes; re-panics if the task panicked.
+    pub fn wait(self) -> T {
+        let mut guard = self.slot.value.lock().unwrap();
+        while guard.is_none() {
+            guard = self.slot.cv.wait(guard).unwrap();
+        }
+        match guard.take().unwrap() {
+            Ok(v) => v,
+            Err(e) => std::panic::resume_unwind(e),
+        }
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        self.slot.value.lock().unwrap().is_some()
+    }
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize) -> Self {
+        assert!(n_workers > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n_workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Submit a closure; returns a handle for its result.
+    pub fn submit<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slot = Arc::new(Slot { value: Mutex::new(None), cv: Condvar::new() });
+        let slot2 = Arc::clone(&slot);
+        let job: Job = Box::new(move || {
+            let result = catch_unwind(AssertUnwindSafe(f));
+            *slot2.value.lock().unwrap() = Some(result);
+            slot2.cv.notify_all();
+        });
+        self.tx.as_ref().unwrap().send(job).expect("pool alive");
+        TaskHandle { slot }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain then exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn runs_tasks_and_returns_values() {
+        let pool = ThreadPool::new(4);
+        let handles: Vec<_> = (0..16).map(|i| pool.submit(move || i * i)).collect();
+        let sum: i32 = handles.into_iter().map(|h| h.wait()).sum();
+        assert_eq!(sum, (0..16).map(|i| i * i).sum());
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU32::new(0));
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                let b = Arc::clone(&barrier);
+                pool.submit(move || {
+                    b.wait(); // deadlocks unless all 4 run concurrently
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.wait();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn panics_propagate_on_wait() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(|| panic!("boom"));
+        h.wait();
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let h = pool.submit(|| 7);
+        assert_eq!(h.wait(), 7);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn is_done_flips() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(20)));
+        // Eventually done; poll with timeout.
+        let t0 = std::time::Instant::now();
+        while !h.is_done() {
+            assert!(t0.elapsed().as_secs() < 5);
+            std::thread::yield_now();
+        }
+    }
+}

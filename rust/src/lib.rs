@@ -1,0 +1,51 @@
+//! # GreedySnake
+//!
+//! A from-scratch reproduction of *GreedySnake: Accelerating SSD-Offloaded LLM
+//! Training with Efficient Scheduling and Optimizer Step Overlapping*, built
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — Pallas kernels and the JAX transformer are
+//!   AOT-lowered to HLO-text artifacts by `python/compile/aot.py`.
+//! * **Layer 3 (this crate)** — the paper's system contribution: the vertical
+//!   gradient-accumulation scheduler, the three offload coordinators, the
+//!   delayed optimizer step (delay ratio α), and the LP-based configuration
+//!   search, all driving the AOT artifacts through the PJRT C API.
+//!
+//! Python never runs on the training path.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | PRNG, stats, bf16, TSV tables, CLI parsing, bench + property-test harnesses |
+//! | [`exec`] | thread pool and pipelined stage executor (the asyncio-pipeline substrate) |
+//! | [`memory`] | GPU/CPU tier accounting, file-backed throttled SSD, pinned-buffer pool |
+//! | [`modelcfg`] | Table 2 model zoo and per-layer size/FLOP arithmetic |
+//! | [`machine`] | Table 1 machine specs (bandwidths, capacities, compute rates) |
+//! | [`traffic`] | analytic data-movement model: horizontal vs vertical vs single-pass |
+//! | [`roofline`] | the §3.1 I/O + compute roofline |
+//! | [`lp`] | dense simplex solver + Algorithm 1 configuration search |
+//! | [`perfmodel`] | per-layer time prediction and iteration-time composition |
+//! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake) |
+//! | [`runtime`] | PJRT client wrapper, artifact manifests, executable cache |
+//! | [`optimizer`] | mixed-precision Adam, gradient accumulation, delay-α split, clipping |
+//! | [`coordinator`] | the three coordinators + vertical/horizontal schedulers over the real runtime |
+//! | [`trainer`] | end-to-end training loop over the AOT artifacts |
+
+pub mod coordinator;
+pub mod exec;
+pub mod lp;
+pub mod machine;
+pub mod memory;
+pub mod modelcfg;
+pub mod optimizer;
+pub mod perfmodel;
+pub mod roofline;
+pub mod runtime;
+pub mod sim;
+pub mod traffic;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,9 @@
+//! Linear programming: a dense two-phase simplex solver (the substrate) and
+//! the paper's Algorithm 1 configuration search built on top of it
+//! (`search`, which combines the solver with [`crate::perfmodel`]).
+
+pub mod search;
+pub mod simplex;
+
+pub use search::{find_optimal_config, solve_config, ConfigResult};
+pub use simplex::{LinProg, LpOutcome};

@@ -1,0 +1,220 @@
+//! `greedysnake` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train     — real training through the AOT artifacts + PJRT runtime
+//!   simulate  — discrete-event simulation of a paper configuration
+//!   search    — LP-based configuration search (Algorithm 1)
+//!   roofline  — print the §3.1 roofline for a model/machine
+//!
+//! `greedysnake <subcommand> --help` lists options.
+
+use anyhow::{bail, Result};
+
+use greedysnake::coordinator::TrainerConfig;
+use greedysnake::lp;
+use greedysnake::machine::{MACHINE1_A5000, MACHINE2_A100};
+use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
+use greedysnake::perfmodel::SystemParams;
+use greedysnake::roofline::Roofline;
+use greedysnake::runtime::Manifest;
+use greedysnake::sim::{simulate, Schedule};
+use greedysnake::trainer::{train, ScheduleKind};
+use greedysnake::util::cli::Cli;
+use greedysnake::util::table::Table;
+
+fn model_by_name(name: &str) -> Result<ModelCfg> {
+    Ok(match name {
+        "30b" | "gpt-30b" => GPT_30B,
+        "65b" | "gpt-65b" => GPT_65B,
+        "175b" | "gpt-175b" => GPT_175B,
+        other => bail!("unknown model '{other}' (30b|65b|175b)"),
+    })
+}
+
+fn machine_by_name(name: &str) -> Result<greedysnake::machine::Machine> {
+    Ok(match name {
+        "a5000" | "machine1" => MACHINE1_A5000,
+        "a100" | "machine2" => MACHINE2_A100,
+        other => bail!("unknown machine '{other}' (a5000|a100)"),
+    })
+}
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: greedysnake <train|simulate|search|roofline> [options]");
+        std::process::exit(2);
+    }
+    let sub = args.remove(0);
+    match sub.as_str() {
+        "train" => cmd_train(args),
+        "simulate" => cmd_simulate(args),
+        "search" => cmd_search(args),
+        "roofline" => cmd_roofline(args),
+        other => bail!("unknown subcommand '{other}'"),
+    }
+}
+
+fn cmd_train(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("greedysnake train", "train through the AOT artifacts")
+        .opt("artifacts", "artifact directory", Some("artifacts/tiny"))
+        .opt("schedule", "vertical|horizontal", Some("vertical"))
+        .opt("steps", "training iterations", Some("20"))
+        .opt("micro-batches", "micro-batches per iteration (M)", Some("4"))
+        .opt("alpha", "delay ratio α", Some("0.25"))
+        .opt("lr", "learning rate", Some("3e-4"))
+        .opt("seed", "rng seed", Some("42"))
+        .opt("ssd-read-gbps", "simulated SSD read bandwidth (GB/s; 0 = unthrottled)", Some("0"))
+        .opt("ssd-write-gbps", "simulated SSD write bandwidth (GB/s; 0 = unthrottled)", Some("0"))
+        .opt("log-every", "print every k steps", Some("1"))
+        .flag("opt-on-cpu", "keep optimizer states CPU-resident (default: SSD)")
+        .flag("ckpt-on-ssd", "spill activation checkpoints to SSD")
+        .flag("hlo-adam", "run Adam through the AOT Pallas kernel")
+        .flag("no-overlap", "disable optimizer/compute overlap")
+        .parse_from(args)?;
+
+    let kind: ScheduleKind = cli.get("schedule").unwrap().parse()?;
+    let alpha: f64 = cli.get_parsed("alpha")?;
+    let r: f64 = cli.get_parsed("ssd-read-gbps")?;
+    let w: f64 = cli.get_parsed("ssd-write-gbps")?;
+    let cfg = TrainerConfig {
+        alpha: if kind == ScheduleKind::Horizontal { 0.0 } else { alpha },
+        opt_on_ssd: !cli.has_flag("opt-on-cpu"),
+        ckpt_on_ssd: cli.has_flag("ckpt-on-ssd"),
+        use_hlo_adam: cli.has_flag("hlo-adam"),
+        overlap: !cli.has_flag("no-overlap"),
+        adam: greedysnake::optimizer::AdamParams {
+            lr: cli.get_parsed("lr")?,
+            weight_decay: 0.01,
+            ..Default::default()
+        },
+        ssd_read_bps: if r > 0.0 { r * 1e9 } else { f64::INFINITY },
+        ssd_write_bps: if w > 0.0 { w * 1e9 } else { f64::INFINITY },
+        seed: cli.get_parsed("seed")?,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(cli.get("artifacts").unwrap())?;
+    let shape = manifest.config;
+    let m: usize = cli.get_parsed("micro-batches")?;
+    let steps: u64 = cli.get_parsed("steps")?;
+    println!(
+        "training {} ({} params) schedule={kind:?} M={m} alpha={} steps={steps}",
+        manifest.preset,
+        manifest.total_numel(),
+        cfg.alpha,
+    );
+    let log = train(manifest, cfg, kind, steps, m, cli.get_parsed("log-every")?)?;
+    let tokens_per_step = m * shape.micro_batch * shape.seq_len;
+    println!(
+        "done: final loss {:.4}, {:.0} tokens/s, ssd r/w {}/{}",
+        log.final_loss(),
+        log.tokens_per_s(tokens_per_step),
+        greedysnake::util::stats::fmt_bytes(log.ssd_read as f64),
+        greedysnake::util::stats::fmt_bytes(log.ssd_written as f64),
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("greedysnake simulate", "discrete-event simulation of a paper config")
+        .opt("model", "30b|65b|175b", Some("65b"))
+        .opt("machine", "a5000|a100", Some("a100"))
+        .opt("gpus", "number of GPUs", Some("1"))
+        .opt("micro-batch", "micro-batch size B", Some("2"))
+        .opt("m", "micro-batch count M", Some("16"))
+        .opt("system", "greedysnake|zero-infinity|teraio|ratel", Some("greedysnake"))
+        .opt("alpha", "delay ratio (greedysnake)", Some("0.3"))
+        .parse_from(args)?;
+    let sp = SystemParams::new(
+        machine_by_name(&cli.get("machine").unwrap())?.with_gpus(cli.get_parsed("gpus")?),
+        model_by_name(&cli.get("model").unwrap())?,
+        cli.get_parsed("micro-batch")?,
+        SEQ_LEN,
+    );
+    let m: u64 = cli.get_parsed("m")?;
+    let schedule = match cli.get("system").unwrap().as_str() {
+        "greedysnake" => {
+            let alpha: f64 = cli.get_parsed("alpha")?;
+            let x = lp::solve_config(&sp, m, alpha)
+                .map(|r| r.ratios)
+                .unwrap_or(greedysnake::perfmodel::StorageRatios::ALL_SSD);
+            Schedule::GreedySnake { alpha, x }
+        }
+        "zero-infinity" => Schedule::ZeroInfinity,
+        "teraio" => Schedule::TeraIo,
+        "ratel" => Schedule::Ratel,
+        other => bail!("unknown system '{other}'"),
+    };
+    let r = simulate(&sp, m, schedule);
+    println!(
+        "{} {} x{} M={m}: {:.1}s/iter, {:.0} tokens/s, {:.1} TFLOPs/GPU, GPU util {:.0}%",
+        sp.model.name,
+        sp.node.machine.name,
+        sp.node.n_gpus,
+        r.t_iter,
+        r.tokens_per_s,
+        r.tflops_per_gpu,
+        100.0 * r.gpu_util
+    );
+    Ok(())
+}
+
+fn cmd_search(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("greedysnake search", "Algorithm 1: LP-based configuration search")
+        .opt("model", "30b|65b|175b", Some("65b"))
+        .opt("machine", "a5000|a100", Some("a100"))
+        .opt("gpus", "number of GPUs", Some("1"))
+        .opt("micro-batch", "micro-batch size B", Some("2"))
+        .parse_from(args)?;
+    let sp = SystemParams::new(
+        machine_by_name(&cli.get("machine").unwrap())?.with_gpus(cli.get_parsed("gpus")?),
+        model_by_name(&cli.get("model").unwrap())?,
+        cli.get_parsed("micro-batch")?,
+        SEQ_LEN,
+    );
+    match lp::find_optimal_config(&sp) {
+        Some(best) => {
+            println!(
+                "optimal: M={} alpha={:.2} ratios(ckpt/param/opt CPU) = {:.2}/{:.2}/{:.2}",
+                best.m, best.alpha, best.ratios.ckpt_cpu, best.ratios.param_cpu,
+                best.ratios.opt_cpu
+            );
+            println!(
+                "  per-layer t_f={:.2}s t_b={:.2}s, iter {:.1}s, {:.0} tokens/s",
+                best.t_f, best.t_b, best.t_iter, best.tokens_per_s
+            );
+        }
+        None => println!("no feasible configuration"),
+    }
+    Ok(())
+}
+
+fn cmd_roofline(args: Vec<String>) -> Result<()> {
+    let cli = Cli::new("greedysnake roofline", "print the paper's roofline")
+        .opt("model", "30b|65b|175b", Some("65b"))
+        .opt("machine", "a5000|a100", Some("a100"))
+        .opt("gpus", "number of GPUs", Some("1"))
+        .opt("micro-batch", "micro-batch size B", Some("2"))
+        .parse_from(args)?;
+    let r = Roofline {
+        node: machine_by_name(&cli.get("machine").unwrap())?.with_gpus(cli.get_parsed("gpus")?),
+        model: model_by_name(&cli.get("model").unwrap())?,
+        micro_batch: cli.get_parsed("micro-batch")?,
+        seq_len: SEQ_LEN,
+    };
+    let mut t = Table::new(
+        &format!("roofline {} on {}", r.model.name, r.node.machine.name),
+        &["M", "io-bound tok/s", "compute-bound tok/s", "ideal tok/s"],
+    );
+    for m in [1u64, 2, 4, 8, 16, 32, 64, 128] {
+        t.row(&[
+            m.to_string(),
+            format!("{:.0}", r.io_bound_tokens_per_s(m)),
+            format!("{:.0}", r.compute_bound_tokens_per_s()),
+            format!("{:.0}", r.ideal_tokens_per_s(m)),
+        ]);
+    }
+    t.emit(None);
+    println!("knee at M = {:.1}; opt-state I/O {:.0}s/iter", r.knee_m(), r.t_io_opt_states());
+    Ok(())
+}

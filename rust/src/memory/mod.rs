@@ -1,0 +1,14 @@
+//! Three-tier memory hierarchy substrate: GPU / CPU capacity-accounted
+//! tiers, a bandwidth-throttled file-backed SSD (the NVMe stand-in — see
+//! DESIGN.md §Substitutions), and the §5 pinned-buffer pool with the
+//! dynamic-programming power-of-two packing.
+
+pub mod pinned;
+pub mod ssd;
+pub mod throttle;
+pub mod tier;
+
+pub use pinned::PinnedPool;
+pub use ssd::SsdStorage;
+pub use throttle::Throttle;
+pub use tier::Tier;

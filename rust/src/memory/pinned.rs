@@ -1,0 +1,243 @@
+//! Pinned-buffer pool with the §5 dynamic-programming power-of-two packing.
+//!
+//! PyTorch pads each individual pinned-memory request to a power-of-two
+//! size, wasting up to half the allocation. GreedySnake observes that its
+//! coordinators allocate *many buffers of the same size* (one checkpoint
+//! buffer per (layer, micro-batch), one parameter chunk per micro-batch, …)
+//! and instead packs k same-size buffers into one power-of-two slab, using
+//! dynamic programming to pick the slab multiset with minimum waste.
+//!
+//! `plan_packing(n, size)` reproduces that DP exactly; [`PinnedPool`] then
+//! hands out sub-slices of the planned slabs.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// Round up to the next power of two (min 1).
+pub fn pow2_ceil(x: u64) -> u64 {
+    x.max(1).next_power_of_two()
+}
+
+/// One slab in a packing plan: `count` buffers packed into a `slab_bytes`
+/// power-of-two allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slab {
+    pub buffers: u64,
+    pub slab_bytes: u64,
+}
+
+/// DP: pack `n` buffers of `size` bytes into power-of-two slabs minimizing
+/// total allocated bytes. Returns the chosen slabs (grouped, ascending).
+///
+/// dp[i] = min over k in 1..=i of dp[i-k] + pow2_ceil(k * size).
+pub fn plan_packing(n: u64, size: u64) -> Vec<Slab> {
+    assert!(size > 0);
+    if n == 0 {
+        return vec![];
+    }
+    let n = n as usize;
+    let mut dp = vec![u64::MAX; n + 1];
+    let mut choice = vec![0usize; n + 1];
+    dp[0] = 0;
+    for i in 1..=n {
+        for k in 1..=i {
+            let cost = dp[i - k].saturating_add(pow2_ceil(k as u64 * size));
+            if cost < dp[i] {
+                dp[i] = cost;
+                choice[i] = k;
+            }
+        }
+    }
+    // reconstruct
+    let mut slabs: Vec<Slab> = Vec::new();
+    let mut i = n;
+    while i > 0 {
+        let k = choice[i];
+        slabs.push(Slab { buffers: k as u64, slab_bytes: pow2_ceil(k as u64 * size) });
+        i -= k;
+    }
+    // group identical slabs together for readability/stable ordering
+    slabs.sort_by_key(|s| (s.slab_bytes, s.buffers));
+    slabs
+}
+
+/// Total allocated bytes for a plan.
+pub fn plan_total(slabs: &[Slab]) -> u64 {
+    slabs.iter().map(|s| s.slab_bytes).sum()
+}
+
+/// Naive PyTorch-style allocation: each buffer padded to a power of two.
+pub fn naive_total(n: u64, size: u64) -> u64 {
+    n * pow2_ceil(size)
+}
+
+/// A pool of same-size pinned buffers backed by the DP packing plan.
+///
+/// (On this CPU-only substrate "pinned" means page-aligned process memory;
+/// what matters for the reproduction is the *waste accounting* and the
+/// acquire/release lifecycle the coordinators depend on.)
+pub struct PinnedPool {
+    buf_size: usize,
+    slabs: Vec<Box<[u8]>>,
+    free: Mutex<Vec<(usize, usize)>>, // (slab index, offset)
+    total_allocated: u64,
+}
+
+/// Handle to a leased buffer; release via [`PinnedPool::release`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lease {
+    slab: usize,
+    offset: usize,
+}
+
+impl PinnedPool {
+    /// Build a pool of `n` buffers of `buf_size` bytes using the DP plan.
+    pub fn new(n: u64, buf_size: usize) -> Self {
+        let plan = plan_packing(n, buf_size as u64);
+        let mut slabs = Vec::new();
+        let mut free = Vec::new();
+        for s in &plan {
+            let slab_idx = slabs.len();
+            slabs.push(vec![0u8; s.slab_bytes as usize].into_boxed_slice());
+            for b in 0..s.buffers {
+                free.push((slab_idx, b as usize * buf_size));
+            }
+        }
+        PinnedPool {
+            buf_size,
+            slabs,
+            free: Mutex::new(free),
+            total_allocated: plan_total(&plan),
+        }
+    }
+
+    pub fn buf_size(&self) -> usize {
+        self.buf_size
+    }
+
+    pub fn total_allocated(&self) -> u64 {
+        self.total_allocated
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Lease one buffer (fails when exhausted — coordinators size pools
+    /// exactly, so exhaustion is a scheduling bug, not a retry condition).
+    pub fn acquire(&self) -> Result<Lease> {
+        match self.free.lock().unwrap().pop() {
+            Some((slab, offset)) => Ok(Lease { slab, offset }),
+            None => bail!("pinned pool exhausted (size {})", self.buf_size),
+        }
+    }
+
+    pub fn release(&self, lease: Lease) {
+        self.free.lock().unwrap().push((lease.slab, lease.offset));
+    }
+
+    /// Access a leased buffer. Unsafe-free: one mutable borrow at a time is
+    /// the caller's responsibility at the *logical* level; physically we
+    /// return a raw pointer wrapped in a slice each call.
+    #[allow(clippy::mut_from_ref)]
+    pub fn slice(&self, lease: Lease) -> &mut [u8] {
+        // Each lease maps to a disjoint region; the pool hands out any region
+        // at most once between acquire/release, so aliasing cannot occur as
+        // long as callers don't clone Leases (enforced by convention; Lease
+        // is Copy only for storage in coordinator tables).
+        unsafe {
+            let base = self.slabs[lease.slab].as_ptr() as *mut u8;
+            std::slice::from_raw_parts_mut(base.add(lease.offset), self.buf_size)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_ceil_values() {
+        assert_eq!(pow2_ceil(0), 1);
+        assert_eq!(pow2_ceil(1), 1);
+        assert_eq!(pow2_ceil(3), 4);
+        assert_eq!(pow2_ceil(4), 4);
+        assert_eq!(pow2_ceil(5), 8);
+        assert_eq!(pow2_ceil(1025), 2048);
+    }
+
+    #[test]
+    fn dp_beats_or_ties_naive_always() {
+        for n in 1..=32u64 {
+            for size in [1u64, 3, 100, 768, 1000, 4096, 5000] {
+                let plan = plan_packing(n, size);
+                assert_eq!(plan.iter().map(|s| s.buffers).sum::<u64>(), n);
+                let dp = plan_total(&plan);
+                assert!(dp <= naive_total(n, size), "n={n} size={size}");
+                assert!(dp >= n * size, "cannot allocate less than demanded");
+                for s in &plan {
+                    assert!(s.slab_bytes.is_power_of_two());
+                    assert!(s.slab_bytes >= s.buffers * size);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dp_finds_tight_packing() {
+        // 3 buffers of 1000B: naive = 3*1024 = 3072; DP can pack 2 in 2048
+        // (waste 48) + 1 in 1024 → 3072, or 3 in 4096 (waste 1096) → 4096,
+        // or find that pairs tie. For size 600: naive 3*1024=3072;
+        // DP: 3*600=1800 → one 2048 slab. Strictly better.
+        let plan = plan_packing(3, 600);
+        assert_eq!(plan_total(&plan), 2048);
+        assert_eq!(naive_total(3, 600), 3072);
+    }
+
+    #[test]
+    fn exact_power_of_two_sizes_have_zero_waste() {
+        let plan = plan_packing(8, 1024);
+        assert_eq!(plan_total(&plan), 8 * 1024);
+    }
+
+    #[test]
+    fn pool_acquire_release_cycle() {
+        let pool = PinnedPool::new(4, 600);
+        assert_eq!(pool.available(), 4);
+        let l1 = pool.acquire().unwrap();
+        let l2 = pool.acquire().unwrap();
+        assert_eq!(pool.available(), 2);
+        pool.slice(l1)[0] = 7;
+        pool.slice(l2)[0] = 9;
+        assert_eq!(pool.slice(l1)[0], 7); // disjoint regions
+        pool.release(l1);
+        pool.release(l2);
+        assert_eq!(pool.available(), 4);
+    }
+
+    #[test]
+    fn pool_exhaustion_errors() {
+        let pool = PinnedPool::new(1, 64);
+        let _l = pool.acquire().unwrap();
+        assert!(pool.acquire().is_err());
+    }
+
+    #[test]
+    fn pool_total_matches_plan() {
+        let pool = PinnedPool::new(3, 600);
+        assert_eq!(pool.total_allocated(), 2048);
+    }
+
+    #[test]
+    fn leases_are_disjoint() {
+        let pool = PinnedPool::new(8, 128);
+        let leases: Vec<_> = (0..8).map(|_| pool.acquire().unwrap()).collect();
+        for (i, l) in leases.iter().enumerate() {
+            pool.slice(*l).fill(i as u8);
+        }
+        for (i, l) in leases.iter().enumerate() {
+            assert!(pool.slice(*l).iter().all(|&b| b == i as u8));
+        }
+    }
+}

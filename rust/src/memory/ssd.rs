@@ -1,0 +1,299 @@
+//! File-backed SSD tier with independent read/write bandwidth throttles.
+//!
+//! Substitution for the paper's NVMe namespace (DESIGN.md): objects are
+//! stored in one flat backing file managed with a free-list, I/O goes through
+//! real `pread`/`pwrite`-style syscalls, and a [`Throttle`] caps the rates to
+//! the paper's few-GB/s regime. The optimizer-state round trip that creates
+//! the §3.1 I/O roofline therefore happens byte-for-byte.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::throttle::Throttle;
+
+/// Key type for stored objects.
+pub type Key = String;
+
+#[derive(Debug, Clone, Copy)]
+struct Extent {
+    offset: u64,
+    len: u64,
+}
+
+#[derive(Debug, Default)]
+struct Layout {
+    objects: HashMap<Key, Extent>,
+    /// Sorted free extents (offset ascending), coalesced on free.
+    free: Vec<Extent>,
+    end: u64,
+}
+
+/// Flat-file object store with throttled read/write paths.
+pub struct SsdStorage {
+    file: Mutex<File>,
+    layout: Mutex<Layout>,
+    read_throttle: Throttle,
+    write_throttle: Throttle,
+    path: std::path::PathBuf,
+}
+
+impl SsdStorage {
+    /// Create (truncating) a backing file at `path` with the given byte rates.
+    pub fn create<P: AsRef<Path>>(path: P, read_bps: f64, write_bps: f64) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path.as_ref())
+            .with_context(|| format!("open ssd backing file {:?}", path.as_ref()))?;
+        Ok(SsdStorage {
+            file: Mutex::new(file),
+            layout: Mutex::new(Layout::default()),
+            read_throttle: Throttle::new(read_bps),
+            write_throttle: Throttle::new(write_bps),
+            path: path.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Unthrottled store (tests, setup paths).
+    pub fn create_unthrottled<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Self::create(path, f64::INFINITY, f64::INFINITY)
+    }
+
+    fn allocate(&self, len: u64) -> Extent {
+        let mut l = self.layout.lock().unwrap();
+        // best-fit over the free list
+        let mut best: Option<usize> = None;
+        for (i, e) in l.free.iter().enumerate() {
+            if e.len >= len && best.is_none_or(|b| l.free[b].len > e.len) {
+                best = Some(i);
+            }
+        }
+        if let Some(i) = best {
+            let e = l.free[i];
+            if e.len == len {
+                l.free.remove(i);
+                return e;
+            }
+            l.free[i] = Extent { offset: e.offset + len, len: e.len - len };
+            return Extent { offset: e.offset, len };
+        }
+        let e = Extent { offset: l.end, len };
+        l.end += len;
+        e
+    }
+
+    /// Write `data` under `key` (replacing any previous object).
+    pub fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.delete(key); // frees old extent if present
+        let extent = self.allocate(data.len() as u64);
+        self.write_throttle.transfer(data.len() as u64);
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(extent.offset))?;
+            f.write_all(data)?;
+        }
+        self.layout.lock().unwrap().objects.insert(key.to_string(), extent);
+        Ok(())
+    }
+
+    /// Read the object at `key` into `out` (resized to fit).
+    pub fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()> {
+        let extent = *self
+            .layout
+            .lock()
+            .unwrap()
+            .objects
+            .get(key)
+            .ok_or_else(|| anyhow!("ssd: no object '{key}'"))?;
+        self.read_throttle.transfer(extent.len);
+        out.resize(extent.len as usize, 0);
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(extent.offset))?;
+        f.read_exact(out)?;
+        Ok(())
+    }
+
+    /// Remove an object if present; its extent is coalesced into the free list.
+    pub fn delete(&self, key: &str) -> bool {
+        let mut l = self.layout.lock().unwrap();
+        if let Some(e) = l.objects.remove(key) {
+            let idx = l.free.partition_point(|f| f.offset < e.offset);
+            l.free.insert(idx, e);
+            // coalesce with neighbours
+            if idx + 1 < l.free.len()
+                && l.free[idx].offset + l.free[idx].len == l.free[idx + 1].offset
+            {
+                l.free[idx].len += l.free[idx + 1].len;
+                l.free.remove(idx + 1);
+            }
+            if idx > 0 && l.free[idx - 1].offset + l.free[idx - 1].len == l.free[idx].offset {
+                l.free[idx - 1].len += l.free[idx].len;
+                l.free.remove(idx);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.layout.lock().unwrap().objects.contains_key(key)
+    }
+
+    pub fn len_of(&self, key: &str) -> Option<u64> {
+        self.layout.lock().unwrap().objects.get(key).map(|e| e.len)
+    }
+
+    /// Total bytes moved through the read / write paths.
+    pub fn bytes_read(&self) -> u64 {
+        self.read_throttle.total_bytes()
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.write_throttle.total_bytes()
+    }
+
+    /// Current backing-file high-water mark.
+    pub fn footprint(&self) -> u64 {
+        self.layout.lock().unwrap().end
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    // Typed helpers for the f32 tensors the trainer stores. ----------------
+
+    pub fn put_f32(&self, key: &str, data: &[f32]) -> Result<()> {
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        self.put(key, bytes)
+    }
+
+    pub fn get_f32(&self, key: &str, out: &mut Vec<f32>) -> Result<()> {
+        let mut raw = Vec::new();
+        self.get(key, &mut raw)?;
+        anyhow::ensure!(raw.len() % 4 == 0, "object '{key}' not f32-aligned");
+        out.resize(raw.len() / 4, 0.0);
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, raw.len());
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SsdStorage {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gs_ssd_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let ssd = SsdStorage::create_unthrottled(tmp("rt")).unwrap();
+        ssd.put("a", b"hello world").unwrap();
+        let mut out = Vec::new();
+        ssd.get("a", &mut out).unwrap();
+        assert_eq!(out, b"hello world");
+        assert_eq!(ssd.bytes_written(), 11);
+        assert_eq!(ssd.bytes_read(), 11);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let ssd = SsdStorage::create_unthrottled(tmp("miss")).unwrap();
+        let mut out = Vec::new();
+        assert!(ssd.get("nope", &mut out).is_err());
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let ssd = SsdStorage::create_unthrottled(tmp("ow")).unwrap();
+        ssd.put("k", b"short").unwrap();
+        ssd.put("k", b"a considerably longer value").unwrap();
+        let mut out = Vec::new();
+        ssd.get("k", &mut out).unwrap();
+        assert_eq!(out, b"a considerably longer value");
+    }
+
+    #[test]
+    fn freed_space_is_reused() {
+        let ssd = SsdStorage::create_unthrottled(tmp("reuse")).unwrap();
+        ssd.put("a", &[0u8; 1000]).unwrap();
+        ssd.put("b", &[1u8; 1000]).unwrap();
+        let fp = ssd.footprint();
+        ssd.delete("a");
+        ssd.put("c", &[2u8; 900]).unwrap(); // fits in a's hole
+        assert_eq!(ssd.footprint(), fp);
+        let mut out = Vec::new();
+        ssd.get("b", &mut out).unwrap();
+        assert_eq!(out, vec![1u8; 1000]);
+    }
+
+    #[test]
+    fn free_list_coalesces() {
+        let ssd = SsdStorage::create_unthrottled(tmp("coal")).unwrap();
+        for (k, v) in [("a", 100), ("b", 100), ("c", 100)] {
+            ssd.put(k, &vec![0u8; v]).unwrap();
+        }
+        ssd.delete("a");
+        ssd.delete("c");
+        ssd.delete("b"); // middle join: one 300-byte extent
+        ssd.put("big", &[7u8; 300]).unwrap();
+        assert_eq!(ssd.footprint(), 300);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let ssd = SsdStorage::create_unthrottled(tmp("f32")).unwrap();
+        let xs: Vec<f32> = (0..257).map(|i| i as f32 * 0.5).collect();
+        ssd.put_f32("t", &xs).unwrap();
+        let mut out = Vec::new();
+        ssd.get_f32("t", &mut out).unwrap();
+        assert_eq!(out, xs);
+    }
+
+    #[test]
+    fn throttled_write_takes_time() {
+        let ssd = SsdStorage::create(tmp("thr"), f64::INFINITY, 10_000_000.0).unwrap();
+        let t0 = std::time::Instant::now();
+        ssd.put("x", &vec![0u8; 500_000]).unwrap(); // 50 ms at 10 MB/s
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(45));
+    }
+
+    #[test]
+    fn concurrent_puts_and_gets() {
+        let ssd = std::sync::Arc::new(SsdStorage::create_unthrottled(tmp("conc")).unwrap());
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let ssd = std::sync::Arc::clone(&ssd);
+                std::thread::spawn(move || {
+                    let data = vec![i as u8; 10_000];
+                    let key = format!("k{i}");
+                    ssd.put(&key, &data).unwrap();
+                    let mut out = Vec::new();
+                    ssd.get(&key, &mut out).unwrap();
+                    assert_eq!(out, data);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Capacity-accounted memory tier (models GPU memory / CPU DRAM).
+//!
+//! The real allocations live in ordinary process memory; the tier enforces a
+//! *budget* so schedules that would not fit on the paper's hardware fail here
+//! too, with per-category accounting (parameters, checkpoints, gradients,
+//! optimizer states, working buffers) mirroring the LP constraints of §4.5.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// Data categories tracked by a tier (the LP's variables).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Category {
+    Parameters,
+    Checkpoints,
+    Gradients,
+    OptimizerStates,
+    Working,
+}
+
+impl Category {
+    pub const ALL: [Category; 5] = [
+        Category::Parameters,
+        Category::Checkpoints,
+        Category::Gradients,
+        Category::OptimizerStates,
+        Category::Working,
+    ];
+}
+
+#[derive(Default, Debug)]
+struct Usage {
+    used: u64,
+    peak: u64,
+    by_cat: BTreeMap<Category, u64>,
+}
+
+/// A named, capacity-limited memory tier.
+#[derive(Debug)]
+pub struct Tier {
+    name: String,
+    capacity: u64,
+    usage: Mutex<Usage>,
+}
+
+/// RAII allocation ticket; returns its bytes to the tier on drop.
+pub struct Allocation<'t> {
+    tier: &'t Tier,
+    bytes: u64,
+    cat: Category,
+}
+
+impl Tier {
+    pub fn new(name: &str, capacity_bytes: u64) -> Self {
+        Tier { name: name.to_string(), capacity: capacity_bytes, usage: Mutex::new(Usage::default()) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Reserve `bytes` under `cat`; fails if it would exceed capacity.
+    pub fn alloc(&self, bytes: u64, cat: Category) -> Result<Allocation<'_>> {
+        let mut u = self.usage.lock().unwrap();
+        if u.used + bytes > self.capacity {
+            bail!(
+                "{}: out of memory — requested {} with {}/{} used (would need {})",
+                self.name,
+                crate::util::stats::fmt_bytes(bytes as f64),
+                crate::util::stats::fmt_bytes(u.used as f64),
+                crate::util::stats::fmt_bytes(self.capacity as f64),
+                crate::util::stats::fmt_bytes((u.used + bytes) as f64),
+            );
+        }
+        u.used += bytes;
+        u.peak = u.peak.max(u.used);
+        *u.by_cat.entry(cat).or_default() += bytes;
+        Ok(Allocation { tier: self, bytes, cat })
+    }
+
+    pub fn used(&self) -> u64 {
+        self.usage.lock().unwrap().used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.usage.lock().unwrap().peak
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used()
+    }
+
+    pub fn used_by(&self, cat: Category) -> u64 {
+        self.usage.lock().unwrap().by_cat.get(&cat).copied().unwrap_or(0)
+    }
+
+    fn release(&self, bytes: u64, cat: Category) {
+        let mut u = self.usage.lock().unwrap();
+        u.used -= bytes;
+        if let Some(c) = u.by_cat.get_mut(&cat) {
+            *c -= bytes;
+        }
+    }
+}
+
+impl Allocation<'_> {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Shrink the allocation in place (checkpoint memory reclaimed for
+    /// delayed-step gradients, §4.4).
+    pub fn shrink_to(&mut self, new_bytes: u64) {
+        assert!(new_bytes <= self.bytes);
+        self.tier.release(self.bytes - new_bytes, self.cat);
+        self.bytes = new_bytes;
+    }
+}
+
+impl Drop for Allocation<'_> {
+    fn drop(&mut self) {
+        self.tier.release(self.bytes, self.cat);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let t = Tier::new("gpu", 1000);
+        {
+            let a = t.alloc(600, Category::Parameters).unwrap();
+            assert_eq!(t.used(), 600);
+            assert_eq!(a.bytes(), 600);
+        }
+        assert_eq!(t.used(), 0);
+        assert_eq!(t.peak(), 600);
+    }
+
+    #[test]
+    fn oom_rejected() {
+        let t = Tier::new("gpu", 100);
+        let _a = t.alloc(80, Category::Working).unwrap();
+        assert!(t.alloc(30, Category::Working).is_err());
+        assert_eq!(t.used(), 80); // failed alloc must not leak accounting
+    }
+
+    #[test]
+    fn per_category_accounting() {
+        let t = Tier::new("cpu", 1000);
+        let _p = t.alloc(100, Category::Parameters).unwrap();
+        let _c = t.alloc(200, Category::Checkpoints).unwrap();
+        assert_eq!(t.used_by(Category::Parameters), 100);
+        assert_eq!(t.used_by(Category::Checkpoints), 200);
+        assert_eq!(t.used_by(Category::Gradients), 0);
+    }
+
+    #[test]
+    fn shrink_reclaims() {
+        let t = Tier::new("cpu", 1000);
+        let mut a = t.alloc(500, Category::Checkpoints).unwrap();
+        a.shrink_to(100);
+        assert_eq!(t.used(), 100);
+        assert_eq!(t.free_bytes(), 900);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let t = Tier::new("gpu", 1000);
+        {
+            let _a = t.alloc(700, Category::Working).unwrap();
+        }
+        let _b = t.alloc(100, Category::Working).unwrap();
+        assert_eq!(t.peak(), 700);
+    }
+}

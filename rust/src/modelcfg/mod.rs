@@ -1,0 +1,164 @@
+//! Model zoo (paper Table 2) and the size/FLOP arithmetic every analytic
+//! component shares: per-layer parameter counts, activation-checkpoint
+//! sizes, optimizer-state footprints, and forward/backward FLOPs.
+//!
+//! The §3.4 key insight lives here as arithmetic: per-layer parameter count
+//! scales *quadratically* with the hidden dimension (≈ 12·D²) while the
+//! per-micro-batch checkpoint scales *linearly* (B·T·D), so parameter reuse
+//! dominates for large models.
+
+/// Bytes per element.
+pub const BYTES_LP: u64 = 2; // low-precision (bf16) parameters/activations
+pub const BYTES_FP: u64 = 4; // full-precision master/grad/optimizer states
+
+/// A GPT-style model configuration (paper Table 2 uses GPT-2/3 shapes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub hidden: u64,
+    pub vocab: u64,
+    pub ffn_mult: u64,
+}
+
+impl ModelCfg {
+    pub const fn new(
+        name: &'static str,
+        n_layers: u64,
+        n_heads: u64,
+        hidden: u64,
+    ) -> Self {
+        ModelCfg { name, n_layers, n_heads, hidden, vocab: 50_257, ffn_mult: 4 }
+    }
+
+    /// Parameters in one transformer layer:
+    /// 2 LN (2·2D) + QKV (3D²+3D) + proj (D²+D) + FFN (2·4D² + 5D... exact below).
+    pub fn params_per_layer(&self) -> u64 {
+        let d = self.hidden;
+        let f = self.ffn_mult * d;
+        // ln1 (2d) + qkv (3d²+3d) + proj (d²+d) + ln2 (2d) + fc1 (d·f+f) + fc2 (f·d+d)
+        4 * d + 3 * d * d + 3 * d + d * d + d + d * f + f + f * d + d
+    }
+
+    /// Embedding + head parameters (tied LM head, learned positions).
+    pub fn params_embed(&self, seq_len: u64) -> u64 {
+        self.vocab * self.hidden + seq_len * self.hidden + 2 * self.hidden
+    }
+
+    /// Total parameters at a given sequence length.
+    pub fn params_total(&self, seq_len: u64) -> u64 {
+        self.n_layers * self.params_per_layer() + self.params_embed(seq_len)
+    }
+
+    /// Low-precision bytes of one layer's parameters (what moves H2D).
+    pub fn layer_param_bytes_lp(&self) -> u64 {
+        self.params_per_layer() * BYTES_LP
+    }
+
+    /// Full-precision bytes of one layer's gradient buffer.
+    pub fn layer_grad_bytes_fp(&self) -> u64 {
+        self.params_per_layer() * BYTES_FP
+    }
+
+    /// Optimizer-state bytes per layer: master + momentum + variance, FP32.
+    pub fn layer_opt_state_bytes(&self) -> u64 {
+        3 * self.params_per_layer() * BYTES_FP
+    }
+
+    /// One micro-batch's inter-layer activation checkpoint, low precision:
+    /// B · T · D elements (the paper's §3.4 example: 8·2048·8192 ≈ 1.34e8).
+    pub fn ckpt_bytes_lp(&self, micro_batch: u64, seq_len: u64) -> u64 {
+        micro_batch * seq_len * self.hidden * BYTES_LP
+    }
+
+    /// Elements in one checkpoint (for the §3.4 ratio).
+    pub fn ckpt_elems(&self, micro_batch: u64, seq_len: u64) -> u64 {
+        micro_batch * seq_len * self.hidden
+    }
+
+    /// Approximate forward FLOPs for one layer on one micro-batch
+    /// (2·params·tokens for the matmuls + attention's 2·B·H·T²·dh ×2).
+    pub fn layer_fwd_flops(&self, micro_batch: u64, seq_len: u64) -> f64 {
+        let tokens = (micro_batch * seq_len) as f64;
+        let matmul = 2.0 * self.params_per_layer() as f64 * tokens;
+        let attn = 4.0 * micro_batch as f64 * seq_len as f64 * seq_len as f64
+            * self.hidden as f64;
+        matmul + attn
+    }
+
+    /// Backward ≈ 2× forward; with recomputation the backward *stage* costs
+    /// forward + 2×forward = 3× (the paper's per-layer recompute).
+    pub fn layer_bwd_flops_with_recompute(&self, micro_batch: u64, seq_len: u64) -> f64 {
+        3.0 * self.layer_fwd_flops(micro_batch, seq_len)
+    }
+
+    /// Whole-iteration FLOPs for M micro-batches (fwd + recompute + bwd).
+    pub fn iter_flops(&self, micro_batch: u64, seq_len: u64, m: u64) -> f64 {
+        self.n_layers as f64
+            * m as f64
+            * (self.layer_fwd_flops(micro_batch, seq_len)
+                + self.layer_bwd_flops_with_recompute(micro_batch, seq_len))
+    }
+}
+
+/// Table 2 of the paper.
+pub const GPT_30B: ModelCfg = ModelCfg::new("GPT-30B", 48, 56, 7_168);
+pub const GPT_65B: ModelCfg = ModelCfg::new("GPT-65B", 80, 64, 8_192);
+pub const GPT_175B: ModelCfg = ModelCfg::new("GPT-175B", 96, 96, 12_288);
+
+pub const TABLE2: [ModelCfg; 3] = [GPT_30B, GPT_65B, GPT_175B];
+
+/// The paper's evaluation sequence length.
+pub const SEQ_LEN: u64 = 2_048;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_total_params_match_names() {
+        // Within ~15% of the nominal size (names are rounded marketing sizes).
+        for (cfg, nominal) in [(GPT_30B, 30e9), (GPT_65B, 65e9), (GPT_175B, 175e9)] {
+            let total = cfg.params_total(SEQ_LEN) as f64;
+            let rel = (total - nominal).abs() / nominal;
+            assert!(rel < 0.15, "{}: {total:.3e} vs {nominal:.1e} ({rel:.2})", cfg.name);
+        }
+    }
+
+    #[test]
+    fn paper_65b_examples_hold() {
+        // §3.4: per-layer params ≈ 8.05e8 for GPT-65B…
+        let per_layer = GPT_65B.params_per_layer() as f64;
+        assert!((per_layer - 8.05e8).abs() / 8.05e8 < 0.02, "{per_layer:.3e}");
+        // …and a micro-batch-8 checkpoint is 8·2048·8192 ≈ 1.34e8 elements,
+        // ≈ 6× smaller than the layer.
+        let ckpt = GPT_65B.ckpt_elems(8, SEQ_LEN) as f64;
+        assert!((ckpt - 1.342e8).abs() / 1.342e8 < 0.01, "{ckpt:.3e}");
+        assert!((per_layer / ckpt - 6.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn param_scaling_is_quadratic_ckpt_linear() {
+        let d1 = ModelCfg::new("x", 1, 8, 4096);
+        let d2 = ModelCfg::new("y", 1, 8, 8192);
+        let p_ratio = d2.params_per_layer() as f64 / d1.params_per_layer() as f64;
+        let c_ratio =
+            d2.ckpt_elems(4, 1024) as f64 / d1.ckpt_elems(4, 1024) as f64;
+        assert!((p_ratio - 4.0).abs() < 0.05, "quadratic: {p_ratio}");
+        assert!((c_ratio - 2.0).abs() < 1e-9, "linear: {c_ratio}");
+    }
+
+    #[test]
+    fn optimizer_state_is_12_bytes_per_param() {
+        assert_eq!(GPT_65B.layer_opt_state_bytes(), GPT_65B.params_per_layer() * 12);
+    }
+
+    #[test]
+    fn flops_positive_and_scale_with_m() {
+        let f1 = GPT_30B.iter_flops(8, SEQ_LEN, 1);
+        let f4 = GPT_30B.iter_flops(8, SEQ_LEN, 4);
+        assert!(f1 > 0.0);
+        assert!((f4 / f1 - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,348 @@
+//! Mixed-precision Adam(W) with gradient accumulation, the delay-α split,
+//! and global-norm clipping with speculative steps.
+//!
+//! Two interchangeable execution paths update the optimizer state:
+//! * [`adam_step_rust`] — the in-process fused loop (the `cpu_adam` AVX
+//!   analog; the compiler autovectorizes the single pass);
+//! * the AOT `adam_step` Pallas kernel invoked through
+//!   [`crate::runtime::Runtime`] (chunked by `adam_chunk`).
+//!
+//! Both are bit-tested against each other; like GreedySnake (§6.5) the
+//! update is *partition-invariant*: chunking never changes results because
+//! every lane computes the identical fused expression.
+
+use anyhow::Result;
+
+/// Adam hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        AdamParams { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+impl AdamParams {
+    /// The 8-wide hyper vector consumed by the AOT kernel
+    /// `[lr, b1, b2, eps, wd, bias_corr1, bias_corr2, grad_scale]`.
+    pub fn hyper_vec(&self, step: u64, grad_scale: f32) -> [f32; 8] {
+        [
+            self.lr,
+            self.beta1,
+            self.beta2,
+            self.eps,
+            self.weight_decay,
+            1.0 - self.beta1.powi(step as i32),
+            1.0 - self.beta2.powi(step as i32),
+            grad_scale,
+        ]
+    }
+}
+
+/// One parameter group's optimizer state (master params are the working
+/// fp32 params themselves on this substrate; `m`/`v` are the moments).
+#[derive(Clone, Debug, Default)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl AdamState {
+    pub fn zeros(n: usize) -> Self {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.m.len()
+    }
+}
+
+/// Fused in-place Adam(W) over a sub-range `[lo, hi)` — the range form is
+/// what implements the delay-α split: the backward-phase step covers
+/// `[0, split)` and the delayed share `[split, n)` runs during the next
+/// iteration's forward (§4.4).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step_rust(
+    p: &mut [f32],
+    state: &mut AdamState,
+    g: &[f32],
+    hp: &AdamParams,
+    step: u64,
+    grad_scale: f32,
+    lo: usize,
+    hi: usize,
+) {
+    assert_eq!(p.len(), g.len());
+    assert_eq!(p.len(), state.m.len());
+    assert!(lo <= hi && hi <= p.len());
+    let bc1 = 1.0 - hp.beta1.powi(step as i32);
+    let bc2 = 1.0 - hp.beta2.powi(step as i32);
+    let (b1, b2) = (hp.beta1, hp.beta2);
+    // Single fused pass — load p/m/v/g once, store p/m/v once (the whole
+    // point of cpu_adam; the paper's §6.5 notes full-SIMD execution keeps
+    // results partition-invariant, which this expression is by construction).
+    for i in lo..hi {
+        let gi = g[i] * grad_scale;
+        let m = b1 * state.m[i] + (1.0 - b1) * gi;
+        let v = b2 * state.v[i] + (1.0 - b2) * gi * gi;
+        let m_hat = m / bc1;
+        let v_hat = v / bc2;
+        p[i] -= hp.lr * (m_hat / (v_hat.sqrt() + hp.eps) + hp.weight_decay * p[i]);
+        state.m[i] = m;
+        state.v[i] = v;
+    }
+}
+
+/// The delay-α split point for a parameter vector of length `n`: the first
+/// `split` elements update in the backward phase, the tail α-fraction
+/// `[split, n)` is delayed to the next forward.
+pub fn delay_split(n: usize, alpha: f64) -> usize {
+    ((n as f64) * (1.0 - alpha)).round() as usize
+}
+
+/// Gradient-clipping bookkeeping with speculative optimizer steps.
+///
+/// Computing the global L2 norm requires the *entire* backward pass, which
+/// would serialize the optimizer behind it (§2.1). Like SuperOffload's
+/// speculative step (cited by the paper), we apply the update with scale 1
+/// as gradients arrive and *verify* afterwards: if the finished norm exceeds
+/// the threshold, the event is recorded and the corrective scale is folded
+/// into the next step's gradient scale (clipping rarely fires in practice).
+#[derive(Clone, Debug)]
+pub struct ClipMonitor {
+    pub max_norm: f64,
+    sq_sum: f64,
+    /// Scale to fold into the next iteration (1.0 when no violation).
+    pending_scale: f32,
+    pub violations: u64,
+}
+
+impl ClipMonitor {
+    pub fn new(max_norm: f64) -> Self {
+        ClipMonitor { max_norm, sq_sum: 0.0, pending_scale: 1.0, violations: 0 }
+    }
+
+    /// Account one tensor's gradient as it is produced.
+    pub fn accumulate(&mut self, sq_sum: f64) {
+        self.sq_sum += sq_sum;
+    }
+
+    /// Scale to use for the CURRENT iteration's speculative steps.
+    pub fn speculative_scale(&self) -> f32 {
+        self.pending_scale
+    }
+
+    /// Finish the iteration: returns the global norm and updates the
+    /// corrective scale for the next one.
+    pub fn finish_iter(&mut self) -> f64 {
+        let norm = self.sq_sum.sqrt();
+        if norm > self.max_norm && norm > 0.0 {
+            self.violations += 1;
+            self.pending_scale = (self.max_norm / norm) as f32;
+        } else {
+            self.pending_scale = 1.0;
+        }
+        self.sq_sum = 0.0;
+        norm
+    }
+}
+
+/// Split a flat length into `chunk`-sized ranges (last may be short) — the
+/// unit the AOT adam kernel consumes; short tails are zero-padded by the
+/// caller, which is safe because the padded region is never copied back.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<(usize, usize)> {
+    assert!(chunk > 0);
+    (0..n.div_ceil(chunk)).map(|i| (i * chunk, ((i + 1) * chunk).min(n))).collect()
+}
+
+/// Run one Adam step through the AOT Pallas kernel for `[lo, hi)` of a flat
+/// vector, chunked and padded. Numerically identical to `adam_step_rust`.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step_hlo(
+    rt: &crate::runtime::Runtime,
+    chunk: usize,
+    p: &mut [f32],
+    state: &mut AdamState,
+    g: &[f32],
+    hp: &AdamParams,
+    step: u64,
+    grad_scale: f32,
+    lo: usize,
+    hi: usize,
+) -> Result<()> {
+    use crate::runtime::Stage;
+    let hyper = hp.hyper_vec(step, grad_scale);
+    let mut pad_p = vec![0.0f32; chunk];
+    let mut pad_m = vec![0.0f32; chunk];
+    let mut pad_v = vec![0.0f32; chunk];
+    let mut pad_g = vec![0.0f32; chunk];
+    let mut pos = lo;
+    while pos < hi {
+        let end = (pos + chunk).min(hi);
+        let len = end - pos;
+        pad_p[..len].copy_from_slice(&p[pos..end]);
+        pad_m[..len].copy_from_slice(&state.m[pos..end]);
+        pad_v[..len].copy_from_slice(&state.v[pos..end]);
+        pad_g[..len].copy_from_slice(&g[pos..end]);
+        if len < chunk {
+            pad_p[len..].fill(0.0);
+            pad_m[len..].fill(0.0);
+            pad_v[len..].fill(0.0);
+            pad_g[len..].fill(0.0);
+        }
+        let out = rt.execute(
+            Stage::AdamStep,
+            &[
+                xla::Literal::vec1(&pad_p),
+                xla::Literal::vec1(&pad_m),
+                xla::Literal::vec1(&pad_v),
+                xla::Literal::vec1(&pad_g),
+                xla::Literal::vec1(&hyper[..]),
+            ],
+        )?;
+        let new_p = out[0].to_vec::<f32>()?;
+        let new_m = out[1].to_vec::<f32>()?;
+        let new_v = out[2].to_vec::<f32>()?;
+        p[pos..end].copy_from_slice(&new_p[..len]);
+        state.m[pos..end].copy_from_slice(&new_m[..len]);
+        state.v[pos..end].copy_from_slice(&new_v[..len]);
+        pos = end;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn setup(n: usize, seed: u64) -> (Vec<f32>, AdamState, Vec<f32>) {
+        let mut rng = Prng::new(seed);
+        let mut p = vec![0.0f32; n];
+        rng.fill_normal(&mut p, 1.0);
+        let mut g = vec![0.0f32; n];
+        rng.fill_normal(&mut g, 0.1);
+        (p, AdamState::zeros(n), g)
+    }
+
+    #[test]
+    fn decreases_loss_on_quadratic() {
+        // minimize f(p) = ½p² with g = p: must converge toward 0.
+        let mut p = vec![5.0f32];
+        let mut st = AdamState::zeros(1);
+        let hp = AdamParams { lr: 0.1, ..Default::default() };
+        for step in 1..=500 {
+            let g = vec![p[0]];
+            adam_step_rust(&mut p, &mut st, &g, &hp, step, 1.0, 0, 1);
+        }
+        assert!(p[0].abs() < 0.1, "{}", p[0]);
+    }
+
+    #[test]
+    fn partition_invariance() {
+        let (p0, st0, g) = setup(1000, 1);
+        let hp = AdamParams::default();
+        let (mut p1, mut st1) = (p0.clone(), st0.clone());
+        adam_step_rust(&mut p1, &mut st1, &g, &hp, 1, 1.0, 0, 1000);
+        let (mut p2, mut st2) = (p0.clone(), st0.clone());
+        adam_step_rust(&mut p2, &mut st2, &g, &hp, 1, 1.0, 500, 1000);
+        adam_step_rust(&mut p2, &mut st2, &g, &hp, 1, 1.0, 0, 500);
+        assert_eq!(p1, p2);
+        assert_eq!(st1.m, st2.m);
+    }
+
+    #[test]
+    fn delay_split_boundaries() {
+        assert_eq!(delay_split(100, 0.0), 100);
+        assert_eq!(delay_split(100, 1.0), 0);
+        assert_eq!(delay_split(100, 0.25), 75);
+        assert_eq!(delay_split(0, 0.5), 0);
+    }
+
+    #[test]
+    fn delayed_update_equals_eager_when_completed() {
+        // Updating [0,split) then [split,n) with the same step must equal
+        // one full update — the α-delay changes timing, not values.
+        let (p0, st0, g) = setup(256, 2);
+        let hp = AdamParams::default();
+        let (mut p1, mut st1) = (p0.clone(), st0.clone());
+        adam_step_rust(&mut p1, &mut st1, &g, &hp, 3, 1.0, 0, 256);
+        let (mut p2, mut st2) = (p0.clone(), st0.clone());
+        let split = delay_split(256, 0.3);
+        adam_step_rust(&mut p2, &mut st2, &g, &hp, 3, 1.0, 0, split);
+        adam_step_rust(&mut p2, &mut st2, &g, &hp, 3, 1.0, split, 256);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn weight_decay_applied() {
+        let mut p = vec![2.0f32];
+        let mut st = AdamState::zeros(1);
+        let hp = AdamParams { lr: 0.01, weight_decay: 0.5, ..Default::default() };
+        adam_step_rust(&mut p, &mut st, &[0.0], &hp, 1, 1.0, 0, 1);
+        assert!((p[0] - (2.0 - 0.01 * 0.5 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_monitor_speculative_flow() {
+        let mut cm = ClipMonitor::new(1.0);
+        assert_eq!(cm.speculative_scale(), 1.0);
+        cm.accumulate(4.0); // norm 2 > 1
+        let norm = cm.finish_iter();
+        assert!((norm - 2.0).abs() < 1e-12);
+        assert_eq!(cm.violations, 1);
+        assert!((cm.speculative_scale() - 0.5).abs() < 1e-6);
+        // next iteration within bounds resets the scale
+        cm.accumulate(0.25);
+        cm.finish_iter();
+        assert_eq!(cm.speculative_scale(), 1.0);
+    }
+
+    #[test]
+    fn chunk_ranges_cover() {
+        assert_eq!(chunk_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(chunk_ranges(8, 4), vec![(0, 4), (4, 8)]);
+        assert_eq!(chunk_ranges(3, 8), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn grad_scale_equivalent_to_scaling_grads() {
+        let (p0, st0, g) = setup(64, 5);
+        let hp = AdamParams::default();
+        let (mut p1, mut st1) = (p0.clone(), st0.clone());
+        adam_step_rust(&mut p1, &mut st1, &g, &hp, 1, 0.5, 0, 64);
+        let g2: Vec<f32> = g.iter().map(|x| x * 0.5).collect();
+        let (mut p2, mut st2) = (p0.clone(), st0.clone());
+        adam_step_rust(&mut p2, &mut st2, &g2, &hp, 1, 1.0, 0, 64);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn hlo_kernel_matches_rust_path() {
+        let manifest = crate::runtime::Manifest::load("artifacts/tiny").unwrap();
+        let rt = crate::runtime::Runtime::load(&manifest).unwrap();
+        let n = manifest.config.adam_chunk + 123; // force padding of the tail
+        let (p0, st0, g) = setup(n, 9);
+        let hp = AdamParams { lr: 3e-4, weight_decay: 0.01, ..Default::default() };
+        let (mut p1, mut st1) = (p0.clone(), st0.clone());
+        adam_step_rust(&mut p1, &mut st1, &g, &hp, 7, 1.0, 0, n);
+        let (mut p2, mut st2) = (p0.clone(), st0.clone());
+        adam_step_hlo(&rt, manifest.config.adam_chunk, &mut p2, &mut st2, &g, &hp, 7, 1.0, 0, n)
+            .unwrap();
+        for i in 0..n {
+            assert!(
+                (p1[i] - p2[i]).abs() <= 1e-6 * (1.0 + p1[i].abs()),
+                "i={i}: {} vs {}",
+                p1[i],
+                p2[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! The §3.1 roofline model of SSD-offloaded training.
+//!
+//! Two bounds on training throughput (tokens/s) as a function of global
+//! batch size:
+//!
+//! * **I/O access roofline** — a line through the origin: every iteration
+//!   must round-trip the optimizer states through the SSD once, so
+//!   `throughput ≤ batch_tokens / t_io(optimizer states)`.
+//! * **Compute roofline** — a horizontal line: `throughput ≤
+//!   aggregate_flops / flops_per_token`.
+//!
+//! An ideal system rides the I/O line and then saturates at the compute
+//! line; the paper's Figure 3.
+
+use crate::machine::NodeSpec;
+use crate::modelcfg::{ModelCfg, BYTES_FP};
+
+/// Roofline evaluator for one (model, node, micro-batch, seq-len) setting.
+#[derive(Clone, Copy, Debug)]
+pub struct Roofline {
+    pub node: NodeSpec,
+    pub model: ModelCfg,
+    pub micro_batch: u64,
+    pub seq_len: u64,
+}
+
+impl Roofline {
+    /// Optimizer-state SSD round-trip time per iteration (whole model,
+    /// master+momentum+variance in FP32), assuming 100 % of optimizer
+    /// states live on SSD — the fundamental bound of §3.1.
+    pub fn t_io_opt_states(&self) -> f64 {
+        let bytes = (self.model.n_layers * self.model.layer_opt_state_bytes()) as f64
+            + (self.model.vocab * self.model.hidden * 3 * BYTES_FP) as f64;
+        // Reads and writes stream on independent NVMe channels; the slower
+        // one bounds the iteration.
+        (bytes / self.node.ssd_read_bw()).max(bytes / self.node.ssd_write_bw())
+    }
+
+    /// FLOPs per trained token (fwd + recompute + bwd over all layers).
+    pub fn flops_per_token(&self) -> f64 {
+        let per_iter = self.model.iter_flops(self.micro_batch, self.seq_len, 1);
+        per_iter / (self.micro_batch * self.seq_len) as f64
+    }
+
+    /// I/O roofline: max tokens/s at `m` micro-batches per GPU.
+    pub fn io_bound_tokens_per_s(&self, m: u64) -> f64 {
+        let tokens = (self.node.n_gpus * m * self.micro_batch * self.seq_len) as f64;
+        tokens / self.t_io_opt_states()
+    }
+
+    /// Compute roofline: max tokens/s regardless of batch.
+    pub fn compute_bound_tokens_per_s(&self) -> f64 {
+        self.node.total_flops() / self.flops_per_token()
+    }
+
+    /// min(IO line, compute line) — the ideal envelope of Figure 3.
+    pub fn ideal_tokens_per_s(&self, m: u64) -> f64 {
+        self.io_bound_tokens_per_s(m).min(self.compute_bound_tokens_per_s())
+    }
+
+    /// Micro-batch count where the two rooflines cross (the ideal knee).
+    pub fn knee_m(&self) -> f64 {
+        let per_m = (self.micro_batch * self.seq_len * self.node.n_gpus) as f64
+            / self.t_io_opt_states();
+        self.compute_bound_tokens_per_s() / per_m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MACHINE2_A100;
+    use crate::modelcfg::{GPT_175B, GPT_65B, SEQ_LEN};
+
+    fn rl() -> Roofline {
+        Roofline {
+            node: MACHINE2_A100.with_gpus(1),
+            model: GPT_65B,
+            micro_batch: 2,
+            seq_len: SEQ_LEN,
+        }
+    }
+
+    #[test]
+    fn io_line_through_origin_and_linear() {
+        let r = rl();
+        let t1 = r.io_bound_tokens_per_s(1);
+        let t4 = r.io_bound_tokens_per_s(4);
+        assert!((t4 / t1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_line_flat() {
+        let r = rl();
+        assert!(r.compute_bound_tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn envelope_is_min() {
+        let r = rl();
+        let knee = r.knee_m();
+        assert!(knee > 1.0, "knee {knee} must exceed one micro-batch");
+        let below = r.ideal_tokens_per_s((knee * 0.5) as u64 + 1);
+        let above = r.ideal_tokens_per_s((knee * 4.0) as u64 + 1);
+        assert!(below < r.compute_bound_tokens_per_s());
+        assert!((above - r.compute_bound_tokens_per_s()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bigger_model_needs_more_io_time() {
+        let small = rl();
+        let big = Roofline { model: GPT_175B, ..small };
+        assert!(big.t_io_opt_states() > small.t_io_opt_states());
+    }
+
+    #[test]
+    fn io_time_is_minutes_scale_for_65b() {
+        // 65B × 12 B/param ≈ 0.78 TB; at ~3 GB/s each way this is hundreds
+        // of seconds — the motivation for the whole paper.
+        let t = rl().t_io_opt_states();
+        assert!(t > 100.0 && t < 2000.0, "{t}");
+    }
+}

@@ -1,0 +1,221 @@
+//! The PJRT client wrapper: compile-once executable cache + typed execute.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+
+/// Stages the AOT pipeline emits (fixed set; see `aot.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    EmbedFwd,
+    LayerFwd,
+    LayerBwd,
+    HeadLoss,
+    EmbedBwd,
+    AdamStep,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::EmbedFwd,
+        Stage::LayerFwd,
+        Stage::LayerBwd,
+        Stage::HeadLoss,
+        Stage::EmbedBwd,
+        Stage::AdamStep,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::EmbedFwd => "embed_fwd",
+            Stage::LayerFwd => "layer_fwd",
+            Stage::LayerBwd => "layer_bwd",
+            Stage::HeadLoss => "head_loss",
+            Stage::EmbedBwd => "embed_bwd",
+            Stage::AdamStep => "adam_step",
+        }
+    }
+}
+
+/// PJRT CPU client + compiled executables for every stage.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<Stage, xla::PjRtLoadedExecutable>,
+    /// Cumulative stage invocation counts (observability).
+    calls: std::cell::RefCell<HashMap<Stage, u64>>,
+}
+
+impl Runtime {
+    /// Compile all artifacts in `manifest` on the PJRT CPU client.
+    pub fn load(manifest: &Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for stage in Stage::ALL {
+            let path = manifest.artifact_path(stage.name())?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling stage {}", stage.name()))?;
+            executables.insert(stage, exe);
+        }
+        Ok(Runtime { client, executables, calls: Default::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute a stage. Inputs are positional per the manifest calling
+    /// convention; the jax lowering uses `return_tuple=True`, so the single
+    /// output literal is a tuple that we decompose for the caller.
+    ///
+    /// Accepts owned literals or references (`&[Literal]` / `&[&Literal]`)
+    /// so hot paths can reuse uploaded parameter literals across
+    /// micro-batches without deep-copying (§Perf).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        stage: Stage,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(&stage)
+            .with_context(|| format!("stage {stage:?} not loaded"))?;
+        *self.calls.borrow_mut().entry(stage).or_insert(0) += 1;
+        // Upload inputs to device buffers ourselves and use `execute_b`: the
+        // C shim behind literal-taking `execute` leaks its internal
+        // literal→buffer conversions (~1.5 GB/step at 100M scale, found via
+        // RSS probing — EXPERIMENTS.md §Perf); buffers created here are
+        // dropped (and freed) by their Rust Drop impls.
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit.borrow()))
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("uploading {} inputs", stage.name()))?;
+        let result = exe
+            .execute_b(&buffers)
+            .with_context(|| format!("executing {}", stage.name()))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", stage.name()))?;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    pub fn call_count(&self, stage: Stage) -> u64 {
+        self.calls.borrow().get(&stage).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::{HostTensor, TokenTensor};
+    use crate::util::prng::Prng;
+
+    fn rt() -> (Manifest, Runtime) {
+        let m = Manifest::load("artifacts/tiny").expect("make artifacts first");
+        let r = Runtime::load(&m).expect("compile artifacts");
+        (m, r)
+    }
+
+    #[test]
+    fn loads_and_reports_platform() {
+        let (_, r) = rt();
+        assert!(r.platform().to_lowercase().contains("cpu") || !r.platform().is_empty());
+    }
+
+    #[test]
+    fn embed_fwd_shapes() {
+        let (m, r) = rt();
+        let c = m.config;
+        let tokens =
+            TokenTensor::new(&[c.micro_batch, c.seq_len], vec![1; c.micro_batch * c.seq_len])
+                .unwrap();
+        let wte = HostTensor::zeros(&[c.vocab, c.hidden]);
+        let wpe = HostTensor::zeros(&[c.seq_len, c.hidden]);
+        let out = r
+            .execute(
+                Stage::EmbedFwd,
+                &[
+                    tokens.to_literal().unwrap(),
+                    wte.to_literal().unwrap(),
+                    wpe.to_literal().unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let x = HostTensor::from_literal(&out[0]).unwrap();
+        assert_eq!(x.shape, vec![c.micro_batch, c.seq_len, c.hidden]);
+        assert_eq!(r.call_count(Stage::EmbedFwd), 1);
+    }
+
+    #[test]
+    fn layer_fwd_then_bwd_roundtrip() {
+        let (m, r) = rt();
+        let c = m.config;
+        let mut rng = Prng::new(7);
+        let x_shape = [c.micro_batch, c.seq_len, c.hidden];
+        let mut x = HostTensor::zeros(&x_shape);
+        rng.fill_normal(&mut x.data, 1.0);
+        let params: Vec<HostTensor> = m
+            .layer_params
+            .iter()
+            .map(|s| HostTensor::init(s, c.n_layers, &mut rng))
+            .collect();
+
+        let mut inputs = vec![x.to_literal().unwrap()];
+        inputs.extend(params.iter().map(|p| p.to_literal().unwrap()));
+        let out = r.execute(Stage::LayerFwd, &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let y = HostTensor::from_literal(&out[0]).unwrap();
+        assert_eq!(y.shape, x_shape.to_vec());
+        assert!(y.data.iter().all(|v| v.is_finite()));
+
+        // backward: 1 dx + 12 dparams
+        let mut dy = HostTensor::zeros(&x_shape);
+        dy.data.fill(1.0);
+        let mut binputs = vec![x.to_literal().unwrap(), dy.to_literal().unwrap()];
+        binputs.extend(params.iter().map(|p| p.to_literal().unwrap()));
+        let bout = r.execute(Stage::LayerBwd, &binputs).unwrap();
+        assert_eq!(bout.len(), 13);
+        let dx = HostTensor::from_literal(&bout[0]).unwrap();
+        assert_eq!(dx.shape, x_shape.to_vec());
+        for (lit, spec) in bout[1..].iter().zip(&m.layer_params) {
+            let g = HostTensor::from_literal(lit).unwrap();
+            assert_eq!(g.shape, spec.shape, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn adam_step_matches_rust_reference() {
+        let (m, r) = rt();
+        let n = m.config.adam_chunk;
+        let mut rng = Prng::new(3);
+        let mut p = vec![0.0f32; n];
+        rng.fill_normal(&mut p, 1.0);
+        let mut g = vec![0.0f32; n];
+        rng.fill_normal(&mut g, 0.1);
+        let mv = vec![0.0f32; n];
+        let hyper: Vec<f32> =
+            vec![1e-3, 0.9, 0.999, 1e-8, 0.0, 1.0 - 0.9, 1.0 - 0.999, 1.0];
+        let mk = |v: &[f32]| xla::Literal::vec1(v);
+        let out = r
+            .execute(Stage::AdamStep, &[mk(&p), mk(&mv), mk(&mv), mk(&g), mk(&hyper)])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let p_new = out[0].to_vec::<f32>().unwrap();
+        // rust reference for element 0
+        let m_new = 0.1 * g[0];
+        let v_new = 0.001 * g[0] * g[0];
+        let m_hat = m_new / (1.0 - 0.9);
+        let v_hat = v_new / (1.0 - 0.999);
+        let want = p[0] - 1e-3 * (m_hat / (v_hat.sqrt() + 1e-8));
+        assert!((p_new[0] - want).abs() < 1e-5, "{} vs {want}", p_new[0]);
+    }
+}

@@ -1,0 +1,192 @@
+//! AOT manifest: shapes, calling convention, and initialization spec emitted
+//! by `python/compile/aot.py` alongside the HLO artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Initialization class for a parameter tensor (mirrors `aot._init_kind`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    Zeros,
+    Ones,
+    /// N(0, 0.02²)
+    Normal,
+    /// N(0, (0.02/√(2L))²) — residual-path projections
+    NormalResidual,
+    /// N(0, 0.01²) — positional embeddings
+    NormalPos,
+}
+
+/// One parameter tensor's spec.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    pub init: Init,
+}
+
+/// Static model configuration baked into the artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShape {
+    pub micro_batch: usize,
+    pub seq_len: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub ffn_mult: usize,
+    pub adam_chunk: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub dir: PathBuf,
+    pub config: ModelShape,
+    pub layer_params: Vec<ParamSpec>,
+    pub embed_params: Vec<ParamSpec>,
+    pub head_params: Vec<ParamSpec>,
+    pub artifacts: Vec<(String, String)>,
+}
+
+fn parse_init(s: &str) -> Init {
+    match s {
+        "zeros" => Init::Zeros,
+        "ones" => Init::Ones,
+        "normal" => Init::Normal,
+        "normal_residual" => Init::NormalResidual,
+        "normal_pos" => Init::NormalPos,
+        other => panic!("unknown init kind '{other}'"),
+    }
+}
+
+fn parse_params(v: &Json) -> Result<Vec<ParamSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                numel: p.get("numel")?.as_usize()?,
+                init: parse_init(p.get("init")?.as_str()?),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first?)"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let c = v.get("config")?;
+        let config = ModelShape {
+            micro_batch: c.get("micro_batch")?.as_usize()?,
+            seq_len: c.get("seq_len")?.as_usize()?,
+            hidden: c.get("hidden")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            vocab: c.get("vocab")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            ffn_mult: c.get("ffn_mult")?.as_usize()?,
+            adam_chunk: c.get("adam_chunk")?.as_usize()?,
+        };
+        let artifacts = v
+            .get("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, f)| Ok((k.clone(), f.as_str()?.to_string())))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            preset: v.get("preset")?.as_str()?.to_string(),
+            dir,
+            config,
+            layer_params: parse_params(v.get("layer_params")?)?,
+            embed_params: parse_params(v.get("embed_params")?)?,
+            head_params: parse_params(v.get("head_params")?)?,
+            artifacts,
+        })
+    }
+
+    /// Total elements in one layer's 12 parameter tensors.
+    pub fn layer_numel(&self) -> usize {
+        self.layer_params.iter().map(|p| p.numel).sum()
+    }
+
+    /// Total trainable elements in the whole model.
+    pub fn total_numel(&self) -> usize {
+        self.config.n_layers * self.layer_numel()
+            + self.embed_params.iter().map(|p| p.numel).sum::<usize>()
+            + self.head_params.iter().map(|p| p.numel).sum::<usize>()
+    }
+
+    /// Path of a stage's HLO file.
+    pub fn artifact_path(&self, stage: &str) -> Result<PathBuf> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == stage)
+            .map(|(_, f)| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("no artifact for stage '{stage}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts/tiny")
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let m = Manifest::load(tiny_dir()).expect("make artifacts first");
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.config.hidden, 64);
+        assert_eq!(m.config.n_layers, 2);
+        assert_eq!(m.layer_params.len(), 12);
+        assert_eq!(m.artifacts.len(), 6);
+    }
+
+    #[test]
+    fn layer_numel_closed_form() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        let d = m.config.hidden;
+        let f = m.config.ffn_mult * d;
+        let closed = 4 * d + 3 * d * d + 3 * d + d * d + d + d * f + f + f * d + d;
+        assert_eq!(m.layer_numel(), closed);
+    }
+
+    #[test]
+    fn artifact_paths_exist() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        for stage in ["embed_fwd", "layer_fwd", "layer_bwd", "head_loss", "embed_bwd",
+                      "adam_step"] {
+            let p = m.artifact_path(stage).unwrap();
+            assert!(p.exists(), "{p:?}");
+        }
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn init_kinds_parsed() {
+        let m = Manifest::load(tiny_dir()).unwrap();
+        let by_name = |n: &str| m.layer_params.iter().find(|p| p.name == n).unwrap().init;
+        assert_eq!(by_name("ln1_w"), Init::Ones);
+        assert_eq!(by_name("b_qkv"), Init::Zeros);
+        assert_eq!(by_name("w_o"), Init::NormalResidual);
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from Rust.
+//!
+//! This is the only place the `xla` crate is touched. The interchange format
+//! is HLO *text* (see `python/compile/aot.py`); every stage compiles once at
+//! startup into a cached `PjRtLoadedExecutable` and is then invoked from the
+//! training hot path with zero Python involvement.
+//!
+//! PJRT handles are not `Send` (raw C pointers), so all runtime calls happen
+//! on the coordinator thread — matching the single-GPU-stream execution
+//! model; SSD I/O and the CPU optimizer overlap on [`crate::exec`] lanes.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Runtime, Stage};
+pub use manifest::{Manifest, ParamSpec};
+pub use tensor::HostTensor;

@@ -1,0 +1,151 @@
+//! Host-side tensors: plain `Vec`-backed buffers with shapes, convertible to
+//! and from PJRT literals. The trainer keeps all persistent state in these
+//! (master/“GPU”/CPU copies alike — on the CPU PJRT substrate the device
+//! memory *is* host memory; the [`crate::memory::Tier`] accounting supplies
+//! the capacity semantics of the real hierarchy).
+
+use anyhow::{ensure, Result};
+
+use crate::util::prng::Prng;
+
+use super::manifest::{Init, ParamSpec};
+
+/// A dense fp32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} != len {}",
+            shape,
+            data.len()
+        );
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+
+    /// Initialize per the manifest spec (GPT-2 scheme; deterministic).
+    pub fn init(spec: &ParamSpec, n_layers: usize, rng: &mut Prng) -> Self {
+        let mut t = HostTensor::zeros(&spec.shape);
+        match spec.init {
+            Init::Zeros => {}
+            Init::Ones => t.data.fill(1.0),
+            Init::Normal => rng.fill_normal(&mut t.data, 0.02),
+            Init::NormalResidual => {
+                rng.fill_normal(&mut t.data, 0.02 / (2.0 * n_layers as f32).sqrt())
+            }
+            Init::NormalPos => rng.fill_normal(&mut t.data, 0.01),
+        }
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read a literal back into a HostTensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        HostTensor::from_vec(&dims, data)
+    }
+
+    /// Accumulate `other` element-wise (gradient accumulation).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Sum of squares (for gradient-norm computation).
+    pub fn sq_sum(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+}
+
+/// An i32 token tensor.
+#[derive(Clone, Debug)]
+pub struct TokenTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TokenTensor {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        ensure!(shape.iter().product::<usize>() == data.len(), "token shape mismatch");
+        Ok(TokenTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_from_vec() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert!(HostTensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn init_kinds() {
+        let mut rng = Prng::new(1);
+        let ones = HostTensor::init(
+            &ParamSpec { name: "w".into(), shape: vec![4], numel: 4, init: Init::Ones },
+            2,
+            &mut rng,
+        );
+        assert_eq!(ones.data, vec![1.0; 4]);
+        let nrm = HostTensor::init(
+            &ParamSpec { name: "n".into(), shape: vec![1000], numel: 1000, init: Init::Normal },
+            2,
+            &mut rng,
+        );
+        let std = (nrm.sq_sum() / 1000.0).sqrt();
+        assert!((std - 0.02).abs() < 0.005, "{std}");
+    }
+
+    #[test]
+    fn add_assign_and_sq_sum() {
+        let mut a = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::from_vec(&[3], vec![0.5, 0.5, 0.5]).unwrap();
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![1.5, 2.5, 3.5]);
+        assert!((a.sq_sum() - (2.25 + 6.25 + 12.25)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

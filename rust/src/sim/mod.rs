@@ -1,0 +1,15 @@
+//! Discrete-event pipeline simulator.
+//!
+//! The performance model gives closed-form steady-state times; this module
+//! *executes* the schedules in virtual time instead — every parameter
+//! prefetch, checkpoint swap, gradient offload, SSD transfer, and optimizer
+//! step becomes an operation on a contended resource, so pipeline bubbles,
+//! warm-up/drain, and cross-stage interference emerge instead of being
+//! assumed away. This produces the "measured" series of Figures 10–12 on
+//! the simulated testbed (DESIGN.md §Substitutions).
+
+pub mod engine;
+pub mod schedules;
+
+pub use engine::{DiscreteSim, Resource, SimOp};
+pub use schedules::{simulate, Schedule, SimResult};

@@ -1,0 +1,227 @@
+//! Analytic data-movement model: per-iteration GPU load/offload byte counts
+//! for the three schedules the paper analyzes (§1, §3.2–3.4).
+//!
+//! All quantities are *per GPU* for one training iteration of an N-layer
+//! model with M micro-batches of size B at sequence length T. With FSDP over
+//! `shards` GPUs, parameter/gradient/optimizer bytes divide by `shards`
+//! (each GPU moves only its shard over its own PCIe link; the all-gather is
+//! inter-GPU traffic, not host traffic).
+
+use crate::modelcfg::{ModelCfg, BYTES_FP, BYTES_LP};
+
+/// Inputs to the traffic model.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub model: ModelCfg,
+    pub micro_batch: u64,
+    pub seq_len: u64,
+    /// Number of micro-batches per iteration (gradient accumulation factor).
+    pub m: u64,
+    /// FSDP shard count (1 = single GPU).
+    pub shards: u64,
+}
+
+/// GPU↔host traffic breakdown, bytes per iteration per GPU.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Traffic {
+    /// Host→GPU: low-precision parameters.
+    pub param_load: u64,
+    /// Host→GPU: activation checkpoints (+ inter-layer gradients in bwd).
+    pub ckpt_load: u64,
+    /// Host→GPU: gradient-accumulation buffer fetches.
+    pub grad_load: u64,
+    /// GPU→Host: checkpoints (+ inter-layer gradients).
+    pub ckpt_store: u64,
+    /// GPU→Host: gradient offloads.
+    pub grad_store: u64,
+}
+
+impl Traffic {
+    pub fn total_load(&self) -> u64 {
+        self.param_load + self.ckpt_load + self.grad_load
+    }
+
+    pub fn total_store(&self) -> u64 {
+        self.ckpt_store + self.grad_store
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total_load() + self.total_store()
+    }
+}
+
+impl Workload {
+    /// Total model low-precision bytes per shard (the paper's `ms`).
+    pub fn ms_lp(&self) -> u64 {
+        self.model.n_layers * self.model.params_per_layer() * BYTES_LP / self.shards
+    }
+
+    /// Full-precision gradient bytes per shard (`2·ms` in the paper's units).
+    pub fn grad_fp(&self) -> u64 {
+        self.model.n_layers * self.model.params_per_layer() * BYTES_FP / self.shards
+    }
+
+    /// One micro-batch's aggregated checkpoint bytes across all layers
+    /// (the paper's `cs`): N inter-layer checkpoints of B·T·D.
+    pub fn cs(&self) -> u64 {
+        self.model.n_layers * self.model.ckpt_bytes_lp(self.micro_batch, self.seq_len)
+    }
+
+    /// One layer's checkpoint bytes for one micro-batch.
+    pub fn ckpt_layer(&self) -> u64 {
+        self.model.ckpt_bytes_lp(self.micro_batch, self.seq_len)
+    }
+
+    /// §3.3 — horizontal gradient accumulation (ZeRO-Infinity).
+    ///
+    /// Parameters: loaded once per forward and once per backward-with-
+    /// recompute, for every micro-batch → 2·M·ms.
+    /// Checkpoints: written once in fwd, read once in bwd, per micro-batch
+    /// → M·cs each way.
+    /// Gradients: micro-batch 1 offloads (2·ms); each of the remaining M-1
+    /// fetches and re-offloads → loads 2(M-1)·ms_fp... in the paper's `2ms`
+    /// = fp32 gradient bytes notation: total (2M-1)·grad_fp moved, split
+    /// (M-1) loads / M stores.
+    pub fn horizontal(&self) -> Traffic {
+        Traffic {
+            param_load: 2 * self.m * self.ms_lp(),
+            ckpt_load: self.m * self.cs(),
+            grad_load: (self.m - 1) * self.grad_fp(),
+            ckpt_store: self.m * self.cs(),
+            grad_store: self.m * self.grad_fp(),
+        }
+    }
+
+    /// §3.4 — vertical gradient accumulation (GreedySnake).
+    ///
+    /// Parameters: loaded once for the whole forward and once for the whole
+    /// backward (all micro-batches share the resident layer) → 2·ms.
+    /// Gradients: accumulated on-GPU, offloaded once → grad_fp.
+    /// Checkpoints: fwd writes M·cs and re-reads (M-1)/M of it (the first
+    /// micro-batch's activation stays resident across the layer boundary via
+    /// alternating order, §4.2); bwd reads M·cs for recomputation and moves
+    /// inter-layer gradients both ways ((M-1)/M resident trick applies too).
+    pub fn vertical(&self) -> Traffic {
+        let per_layer = self.ckpt_layer();
+        let n = self.model.n_layers;
+        // fwd: store M ckpts/layer; load (M-1)/layer.
+        let fwd_store = n * self.m * per_layer;
+        let fwd_load = n * (self.m - 1) * per_layer;
+        // bwd: load M input ckpts/layer (recompute) + (M-1) inter-layer
+        // grads/layer; store (M-1) inter-layer grads/layer (last layer's
+        // boundary stays on GPU).
+        let bwd_load = n * self.m * per_layer + n * (self.m - 1) * per_layer;
+        let bwd_store = n * (self.m - 1) * per_layer;
+        Traffic {
+            param_load: 2 * self.ms_lp(),
+            ckpt_load: fwd_load + bwd_load,
+            grad_load: 0,
+            ckpt_store: fwd_store + bwd_store,
+            grad_store: self.grad_fp(),
+        }
+    }
+
+    /// §3.2 — single forward-backward pass (Ratel-style) at batch size
+    /// `batch = B·M` with `extra_ckpt` doubling checkpoint frequency
+    /// (attention/FFN boundary checkpoints).
+    ///
+    /// One pass: parameters twice (fwd + recompute), checkpoints once each
+    /// way — but checkpoint *size* scales with the single-pass batch.
+    pub fn single_pass(&self, extra_ckpt: bool) -> Traffic {
+        let batch = self.micro_batch * self.m;
+        let ckpt_mult = if extra_ckpt { 2 } else { 1 };
+        let cs = self.model.n_layers
+            * self.model.ckpt_bytes_lp(batch, self.seq_len)
+            * ckpt_mult;
+        Traffic {
+            param_load: 2 * self.ms_lp(),
+            ckpt_load: cs,
+            grad_load: 0,
+            ckpt_store: cs,
+            grad_store: self.grad_fp(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelcfg::{GPT_65B, SEQ_LEN};
+
+    fn wl(m: u64) -> Workload {
+        Workload { model: GPT_65B, micro_batch: 8, seq_len: SEQ_LEN, m, shards: 1 }
+    }
+
+    #[test]
+    fn horizontal_matches_paper_formulas() {
+        let w = wl(4);
+        let t = w.horizontal();
+        assert_eq!(t.param_load, 2 * 4 * w.ms_lp());
+        assert_eq!(t.ckpt_load + t.ckpt_store, 2 * 4 * w.cs());
+        // (2M-1)·grad_fp total gradient movement
+        assert_eq!(t.grad_load + t.grad_store, (2 * 4 - 1) * w.grad_fp());
+    }
+
+    #[test]
+    fn vertical_param_traffic_independent_of_m() {
+        assert_eq!(wl(2).vertical().param_load, wl(16).vertical().param_load);
+        assert_eq!(wl(16).vertical().param_load, 2 * wl(16).ms_lp());
+    }
+
+    #[test]
+    fn vertical_beats_horizontal_for_large_models() {
+        // §3.4: for GPT-65B the layer is ~6× the checkpoint, so vertical's
+        // extra checkpoint traffic is far cheaper than horizontal's
+        // repeated parameter loads.
+        for m in [2, 4, 8, 16] {
+            let w = wl(m);
+            let h = w.horizontal();
+            let v = w.vertical();
+            assert!(
+                v.total() < h.total(),
+                "m={m}: vertical {} >= horizontal {}",
+                v.total(),
+                h.total()
+            );
+        }
+    }
+
+    #[test]
+    fn fig5_reduction_grows_with_m() {
+        let r4 = wl(4).horizontal().total() as f64 / wl(4).vertical().total() as f64;
+        let r16 = wl(16).horizontal().total() as f64 / wl(16).vertical().total() as f64;
+        assert!(r16 > r4, "reduction must grow with micro-batch count");
+        assert!(r4 > 1.5, "m=4 reduction {r4}");
+    }
+
+    #[test]
+    fn single_pass_extra_ckpt_triples_ckpt_traffic_at_1_5x_batch() {
+        // §3.2's arithmetic: 2× checkpoints × 1.5× batch = 3× traffic.
+        let base = wl(2); // batch 16
+        let bigger = Workload { m: 3, ..base }; // batch 24 = 1.5×
+        let t_base = base.single_pass(false);
+        let t_big = bigger.single_pass(true);
+        let ratio = t_big.ckpt_load as f64 / t_base.ckpt_load as f64;
+        assert!((ratio - 3.0).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn sharding_divides_param_and_grad_traffic() {
+        let w1 = wl(4);
+        let w4 = Workload { shards: 4, ..w1 };
+        assert_eq!(w4.horizontal().param_load * 4, w1.horizontal().param_load);
+        assert_eq!(w4.vertical().grad_store * 4, w1.vertical().grad_store);
+        // checkpoints are per-GPU data-parallel state: unchanged.
+        assert_eq!(w4.vertical().ckpt_store, w1.vertical().ckpt_store);
+    }
+
+    #[test]
+    fn m_equals_1_degenerates_gracefully() {
+        let w = wl(1);
+        let h = w.horizontal();
+        let v = w.vertical();
+        assert_eq!(h.grad_load, 0);
+        assert_eq!(v.ckpt_load, w.cs()); // only bwd recompute reads
+        assert_eq!(h.param_load, 2 * w.ms_lp());
+    }
+}

@@ -1,0 +1,227 @@
+//! End-to-end training: synthetic corpus, the training loop over either
+//! scheduler, and loss-curve logging (EXPERIMENTS.md's validation run and
+//! the Figure-13 equivalence experiment both drive this).
+
+use anyhow::Result;
+
+use crate::coordinator::vertical::StepStats;
+use crate::coordinator::{HorizontalScheduler, ModelState, TrainerConfig, VerticalScheduler};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::TokenTensor;
+use crate::runtime::Runtime;
+use crate::util::prng::Prng;
+
+/// Synthetic corpus: a Zipf-distributed token stream with a planted bigram
+/// structure (each token strongly predicts a successor), so a language model
+/// has real signal to learn and the loss visibly decreases within a few
+/// hundred steps.
+pub struct SyntheticCorpus {
+    vocab: usize,
+    successor: Vec<u32>,
+    rng: Prng,
+    /// Probability a position follows the planted bigram (vs fresh Zipf).
+    coherence: f64,
+}
+
+impl SyntheticCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Prng::new(seed ^ 0x5EED);
+        let mut successor: Vec<u32> = (0..vocab as u32).collect();
+        rng.shuffle(&mut successor);
+        SyntheticCorpus { vocab, successor, rng, coherence: 0.75 }
+    }
+
+    /// Sample one (tokens, targets) micro-batch of shape (b, t); targets are
+    /// the next-token shift.
+    pub fn sample(&mut self, b: usize, t: usize) -> Result<(TokenTensor, TokenTensor)> {
+        let mut toks = Vec::with_capacity(b * (t + 1));
+        for _ in 0..b {
+            let mut cur = self.rng.next_zipf(self.vocab as u64, 1.1) as u32;
+            toks.push(cur as i32);
+            for _ in 0..t {
+                cur = if self.rng.next_f64() < self.coherence {
+                    self.successor[cur as usize]
+                } else {
+                    self.rng.next_zipf(self.vocab as u64, 1.1) as u32
+                };
+                toks.push(cur as i32);
+            }
+        }
+        let mut input = Vec::with_capacity(b * t);
+        let mut target = Vec::with_capacity(b * t);
+        for row in 0..b {
+            let base = row * (t + 1);
+            input.extend_from_slice(&toks[base..base + t]);
+            target.extend_from_slice(&toks[base + 1..base + t + 1]);
+        }
+        Ok((TokenTensor::new(&[b, t], input)?, TokenTensor::new(&[b, t], target)?))
+    }
+}
+
+/// Which scheduler drives training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Vertical,
+    Horizontal,
+}
+
+impl std::str::FromStr for ScheduleKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "vertical" | "greedysnake" => Ok(ScheduleKind::Vertical),
+            "horizontal" | "zero-infinity" => Ok(ScheduleKind::Horizontal),
+            other => anyhow::bail!("unknown schedule '{other}'"),
+        }
+    }
+}
+
+/// A recorded training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub losses: Vec<f64>,
+    pub grad_norms: Vec<f64>,
+    pub step_seconds: Vec<f64>,
+    pub ssd_read: u64,
+    pub ssd_written: u64,
+}
+
+impl RunLog {
+    pub fn tokens_per_s(&self, tokens_per_step: usize) -> f64 {
+        let total: f64 = self.step_seconds.iter().sum();
+        (self.losses.len() * tokens_per_step) as f64 / total
+    }
+
+    /// Mean loss over the final quarter of training.
+    pub fn final_loss(&self) -> f64 {
+        let n = self.losses.len();
+        let tail = &self.losses[n - (n / 4).max(1)..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Train `steps` iterations of `m` micro-batches. Prints one line per
+/// `log_every` steps when it is > 0.
+pub fn train(
+    manifest: Manifest,
+    cfg: TrainerConfig,
+    kind: ScheduleKind,
+    steps: u64,
+    m: usize,
+    log_every: u64,
+) -> Result<RunLog> {
+    let shape = manifest.config;
+    let rt = Runtime::load(&manifest)?;
+    let state = ModelState::init(manifest, cfg)?;
+    let mut corpus = SyntheticCorpus::new(shape.vocab, state.cfg.seed);
+    let mut log = RunLog::default();
+
+    let mut run_step = |step_fn: &mut dyn FnMut(&[TokenTensor], &[TokenTensor]) -> Result<StepStats>|
+     -> Result<()> {
+        for s in 0..steps {
+            let mut toks = Vec::with_capacity(m);
+            let mut tgts = Vec::with_capacity(m);
+            for _ in 0..m {
+                let (a, b) = corpus.sample(shape.micro_batch, shape.seq_len)?;
+                toks.push(a);
+                tgts.push(b);
+            }
+            let t0 = std::time::Instant::now();
+            let stats = step_fn(&toks, &tgts)?;
+            let dt = t0.elapsed().as_secs_f64();
+            log.losses.push(stats.loss);
+            log.grad_norms.push(stats.grad_norm);
+            log.step_seconds.push(dt);
+            log.ssd_read += stats.ssd_bytes_read;
+            log.ssd_written += stats.ssd_bytes_written;
+            if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
+                println!(
+                    "step {s:>5}  loss {:.4}  |g| {:.3}  {:.2}s/step  ssd r/w {}/{}",
+                    stats.loss,
+                    stats.grad_norm,
+                    dt,
+                    crate::util::stats::fmt_bytes(stats.ssd_bytes_read as f64),
+                    crate::util::stats::fmt_bytes(stats.ssd_bytes_written as f64),
+                );
+            }
+        }
+        Ok(())
+    };
+
+    match kind {
+        ScheduleKind::Vertical => {
+            let mut sched = VerticalScheduler::new(&state, &rt)?;
+            run_step(&mut |t, g| sched.step(t, g))?;
+            sched.drain()?;
+        }
+        ScheduleKind::Horizontal => {
+            let mut sched = HorizontalScheduler::new(&state, &rt)?;
+            run_step(&mut |t, g| sched.step(t, g))?;
+        }
+    }
+    Ok(log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(tag: &str) -> TrainerConfig {
+        TrainerConfig {
+            alpha: 0.0,
+            opt_on_ssd: false,
+            overlap: false,
+            ssd_path: std::env::temp_dir()
+                .join(format!("gs_trainer_{tag}_{}", std::process::id())),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn corpus_is_learnable_structure() {
+        let mut c = SyntheticCorpus::new(256, 0);
+        let (toks, tgts) = c.sample(4, 64).unwrap();
+        assert_eq!(toks.data.len(), 4 * 64);
+        // targets are the shifted inputs
+        assert_eq!(&toks.data[1..64], &tgts.data[..63]);
+        // planted bigram: successor matches for most positions
+        let succ = &c.successor;
+        let mut hits = 0;
+        for i in 0..63 {
+            if tgts.data[i] as u32 == succ[toks.data[i] as usize] {
+                hits += 1;
+            }
+        }
+        assert!(hits > 30, "{hits}/63 bigram hits");
+    }
+
+    #[test]
+    fn corpus_deterministic_per_seed() {
+        let mut a = SyntheticCorpus::new(128, 7);
+        let mut b = SyntheticCorpus::new(128, 7);
+        assert_eq!(a.sample(2, 16).unwrap().0.data, b.sample(2, 16).unwrap().0.data);
+    }
+
+    #[test]
+    fn vertical_training_reduces_loss_tiny() {
+        let manifest = Manifest::load("artifacts/tiny").unwrap();
+        let log = train(manifest, cfg("vred"), ScheduleKind::Vertical, 30, 2, 0).unwrap();
+        let first = log.losses[0];
+        let last = log.final_loss();
+        assert!(
+            last < first - 0.3,
+            "loss must drop: {first:.3} -> {last:.3} ({:?})",
+            &log.losses
+        );
+    }
+
+    #[test]
+    fn schedule_kind_parses() {
+        assert_eq!("vertical".parse::<ScheduleKind>().unwrap(), ScheduleKind::Vertical);
+        assert_eq!(
+            "zero-infinity".parse::<ScheduleKind>().unwrap(),
+            ScheduleKind::Horizontal
+        );
+        assert!("diagonal".parse::<ScheduleKind>().is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (the criterion stand-in) driving the
+//! `harness = false` `cargo bench` targets: warmup, timed iterations,
+//! and mean/σ/median/p95 reporting.
+
+use std::time::Instant;
+
+use super::stats::{fmt_duration, Summary};
+
+/// One benchmark group; prints a line per measured closure.
+pub struct Bench {
+    name: String,
+    warmup_iters: u32,
+    measure_iters: u32,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 3,
+            measure_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn iters(mut self, n: u32) -> Self {
+        self.measure_iters = n;
+        self
+    }
+
+    /// Time `f` (which should do one unit of work and return a value that is
+    /// black-boxed to defeat DCE).
+    pub fn run<T, F: FnMut() -> T>(&mut self, label: &str, mut f: F) -> &Summary {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        println!(
+            "{}/{}: mean {} ± {}  median {}  p95 {}  ({} iters)",
+            self.name,
+            label,
+            fmt_duration(s.mean()),
+            fmt_duration(s.stddev()),
+            fmt_duration(s.median()),
+            fmt_duration(s.percentile(95.0)),
+            s.count(),
+        );
+        self.results.push((label.to_string(), s));
+        &self.results.last().unwrap().1
+    }
+
+    /// Mean of a previously run label.
+    pub fn mean_of(&self, label: &str) -> Option<f64> {
+        self.results.iter().find(|(l, _)| l == label).map(|(_, s)| s.mean())
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+}
+
+/// Optimization barrier (stable-Rust pattern used by bencher/criterion).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("t").warmup(1).iters(3);
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.mean() > 0.0);
+        assert_eq!(s.count(), 3);
+        assert!(b.mean_of("spin").unwrap() > 0.0);
+    }
+}

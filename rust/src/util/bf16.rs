@@ -1,0 +1,91 @@
+//! bf16 <-> f32 conversion for the mixed-precision parameter path.
+//!
+//! The paper's "low-precision parameters" are BF16; master parameters and
+//! optimizer states stay FP32 (§2.1). The Rust side stores the low-precision
+//! copy as raw `u16` words (round-to-nearest-even truncation of the f32 high
+//! half) — the PJRT client ingests them via `buffer_from_host_raw_bytes`.
+
+/// f32 -> bf16 with round-to-nearest-even (matches hardware + numpy).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserving sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x0000_7FFF + lsb) >> 16) as u16
+}
+
+/// bf16 -> f32 (exact).
+#[inline]
+pub fn bf16_to_f32(x: u16) -> f32 {
+    f32::from_bits((x as u32) << 16)
+}
+
+/// Convert a slice, appending into `out`.
+pub fn f32_slice_to_bf16(src: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.extend(src.iter().map(|&x| f32_to_bf16(x)));
+}
+
+/// Convert a bf16 word slice to f32s.
+pub fn bf16_slice_to_f32(src: &[u16], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(src.iter().map(|&x| bf16_to_f32(x)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 2.0, -3.0, 1024.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        // bf16 has 8 significand bits -> relative error <= 2^-8.
+        let mut p = crate::util::prng::Prng::new(0);
+        for _ in 0..10_000 {
+            let x = (p.next_f64() as f32 - 0.5) * 100.0;
+            let y = bf16_to_f32(f32_to_bf16(x));
+            if x != 0.0 {
+                assert!(((y - x) / x).abs() <= 1.0 / 256.0, "{x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between bf16(1.0) and the next value;
+        // RNE keeps the even significand (1.0).
+        let halfway = f32::from_bits(0x3F80_4000 >> 6 << 6); // construct carefully below
+        let _ = halfway;
+        let x = f32::from_bits(0x3F80_8000); // 1.00390625 -> halfway, rounds to even
+        let y = f32_to_bf16(x);
+        assert_eq!(y & 1, 0, "halfway case must round to even, got {y:#x}");
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32 * 0.25).collect();
+        let mut b = Vec::new();
+        f32_slice_to_bf16(&xs, &mut b);
+        let mut back = Vec::new();
+        bf16_slice_to_f32(&b, &mut back);
+        for (a, c) in xs.iter().zip(&back) {
+            assert!((a - c).abs() <= a.abs() / 256.0 + 1e-6);
+        }
+    }
+}

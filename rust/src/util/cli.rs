@@ -1,0 +1,162 @@
+//! Tiny CLI argument parser (the clap stand-in): `--key value`, `--flag`,
+//! and positional arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative option spec + parsed values.
+#[derive(Debug, Default)]
+pub struct Cli {
+    name: String,
+    about: String,
+    specs: Vec<(String, String, Option<String>)>, // (key, help, default)
+    flags: Vec<(String, String)>,
+    values: BTreeMap<String, String>,
+    set_flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(name: &str, about: &str) -> Self {
+        Cli { name: name.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Register `--key <value>` with an optional default.
+    pub fn opt(mut self, key: &str, help: &str, default: Option<&str>) -> Self {
+        self.specs.push((key.into(), help.into(), default.map(String::from)));
+        self
+    }
+
+    /// Register a boolean `--flag`.
+    pub fn flag(mut self, key: &str, help: &str) -> Self {
+        self.flags.push((key.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for (k, h, d) in &self.specs {
+            let dflt = d.as_deref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{k} <v>   {h}{dflt}\n"));
+        }
+        for (k, h) in &self.flags {
+            s.push_str(&format!("  --{k}   {h}\n"));
+        }
+        s.push_str("  --help   print this help\n");
+        s
+    }
+
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(key) = a.strip_prefix("--") {
+                if self.flags.iter().any(|(k, _)| k == key) {
+                    self.set_flags.push(key.to_string());
+                } else if self.specs.iter().any(|(k, _, _)| k == key) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{key} expects a value"))?;
+                    self.values.insert(key.to_string(), v);
+                } else {
+                    bail!("unknown option --{key}\n\n{}", self.usage());
+                }
+            } else {
+                self.positional.push(a);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process arguments.
+    pub fn parse(self) -> Result<Self> {
+        self.parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        if let Some(v) = self.values.get(key) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|(k, _, _)| k == key)
+            .and_then(|(_, _, d)| d.clone())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(key)
+            .ok_or_else(|| anyhow!("missing required option --{key}"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow!("invalid value for --{key}: '{raw}' ({e})"))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.set_flags.iter().any(|k| k == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positionals() {
+        let c = Cli::new("t", "test")
+            .opt("steps", "n steps", Some("10"))
+            .opt("preset", "preset", None)
+            .flag("verbose", "talk")
+            .parse_from(args(&["--steps", "20", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(c.get_parsed::<u32>("steps").unwrap(), 20);
+        assert!(c.has_flag("verbose"));
+        assert_eq!(c.positional(), &["pos1".to_string()]);
+        assert!(c.get("preset").is_none());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Cli::new("t", "")
+            .opt("steps", "", Some("10"))
+            .parse_from(args(&[]))
+            .unwrap();
+        assert_eq!(c.get_parsed::<u32>("steps").unwrap(), 10);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Cli::new("t", "").parse_from(args(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let r = Cli::new("t", "").opt("k", "", None).parse_from(args(&["--k"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_parse_reported() {
+        let c = Cli::new("t", "")
+            .opt("steps", "", Some("abc"))
+            .parse_from(args(&[]))
+            .unwrap();
+        assert!(c.get_parsed::<u32>("steps").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Utility substrates built in-tree because the build is fully offline:
+//! a PRNG, summary statistics, bf16 conversion, a JSON parser (for the AOT
+//! manifest), TSV report tables, a CLI argument parser, a micro-benchmark
+//! harness (the criterion stand-in driving `cargo bench`), and a property
+//! testing harness (the proptest stand-in).
+
+pub mod bench;
+pub mod bf16;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+
+pub use bench::Bench;
+pub use prng::Prng;

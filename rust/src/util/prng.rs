@@ -1,0 +1,181 @@
+//! Deterministic xoshiro256++ PRNG — seeds every stochastic component
+//! (parameter init, synthetic corpora, property tests) so runs reproduce
+//! bit-for-bit. No external `rand` needed.
+
+/// xoshiro256++ by Blackman & Vigna (public domain reference algorithm).
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+impl Prng {
+    /// Seed via SplitMix64 so any u64 (including 0) yields a good state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Prng { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection-free variant is overkill here;
+        // modulo bias is < 2^-40 for all n used in this crate.
+        self.next_u64() % n.max(1)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill a slice with N(0, std²) fp32 samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for x in out.iter_mut() {
+            *x = self.next_normal() as f32 * std;
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` — synthetic-corpus
+    /// token sampling (natural text is near-Zipfian).
+    pub fn next_zipf(&mut self, n: u64, s: f64) -> u64 {
+        // Inverse-CDF on the truncated zeta distribution via rejection
+        // (Devroye); cheap because s ~ 1 and n is modest.
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            let x = ((n as f64 + 1.0).powf(1.0 - s) * u + (1.0 - u)).powf(1.0 / (1.0 - s));
+            let xf = x.floor();
+            if xf < 1.0 || xf > n as f64 {
+                continue;
+            }
+            let ratio = (xf / x).powf(s) * x / xf;
+            if v * ratio <= 1.0 {
+                return xf as u64 - 1;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut p = Prng::new(7);
+        for _ in 0..10_000 {
+            let x = p.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut p = Prng::new(3);
+        let mean: f64 = (0..100_000).map(|_| p.next_f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(11);
+        let xs: Vec<f64> = (0..100_000).map(|_| p.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut p = Prng::new(5);
+        let mut counts = [0u32; 16];
+        for _ in 0..20_000 {
+            let x = p.next_zipf(16, 1.1) as usize;
+            assert!(x < 16);
+            counts[x] += 1;
+        }
+        assert!(counts[0] > counts[8] * 3, "{counts:?}");
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut p = Prng::new(9);
+        for n in [1u64, 2, 3, 17, 1000] {
+            for _ in 0..100 {
+                assert!(p.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(13);
+        let mut v: Vec<u32> = (0..100).collect();
+        p.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,100 @@
+//! Property-testing harness (the proptest stand-in): deterministic generator
+//! functions over a seeded [`Prng`], N-case runners, and shrinking-free but
+//! seed-reporting failure messages. Coordinator invariants (routing, batching,
+//! state placement) are property-tested with this in `rust/tests/proptests.rs`.
+
+use super::prng::Prng;
+
+/// Run `cases` random cases of `prop`; on failure, panic with the exact seed
+/// so the case can be replayed (`Prng::new(seed)` is pure).
+pub fn check<F: Fn(&mut Prng) -> Result<(), String>>(name: &str, cases: u32, prop: F) {
+    for i in 0..cases {
+        let seed = 0xC0FFEE ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helper producing `Result<(), String>` for use inside `check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Generators.
+pub mod gen {
+    use super::Prng;
+
+    pub fn usize_in(rng: &mut Prng, lo: usize, hi: usize) -> usize {
+        lo + rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(rng: &mut Prng, lo: f64, hi: f64) -> f64 {
+        lo + rng.next_f64() * (hi - lo)
+    }
+
+    pub fn vec_f32(rng: &mut Prng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f32() - 0.5) * 2.0 * scale).collect()
+    }
+
+    /// A random partition of `total` into `parts` non-negative chunks.
+    pub fn partition(rng: &mut Prng, total: usize, parts: usize) -> Vec<usize> {
+        if parts == 0 {
+            return vec![];
+        }
+        let mut cuts: Vec<usize> = (0..parts - 1).map(|_| rng.next_below(total as u64 + 1) as usize).collect();
+        cuts.sort_unstable();
+        let mut out = Vec::with_capacity(parts);
+        let mut prev = 0;
+        for c in cuts {
+            out.push(c - prev);
+            prev = c;
+        }
+        out.push(total - prev);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 1, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn partition_sums() {
+        check("partition-sums", 100, |rng| {
+            let total = gen::usize_in(rng, 0, 1000);
+            let parts = gen::usize_in(rng, 1, 10);
+            let p = gen::partition(rng, total, parts);
+            if p.len() == parts && p.iter().sum::<usize>() == total {
+                Ok(())
+            } else {
+                Err(format!("bad partition {p:?} of {total}"))
+            }
+        });
+    }
+}

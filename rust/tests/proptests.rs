@@ -1,0 +1,279 @@
+//! Property-based tests over coordinator/substrate invariants, using the
+//! in-tree property harness (`util::prop`): routing (micro-batch order),
+//! batching (gradient accumulation), state placement (LP constraints,
+//! packing), and the discrete-event engine.
+
+use greedysnake::coordinator::VerticalScheduler;
+use greedysnake::lp::simplex::{LinProg, LpOutcome};
+use greedysnake::lp::solve_config;
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::memory::pinned::{naive_total, plan_packing, plan_total};
+use greedysnake::modelcfg::{ModelCfg, GPT_65B, SEQ_LEN};
+use greedysnake::optimizer::{adam_step_rust, chunk_ranges, AdamParams, AdamState};
+use greedysnake::perfmodel::SystemParams;
+use greedysnake::sim::engine::{DiscreteSim, Resource};
+use greedysnake::traffic::Workload;
+use greedysnake::util::prng::Prng;
+use greedysnake::util::prop::{check, gen};
+
+/// Routing: the alternating micro-batch order is always a permutation, and
+/// consecutive layers share their boundary micro-batch (the §4.2 trick that
+/// keeps one activation resident).
+#[test]
+fn prop_mb_order_is_alternating_permutation() {
+    check("mb-order", 200, |rng| {
+        let m = gen::usize_in(rng, 1, 32);
+        let l = gen::usize_in(rng, 0, 63);
+        let order = VerticalScheduler::mb_order(l, m);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        if sorted != (0..m).collect::<Vec<_>>() {
+            return Err(format!("not a permutation: {order:?}"));
+        }
+        let next = VerticalScheduler::mb_order(l + 1, m);
+        if order.last() != next.first() {
+            return Err(format!("boundary mb not shared: {order:?} -> {next:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Batching: gradient accumulation is associative — any split of M
+/// micro-batch gradients into groups sums to the same total.
+#[test]
+fn prop_grad_accumulation_grouping_invariant() {
+    check("grad-accum", 100, |rng| {
+        let n = gen::usize_in(rng, 1, 256);
+        let m = gen::usize_in(rng, 1, 8);
+        let grads: Vec<Vec<f32>> = (0..m).map(|_| gen::vec_f32(rng, n, 1.0)).collect();
+        let direct: Vec<f64> = (0..n)
+            .map(|i| grads.iter().map(|g| g[i] as f64).sum())
+            .collect();
+        // random grouping
+        let n_groups = gen::usize_in(rng, 1, m);
+        let parts = gen::partition(rng, m, n_groups);
+        let mut grouped = vec![0.0f64; n];
+        let mut idx = 0;
+        for p in parts {
+            let mut partial = vec![0.0f32; n];
+            for g in &grads[idx..idx + p] {
+                for (a, b) in partial.iter_mut().zip(g) {
+                    *a += b;
+                }
+            }
+            for (a, b) in grouped.iter_mut().zip(&partial) {
+                *a += *b as f64;
+            }
+            idx += p;
+        }
+        for i in 0..n {
+            if (grouped[i] - direct[i]).abs() > 1e-3 {
+                return Err(format!("i={i}: {} vs {}", grouped[i], direct[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// State placement: every feasible LP solution respects the CPU-memory
+/// capacity and the §4.4 gradient-reuse constraint.
+#[test]
+fn prop_lp_solutions_respect_constraints() {
+    let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+    check("lp-constraints", 40, |rng| {
+        let m = gen::usize_in(rng, 1, 64) as u64;
+        let alpha = gen::f64_in(rng, 0.01, 0.5);
+        let Some(res) = solve_config(&sp, m, alpha) else {
+            return Ok(()); // infeasible is a valid outcome
+        };
+        let x = res.ratios;
+        for v in [x.ckpt_cpu, x.param_cpu, x.opt_cpu] {
+            if !(-1e-9..=1.0 + 1e-9).contains(&v) {
+                return Err(format!("ratio out of box: {x:?}"));
+            }
+        }
+        let used = sp.cpu_bytes_vertical(m, x);
+        if used > sp.dram_share() * 1.001 {
+            return Err(format!("memory violated: {used} > {}", sp.dram_share()));
+        }
+        // §4.4 reuse: α·g ≤ xp·p + xc·m·c
+        let lhs = alpha * sp.g_fp();
+        let rhs = x.param_cpu * sp.p_lp() + x.ckpt_cpu * m as f64 * sp.c_bytes();
+        if lhs > rhs * 1.001 {
+            return Err(format!("grad-reuse violated: {lhs} > {rhs}"));
+        }
+        // LP times are at least the compute lower bounds
+        if res.t_f < m as f64 * sp.t_fwd_mb() - 1e-9 {
+            return Err("t_f below compute bound".into());
+        }
+        Ok(())
+    });
+}
+
+/// Traffic model: vertical parameter traffic never depends on M; horizontal
+/// grows linearly; totals are consistent under sharding.
+#[test]
+fn prop_traffic_scaling_laws() {
+    check("traffic-scaling", 60, |rng| {
+        let model = ModelCfg::new("t", 4 + rng.next_below(60), 8, 512 * (1 + rng.next_below(16)));
+        let w1 = Workload {
+            model,
+            micro_batch: 1 + rng.next_below(8),
+            seq_len: 512,
+            m: 2 + rng.next_below(30),
+            shards: 1,
+        };
+        let w2 = Workload { m: w1.m * 2, ..w1 };
+        let v1 = w1.vertical();
+        let v2 = w2.vertical();
+        if v1.param_load != v2.param_load {
+            return Err("vertical param traffic must not scale with M".into());
+        }
+        let h1 = w1.horizontal();
+        let h2 = w2.horizontal();
+        if h2.param_load != 2 * h1.param_load {
+            return Err("horizontal param traffic must double with M".into());
+        }
+        // sharding divides param/grad traffic exactly
+        let ws = Workload { shards: 2, ..w1 };
+        if ws.horizontal().param_load * 2 != h1.param_load {
+            return Err("sharding must halve param traffic".into());
+        }
+        Ok(())
+    });
+}
+
+/// Packing: the DP plan always covers demand, never loses to naive
+/// per-buffer padding, and only emits power-of-two slabs.
+#[test]
+fn prop_packing_optimality_bounds() {
+    check("packing", 150, |rng| {
+        let n = gen::usize_in(rng, 1, 40) as u64;
+        let size = gen::usize_in(rng, 1, 100_000) as u64;
+        let plan = plan_packing(n, size);
+        let covered: u64 = plan.iter().map(|s| s.buffers).sum();
+        if covered != n {
+            return Err(format!("covered {covered} != {n}"));
+        }
+        for s in &plan {
+            if !s.slab_bytes.is_power_of_two() || s.slab_bytes < s.buffers * size {
+                return Err(format!("bad slab {s:?}"));
+            }
+        }
+        let total = plan_total(&plan);
+        if total > naive_total(n, size) {
+            return Err(format!("DP {total} worse than naive {}", naive_total(n, size)));
+        }
+        if total < n * size {
+            return Err("allocated less than demanded".into());
+        }
+        Ok(())
+    });
+}
+
+/// Adam: partition invariance over random chunkings (§6.5's reproducibility
+/// property) and exactness of chunk_ranges.
+#[test]
+fn prop_adam_chunking_invariance() {
+    check("adam-chunks", 60, |rng| {
+        let n = gen::usize_in(rng, 1, 2000);
+        let chunk = gen::usize_in(rng, 1, n.max(2));
+        let ranges = chunk_ranges(n, chunk);
+        if ranges.first().map(|r| r.0) != Some(0) || ranges.last().map(|r| r.1) != Some(n) {
+            return Err(format!("ranges don't cover: {ranges:?}"));
+        }
+        let mut p1 = gen::vec_f32(rng, n, 1.0);
+        let g = gen::vec_f32(rng, n, 0.1);
+        let mut p2 = p1.clone();
+        let mut s1 = AdamState::zeros(n);
+        let mut s2 = AdamState::zeros(n);
+        let hp = AdamParams::default();
+        adam_step_rust(&mut p1, &mut s1, &g, &hp, 1, 1.0, 0, n);
+        for (lo, hi) in &ranges {
+            adam_step_rust(&mut p2, &mut s2, &g, &hp, 1, 1.0, *lo, *hi);
+        }
+        if p1 != p2 {
+            return Err("chunked Adam diverged from whole-vector Adam".into());
+        }
+        Ok(())
+    });
+}
+
+/// Discrete-event engine: makespan is at least every resource's busy time
+/// and at most the serial sum; adding a dependency never reduces makespan.
+#[test]
+fn prop_sim_makespan_bounds() {
+    check("sim-bounds", 60, |rng| {
+        let n_res = gen::usize_in(rng, 1, 4);
+        let n_ops = gen::usize_in(rng, 1, 40);
+        let mut sim = DiscreteSim::new(n_res);
+        let mut serial_sum = 0.0;
+        let mut ids = Vec::new();
+        for i in 0..n_ops {
+            let dur = gen::f64_in(rng, 0.0, 5.0);
+            serial_sum += dur;
+            // random deps among earlier ops
+            let mut deps = Vec::new();
+            if i > 0 && rng.next_f64() < 0.5 {
+                deps.push(ids[rng.next_below(i as u64) as usize]);
+            }
+            ids.push(sim.op(Resource(rng.next_below(n_res as u64) as usize), dur, &deps));
+        }
+        let st = sim.run();
+        for busy in &st.busy {
+            if *busy > st.makespan + 1e-9 {
+                return Err(format!("busy {busy} > makespan {}", st.makespan));
+            }
+        }
+        if st.makespan > serial_sum + 1e-9 {
+            return Err(format!("makespan {} > serial {serial_sum}", st.makespan));
+        }
+        Ok(())
+    });
+}
+
+/// Simplex: on random box-bounded LPs the reported optimum is feasible and
+/// no corner of the box beats it.
+#[test]
+fn prop_simplex_beats_box_corners() {
+    check("simplex-corners", 50, |rng| {
+        let n = gen::usize_in(rng, 1, 3);
+        let mut lp = LinProg::new(n);
+        let c: Vec<f64> = (0..n).map(|_| gen::f64_in(rng, -2.0, 2.0)).collect();
+        lp.maximize(&c);
+        let bounds: Vec<f64> = (0..n).map(|_| gen::f64_in(rng, 0.5, 3.0)).collect();
+        for (i, b) in bounds.iter().enumerate() {
+            let mut a = vec![0.0; n];
+            a[i] = 1.0;
+            lp.leq(&a, *b);
+        }
+        let LpOutcome::Optimal(_, v) = lp.solve() else {
+            return Err("box LP must be solvable".into());
+        };
+        // enumerate corners
+        for mask in 0..(1u32 << n) {
+            let corner: f64 = (0..n)
+                .map(|i| if mask >> i & 1 == 1 { c[i] * bounds[i] } else { 0.0 })
+                .sum();
+            if corner > v + 1e-6 {
+                return Err(format!("corner {corner} beats simplex {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// PRNG streams do not collide across nearby seeds.
+#[test]
+fn prop_prng_stream_independence() {
+    check("prng-streams", 30, |rng| {
+        let seed = rng.next_u64();
+        let mut a = Prng::new(seed);
+        let mut b = Prng::new(seed.wrapping_add(1));
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        if same > 0 {
+            return Err(format!("{same}/64 collisions between adjacent seeds"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,210 @@
+//! Runtime-level end-to-end tests: the staged AOT artifacts compose into a
+//! numerically sane model (finite outputs, decreasing loss under SGD-like
+//! perturbation, head/embed gradient consistency).
+
+use greedysnake::runtime::tensor::{HostTensor, TokenTensor};
+use greedysnake::runtime::{Manifest, Runtime, Stage};
+use greedysnake::util::prng::Prng;
+
+struct Ctx {
+    m: Manifest,
+    rt: Runtime,
+    layers: Vec<Vec<HostTensor>>,
+    embed: Vec<HostTensor>, // wte, wpe, lnf_w, lnf_b
+}
+
+fn ctx() -> Ctx {
+    let m = Manifest::load("artifacts/tiny").expect("make artifacts");
+    let rt = Runtime::load(&m).expect("compile");
+    let mut rng = Prng::new(99);
+    let layers = (0..m.config.n_layers)
+        .map(|_| {
+            m.layer_params
+                .iter()
+                .map(|s| HostTensor::init(s, m.config.n_layers, &mut rng))
+                .collect()
+        })
+        .collect();
+    let embed = m
+        .embed_params
+        .iter()
+        .chain(m.head_params.iter())
+        .map(|s| HostTensor::init(s, m.config.n_layers, &mut rng))
+        .collect();
+    Ctx { m, rt, layers, embed }
+}
+
+fn batch(c: &Ctx, seed: u64) -> (TokenTensor, TokenTensor) {
+    let cfg = c.m.config;
+    let mut rng = Prng::new(seed);
+    let toks: Vec<i32> = (0..cfg.micro_batch * cfg.seq_len)
+        .map(|_| rng.next_below(cfg.vocab as u64) as i32)
+        .collect();
+    let mut tgts = toks.clone();
+    tgts.rotate_left(1);
+    (
+        TokenTensor::new(&[cfg.micro_batch, cfg.seq_len], toks).unwrap(),
+        TokenTensor::new(&[cfg.micro_batch, cfg.seq_len], tgts).unwrap(),
+    )
+}
+
+fn forward(c: &Ctx, toks: &TokenTensor) -> HostTensor {
+    let out = c
+        .rt
+        .execute(
+            Stage::EmbedFwd,
+            &[
+                toks.to_literal().unwrap(),
+                c.embed[0].to_literal().unwrap(),
+                c.embed[1].to_literal().unwrap(),
+            ],
+        )
+        .unwrap();
+    let mut x = HostTensor::from_literal(&out[0]).unwrap();
+    for params in &c.layers {
+        let mut inputs = vec![x.to_literal().unwrap()];
+        inputs.extend(params.iter().map(|p| p.to_literal().unwrap()));
+        let out = c.rt.execute(Stage::LayerFwd, &inputs).unwrap();
+        x = HostTensor::from_literal(&out[0]).unwrap();
+    }
+    x
+}
+
+fn loss_of(c: &Ctx, x: &HostTensor, tgts: &TokenTensor) -> f32 {
+    let out = c
+        .rt
+        .execute(
+            Stage::HeadLoss,
+            &[
+                x.to_literal().unwrap(),
+                c.embed[2].to_literal().unwrap(),
+                c.embed[3].to_literal().unwrap(),
+                c.embed[0].to_literal().unwrap(),
+                tgts.to_literal().unwrap(),
+            ],
+        )
+        .unwrap();
+    out[0].to_vec::<f32>().unwrap()[0]
+}
+
+#[test]
+fn initial_loss_near_uniform_entropy() {
+    let c = ctx();
+    let (toks, tgts) = batch(&c, 0);
+    let x = forward(&c, &toks);
+    let loss = loss_of(&c, &x, &tgts);
+    let uniform = (c.m.config.vocab as f32).ln();
+    assert!(
+        (loss - uniform).abs() < 0.5,
+        "init loss {loss} should be ≈ ln(V) = {uniform}"
+    );
+}
+
+#[test]
+fn dx_is_a_descent_direction() {
+    let mut c = ctx();
+    let (toks, tgts) = batch(&c, 1);
+    let x = forward(&c, &toks);
+    let out = c
+        .rt
+        .execute(
+            Stage::HeadLoss,
+            &[
+                x.to_literal().unwrap(),
+                c.embed[2].to_literal().unwrap(),
+                c.embed[3].to_literal().unwrap(),
+                c.embed[0].to_literal().unwrap(),
+                tgts.to_literal().unwrap(),
+            ],
+        )
+        .unwrap();
+    let loss0 = out[0].to_vec::<f32>().unwrap()[0];
+    let dwte = HostTensor::from_literal(&out[4]).unwrap();
+    // gradient-descend wte a little; loss must drop
+    for (p, g) in c.embed[0].data.iter_mut().zip(&dwte.data) {
+        *p -= 0.5 * g;
+    }
+    let x1 = forward(&c, &toks);
+    let loss1 = loss_of(&c, &x1, &tgts);
+    assert!(loss1 < loss0, "{loss1} !< {loss0}");
+}
+
+#[test]
+fn layer_bwd_dx_matches_finite_difference() {
+    let c = ctx();
+    let cfg = c.m.config;
+    let mut rng = Prng::new(5);
+    let shape = [cfg.micro_batch, cfg.seq_len, cfg.hidden];
+    let mut x = HostTensor::zeros(&shape);
+    rng.fill_normal(&mut x.data, 1.0);
+    let mut dy = HostTensor::zeros(&shape);
+    rng.fill_normal(&mut dy.data, 1.0);
+
+    let mut inputs = vec![x.to_literal().unwrap(), dy.to_literal().unwrap()];
+    inputs.extend(c.layers[0].iter().map(|p| p.to_literal().unwrap()));
+    let out = c.rt.execute(Stage::LayerBwd, &inputs).unwrap();
+    let dx = HostTensor::from_literal(&out[0]).unwrap();
+
+    // directional finite difference of <layer_fwd(x), dy>
+    let mut dir = HostTensor::zeros(&shape);
+    rng.fill_normal(&mut dir.data, 1.0);
+    let norm = (dir.sq_sum() as f32).sqrt();
+    for v in dir.data.iter_mut() {
+        *v /= norm;
+    }
+    let eval = |xx: &HostTensor| -> f64 {
+        let mut inputs = vec![xx.to_literal().unwrap()];
+        inputs.extend(c.layers[0].iter().map(|p| p.to_literal().unwrap()));
+        let y = c.rt.execute(Stage::LayerFwd, &inputs).unwrap();
+        let y = HostTensor::from_literal(&y[0]).unwrap();
+        y.data.iter().zip(&dy.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+    };
+    let eps = 1e-3f32;
+    let mut xp = x.clone();
+    let mut xm = x.clone();
+    for i in 0..xp.data.len() {
+        xp.data[i] += eps * dir.data[i];
+        xm.data[i] -= eps * dir.data[i];
+    }
+    let num = (eval(&xp) - eval(&xm)) / (2.0 * eps as f64);
+    let ana: f64 = dx.data.iter().zip(&dir.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+    assert!(
+        (num - ana).abs() < 5e-2 * (1.0 + ana.abs()),
+        "finite diff {num} vs analytic {ana}"
+    );
+}
+
+#[test]
+fn embed_bwd_scatter_rows() {
+    let c = ctx();
+    let cfg = c.m.config;
+    let toks = TokenTensor::new(
+        &[cfg.micro_batch, cfg.seq_len],
+        vec![7; cfg.micro_batch * cfg.seq_len], // every position is token 7
+    )
+    .unwrap();
+    let mut dx = HostTensor::zeros(&[cfg.micro_batch, cfg.seq_len, cfg.hidden]);
+    dx.data.fill(1.0);
+    let out = c
+        .rt
+        .execute(Stage::EmbedBwd, &[toks.to_literal().unwrap(), dx.to_literal().unwrap()])
+        .unwrap();
+    let dwte = HostTensor::from_literal(&out[0]).unwrap();
+    // all gradient mass lands on row 7
+    let row7: f32 = dwte.data[7 * cfg.hidden..8 * cfg.hidden].iter().sum();
+    let total: f32 = dwte.data.iter().sum();
+    assert!((row7 - total).abs() < 1e-3, "{row7} vs {total}");
+    assert!((total - (cfg.micro_batch * cfg.seq_len * cfg.hidden) as f32).abs() < 1e-1);
+}
+
+#[test]
+fn stage_call_counters_track() {
+    let c = ctx();
+    let (toks, _) = batch(&c, 3);
+    let before = c.rt.call_count(Stage::LayerFwd);
+    forward(&c, &toks);
+    assert_eq!(
+        c.rt.call_count(Stage::LayerFwd) - before,
+        c.m.config.n_layers as u64
+    );
+}
