@@ -1,12 +1,13 @@
-//! Compare vertical (GreedySnake) vs horizontal (ZeRO-Infinity) scheduling
-//! on the REAL stack: identical model/seed/data, measure loss equivalence
-//! (Fig. 13 in miniature), parameter-load counts, and SSD traffic.
+//! Compare vertical (GreedySnake), horizontal (ZeRO-Infinity), and
+//! chunked-vertical scheduling on the REAL stack: identical model/seed/data,
+//! measure loss equivalence (Fig. 13 in miniature), parameter-upload bytes
+//! (the traffic the schedule controls), and SSD traffic.
 //!
 //!     cargo run --release --example schedule_compare
 
 use greedysnake::coordinator::TrainerConfig;
 use greedysnake::runtime::Manifest;
-use greedysnake::trainer::{train, ScheduleKind};
+use greedysnake::trainer::{train, RunLog, ScheduleKind};
 use greedysnake::util::table::Table;
 
 fn cfg(tag: &str, alpha: f64) -> TrainerConfig {
@@ -22,58 +23,53 @@ fn main() -> anyhow::Result<()> {
     let steps = 15u64;
     let m = 4usize;
 
-    let vlog = train(
-        Manifest::load("artifacts/tiny")?,
-        cfg("v", 0.25),
-        ScheduleKind::Vertical,
-        steps,
-        m,
-        0,
-    )?;
-    let hlog = train(
-        Manifest::load("artifacts/tiny")?,
-        cfg("h", 0.0),
-        ScheduleKind::Horizontal,
-        steps,
-        m,
-        0,
-    )?;
+    // All Schedule policies run through the same StepEngine; the delayed-α
+    // overlap stays on for the schedules that support it.
+    let kinds = [
+        ("vertical", ScheduleKind::Vertical, 0.25),
+        ("chunked:2", ScheduleKind::ChunkedVertical(2), 0.25),
+        ("horizontal", ScheduleKind::Horizontal, 0.0),
+    ];
+    let mut logs: Vec<(&str, RunLog)> = Vec::new();
+    for (tag, kind, alpha) in kinds {
+        let log = train(Manifest::load("artifacts/tiny")?, cfg(tag, alpha), kind, steps, m, 0)?;
+        logs.push((tag, log));
+    }
 
     let mut t = Table::new(
-        "vertical (GreedySnake) vs horizontal (ZeRO-Infinity) — real stack",
-        &["metric", "vertical", "horizontal"],
+        "schedule comparison — real stack, shared StepEngine",
+        &["metric", "vertical", "chunked:2", "horizontal"],
     );
-    t.row(&[
-        "first loss".into(),
-        format!("{:.4}", vlog.losses[0]),
-        format!("{:.4}", hlog.losses[0]),
-    ]);
-    t.row(&[
-        "final loss".into(),
-        format!("{:.4}", vlog.final_loss()),
-        format!("{:.4}", hlog.final_loss()),
-    ]);
-    t.row(&[
-        "ssd read".into(),
-        greedysnake::util::stats::fmt_bytes(vlog.ssd_read as f64),
-        greedysnake::util::stats::fmt_bytes(hlog.ssd_read as f64),
-    ]);
-    t.row(&[
-        "ssd written".into(),
-        greedysnake::util::stats::fmt_bytes(vlog.ssd_written as f64),
-        greedysnake::util::stats::fmt_bytes(hlog.ssd_written as f64),
-    ]);
+    let row = |name: &str, f: &dyn Fn(&RunLog) -> String| -> Vec<String> {
+        let mut cells = vec![name.to_string()];
+        cells.extend(logs.iter().map(|(_, l)| f(l)));
+        cells
+    };
+    t.row(&row("first loss", &|l| format!("{:.4}", l.losses[0])));
+    t.row(&row("final loss", &|l| format!("{:.4}", l.final_loss())));
+    t.row(&row("param upload", &|l| {
+        greedysnake::util::stats::fmt_bytes(l.param_bytes as f64)
+    }));
+    t.row(&row("ssd read", &|l| greedysnake::util::stats::fmt_bytes(l.ssd_read as f64)));
+    t.row(&row("ssd written", &|l| {
+        greedysnake::util::stats::fmt_bytes(l.ssd_written as f64)
+    }));
     t.emit(None);
 
-    // Fig. 13's claim: the two schedules train equivalently.
-    let max_dev = vlog
-        .losses
-        .iter()
-        .zip(&hlog.losses)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f64, f64::max);
-    println!("max per-step loss deviation: {max_dev:.5}");
+    // Fig. 13's claim: all schedules train equivalently.
+    let mut max_dev = 0.0f64;
+    for (_, log) in &logs[1..] {
+        for (a, b) in logs[0].1.losses.iter().zip(&log.losses) {
+            max_dev = max_dev.max((a - b).abs());
+        }
+    }
+    println!("max per-step loss deviation vs vertical: {max_dev:.5}");
     assert!(max_dev < 0.05, "schedules must train equivalently");
+
+    // §3.3/§3.4: parameter traffic orders vertical < chunked < horizontal.
+    let (v, c, h) = (logs[0].1.param_bytes, logs[1].1.param_bytes, logs[2].1.param_bytes);
+    println!("param bytes: vertical {v} < chunked:2 {c} < horizontal {h}");
+    assert!(v < c && c < h, "schedule traffic ordering violated");
     println!("schedule_compare OK");
     Ok(())
 }

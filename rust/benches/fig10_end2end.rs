@@ -42,9 +42,25 @@ fn main() {
             "Fig. 10 — {} on {} x{} (tokens/s vs global batch)",
             p.model.name, p.machine.name, p.gpus
         );
+        // column labels double as runtime schedule names (Schedule::kind_name
+        // / trainer::ScheduleKind grammar) where one exists
+        let chunk_group = 4u64;
+        let chunk_label = format!(
+            "GS {}",
+            Schedule::ChunkedVertical { group: chunk_group, x: StorageRatios::ALL_SSD }
+                .kind_name()
+        );
         let mut t = Table::new(
             &title,
-            &["global batch", "ZeRO-Infinity", "Ratel", "TeraIO", "GreedySnake", "perf model"],
+            &[
+                "global batch",
+                "ZeRO-Infinity",
+                "Ratel",
+                "TeraIO",
+                &chunk_label,
+                "GreedySnake",
+                "perf model",
+            ],
         );
 
         // Ratel runs once at its max single-pass batch.
@@ -64,6 +80,9 @@ fn main() {
                 None => (0.0, StorageRatios::ALL_SSD),
             };
             let v = simulate(&sp, m, Schedule::GreedySnake { alpha, x });
+            // chunked-vertical ablation: same placement, G micro-batches
+            // per vertical sweep (between the two traversal extremes)
+            let ch = simulate(&sp, m, Schedule::ChunkedVertical { group: chunk_group, x });
             let pm = lp::solve_config(&sp, m, alpha)
                 .map(|r| r.tokens_per_s)
                 .unwrap_or(f64::NAN);
@@ -84,6 +103,7 @@ fn main() {
                 format!("{:.0}", z.tokens_per_s),
                 ratel_cell,
                 format!("{:.0}", teraio.tokens_per_s),
+                format!("{:.0}", ch.tokens_per_s),
                 format!("{:.0}", v.tokens_per_s),
                 format!("{:.0}", pm),
             ]);

@@ -1,0 +1,320 @@
+//! The schedule-agnostic step engine.
+//!
+//! Everything the vertical and horizontal schedulers used to duplicate
+//! lives here exactly once: stage dispatch (EmbedFwd / LayerFwd / HeadLoss /
+//! LayerBwd / EmbedBwd), activation checkpoint put/take through the
+//! [`InterLayerCoordinator`], resident gradient accumulation, eager / embed
+//! optimizer submission through the [`OptimizerStepCoordinator`], delayed-α
+//! dispatch, and SSD + parameter-upload byte accounting. A
+//! [`Schedule`](super::schedule::Schedule) contributes only the traversal
+//! order and three policy knobs; the engine is the single place that knows
+//! how to *execute* a visit.
+//!
+//! Parameter residency is modeled by a one-layer literal cache: a visit to a
+//! layer other than the cached one re-uploads that layer's parameters (and,
+//! in the forward pass, first waits for its pending optimizer updates — the
+//! "update layer i before its forward" dependency, Fig. 8). The cache-miss
+//! count is exactly the schedule-dependent parameter traffic the paper
+//! analyzes: one load per layer per pass under the vertical order, one per
+//! (layer, micro-batch) under the horizontal order, one per (layer, chunk)
+//! in between.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{HostTensor, TokenTensor};
+use crate::runtime::{Runtime, Stage};
+
+use super::ckpt::{ckpt_key, InterLayerCoordinator};
+use super::opt::OptimizerStepCoordinator;
+use super::schedule::{validate_order, Schedule};
+use super::state::ModelState;
+
+/// Per-step metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub ssd_bytes_read: u64,
+    pub ssd_bytes_written: u64,
+    /// Bytes of layer parameters uploaded to the device this step — the
+    /// schedule-dependent share of host↔GPU traffic (§3.3 vs §3.4).
+    pub param_bytes_loaded: u64,
+}
+
+/// Accumulate into an optional buffer.
+pub fn accumulate(acc: &mut Option<HostTensor>, t: HostTensor) {
+    match acc {
+        None => *acc = Some(t),
+        Some(a) => a.add_assign(&t),
+    }
+}
+
+/// One-layer parameter-literal cache (the resident layer on the device).
+struct ParamCache {
+    layer: Option<usize>,
+    literals: Vec<xla::Literal>,
+}
+
+impl ParamCache {
+    fn empty() -> Self {
+        ParamCache { layer: None, literals: Vec::new() }
+    }
+}
+
+/// The schedule-agnostic execution engine. Owns the inter-layer and
+/// optimizer coordinators; the [`ModelState`] plays the parameter
+/// coordinator.
+pub struct StepEngine<'a> {
+    pub state: &'a ModelState,
+    pub rt: &'a Runtime,
+    pub ilc: InterLayerCoordinator,
+    pub opt: OptimizerStepCoordinator,
+    step: u64,
+    param_bytes_loaded: u64,
+}
+
+impl<'a> StepEngine<'a> {
+    pub fn new(state: &'a ModelState, rt: &'a Runtime) -> Result<Self> {
+        let opt = OptimizerStepCoordinator::new(state);
+        opt.seed_ssd(state)?;
+        Ok(StepEngine {
+            state,
+            rt,
+            ilc: InterLayerCoordinator::new(
+                std::sync::Arc::clone(&state.ssd),
+                state.cfg.ckpt_on_ssd,
+            ),
+            opt,
+            step: 0,
+            param_bytes_loaded: 0,
+        })
+    }
+
+    /// Iterations executed so far.
+    pub fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    /// Cumulative parameter bytes uploaded across all steps.
+    pub fn param_bytes_loaded(&self) -> u64 {
+        self.param_bytes_loaded
+    }
+
+    fn layer_param_bytes(&self) -> u64 {
+        (self.state.manifest.layer_numel() * 4) as u64
+    }
+
+    /// Ensure `cache` holds layer `l`'s parameter literals; on a miss,
+    /// optionally wait for the layer's pending optimizer updates first
+    /// (forward passes must; backward passes reuse the forward's params).
+    fn ensure_params(&mut self, cache: &mut ParamCache, l: usize, wait: bool) -> Result<()> {
+        if cache.layer == Some(l) {
+            return Ok(());
+        }
+        if wait {
+            self.opt.wait_layer(l); // params fully updated before use (Fig. 8)
+        }
+        cache.literals = self.state.layer_literals(l)?;
+        cache.layer = Some(l);
+        self.param_bytes_loaded += self.layer_param_bytes();
+        Ok(())
+    }
+
+    /// One training iteration over `m` micro-batches under `schedule`.
+    /// `tokens[j]` / `targets[j]`: micro-batch j, shaped (B, T).
+    pub fn step(
+        &mut self,
+        schedule: &dyn Schedule,
+        tokens: &[TokenTensor],
+        targets: &[TokenTensor],
+    ) -> Result<StepStats> {
+        let m = tokens.len();
+        assert_eq!(m, targets.len());
+        assert!(m > 0, "a step needs at least one micro-batch");
+        let nl = self.state.manifest.config.n_layers;
+        if self.state.cfg.alpha > 0.0 && !schedule.supports_delay() {
+            bail!(
+                "schedule '{}' has no delayed-step support (α must be 0, got {})",
+                schedule.name(),
+                self.state.cfg.alpha
+            );
+        }
+        self.step += 1;
+        let read0 = self.state.ssd.bytes_read();
+        let written0 = self.state.ssd.bytes_written();
+        let loaded0 = self.param_bytes_loaded;
+
+        // Kick off the delayed α updates from the previous iteration — they
+        // overlap this forward pass; each layer's first forward visit waits.
+        if schedule.supports_delay() {
+            self.opt.dispatch_delayed(
+                self.state,
+                Some(self.rt),
+                self.step.saturating_sub(1).max(1),
+            )?;
+        }
+        self.opt.wait_embed();
+
+        // ---------------- forward ----------------
+        // Embedding (the boundary stage); upload wte/wpe once per step.
+        let embed_lits = {
+            let guard = self.state.embed.lock().unwrap();
+            (guard[0].to_literal()?, guard[1].to_literal()?)
+        };
+        let mut acts: Vec<HostTensor> = Vec::with_capacity(m);
+        for tok in tokens {
+            let out = self.rt.execute(
+                Stage::EmbedFwd,
+                &[tok.to_literal()?, embed_lits.0.clone(), embed_lits.1.clone()],
+            )?;
+            acts.push(HostTensor::from_literal(&out[0])?);
+        }
+        drop(embed_lits);
+
+        let fwd = schedule.forward_order(nl, m);
+        validate_order(&fwd, nl, m, false)
+            .with_context(|| format!("schedule '{}' forward order", schedule.name()))?;
+        let mut cache = ParamCache::empty();
+        for (l, j) in fwd {
+            self.ensure_params(&mut cache, l, true)?;
+            // the layer's INPUT activation is its backward checkpoint
+            self.ilc
+                .put(&ckpt_key(l, j), acts[j].clone())
+                .with_context(|| format!("ckpt store l{l} mb{j}"))?;
+            let x_lit = acts[j].to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = vec![&x_lit];
+            inputs.extend(cache.literals.iter());
+            let out = self.rt.execute(Stage::LayerFwd, &inputs)?;
+            acts[j] = HostTensor::from_literal(&out[0])?;
+        }
+
+        // ---------------- head: loss + dx + head/wte grads ----------------
+        let mut loss_sum = 0.0f64;
+        let mut dxs: Vec<HostTensor> = Vec::with_capacity(m);
+        let mut dwte: Option<HostTensor> = None;
+        let mut dlnf_w: Option<HostTensor> = None;
+        let mut dlnf_b: Option<HostTensor> = None;
+        {
+            // Upload the (large) head parameters ONCE per step, not per
+            // micro-batch — wte is V×D and dominated head-stage dispatch
+            // before this caching (§Perf, EXPERIMENTS.md).
+            let (wte_lit, lnf_w_lit, lnf_b_lit) = {
+                let guard = self.state.embed.lock().unwrap();
+                (guard[0].to_literal()?, guard[2].to_literal()?, guard[3].to_literal()?)
+            };
+            for j in 0..m {
+                let out = self.rt.execute(
+                    Stage::HeadLoss,
+                    &[
+                        &acts[j].to_literal()?,
+                        &lnf_w_lit,
+                        &lnf_b_lit,
+                        &wte_lit,
+                        &targets[j].to_literal()?,
+                    ],
+                )?;
+                loss_sum += out[0].to_vec::<f32>()?[0] as f64;
+                dxs.push(HostTensor::from_literal(&out[1])?);
+                accumulate(&mut dlnf_w, HostTensor::from_literal(&out[2])?);
+                accumulate(&mut dlnf_b, HostTensor::from_literal(&out[3])?);
+                accumulate(&mut dwte, HostTensor::from_literal(&out[4])?);
+            }
+        }
+
+        // ---------------- backward + optimizer ----------------------------
+        let bwd = schedule.backward_order(nl, m);
+        validate_order(&bwd, nl, m, true)
+            .with_context(|| format!("schedule '{}' backward order", schedule.name()))?;
+        // Resident gradient-accumulation buffers. Under the vertical order
+        // at most one is live at a time; interleaving orders keep up to one
+        // per layer (ZeRO-Infinity's CPU gradient buffers).
+        let mut grad_acc: Vec<Option<Vec<HostTensor>>> = Vec::new();
+        grad_acc.resize_with(nl, || None);
+        let mut remaining: Vec<usize> = vec![m; nl];
+        let mut cache = ParamCache::empty();
+        for (l, j) in bwd {
+            self.ensure_params(&mut cache, l, false)?;
+            let x_ckpt = self.ilc.take(&ckpt_key(l, j))?;
+            let (x_lit, dy_lit) = (x_ckpt.to_literal()?, dxs[j].to_literal()?);
+            let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &dy_lit];
+            inputs.extend(cache.literals.iter());
+            let out = self.rt.execute(Stage::LayerBwd, &inputs)?;
+            dxs[j] = HostTensor::from_literal(&out[0])?;
+            // accumulate parameter gradients in the resident buffer
+            match &mut grad_acc[l] {
+                None => {
+                    grad_acc[l] = Some(
+                        out[1..]
+                            .iter()
+                            .map(HostTensor::from_literal)
+                            .collect::<Result<_>>()?,
+                    );
+                }
+                Some(acc) => {
+                    for (a, lit) in acc.iter_mut().zip(&out[1..]) {
+                        a.add_assign(&HostTensor::from_literal(lit)?);
+                    }
+                }
+            }
+            remaining[l] -= 1;
+            if remaining[l] == 0 && schedule.eager_optimizer() {
+                // fully-accumulated gradients leave "GPU memory" exactly
+                // once; the optimizer share overlaps the rest of backward
+                let grads = grad_acc[l].take().expect("accumulated gradients");
+                self.opt.submit_eager(self.state, Some(self.rt), l, grads, self.step)?;
+            }
+        }
+
+        // ---------------- embedding backward ------------------------------
+        let mut dwpe: Option<HostTensor> = None;
+        for j in 0..m {
+            let out = self
+                .rt
+                .execute(Stage::EmbedBwd, &[tokens[j].to_literal()?, dxs[j].to_literal()?])?;
+            accumulate(&mut dwte, HostTensor::from_literal(&out[0])?);
+            accumulate(&mut dwpe, HostTensor::from_literal(&out[1])?);
+        }
+
+        // Deferred optimizer flush (§3.3): all layers only after the full
+        // backward pass.
+        if !schedule.eager_optimizer() {
+            for l in (0..nl).rev() {
+                let grads = grad_acc[l].take().expect("accumulated gradients");
+                self.opt.submit_eager(self.state, Some(self.rt), l, grads, self.step)?;
+            }
+        }
+        self.opt.submit_embed(
+            self.state,
+            vec![dwte.unwrap(), dwpe.unwrap(), dlnf_w.unwrap(), dlnf_b.unwrap()],
+            self.step,
+        )?;
+        if schedule.end_of_step_barrier() {
+            // the model must be fully updated before the step returns
+            for l in 0..nl {
+                self.opt.wait_layer(l);
+            }
+            self.opt.wait_embed();
+        }
+
+        let grad_norm = self.opt.finish_iter();
+        Ok(StepStats {
+            loss: loss_sum / m as f64,
+            grad_norm,
+            ssd_bytes_read: self.state.ssd.bytes_read() - read0,
+            ssd_bytes_written: self.state.ssd.bytes_written() - written0,
+            param_bytes_loaded: self.param_bytes_loaded - loaded0,
+        })
+    }
+
+    /// Drain all outstanding optimizer work (end of training). Safe under
+    /// every schedule: delayed dispatch is a no-op at α = 0 and the waits
+    /// are no-ops when a barrier already ran.
+    pub fn drain(&mut self) -> Result<()> {
+        self.opt.dispatch_delayed(self.state, Some(self.rt), self.step.max(1))?;
+        for l in 0..self.state.manifest.config.n_layers {
+            self.opt.wait_layer(l);
+        }
+        self.opt.wait_embed();
+        Ok(())
+    }
+}

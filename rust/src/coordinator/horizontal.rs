@@ -1,30 +1,27 @@
-//! The horizontal baseline scheduler (ZeRO-Infinity's order, §3.3): run each
+//! The horizontal baseline scheduler (ZeRO-Infinity's order, §3.3): a thin
+//! [`HorizontalSchedule`] policy over the shared [`StepEngine`] — run each
 //! micro-batch through ALL layers before the next, accumulate gradients in
 //! per-layer buffers across micro-batches, and run the whole optimizer step
 //! after the last micro-batch's backward pass.
 //!
 //! Numerically this computes the same gradients as the vertical scheduler
 //! (Figure 13's equivalence), while moving parameters 2·M times instead of
-//! twice — the traffic difference is measured by the integration tests via
-//! the runtime's stage-call counters and the SSD byte counters.
+//! twice — measured directly by [`StepStats::param_bytes_loaded`] and
+//! property-tested in `tests/integration.rs`.
 
 use anyhow::Result;
 
-use crate::runtime::tensor::{HostTensor, TokenTensor};
-use crate::runtime::{Runtime, Stage};
+use crate::runtime::tensor::TokenTensor;
+use crate::runtime::Runtime;
 
-use super::ckpt::{ckpt_key, InterLayerCoordinator};
-use super::opt::OptimizerStepCoordinator;
+use super::engine::{StepEngine, StepStats};
+use super::schedule::HorizontalSchedule;
 use super::state::ModelState;
-use super::vertical::{accumulate, StepStats};
 
-/// The baseline scheduler.
+/// The baseline scheduler: [`StepEngine`] driven by [`HorizontalSchedule`].
 pub struct HorizontalScheduler<'a> {
-    pub state: &'a ModelState,
-    pub rt: &'a Runtime,
-    pub ilc: InterLayerCoordinator,
-    pub opt: OptimizerStepCoordinator,
-    step: u64,
+    pub engine: StepEngine<'a>,
+    policy: HorizontalSchedule,
 }
 
 impl<'a> HorizontalScheduler<'a> {
@@ -33,140 +30,26 @@ impl<'a> HorizontalScheduler<'a> {
             state.cfg.alpha == 0.0,
             "horizontal schedule has no delayed-step support (α must be 0)"
         );
-        let opt = OptimizerStepCoordinator::new(state);
-        opt.seed_ssd(state)?;
-        Ok(HorizontalScheduler {
-            state,
-            rt,
-            ilc: InterLayerCoordinator::new(
-                std::sync::Arc::clone(&state.ssd),
-                state.cfg.ckpt_on_ssd,
-            ),
-            opt,
-            step: 0,
-        })
+        Ok(HorizontalScheduler { engine: StepEngine::new(state, rt)?, policy: HorizontalSchedule })
     }
 
-    /// One iteration: M sequential forward-backward passes, then the
-    /// optimizer (the only overlap is the final micro-batch's backward).
+    /// One iteration in the horizontal traversal order: every micro-batch
+    /// sweeps the full stack before the next (parameters reload per
+    /// micro-batch), the optimizer is deferred until the whole backward
+    /// pass finishes, and the step barriers on all updates before
+    /// returning — no overlap into the next iteration.
     pub fn step(&mut self, tokens: &[TokenTensor], targets: &[TokenTensor]) -> Result<StepStats> {
-        let m = tokens.len();
-        let c = self.state.manifest.config;
-        let nl = c.n_layers;
-        self.step += 1;
-        let read0 = self.state.ssd.bytes_read();
-        let written0 = self.state.ssd.bytes_written();
-        self.opt.wait_embed();
+        self.engine.step(&self.policy, tokens, targets)
+    }
 
-        let mut loss_sum = 0.0f64;
-        let mut grad_acc: Vec<Option<Vec<HostTensor>>> = vec![None; nl];
-        let mut dwte: Option<HostTensor> = None;
-        let mut dwpe: Option<HostTensor> = None;
-        let mut dlnf_w: Option<HostTensor> = None;
-        let mut dlnf_b: Option<HostTensor> = None;
-
-        for j in 0..m {
-            // ---- forward of micro-batch j through all layers ----
-            let (wte_lit, wpe_lit) = {
-                let guard = self.state.embed.lock().unwrap();
-                (guard[0].to_literal()?, guard[1].to_literal()?)
-            };
-            let out = self.rt.execute(
-                Stage::EmbedFwd,
-                &[tokens[j].to_literal()?, wte_lit, wpe_lit],
-            )?;
-            let mut act = HostTensor::from_literal(&out[0])?;
-            for l in 0..nl {
-                // horizontal reloads the layer's parameters for EVERY
-                // micro-batch — the traffic the paper eliminates
-                let params = self.state.layer_literals(l)?;
-                self.ilc.put(&ckpt_key(l, j), act.clone())?;
-                let x_lit = act.to_literal()?;
-                let mut inputs: Vec<&xla::Literal> = vec![&x_lit];
-                inputs.extend(params.iter());
-                let out = self.rt.execute(Stage::LayerFwd, &inputs)?;
-                act = HostTensor::from_literal(&out[0])?;
-            }
-
-            // ---- head ----
-            let mut dx = {
-                let guard = self.state.embed.lock().unwrap();
-                let (wte, lnf_w, lnf_b) = (&guard[0], &guard[2], &guard[3]);
-                let out = self.rt.execute(
-                    Stage::HeadLoss,
-                    &[
-                        act.to_literal()?,
-                        lnf_w.to_literal()?,
-                        lnf_b.to_literal()?,
-                        wte.to_literal()?,
-                        targets[j].to_literal()?,
-                    ],
-                )?;
-                loss_sum += out[0].to_vec::<f32>()?[0] as f64;
-                accumulate(&mut dlnf_w, HostTensor::from_literal(&out[2])?);
-                accumulate(&mut dlnf_b, HostTensor::from_literal(&out[3])?);
-                accumulate(&mut dwte, HostTensor::from_literal(&out[4])?);
-                HostTensor::from_literal(&out[1])?
-            };
-
-            // ---- backward of micro-batch j, accumulating into buffers ----
-            for l in (0..nl).rev() {
-                let params = self.state.layer_literals(l)?;
-                let x_ckpt = self.ilc.take(&ckpt_key(l, j))?;
-                let (x_lit, dy_lit) = (x_ckpt.to_literal()?, dx.to_literal()?);
-                let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &dy_lit];
-                inputs.extend(params.iter());
-                let out = self.rt.execute(Stage::LayerBwd, &inputs)?;
-                dx = HostTensor::from_literal(&out[0])?;
-                match &mut grad_acc[l] {
-                    None => {
-                        grad_acc[l] = Some(
-                            out[1..]
-                                .iter()
-                                .map(HostTensor::from_literal)
-                                .collect::<Result<_>>()?,
-                        )
-                    }
-                    Some(acc) => {
-                        for (a, lit) in acc.iter_mut().zip(&out[1..]) {
-                            a.add_assign(&HostTensor::from_literal(lit)?);
-                        }
-                    }
-                }
-            }
-            let out = self
-                .rt
-                .execute(Stage::EmbedBwd, &[tokens[j].to_literal()?, dx.to_literal()?])?;
-            accumulate(&mut dwte, HostTensor::from_literal(&out[0])?);
-            accumulate(&mut dwpe, HostTensor::from_literal(&out[1])?);
-        }
-
-        // ---- optimizer step for all layers, only now (§3.3) ----
-        for l in (0..nl).rev() {
-            self.opt
-                .submit_eager(self.state, Some(self.rt), l, grad_acc[l].take().unwrap(), self.step)?;
-        }
-        self.opt.submit_embed(
-            self.state,
-            vec![dwte.unwrap(), dwpe.unwrap(), dlnf_w.unwrap(), dlnf_b.unwrap()],
-            self.step,
-        )?;
-        // the model must be fully updated before the next iteration starts
-        for l in 0..nl {
-            self.opt.wait_layer(l);
-        }
-        self.opt.wait_embed();
-
-        let grad_norm = self.opt.finish_iter();
-        Ok(StepStats {
-            loss: loss_sum / m as f64,
-            grad_norm,
-            ssd_bytes_read: self.state.ssd.bytes_read() - read0,
-            ssd_bytes_written: self.state.ssd.bytes_written() - written0,
-        })
+    /// Drain outstanding optimizer work. The horizontal schedule barriers
+    /// at the end of every step, so this is a no-op in practice — but the
+    /// uniform interface lets `trainer::train` treat all schedules alike.
+    pub fn drain(&mut self) -> Result<()> {
+        self.engine.drain()
     }
 
     pub fn steps_done(&self) -> u64 {
-        self.step
+        self.engine.steps_done()
     }
 }

@@ -14,19 +14,34 @@
 //!   SSD round trips, the CPU Adam step (Rust fused loop on the overlap
 //!   worker, or the AOT Pallas kernel inline), and the delay-α split.
 //!
-//! Two schedulers drive them: [`vertical::VerticalScheduler`] (GreedySnake)
-//! and [`horizontal::HorizontalScheduler`] (the ZeRO-Infinity baseline).
-//! Both compute *identical* gradients (property-tested), so Figure 13's
-//! loss-equivalence experiment runs on this exact code.
+//! Since the engine/schedule split, *one* execution engine drives them:
+//! [`engine::StepEngine`] owns all stage dispatch, checkpoint put/take,
+//! resident gradient accumulation, and optimizer submission, while a
+//! pluggable [`schedule::Schedule`] contributes only the traversal order
+//! over the (layer × micro-batch) grid plus flush/delay/barrier policy.
+//! Three policies ship today: [`schedule::VerticalSchedule`] (GreedySnake,
+//! §3.4), [`schedule::HorizontalSchedule`] (the ZeRO-Infinity baseline,
+//! §3.3), and [`schedule::ChunkedVerticalSchedule`] (`chunked:G` — vertical
+//! sweeps over chunks of G micro-batches, interpolating between the two).
+//! All policies compute *identical* gradients modulo accumulation-order
+//! rounding (property-tested), so Figure 13's loss-equivalence experiment
+//! runs on this exact code. [`vertical::VerticalScheduler`] and
+//! [`horizontal::HorizontalScheduler`] remain as thin named wrappers.
 
 pub mod ckpt;
+pub mod engine;
 pub mod horizontal;
 pub mod opt;
+pub mod schedule;
 pub mod state;
 pub mod vertical;
 
 pub use ckpt::InterLayerCoordinator;
+pub use engine::{StepEngine, StepStats};
 pub use horizontal::HorizontalScheduler;
 pub use opt::OptimizerStepCoordinator;
+pub use schedule::{
+    ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,
+};
 pub use state::{ModelState, TrainerConfig};
 pub use vertical::VerticalScheduler;

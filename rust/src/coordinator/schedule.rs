@@ -1,0 +1,345 @@
+//! Pluggable schedules: pure traversal policies over the (layer ×
+//! micro-batch) grid.
+//!
+//! The paper's core observation (§3) is that horizontal vs vertical
+//! traversal of the grid — not any kernel or format trick — is what decides
+//! how many times layer parameters cross the SSD/host/GPU boundary. Related
+//! systems (ZeRO-Infinity, TeraIO, MLP-Offload's subgroup ordering,
+//! SSDTrain's activation ordering) are each "yet another traversal policy".
+//! This module makes that explicit: a [`Schedule`] is *data about order*,
+//! and all execution machinery lives in [`super::engine::StepEngine`].
+//!
+//! A policy emits a forward and a backward visit order plus three knobs:
+//! whether a layer's optimizer update is flushed eagerly the moment its
+//! gradient finishes accumulating, whether the delayed-α optimizer split is
+//! supported, and whether the step barriers on all optimizer work before
+//! returning. Everything else — stage dispatch, checkpoint put/take,
+//! resident gradient accumulation, SSD byte accounting — is
+//! schedule-agnostic.
+//!
+//! Legality: a forward order must visit every grid cell exactly once with
+//! each micro-batch's layers ascending (activations flow l → l+1); a
+//! backward order is the same with layers descending. The engine validates
+//! this every step (O(N·M), negligible next to stage execution), so a buggy
+//! third-party policy fails loudly instead of training on stale
+//! activations.
+
+use anyhow::{bail, Result};
+
+/// A traversal policy over the (layer × micro-batch) grid.
+pub trait Schedule {
+    /// Human-readable name, also used by the `--schedule` CLI grammar.
+    fn name(&self) -> String;
+
+    /// Forward visit order: every `(layer, micro_batch)` cell exactly once;
+    /// per micro-batch, layers strictly ascending.
+    fn forward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)>;
+
+    /// Backward visit order: every cell exactly once; per micro-batch,
+    /// layers strictly descending.
+    fn backward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)>;
+
+    /// Flush a layer's eager optimizer share as soon as its last backward
+    /// visit retires (overlapping the optimizer with the rest of the
+    /// backward pass, Fig. 7). When `false` the engine submits all layers
+    /// after the full backward pass — ZeRO-Infinity's §3.3 behavior.
+    fn eager_optimizer(&self) -> bool {
+        true
+    }
+
+    /// Whether the delayed-α optimizer split (§4.4) may run under this
+    /// policy. Requires that the engine waits on a layer's pending updates
+    /// before its first forward visit — true for any legal order — but
+    /// baseline policies model systems without the feature.
+    fn supports_delay(&self) -> bool {
+        true
+    }
+
+    /// Barrier on all pending optimizer work before the step returns
+    /// (no overlap into the next iteration's forward).
+    fn end_of_step_barrier(&self) -> bool {
+        false
+    }
+}
+
+/// Micro-batch execution order for a layer under the vertical schedule:
+/// consecutive layers alternate direction so the boundary micro-batch's
+/// activation stays in GPU memory (§4.2).
+pub fn mb_order(layer: usize, m: usize) -> Vec<usize> {
+    if layer % 2 == 0 {
+        (0..m).collect()
+    } else {
+        (0..m).rev().collect()
+    }
+}
+
+/// GreedySnake's vertical schedule (§3.4): every layer visits ALL
+/// micro-batches before the next layer, with the §4.2 alternating
+/// micro-batch order. Parameters cross the boundary once per pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerticalSchedule;
+
+impl Schedule for VerticalSchedule {
+    fn name(&self) -> String {
+        "vertical".to_string()
+    }
+
+    fn forward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(n_layers * m);
+        for l in 0..n_layers {
+            for j in mb_order(l, m) {
+                order.push((l, j));
+            }
+        }
+        order
+    }
+
+    fn backward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(n_layers * m);
+        for l in (0..n_layers).rev() {
+            for j in mb_order(l, m) {
+                order.push((l, j));
+            }
+        }
+        order
+    }
+}
+
+/// The horizontal baseline (ZeRO-Infinity, §3.3): each micro-batch runs
+/// through ALL layers before the next, parameters reload for every
+/// micro-batch, and the optimizer runs only after the last backward.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HorizontalSchedule;
+
+impl Schedule for HorizontalSchedule {
+    fn name(&self) -> String {
+        "horizontal".to_string()
+    }
+
+    fn forward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(n_layers * m);
+        for j in 0..m {
+            for l in 0..n_layers {
+                order.push((l, j));
+            }
+        }
+        order
+    }
+
+    fn backward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(n_layers * m);
+        for j in 0..m {
+            for l in (0..n_layers).rev() {
+                order.push((l, j));
+            }
+        }
+        order
+    }
+
+    fn eager_optimizer(&self) -> bool {
+        false
+    }
+
+    fn supports_delay(&self) -> bool {
+        false
+    }
+
+    fn end_of_step_barrier(&self) -> bool {
+        true
+    }
+}
+
+/// Chunked-vertical: micro-batches are processed in contiguous chunks of
+/// `group`, and each chunk is swept vertically through the whole layer
+/// stack. This is the vertical schedule's graceful degradation when all M
+/// activation fronts don't fit in GPU memory: only `group` of them are
+/// resident at a time, at the cost of reloading parameters once per chunk.
+///
+/// * `group >= m`  ⇒ one chunk ⇒ identical traffic to [`VerticalSchedule`]
+///   (parameters cross the boundary once per pass);
+/// * `group == 1`  ⇒ M chunks ⇒ the horizontal per-micro-batch parameter
+///   reload behavior at every chunk boundary;
+/// * in between, parameter traffic scales with ⌈M/group⌉, strictly between
+///   the two extremes (the `vertical ≤ chunked ≤ horizontal` SSD-read
+///   ordering is property-tested in `traffic` and `tests/integration.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkedVerticalSchedule {
+    /// Micro-batches per vertical chunk (≥ 1).
+    pub group: usize,
+}
+
+impl ChunkedVerticalSchedule {
+    pub fn new(group: usize) -> Self {
+        ChunkedVerticalSchedule { group: group.max(1) }
+    }
+
+    fn chunks(&self, m: usize) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        let g = self.group.max(1);
+        (0..m.div_ceil(g)).map(move |c| (c * g)..((c + 1) * g).min(m))
+    }
+}
+
+impl Schedule for ChunkedVerticalSchedule {
+    fn name(&self) -> String {
+        format!("chunked:{}", self.group)
+    }
+
+    fn forward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(n_layers * m);
+        for chunk in self.chunks(m) {
+            for l in 0..n_layers {
+                for j in chunk.clone() {
+                    order.push((l, j));
+                }
+            }
+        }
+        order
+    }
+
+    fn backward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(n_layers * m);
+        for chunk in self.chunks(m) {
+            for l in (0..n_layers).rev() {
+                for j in chunk.clone() {
+                    order.push((l, j));
+                }
+            }
+        }
+        order
+    }
+}
+
+/// Validate a visit order: a permutation of the grid whose per-micro-batch
+/// layer sequence is strictly ascending (forward) or descending (backward).
+pub fn validate_order(
+    order: &[(usize, usize)],
+    n_layers: usize,
+    m: usize,
+    backward: bool,
+) -> Result<()> {
+    if order.len() != n_layers * m {
+        bail!("order has {} visits, grid has {}", order.len(), n_layers * m);
+    }
+    if n_layers == 0 || m == 0 {
+        return Ok(()); // empty grid, empty order
+    }
+    // last layer seen per micro-batch; None = not visited yet
+    let mut last: Vec<Option<usize>> = vec![None; m];
+    for &(l, j) in order {
+        if l >= n_layers || j >= m {
+            bail!("visit ({l}, {j}) outside the {n_layers}x{m} grid");
+        }
+        let expected = match (last[j], backward) {
+            (None, false) => Some(0),
+            (None, true) => Some(n_layers - 1),
+            (Some(prev), false) => Some(prev + 1),
+            (Some(0), true) => None, // micro-batch already finished
+            (Some(prev), true) => Some(prev - 1),
+        };
+        if expected != Some(l) {
+            bail!(
+                "micro-batch {j} visits layer {l} after {:?} ({} order must be contiguous and {})",
+                last[j],
+                if backward { "backward" } else { "forward" },
+                if backward { "descending" } else { "ascending" },
+            );
+        }
+        last[j] = Some(l);
+    }
+    for (j, l) in last.iter().enumerate() {
+        let want = if backward { Some(0) } else { Some(n_layers - 1) };
+        if *l != want {
+            bail!("micro-batch {j} stopped at layer {l:?}, expected {want:?}");
+        }
+    }
+    Ok(())
+}
+
+/// Number of parameter (re)loads a single-layer parameter cache performs
+/// over `order` — the schedule-dependent share of SSD/host parameter
+/// traffic, in units of one layer's parameter bytes.
+pub fn param_loads(order: &[(usize, usize)]) -> usize {
+    let mut loads = 0;
+    let mut cached: Option<usize> = None;
+    for &(l, _) in order {
+        if cached != Some(l) {
+            loads += 1;
+            cached = Some(l);
+        }
+    }
+    loads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_valid(s: &dyn Schedule, nl: usize, m: usize) {
+        validate_order(&s.forward_order(nl, m), nl, m, false)
+            .unwrap_or_else(|e| panic!("{} forward {nl}x{m}: {e}", s.name()));
+        validate_order(&s.backward_order(nl, m), nl, m, true)
+            .unwrap_or_else(|e| panic!("{} backward {nl}x{m}: {e}", s.name()));
+    }
+
+    #[test]
+    fn all_policies_emit_legal_orders() {
+        for nl in [1, 2, 3, 8] {
+            for m in [1, 2, 3, 4, 7] {
+                all_valid(&VerticalSchedule, nl, m);
+                all_valid(&HorizontalSchedule, nl, m);
+                for g in [1, 2, 3, 64] {
+                    all_valid(&ChunkedVerticalSchedule::new(g), nl, m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validator_rejects_bad_orders() {
+        // duplicate visit
+        assert!(validate_order(&[(0, 0), (0, 0)], 1, 2, false).is_err());
+        // skips a layer
+        assert!(validate_order(&[(0, 0), (2, 0), (1, 0)], 3, 1, false).is_err());
+        // ascending order handed to the backward validator
+        assert!(validate_order(&[(0, 0), (1, 0)], 2, 1, true).is_err());
+        // out of grid
+        assert!(validate_order(&[(0, 5)], 1, 1, false).is_err());
+    }
+
+    #[test]
+    fn chunked_limits_degenerate_to_vertical_and_horizontal() {
+        let (nl, m) = (4, 6);
+        // group >= m: one chunk, layer-major — vertical order modulo the
+        // §4.2 alternating micro-batch direction (same param-load count).
+        let big = ChunkedVerticalSchedule::new(m).forward_order(nl, m);
+        assert_eq!(param_loads(&big), param_loads(&VerticalSchedule.forward_order(nl, m)));
+        // group == 1: micro-batch-major — exactly the horizontal order.
+        let one = ChunkedVerticalSchedule::new(1).forward_order(nl, m);
+        assert_eq!(one, HorizontalSchedule.forward_order(nl, m));
+    }
+
+    #[test]
+    fn param_loads_interpolate_monotonically() {
+        let (nl, m) = (6, 8);
+        let v = param_loads(&VerticalSchedule.forward_order(nl, m));
+        let c4 = param_loads(&ChunkedVerticalSchedule::new(4).forward_order(nl, m));
+        let c2 = param_loads(&ChunkedVerticalSchedule::new(2).forward_order(nl, m));
+        let h = param_loads(&HorizontalSchedule.forward_order(nl, m));
+        assert_eq!(v, nl);
+        assert_eq!(h, nl * m);
+        assert_eq!(c4, nl * 2);
+        assert_eq!(c2, nl * 4);
+        assert!(v < c4 && c4 < c2 && c2 < h);
+    }
+
+    #[test]
+    fn vertical_keeps_boundary_micro_batch_resident() {
+        for m in [1, 2, 5] {
+            for l in 0..6 {
+                let cur = mb_order(l, m);
+                let next = mb_order(l + 1, m);
+                assert_eq!(cur.last(), next.first(), "l={l} m={m}");
+            }
+        }
+    }
+}

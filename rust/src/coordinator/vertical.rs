@@ -1,222 +1,51 @@
-//! The GreedySnake vertical scheduler (§3.4, §4): execute every layer across
-//! ALL micro-batches before advancing, accumulate parameter gradients in
-//! resident buffers, overlap the (1-α) optimizer share with the backward
-//! pass and the α share with the next iteration's forward.
+//! The GreedySnake vertical scheduler (§3.4, §4): a thin
+//! [`VerticalSchedule`] policy over the shared [`StepEngine`] — execute
+//! every layer across ALL micro-batches before advancing, accumulate
+//! parameter gradients in resident buffers, overlap the (1-α) optimizer
+//! share with the backward pass and the α share with the next iteration's
+//! forward. All execution machinery lives in [`super::engine`]; this type
+//! exists as the named entry point for the paper's system.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::runtime::tensor::{HostTensor, TokenTensor};
-use crate::runtime::{Runtime, Stage};
+use crate::runtime::tensor::TokenTensor;
+use crate::runtime::Runtime;
 
-use super::ckpt::{ckpt_key, InterLayerCoordinator};
-use super::opt::OptimizerStepCoordinator;
+// Compatibility re-exports: `StepStats` and `accumulate` predate the
+// engine/schedule split and were defined here.
+pub use super::engine::{accumulate, StepEngine, StepStats};
+use super::schedule::{self, VerticalSchedule};
 use super::state::ModelState;
 
-/// Per-step metrics.
-#[derive(Clone, Copy, Debug)]
-pub struct StepStats {
-    pub loss: f64,
-    pub grad_norm: f64,
-    pub ssd_bytes_read: u64,
-    pub ssd_bytes_written: u64,
-}
-
-/// The vertical scheduler. Owns the inter-layer and optimizer coordinators;
-/// the [`ModelState`] plays the parameter coordinator.
+/// The vertical scheduler: [`StepEngine`] driven by [`VerticalSchedule`].
 pub struct VerticalScheduler<'a> {
-    pub state: &'a ModelState,
-    pub rt: &'a Runtime,
-    pub ilc: InterLayerCoordinator,
-    pub opt: OptimizerStepCoordinator,
-    step: u64,
+    pub engine: StepEngine<'a>,
+    policy: VerticalSchedule,
 }
 
 impl<'a> VerticalScheduler<'a> {
     pub fn new(state: &'a ModelState, rt: &'a Runtime) -> Result<Self> {
-        let opt = OptimizerStepCoordinator::new(state);
-        opt.seed_ssd(state)?;
-        Ok(VerticalScheduler {
-            state,
-            rt,
-            ilc: InterLayerCoordinator::new(
-                std::sync::Arc::clone(&state.ssd),
-                state.cfg.ckpt_on_ssd,
-            ),
-            opt,
-            step: 0,
-        })
+        Ok(VerticalScheduler { engine: StepEngine::new(state, rt)?, policy: VerticalSchedule })
     }
 
     /// Micro-batch execution order for a layer: consecutive layers alternate
     /// so the boundary micro-batch's activation stays in GPU memory (§4.2).
     pub fn mb_order(layer: usize, m: usize) -> Vec<usize> {
-        if layer % 2 == 0 {
-            (0..m).collect()
-        } else {
-            (0..m).rev().collect()
-        }
+        schedule::mb_order(layer, m)
     }
 
     /// One training iteration over `m` micro-batches.
     /// `tokens[j]` / `targets[j]`: micro-batch j, shaped (B, T).
     pub fn step(&mut self, tokens: &[TokenTensor], targets: &[TokenTensor]) -> Result<StepStats> {
-        let m = tokens.len();
-        assert_eq!(m, targets.len());
-        let c = self.state.manifest.config;
-        let nl = c.n_layers;
-        self.step += 1;
-        let read0 = self.state.ssd.bytes_read();
-        let written0 = self.state.ssd.bytes_written();
-
-        // Kick off the delayed α updates from the previous iteration — they
-        // overlap this forward pass; each layer waits before computing.
-        self.opt.dispatch_delayed(
-            self.state,
-            Some(self.rt),
-            self.step.saturating_sub(1).max(1),
-        )?;
-        self.opt.wait_embed();
-
-        // ---------------- forward ----------------
-        // Embedding (the boundary stage).
-        let embed_lits = {
-            let guard = self.state.embed.lock().unwrap();
-            (guard[0].to_literal()?, guard[1].to_literal()?)
-        };
-        let mut acts: Vec<HostTensor> = Vec::with_capacity(m);
-        for tok in tokens {
-            let out = self.rt.execute(
-                Stage::EmbedFwd,
-                &[tok.to_literal()?, embed_lits.0.clone(), embed_lits.1.clone()],
-            )?;
-            acts.push(HostTensor::from_literal(&out[0])?);
-        }
-
-        for l in 0..nl {
-            self.opt.wait_layer(l); // params must be fully updated (Fig. 8)
-            let params = self.state.layer_literals(l)?;
-            for &j in &Self::mb_order(l, m) {
-                // the layer's INPUT activation is its backward checkpoint
-                self.ilc
-                    .put(&ckpt_key(l, j), acts[j].clone())
-                    .with_context(|| format!("ckpt store l{l} mb{j}"))?;
-                let x_lit = acts[j].to_literal()?;
-                let mut inputs: Vec<&xla::Literal> = vec![&x_lit];
-                inputs.extend(params.iter());
-                let out = self.rt.execute(Stage::LayerFwd, &inputs)?;
-                acts[j] = HostTensor::from_literal(&out[0])?;
-            }
-        }
-
-        // ---------------- head: loss + dx + head/wte grads ----------------
-        let mut loss_sum = 0.0f64;
-        let mut dxs: Vec<HostTensor> = Vec::with_capacity(m);
-        let mut dwte: Option<HostTensor> = None;
-        let mut dlnf_w: Option<HostTensor> = None;
-        let mut dlnf_b: Option<HostTensor> = None;
-        {
-            // Upload the (large) head parameters ONCE per step, not per
-            // micro-batch — wte is V×D and dominated head-stage dispatch
-            // before this caching (§Perf, EXPERIMENTS.md).
-            let (wte_lit, lnf_w_lit, lnf_b_lit) = {
-                let guard = self.state.embed.lock().unwrap();
-                (guard[0].to_literal()?, guard[2].to_literal()?, guard[3].to_literal()?)
-            };
-            for j in 0..m {
-                let out = self.rt.execute(
-                    Stage::HeadLoss,
-                    &[
-                        &acts[j].to_literal()?,
-                        &lnf_w_lit,
-                        &lnf_b_lit,
-                        &wte_lit,
-                        &targets[j].to_literal()?,
-                    ],
-                )?;
-                loss_sum += out[0].to_vec::<f32>()?[0] as f64;
-                dxs.push(HostTensor::from_literal(&out[1])?);
-                accumulate(&mut dlnf_w, HostTensor::from_literal(&out[2])?);
-                accumulate(&mut dlnf_b, HostTensor::from_literal(&out[3])?);
-                accumulate(&mut dwte, HostTensor::from_literal(&out[4])?);
-            }
-        }
-
-        // ---------------- backward (vertical) + eager optimizer -----------
-        for l in (0..nl).rev() {
-            let params = self.state.layer_literals(l)?;
-            let mut grad_acc: Option<Vec<HostTensor>> = None; // resident buffer
-            for &j in &Self::mb_order(l, m) {
-                let x_ckpt = self.ilc.take(&ckpt_key(l, j))?;
-                let (x_lit, dy_lit) = (x_ckpt.to_literal()?, dxs[j].to_literal()?);
-                let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &dy_lit];
-                inputs.extend(params.iter());
-                let out = self.rt.execute(Stage::LayerBwd, &inputs)?;
-                dxs[j] = HostTensor::from_literal(&out[0])?;
-                // accumulate parameter gradients in the resident buffer
-                match &mut grad_acc {
-                    None => {
-                        grad_acc = Some(
-                            out[1..]
-                                .iter()
-                                .map(HostTensor::from_literal)
-                                .collect::<Result<_>>()?,
-                        );
-                    }
-                    Some(acc) => {
-                        for (a, lit) in acc.iter_mut().zip(&out[1..]) {
-                            a.add_assign(&HostTensor::from_literal(lit)?);
-                        }
-                    }
-                }
-            }
-            // fully-accumulated gradients leave "GPU memory" exactly once
-            self.opt
-                .submit_eager(self.state, Some(self.rt), l, grad_acc.unwrap(), self.step)?;
-        }
-
-        // ---------------- embedding backward ------------------------------
-        let mut dwpe: Option<HostTensor> = None;
-        for j in 0..m {
-            let out = self
-                .rt
-                .execute(Stage::EmbedBwd, &[tokens[j].to_literal()?, dxs[j].to_literal()?])?;
-            accumulate(&mut dwte, HostTensor::from_literal(&out[0])?);
-            accumulate(&mut dwpe, HostTensor::from_literal(&out[1])?);
-        }
-        self.opt.submit_embed(
-            self.state,
-            vec![dwte.unwrap(), dwpe.unwrap(), dlnf_w.unwrap(), dlnf_b.unwrap()],
-            self.step,
-        )?;
-
-        let grad_norm = self.opt.finish_iter();
-        Ok(StepStats {
-            loss: loss_sum / m as f64,
-            grad_norm,
-            ssd_bytes_read: self.state.ssd.bytes_read() - read0,
-            ssd_bytes_written: self.state.ssd.bytes_written() - written0,
-        })
+        self.engine.step(&self.policy, tokens, targets)
     }
 
     /// Drain all outstanding optimizer work (end of training).
     pub fn drain(&mut self) -> Result<()> {
-        self.opt.dispatch_delayed(self.state, Some(self.rt), self.step.max(1))?;
-        for l in 0..self.state.manifest.config.n_layers {
-            self.opt.wait_layer(l);
-        }
-        self.opt.wait_embed();
-        Ok(())
+        self.engine.drain()
     }
 
     pub fn steps_done(&self) -> u64 {
-        self.step
-    }
-}
-
-/// Accumulate into an optional buffer.
-pub fn accumulate(acc: &mut Option<HostTensor>, t: HostTensor) {
-    match acc {
-        None => *acc = Some(t),
-        Some(a) => a.add_assign(&t),
+        self.engine.steps_done()
     }
 }

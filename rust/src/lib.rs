@@ -6,10 +6,12 @@
 //!
 //! * **Layer 1/2 (build time)** — Pallas kernels and the JAX transformer are
 //!   AOT-lowered to HLO-text artifacts by `python/compile/aot.py`.
-//! * **Layer 3 (this crate)** — the paper's system contribution: the vertical
-//!   gradient-accumulation scheduler, the three offload coordinators, the
-//!   delayed optimizer step (delay ratio α), and the LP-based configuration
-//!   search, all driving the AOT artifacts through the PJRT C API.
+//! * **Layer 3 (this crate)** — the paper's system contribution: the
+//!   schedule-agnostic step engine with pluggable traversal schedules
+//!   (vertical / horizontal / chunked-vertical), the three offload
+//!   coordinators, the delayed optimizer step (delay ratio α), and the
+//!   LP-based configuration search, all driving the AOT artifacts through
+//!   the PJRT C API.
 //!
 //! Python never runs on the training path.
 //!
@@ -26,11 +28,11 @@
 //! | [`roofline`] | the §3.1 I/O + compute roofline |
 //! | [`lp`] | dense simplex solver + Algorithm 1 configuration search |
 //! | [`perfmodel`] | per-layer time prediction and iteration-time composition |
-//! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake) |
+//! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake / chunked) |
 //! | [`runtime`] | PJRT client wrapper, artifact manifests, executable cache |
 //! | [`optimizer`] | mixed-precision Adam, gradient accumulation, delay-α split, clipping |
-//! | [`coordinator`] | the three coordinators + vertical/horizontal schedulers over the real runtime |
-//! | [`trainer`] | end-to-end training loop over the AOT artifacts |
+//! | [`coordinator`] | the three coordinators + the schedule-agnostic [`coordinator::StepEngine`] and pluggable [`coordinator::Schedule`] policies (vertical, horizontal, `chunked:G`) |
+//! | [`trainer`] | end-to-end training loop; [`trainer::ScheduleKind`] names schedules uniformly across runtime, simulator, and traffic model |
 
 pub mod coordinator;
 pub mod exec;

@@ -56,9 +56,18 @@ fn main() -> Result<()> {
 }
 
 fn cmd_train(args: Vec<String>) -> Result<()> {
+    // --schedule grammar (shared with `simulate --system` and the analytic
+    // models): `vertical` (GreedySnake §3.4, alias `greedysnake`),
+    // `horizontal` (ZeRO-Infinity §3.3, alias `zero-infinity`), or
+    // `chunked:G` — vertical sweeps over chunks of G micro-batches
+    // (G=1 ≡ horizontal parameter reloads, G≥M ≡ fully vertical).
     let cli = Cli::new("greedysnake train", "train through the AOT artifacts")
         .opt("artifacts", "artifact directory", Some("artifacts/tiny"))
-        .opt("schedule", "vertical|horizontal", Some("vertical"))
+        .opt(
+            "schedule",
+            "vertical|horizontal|chunked:G (G = micro-batches per vertical chunk)",
+            Some("vertical"),
+        )
         .opt("steps", "training iterations", Some("20"))
         .opt("micro-batches", "micro-batches per iteration (M)", Some("4"))
         .opt("alpha", "delay ratio α", Some("0.25"))
@@ -78,7 +87,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let r: f64 = cli.get_parsed("ssd-read-gbps")?;
     let w: f64 = cli.get_parsed("ssd-write-gbps")?;
     let cfg = TrainerConfig {
-        alpha: if kind == ScheduleKind::Horizontal { 0.0 } else { alpha },
+        alpha: if kind.supports_delay() { alpha } else { 0.0 },
         opt_on_ssd: !cli.has_flag("opt-on-cpu"),
         ckpt_on_ssd: cli.has_flag("ckpt-on-ssd"),
         use_hlo_adam: cli.has_flag("hlo-adam"),
@@ -98,7 +107,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind:?} M={m} alpha={} steps={steps}",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps}",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
@@ -122,7 +131,11 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
         .opt("gpus", "number of GPUs", Some("1"))
         .opt("micro-batch", "micro-batch size B", Some("2"))
         .opt("m", "micro-batch count M", Some("16"))
-        .opt("system", "greedysnake|zero-infinity|teraio|ratel", Some("greedysnake"))
+        .opt(
+            "system",
+            "greedysnake|zero-infinity|teraio|ratel|chunked:G",
+            Some("greedysnake"),
+        )
         .opt("alpha", "delay ratio (greedysnake)", Some("0.3"))
         .parse_from(args)?;
     let sp = SystemParams::new(
@@ -133,17 +146,23 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
     );
     let m: u64 = cli.get_parsed("m")?;
     let schedule = match cli.get("system").unwrap().as_str() {
-        "greedysnake" => {
-            let alpha: f64 = cli.get_parsed("alpha")?;
-            let x = lp::solve_config(&sp, m, alpha)
-                .map(|r| r.ratios)
-                .unwrap_or(greedysnake::perfmodel::StorageRatios::ALL_SSD);
-            Schedule::GreedySnake { alpha, x }
-        }
-        "zero-infinity" => Schedule::ZeroInfinity,
         "teraio" => Schedule::TeraIo,
         "ratel" => Schedule::Ratel,
-        other => bail!("unknown system '{other}'"),
+        // everything else goes through the runtime schedule grammar
+        // (vertical|greedysnake | horizontal|zero-infinity | chunked:G), so
+        // every alias of the same schedule takes the same path
+        other => {
+            let kind: ScheduleKind = other
+                .parse()
+                .map_err(|e| anyhow::anyhow!("unknown system '{other}': {e}"))?;
+            let alpha: f64 = cli.get_parsed("alpha")?;
+            let alpha = if kind.supports_delay() { alpha } else { 0.0 };
+            // LP solve needs a strictly positive delay ratio (fig10 style)
+            let x = lp::solve_config(&sp, m, alpha.max(0.01))
+                .map(|r| r.ratios)
+                .unwrap_or(greedysnake::perfmodel::StorageRatios::ALL_SSD);
+            kind.sim_schedule(alpha, x)
+        }
     };
     let r = simulate(&sp, m, schedule);
     println!(

@@ -30,6 +30,25 @@ pub enum Schedule {
     TeraIo,
     /// Ratel: single forward-backward pass at the max batch (extra ckpt).
     Ratel,
+    /// Chunked-vertical (`chunked:G`): vertical sweeps over chunks of
+    /// `group` micro-batches, parameters reloading once per chunk —
+    /// the runtime's `ChunkedVerticalSchedule` on the event simulator.
+    ChunkedVertical { group: u64, x: StorageRatios },
+}
+
+impl Schedule {
+    /// The runtime schedule name this system's traversal corresponds to —
+    /// the same grammar `trainer::ScheduleKind` parses, so the analytic
+    /// models and the real runtime name schedules consistently. (TeraIO
+    /// traverses horizontally; Ratel's single pass has no runtime analog.)
+    pub fn kind_name(&self) -> String {
+        match self {
+            Schedule::GreedySnake { .. } => "vertical".to_string(),
+            Schedule::ZeroInfinity | Schedule::TeraIo => "horizontal".to_string(),
+            Schedule::Ratel => "single-pass".to_string(),
+            Schedule::ChunkedVertical { group, .. } => format!("chunked:{group}"),
+        }
+    }
 }
 
 /// Simulation output.
@@ -89,6 +108,9 @@ fn build_and_run(sp: &SystemParams, m: u64, schedule: Schedule, iters: u32) -> (
         Schedule::Ratel => {
             let pl = sp.zero_infinity_placement(1);
             build_ratel(&mut sim, sp, pl, iters)
+        }
+        Schedule::ChunkedVertical { group, x } => {
+            build_chunked(&mut sim, sp, m, group, x, iters)
         }
     }
     let stats = sim.run();
@@ -363,6 +385,115 @@ fn build_horizontal(
 }
 
 // ---------------------------------------------------------------------------
+// Chunked-vertical pipeline (vertical sweeps over chunks of G micro-batches)
+// ---------------------------------------------------------------------------
+
+/// Mirrors the runtime's `ChunkedVerticalSchedule`: all chunks run their
+/// forward sweep, then all chunks run their backward sweep; parameters
+/// reload once per (layer, chunk); the per-layer gradient buffer
+/// round-trips between chunks (fp16 PCIe legs, like the horizontal
+/// builder); the optimizer runs per layer after the last chunk. Checkpoint
+/// transfers are modeled chunk-granular. No delayed-α split (the runtime
+/// supports it for chunked schedules, but the simulator models the α = 0
+/// configuration the equivalence experiments use).
+fn build_chunked(
+    sim: &mut DiscreteSim,
+    sp: &SystemParams,
+    m: u64,
+    group: u64,
+    x: StorageRatios,
+    iters: u32,
+) {
+    let n = sp.model.n_layers as usize;
+    let g_mb = group.max(1);
+    let k = m.div_ceil(g_mb) as usize;
+    let chunk_size = |ci: usize| (m - ci as u64 * g_mb).min(g_mb) as f64;
+    let (r, w, pcie) = rates(sp);
+    let (p, g, o, c) = (sp.p_lp(), sp.g_fp(), sp.o_bytes(), sp.c_bytes());
+
+    let mut prev_iter_adam: Vec<Option<usize>> = vec![None; n];
+
+    for _it in 0..iters {
+        // -------- forward: chunk-major, vertical within each chunk --------
+        let mut d2h_ckpt: Vec<Vec<usize>> = vec![vec![0; k]; n];
+        let mut ckpt_ssd_w: Vec<Vec<Option<usize>>> = vec![vec![None; k]; n];
+        let mut last_gpu: Option<usize> = None; // single-device program order
+        for ci in 0..k {
+            let gi = chunk_size(ci);
+            for i in 0..n {
+                let mut pdeps: Vec<usize> = Vec::new();
+                if let Some(ad) = prev_iter_adam[i] {
+                    pdeps.push(ad);
+                }
+                let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
+                let ph2d = sim.op(H2D, p / pcie, &[prd]);
+                let mut deps = vec![ph2d];
+                if i > 0 {
+                    // the chunk's input activations staged through CPU
+                    let h = sim.op(H2D, gi * c / pcie, &[d2h_ckpt[i - 1][ci]]);
+                    deps.push(h);
+                }
+                if let Some(lg) = last_gpu {
+                    deps.push(lg);
+                }
+                let f = sim.op(GPU, gi * sp.t_fwd_mb(), &deps);
+                last_gpu = Some(f);
+                let dc = sim.op(D2H, gi * c / pcie, &[f]);
+                d2h_ckpt[i][ci] = dc;
+                if x.ckpt_cpu < 1.0 {
+                    ckpt_ssd_w[i][ci] =
+                        Some(sim.op(SSD_W, (1.0 - x.ckpt_cpu) * gi * c / w, &[dc]));
+                }
+            }
+        }
+
+        // -------- backward + gradient round trips + optimizer -------------
+        let mut grad_ready: Vec<Option<usize>> = vec![None; n];
+        for ci in 0..k {
+            let gi = chunk_size(ci);
+            for i in (0..n).rev() {
+                let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &[]);
+                let ph2d = sim.op(H2D, p / pcie, &[prd]);
+                // input checkpoints back in (SSD share first)
+                let mut cdeps = vec![d2h_ckpt[i][ci]];
+                if let Some(wop) = ckpt_ssd_w[i][ci] {
+                    cdeps.push(sim.op(SSD_R, (1.0 - x.ckpt_cpu) * gi * c / r, &[wop]));
+                }
+                let hck = sim.op(H2D, gi * c / pcie, &cdeps);
+                let mut deps = vec![ph2d, hck];
+                if let Some(lg) = last_gpu {
+                    deps.push(lg);
+                }
+                // accumulation buffer fetch for every chunk after the first
+                if ci > 0 {
+                    let gh = sim.op(
+                        H2D,
+                        g / 2.0 / pcie,
+                        &[grad_ready[i].expect("prior chunk offloaded")],
+                    );
+                    deps.push(gh);
+                }
+                let b = sim.op(GPU, gi * sp.t_bwd_mb(), &deps);
+                last_gpu = Some(b);
+                let goff = sim.op(D2H, g / 2.0 / pcie, &[b]);
+                grad_ready[i] = Some(goff);
+                // optimizer step for this layer after the LAST chunk
+                if ci == k - 1 {
+                    let ord = sim.op(SSD_R, (1.0 - x.opt_cpu) * o / r, &[]);
+                    let ad = sim.op(CPU, sp.t_adam_layer(), &[ord, goff]);
+                    sim.op(
+                        SSD_W,
+                        ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p) / w,
+                        &[ad],
+                    );
+                    prev_iter_adam[i] = Some(ad);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Ratel single-pass pipeline
 // ---------------------------------------------------------------------------
 
@@ -509,6 +640,32 @@ mod tests {
         let v = simulate(&sp, 16, Schedule::GreedySnake { alpha: 0.3, x }).tokens_per_s;
         assert!(t >= z * 0.98, "teraio {t} vs zero {z}");
         assert!(v > t, "greedysnake {v} vs teraio {t}");
+    }
+
+    #[test]
+    fn chunked_between_horizontal_and_vertical() {
+        // Full model: the parameter-reload gap only dominates when layers
+        // are large relative to checkpoints (§3.4).
+        let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+        let x = StorageRatios { ckpt_cpu: 1.0, param_cpu: 0.5, opt_cpu: 0.2 };
+        let v = simulate(&sp, 16, Schedule::GreedySnake { alpha: 0.0, x }).tokens_per_s;
+        let ch = simulate(&sp, 16, Schedule::ChunkedVertical { group: 4, x }).tokens_per_s;
+        let h = simulate(&sp, 16, Schedule::ZeroInfinity).tokens_per_s;
+        assert!(ch > 0.0);
+        // more chunks = more parameter reloads = no faster than vertical...
+        assert!(ch <= v * 1.02, "chunked {ch} vs vertical {v}");
+        // ...but far fewer reloads than per-micro-batch horizontal
+        assert!(ch >= h, "chunked {ch} vs horizontal {h}");
+    }
+
+    #[test]
+    fn schedule_kind_names_are_runtime_grammar() {
+        let x = StorageRatios::ALL_SSD;
+        assert_eq!(Schedule::GreedySnake { alpha: 0.3, x }.kind_name(), "vertical");
+        assert_eq!(Schedule::ZeroInfinity.kind_name(), "horizontal");
+        assert_eq!(Schedule::TeraIo.kind_name(), "horizontal");
+        assert_eq!(Schedule::Ratel.kind_name(), "single-pass");
+        assert_eq!(Schedule::ChunkedVertical { group: 4, x }.kind_name(), "chunked:4");
     }
 
     #[test]

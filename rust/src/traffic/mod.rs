@@ -121,6 +121,46 @@ impl Workload {
         }
     }
 
+    /// Chunked-vertical (`chunked:G`): micro-batches processed in ⌈M/G⌉
+    /// contiguous chunks, each swept vertically through the whole stack —
+    /// the vertical schedule's graceful degradation when only G activation
+    /// fronts fit in GPU memory.
+    ///
+    /// Each chunk behaves like a vertical pass over its own micro-batches
+    /// (parameters twice per chunk, per-chunk checkpoint staging), and the
+    /// per-layer gradient buffer round-trips between chunks exactly like
+    /// horizontal's does between micro-batches. The formula degenerates to
+    /// [`Workload::vertical`] at G ≥ M and to [`Workload::horizontal`] at
+    /// G = 1 field-for-field. In between, more chunks trade parameter and
+    /// gradient traffic for checkpoint traffic, so whenever per-layer
+    /// parameter + gradient bytes outweigh checkpoint bytes
+    /// (2·ms + grad > 2·N·c — true for every transformer in the paper's
+    /// model zoo) bytes read order vertical ≤ chunked ≤ horizontal,
+    /// monotonically in ⌈M/G⌉ (property-tested on GPT-65B). Checkpoint-
+    /// dominated shapes (B·T ≫ hidden on a tiny model) can invert this.
+    pub fn chunked_vertical(&self, group: u64) -> Traffic {
+        let g = group.max(1);
+        let k = self.m.div_ceil(g); // number of chunks
+        let per_layer = self.ckpt_layer();
+        let n = self.model.n_layers;
+        let mut t = Traffic {
+            param_load: 2 * k * self.ms_lp(),
+            grad_load: (k - 1) * self.grad_fp(),
+            grad_store: k * self.grad_fp(),
+            ..Traffic::default()
+        };
+        for c in 0..k {
+            // chunk size (last chunk may be short)
+            let gi = (self.m - c * g).min(g);
+            // per-chunk vertical staging (see `vertical` for the counting)
+            t.ckpt_store += n * gi * per_layer + n * (gi - 1) * per_layer;
+            t.ckpt_load += n * (gi - 1) * per_layer // fwd re-reads
+                + n * gi * per_layer // bwd recompute reads
+                + n * (gi - 1) * per_layer; // bwd inter-layer grads
+        }
+        t
+    }
+
     /// §3.2 — single forward-backward pass (Ratel-style) at batch size
     /// `batch = B·M` with `extra_ckpt` doubling checkpoint frequency
     /// (attention/FFN boundary checkpoints).
@@ -213,6 +253,35 @@ mod tests {
         assert_eq!(w4.vertical().grad_store * 4, w1.vertical().grad_store);
         // checkpoints are per-GPU data-parallel state: unchanged.
         assert_eq!(w4.vertical().ckpt_store, w1.vertical().ckpt_store);
+    }
+
+    #[test]
+    fn chunked_limits_equal_vertical_and_horizontal() {
+        for m in [1, 2, 5, 16] {
+            let w = wl(m);
+            assert_eq!(w.chunked_vertical(m), w.vertical(), "m={m}");
+            assert_eq!(w.chunked_vertical(m + 7), w.vertical(), "m={m} oversize group");
+            assert_eq!(w.chunked_vertical(1), w.horizontal(), "m={m}");
+        }
+    }
+
+    /// The satellite ordering property: bytes read off the host/SSD tier
+    /// satisfy vertical ≤ chunked ≤ horizontal, strictly for 1 < G < M.
+    #[test]
+    fn chunked_reads_between_vertical_and_horizontal() {
+        let w = wl(16);
+        let v = w.vertical().total_load();
+        let h = w.horizontal().total_load();
+        let mut prev = h;
+        for g in [2u64, 4, 8] {
+            let c = w.chunked_vertical(g).total_load();
+            assert!(v < c && c < h, "g={g}: {v} < {c} < {h}");
+            assert!(c < prev, "loads must shrink as the chunk grows: g={g}");
+            prev = c;
+        }
+        // totals order the same way for transformer-scale layer/ckpt ratios
+        let c2 = w.chunked_vertical(2).total();
+        assert!(w.vertical().total() < c2 && c2 < w.horizontal().total());
     }
 
     #[test]

@@ -1,14 +1,25 @@
-//! End-to-end training: synthetic corpus, the training loop over either
-//! scheduler, and loss-curve logging (EXPERIMENTS.md's validation run and
-//! the Figure-13 equivalence experiment both drive this).
+//! End-to-end training: synthetic corpus, the schedule-agnostic training
+//! loop over the [`StepEngine`], and loss-curve logging (EXPERIMENTS.md's
+//! validation run and the Figure-13 equivalence experiment both drive this).
+//!
+//! [`ScheduleKind`] is the user-facing schedule name shared by the real
+//! runtime, the discrete-event simulator ([`ScheduleKind::sim_schedule`]),
+//! and the analytic traffic model ([`ScheduleKind::traffic`]): `vertical`
+//! (GreedySnake), `horizontal` (ZeRO-Infinity), and `chunked:G` (vertical
+//! sweeps over chunks of G micro-batches).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::coordinator::vertical::StepStats;
-use crate::coordinator::{HorizontalScheduler, ModelState, TrainerConfig, VerticalScheduler};
+use crate::coordinator::schedule::{
+    ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,
+};
+use crate::coordinator::{ModelState, StepEngine, TrainerConfig};
+use crate::perfmodel::StorageRatios;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::TokenTensor;
 use crate::runtime::Runtime;
+use crate::sim;
+use crate::traffic::{Traffic, Workload};
 use crate::util::prng::Prng;
 
 /// Synthetic corpus: a Zipf-distributed token stream with a planted bigram
@@ -58,11 +69,17 @@ impl SyntheticCorpus {
     }
 }
 
-/// Which scheduler drives training.
+/// Which schedule drives training.
+///
+/// Grammar (CLI `--schedule`, also accepted by `simulate --system`):
+/// `vertical` | `greedysnake` | `horizontal` | `zero-infinity` |
+/// `chunked:G` with G ≥ 1 micro-batches per vertical chunk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScheduleKind {
     Vertical,
     Horizontal,
+    /// Vertical sweeps over chunks of G micro-batches (`chunked:G`).
+    ChunkedVertical(usize),
 }
 
 impl std::str::FromStr for ScheduleKind {
@@ -71,7 +88,65 @@ impl std::str::FromStr for ScheduleKind {
         match s {
             "vertical" | "greedysnake" => Ok(ScheduleKind::Vertical),
             "horizontal" | "zero-infinity" => Ok(ScheduleKind::Horizontal),
-            other => anyhow::bail!("unknown schedule '{other}'"),
+            other => {
+                if let Some(g) = other.strip_prefix("chunked:") {
+                    let group: usize = g
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad chunk group '{g}' in '{other}': {e}"))?;
+                    if group == 0 {
+                        bail!("chunk group must be >= 1 in '{other}'");
+                    }
+                    return Ok(ScheduleKind::ChunkedVertical(group));
+                }
+                bail!("unknown schedule '{other}' (vertical|horizontal|chunked:G)")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ScheduleKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleKind::Vertical => write!(f, "vertical"),
+            ScheduleKind::Horizontal => write!(f, "horizontal"),
+            ScheduleKind::ChunkedVertical(g) => write!(f, "chunked:{g}"),
+        }
+    }
+}
+
+impl ScheduleKind {
+    /// The traversal policy driving [`StepEngine`].
+    pub fn policy(&self) -> Box<dyn Schedule> {
+        match self {
+            ScheduleKind::Vertical => Box::new(VerticalSchedule),
+            ScheduleKind::Horizontal => Box::new(HorizontalSchedule),
+            ScheduleKind::ChunkedVertical(g) => Box::new(ChunkedVerticalSchedule::new(*g)),
+        }
+    }
+
+    /// Whether the delayed-α optimizer split may run under this schedule.
+    pub fn supports_delay(&self) -> bool {
+        self.policy().supports_delay()
+    }
+
+    /// The discrete-event simulator's model of this schedule (the analytic
+    /// stack names schedules the same way the runtime does).
+    pub fn sim_schedule(&self, alpha: f64, x: StorageRatios) -> sim::Schedule {
+        match self {
+            ScheduleKind::Vertical => sim::Schedule::GreedySnake { alpha, x },
+            ScheduleKind::Horizontal => sim::Schedule::ZeroInfinity,
+            ScheduleKind::ChunkedVertical(g) => {
+                sim::Schedule::ChunkedVertical { group: *g as u64, x }
+            }
+        }
+    }
+
+    /// The closed-form per-iteration traffic of this schedule (§3.3/§3.4).
+    pub fn traffic(&self, w: &Workload) -> Traffic {
+        match self {
+            ScheduleKind::Vertical => w.vertical(),
+            ScheduleKind::Horizontal => w.horizontal(),
+            ScheduleKind::ChunkedVertical(g) => w.chunked_vertical(*g as u64),
         }
     }
 }
@@ -84,24 +159,34 @@ pub struct RunLog {
     pub step_seconds: Vec<f64>,
     pub ssd_read: u64,
     pub ssd_written: u64,
+    /// Layer-parameter bytes uploaded to the device (schedule-dependent).
+    pub param_bytes: u64,
 }
 
 impl RunLog {
+    /// Training throughput; 0.0 for an empty run (no division by zero).
     pub fn tokens_per_s(&self, tokens_per_step: usize) -> f64 {
         let total: f64 = self.step_seconds.iter().sum();
+        if self.losses.is_empty() || total <= 0.0 {
+            return 0.0;
+        }
         (self.losses.len() * tokens_per_step) as f64 / total
     }
 
-    /// Mean loss over the final quarter of training.
+    /// Mean loss over the final quarter of training; 0.0 for an empty run.
     pub fn final_loss(&self) -> f64 {
         let n = self.losses.len();
+        if n == 0 {
+            return 0.0;
+        }
         let tail = &self.losses[n - (n / 4).max(1)..];
         tail.iter().sum::<f64>() / tail.len() as f64
     }
 }
 
-/// Train `steps` iterations of `m` micro-batches. Prints one line per
-/// `log_every` steps when it is > 0.
+/// Train `steps` iterations of `m` micro-batches under `kind`'s schedule.
+/// Prints one line per `log_every` steps when it is > 0. Every schedule
+/// runs through the same engine and drains uniformly at the end.
 pub fn train(
     manifest: Manifest,
     cfg: TrainerConfig,
@@ -116,49 +201,37 @@ pub fn train(
     let mut corpus = SyntheticCorpus::new(shape.vocab, state.cfg.seed);
     let mut log = RunLog::default();
 
-    let mut run_step = |step_fn: &mut dyn FnMut(&[TokenTensor], &[TokenTensor]) -> Result<StepStats>|
-     -> Result<()> {
-        for s in 0..steps {
-            let mut toks = Vec::with_capacity(m);
-            let mut tgts = Vec::with_capacity(m);
-            for _ in 0..m {
-                let (a, b) = corpus.sample(shape.micro_batch, shape.seq_len)?;
-                toks.push(a);
-                tgts.push(b);
-            }
-            let t0 = std::time::Instant::now();
-            let stats = step_fn(&toks, &tgts)?;
-            let dt = t0.elapsed().as_secs_f64();
-            log.losses.push(stats.loss);
-            log.grad_norms.push(stats.grad_norm);
-            log.step_seconds.push(dt);
-            log.ssd_read += stats.ssd_bytes_read;
-            log.ssd_written += stats.ssd_bytes_written;
-            if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
-                println!(
-                    "step {s:>5}  loss {:.4}  |g| {:.3}  {:.2}s/step  ssd r/w {}/{}",
-                    stats.loss,
-                    stats.grad_norm,
-                    dt,
-                    crate::util::stats::fmt_bytes(stats.ssd_bytes_read as f64),
-                    crate::util::stats::fmt_bytes(stats.ssd_bytes_written as f64),
-                );
-            }
+    let policy = kind.policy();
+    let mut engine = StepEngine::new(&state, &rt)?;
+    for s in 0..steps {
+        let mut toks = Vec::with_capacity(m);
+        let mut tgts = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (a, b) = corpus.sample(shape.micro_batch, shape.seq_len)?;
+            toks.push(a);
+            tgts.push(b);
         }
-        Ok(())
-    };
-
-    match kind {
-        ScheduleKind::Vertical => {
-            let mut sched = VerticalScheduler::new(&state, &rt)?;
-            run_step(&mut |t, g| sched.step(t, g))?;
-            sched.drain()?;
-        }
-        ScheduleKind::Horizontal => {
-            let mut sched = HorizontalScheduler::new(&state, &rt)?;
-            run_step(&mut |t, g| sched.step(t, g))?;
+        let t0 = std::time::Instant::now();
+        let stats = engine.step(policy.as_ref(), &toks, &tgts)?;
+        let dt = t0.elapsed().as_secs_f64();
+        log.losses.push(stats.loss);
+        log.grad_norms.push(stats.grad_norm);
+        log.step_seconds.push(dt);
+        log.ssd_read += stats.ssd_bytes_read;
+        log.ssd_written += stats.ssd_bytes_written;
+        log.param_bytes += stats.param_bytes_loaded;
+        if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
+            println!(
+                "step {s:>5}  loss {:.4}  |g| {:.3}  {:.2}s/step  ssd r/w {}/{}",
+                stats.loss,
+                stats.grad_norm,
+                dt,
+                crate::util::stats::fmt_bytes(stats.ssd_bytes_read as f64),
+                crate::util::stats::fmt_bytes(stats.ssd_bytes_written as f64),
+            );
         }
     }
+    engine.drain()?;
     Ok(log)
 }
 
@@ -204,7 +277,7 @@ mod tests {
 
     #[test]
     fn vertical_training_reduces_loss_tiny() {
-        let manifest = Manifest::load("artifacts/tiny").unwrap();
+        let Some(manifest) = crate::runtime::test_artifacts("artifacts/tiny") else { return };
         let log = train(manifest, cfg("vred"), ScheduleKind::Vertical, 30, 2, 0).unwrap();
         let first = log.losses[0];
         let last = log.final_loss();
@@ -216,12 +289,52 @@ mod tests {
     }
 
     #[test]
+    fn zero_step_training_yields_empty_log() {
+        let Some(manifest) = crate::runtime::test_artifacts("artifacts/tiny") else { return };
+        let log = train(manifest, cfg("zero"), ScheduleKind::Vertical, 0, 2, 0).unwrap();
+        assert!(log.losses.is_empty());
+        assert_eq!(log.tokens_per_s(1024), 0.0);
+        assert_eq!(log.final_loss(), 0.0);
+    }
+
+    #[test]
     fn schedule_kind_parses() {
         assert_eq!("vertical".parse::<ScheduleKind>().unwrap(), ScheduleKind::Vertical);
         assert_eq!(
             "zero-infinity".parse::<ScheduleKind>().unwrap(),
             ScheduleKind::Horizontal
         );
+        assert_eq!(
+            "chunked:4".parse::<ScheduleKind>().unwrap(),
+            ScheduleKind::ChunkedVertical(4)
+        );
         assert!("diagonal".parse::<ScheduleKind>().is_err());
+        assert!("chunked:0".parse::<ScheduleKind>().is_err());
+        assert!("chunked:x".parse::<ScheduleKind>().is_err());
+        assert!("chunked:".parse::<ScheduleKind>().is_err());
+    }
+
+    #[test]
+    fn schedule_kind_display_roundtrips() {
+        for kind in [
+            ScheduleKind::Vertical,
+            ScheduleKind::Horizontal,
+            ScheduleKind::ChunkedVertical(3),
+        ] {
+            assert_eq!(kind.to_string().parse::<ScheduleKind>().unwrap(), kind);
+            assert_eq!(kind.policy().name(), kind.to_string());
+        }
+    }
+
+    /// Regression: both metrics used to panic / return NaN on `steps == 0`.
+    #[test]
+    fn runlog_empty_run_is_zero_not_panic() {
+        let log = RunLog::default();
+        assert_eq!(log.tokens_per_s(4096), 0.0);
+        assert_eq!(log.final_loss(), 0.0);
+        // a one-step log with a zero-resolution timer must not be infinite
+        let log = RunLog { losses: vec![1.0], step_seconds: vec![0.0], ..Default::default() };
+        assert_eq!(log.tokens_per_s(4096), 0.0);
+        assert_eq!(log.final_loss(), 1.0);
     }
 }

@@ -1,0 +1,282 @@
+//! Vendored stand-in for the `xla` crate (xla-rs), exposing exactly the API
+//! subset `greedysnake::runtime` touches.
+//!
+//! Two halves, with very different fidelity:
+//!
+//! * [`Literal`] / [`ArrayShape`] are REAL pure-Rust implementations of the
+//!   host-side literal container (typed buffer + dims + reshape + tuple
+//!   decomposition). Host-tensor round trips work exactly like the native
+//!   crate's.
+//! * The PJRT types ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`PjRtBuffer`], [`HloModuleProto`], [`XlaComputation`]) are stubs:
+//!   [`PjRtClient::cpu`] returns an error, so any code path needing actual
+//!   XLA execution fails fast with a clear message instead of at link time.
+//!   Artifact-driven tests gate on `Manifest::load_if_built` and skip.
+//!
+//! Replace this path dependency with the real `xla` crate (plus the XLA
+//! native libraries) to run the PJRT paths; no consumer source changes.
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Error type mirroring `xla::Error` closely enough for `?`/`Context` use.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+const STUB_MSG: &str = "PJRT unavailable: built with the vendored xla stub \
+     (swap in the real `xla` crate + XLA native libraries to execute artifacts)";
+
+// ---------------------------------------------------------------------------
+// Literals (real implementation)
+// ---------------------------------------------------------------------------
+
+/// Typed storage behind a literal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::I64(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a literal can hold.
+pub trait NativeType: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(data: Vec<Self>) -> Storage {
+                Storage::$variant(data)
+            }
+            fn unwrap(storage: &Storage) -> Option<Vec<Self>> {
+                match storage {
+                    Storage::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, I32);
+native!(i64, I64);
+
+/// Dense array shape (dims only; element type lives in [`Storage`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side literal: typed buffer + dims, or a tuple of literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a native element slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: T::wrap(data.to_vec()) }
+    }
+
+    /// Tuple literal (what stage executables return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elems.len() as i64], storage: Storage::Tuple(elems) }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return err("cannot reshape a tuple literal");
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.storage.len() {
+            return err(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            ));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// The array shape (errors on tuple literals, like the real crate).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return err("array_shape of a tuple literal");
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .ok_or_else(|| Error("to_vec: element type mismatch".to_string()))
+    }
+
+    /// Number of elements (tuple literals: number of members).
+    pub fn element_count(&self) -> usize {
+        self.storage.len()
+    }
+
+    /// Split a tuple literal into its members.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.storage, Storage::Tuple(Vec::new())) {
+            Storage::Tuple(elems) => Ok(elems),
+            other => {
+                self.storage = other;
+                err("decompose_tuple on a non-tuple literal")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (stubbed)
+// ---------------------------------------------------------------------------
+
+/// Raw PJRT handles are not `Send`; the stub keeps that property so thread
+/// discipline bugs surface even without the native backend.
+type NotSend = PhantomData<*mut ()>;
+
+/// Parsed HLO module (stub: never constructible without the native backend).
+pub struct HloModuleProto {
+    _p: NotSend,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        err(STUB_MSG)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _p: NotSend,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: PhantomData }
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _p: NotSend,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(STUB_MSG)
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable {
+    _p: NotSend,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _buffers: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(STUB_MSG)
+    }
+}
+
+/// PJRT client handle (stub: construction fails fast).
+pub struct PjRtClient {
+    _p: NotSend,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        err(STUB_MSG)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        err(STUB_MSG)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(STUB_MSG)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes_once() {
+        let mut t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2i32, 3])]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![2, 3]);
+        let mut plain = Literal::vec1(&[1.0f32]);
+        assert!(plain.decompose_tuple().is_err());
+        assert_eq!(plain.to_vec::<f32>().unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn pjrt_stub_fails_fast() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
