@@ -1,7 +1,10 @@
 //! Compare vertical (GreedySnake), horizontal (ZeRO-Infinity), and
 //! chunked-vertical scheduling on the REAL stack: identical model/seed/data,
 //! measure loss equivalence (Fig. 13 in miniature), parameter-upload bytes
-//! (the traffic the schedule controls), and SSD traffic.
+//! (the traffic the schedule controls), and SSD traffic. Then sweep the
+//! async pipeline's `--io-depth` lookahead on the vertical schedule: every
+//! depth must train bit-identically while depth ≥ 1 turns loads into
+//! prefetch hits.
 //!
 //!     cargo run --release --example schedule_compare
 
@@ -70,6 +73,42 @@ fn main() -> anyhow::Result<()> {
     let (v, c, h) = (logs[0].1.param_bytes, logs[1].1.param_bytes, logs[2].1.param_bytes);
     println!("param bytes: vertical {v} < chunked:2 {c} < horizontal {h}");
     assert!(v < c && c < h, "schedule traffic ordering violated");
+
+    // --- async pipeline sweep: --io-depth ∈ {0, 1, 4} on vertical ---------
+    // K = 0 is the synchronous engine; every depth must produce identical
+    // losses and byte totals (the pipeline moves I/O, it never changes it),
+    // and K ≥ 1 must report prefetch hits.
+    let mut depth_logs: Vec<(usize, RunLog)> = Vec::new();
+    for depth in [0usize, 1, 4] {
+        let mut c = cfg(&format!("iod{depth}"), 0.25);
+        c.io_depth = depth;
+        let log =
+            train(Manifest::load("artifacts/tiny")?, c, ScheduleKind::Vertical, steps, m, 0)?;
+        depth_logs.push((depth, log));
+    }
+    let mut t = Table::new(
+        "io-depth sweep — vertical schedule, async prefetch + write-behind",
+        &["depth", "final loss", "prefetch hits", "misses", "i/o stall (s)"],
+    );
+    for (depth, log) in &depth_logs {
+        t.row(&[
+            depth.to_string(),
+            format!("{:.4}", log.final_loss()),
+            log.prefetch_hits.to_string(),
+            log.prefetch_misses.to_string(),
+            format!("{:.3}", log.io_stall_s),
+        ]);
+    }
+    t.emit(None);
+    let base = &depth_logs[0].1;
+    assert_eq!(base.prefetch_hits, 0, "depth 0 must not prefetch");
+    for (depth, log) in &depth_logs[1..] {
+        assert_eq!(base.losses, log.losses, "io-depth {depth} changed the loss trajectory");
+        assert_eq!(base.ssd_read, log.ssd_read, "io-depth {depth} changed SSD reads");
+        assert_eq!(base.ssd_written, log.ssd_written, "io-depth {depth} changed SSD writes");
+        assert_eq!(base.param_bytes, log.param_bytes, "io-depth {depth} changed param traffic");
+        assert!(log.prefetch_hits > 0, "io-depth {depth} produced no prefetch hits");
+    }
     println!("schedule_compare OK");
     Ok(())
 }

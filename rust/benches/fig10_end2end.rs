@@ -3,11 +3,14 @@
 //! (substituted testbed; DESIGN.md). Also prints the §6.2 saturated-speedup
 //! summary and TFLOPs/GPU.
 
+use std::collections::BTreeMap;
+
 use greedysnake::lp;
 use greedysnake::machine::{Machine, MACHINE1_A5000, MACHINE2_A100};
 use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::{StorageRatios, SystemParams};
-use greedysnake::sim::{simulate, Schedule};
+use greedysnake::sim::{simulate, Schedule, SimResult};
+use greedysnake::util::json::Json;
 use greedysnake::util::table::Table;
 
 struct Panel {
@@ -30,6 +33,10 @@ fn main() {
 
     let mut speedups = Vec::new();
     let mut tflops_summary = Vec::new();
+    // Per-panel, per-schedule pipeline-stall accounting (GPU-idle seconds
+    // per iteration at the panel's largest batch) — machine-readable so
+    // future PRs can track the overlap win.
+    let mut stall_report: BTreeMap<String, Json> = BTreeMap::new();
 
     for p in &panels {
         // GreedySnake runs at its LP-preferred small micro-batch (B=2);
@@ -107,6 +114,24 @@ fn main() {
                 format!("{:.0}", v.tokens_per_s),
                 format!("{:.0}", pm),
             ]);
+            if m == p.ms[p.ms.len() - 1] {
+                let panel_key = format!(
+                    "{}_{}x{}",
+                    p.model.name.to_lowercase(),
+                    p.machine.name.to_lowercase(),
+                    p.gpus
+                );
+                let mut schedules = BTreeMap::new();
+                for (name, res) in [
+                    ("zero-infinity", &z),
+                    ("teraio", &teraio),
+                    (chunk_label.as_str(), &ch),
+                    ("greedysnake", &v),
+                ] {
+                    schedules.insert(name.to_string(), stall_json(res));
+                }
+                stall_report.insert(panel_key, Json::Obj(schedules));
+            }
         }
         let tsv = format!(
             "bench_out/fig10_{}_{}x{}.tsv",
@@ -129,6 +154,23 @@ fn main() {
     for (model, machine, gpus, tf) in &tflops_summary {
         println!("  {model} on {machine} x{gpus}: {tf:.1} TFLOPs/GPU");
     }
+
+    std::fs::create_dir_all("bench_out").expect("create bench_out");
+    let path = "bench_out/fig10_stalls.json";
+    std::fs::write(path, Json::Obj(stall_report).to_string_compact())
+        .expect("write stall report");
+    println!("\nper-schedule stall-time report -> {path}");
+}
+
+/// GPU-idle ("stall") seconds per steady-state iteration for one simulated
+/// schedule, plus the raw inputs.
+fn stall_json(r: &SimResult) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("t_iter_s".to_string(), Json::Num(r.t_iter));
+    o.insert("gpu_util".to_string(), Json::Num(r.gpu_util));
+    o.insert("stall_s".to_string(), Json::Num(r.t_iter * (1.0 - r.gpu_util)));
+    o.insert("tokens_per_s".to_string(), Json::Num(r.tokens_per_s));
+    Json::Obj(o)
 }
 
 fn lp_best(sp: &SystemParams, m: u64) -> Option<(f64, StorageRatios)> {

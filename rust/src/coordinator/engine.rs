@@ -18,6 +18,18 @@
 //! analyzes: one load per layer per pass under the vertical order, one per
 //! (layer, micro-batch) under the horizontal order, one per (layer, chunk)
 //! in between.
+//!
+//! I/O is asynchronous: since the schedule hands over the full visit order
+//! up front, the engine looks ahead `cfg.io_depth` visits through the
+//! [`IoPipeline`] — issuing the *next* visits' parameter loads (and, in the
+//! backward pass, checkpoint reads) while the current visit computes, and
+//! turning checkpoint stores into write-behind with completion tracking.
+//! Depth 0 reproduces the synchronous engine bit-for-bit; either way the
+//! [`StepStats`] report prefetch hits/misses and the compute thread's I/O
+//! stall seconds.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -25,6 +37,7 @@ use crate::runtime::tensor::{HostTensor, TokenTensor};
 use crate::runtime::{Runtime, Stage};
 
 use super::ckpt::{ckpt_key, InterLayerCoordinator};
+use super::io::{IoPipeline, IoStats};
 use super::opt::OptimizerStepCoordinator;
 use super::schedule::{validate_order, Schedule};
 use super::state::ModelState;
@@ -39,6 +52,19 @@ pub struct StepStats {
     /// Bytes of layer parameters uploaded to the device this step — the
     /// schedule-dependent share of host↔GPU traffic (§3.3 vs §3.4).
     pub param_bytes_loaded: u64,
+    /// Lookahead loads that were already in flight when needed (0 when
+    /// `io_depth == 0`).
+    pub prefetch_hits: u64,
+    /// Loads the engine had to perform synchronously in async mode.
+    pub prefetch_misses: u64,
+    /// Seconds the compute thread spent blocked in the parameter/checkpoint
+    /// data path this step — synchronous transfers at depth 0, residual
+    /// waits on in-flight prefetches at depth ≥ 1. Deliberately *includes*
+    /// waiting out a layer's pending optimizer updates before its load (the
+    /// Fig. 8 dependency) on both paths — at depth ≥ 1 that wait runs on the
+    /// `param-upload` lane, which is part of the overlap win — so depth-0
+    /// and depth-K runs measure the same blocking set and stay comparable.
+    pub io_stall_s: f64,
 }
 
 /// Accumulate into an optional buffer.
@@ -62,13 +88,14 @@ impl ParamCache {
 }
 
 /// The schedule-agnostic execution engine. Owns the inter-layer and
-/// optimizer coordinators; the [`ModelState`] plays the parameter
-/// coordinator.
+/// optimizer coordinators (shared with the I/O lanes via `Arc`); the
+/// [`ModelState`] plays the parameter coordinator.
 pub struct StepEngine<'a> {
     pub state: &'a ModelState,
     pub rt: &'a Runtime,
-    pub ilc: InterLayerCoordinator,
-    pub opt: OptimizerStepCoordinator,
+    pub ilc: Arc<InterLayerCoordinator>,
+    pub opt: Arc<OptimizerStepCoordinator>,
+    io: IoPipeline,
     step: u64,
     param_bytes_loaded: u64,
 }
@@ -80,11 +107,12 @@ impl<'a> StepEngine<'a> {
         Ok(StepEngine {
             state,
             rt,
-            ilc: InterLayerCoordinator::new(
-                std::sync::Arc::clone(&state.ssd),
+            ilc: Arc::new(InterLayerCoordinator::new(
+                Arc::clone(&state.ssd),
                 state.cfg.ckpt_on_ssd,
-            ),
-            opt,
+            )),
+            opt: Arc::new(opt),
+            io: IoPipeline::new(state.cfg.io_depth),
             step: 0,
             param_bytes_loaded: 0,
         })
@@ -100,24 +128,68 @@ impl<'a> StepEngine<'a> {
         self.param_bytes_loaded
     }
 
+    /// Cumulative I/O-pipeline counters across all steps.
+    pub fn io_stats(&self) -> IoStats {
+        self.io.stats()
+    }
+
     fn layer_param_bytes(&self) -> u64 {
         (self.state.manifest.layer_numel() * 4) as u64
     }
 
-    /// Ensure `cache` holds layer `l`'s parameter literals; on a miss,
-    /// optionally wait for the layer's pending optimizer updates first
-    /// (forward passes must; backward passes reuse the forward's params).
+    /// Ensure `cache` holds layer `l`'s parameter literals. A prefetched
+    /// snapshot (issued by [`Self::lookahead`]) is claimed when available;
+    /// otherwise the load runs synchronously — optionally waiting for the
+    /// layer's pending optimizer updates first (forward passes must;
+    /// backward passes reuse the forward's params).
     fn ensure_params(&mut self, cache: &mut ParamCache, l: usize, wait: bool) -> Result<()> {
         if cache.layer == Some(l) {
             return Ok(());
         }
-        if wait {
-            self.opt.wait_layer(l); // params fully updated before use (Fig. 8)
+        match self.io.take_params(l)? {
+            Some(snapshot) => {
+                // the lane already waited for pending updates and staged the
+                // tensors; only the host→device conversion remains here
+                cache.literals =
+                    snapshot.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+            }
+            None => {
+                // the clock covers the optimizer wait too — the prefetched
+                // path performs the same wait on the lane, so both modes
+                // charge the same blocking set (see StepStats::io_stall_s)
+                let t0 = Instant::now();
+                if wait {
+                    self.opt.wait_layer(l); // params fully updated before use (Fig. 8)
+                }
+                cache.literals = self.state.layer_literals(l)?;
+                self.io.note_sync_stall(t0.elapsed());
+            }
         }
-        cache.literals = self.state.layer_literals(l)?;
         cache.layer = Some(l);
         self.param_bytes_loaded += self.layer_param_bytes();
         Ok(())
+    }
+
+    /// Issue the async loads for the next `io_depth` visits after `idx` in
+    /// `order`: parameter snapshots at every upcoming layer transition
+    /// (deduped — the pipeline tracks in-flight layers) and, in the backward
+    /// pass, the upcoming visits' checkpoint reads.
+    fn lookahead(&mut self, order: &[(usize, usize)], idx: usize, forward: bool) {
+        let depth = self.io.depth();
+        if depth == 0 {
+            return;
+        }
+        // the cache will hold the current visit's layer while the window runs
+        let mut resident = order[idx].0;
+        for &(l, j) in order.iter().skip(idx + 1).take(depth) {
+            if l != resident {
+                self.io.prefetch_params(&self.opt, l, &self.state.layers[l], forward);
+                resident = l;
+            }
+            if !forward {
+                self.io.prefetch_take(&self.ilc, &ckpt_key(l, j));
+            }
+        }
     }
 
     /// One training iteration over `m` micro-batches under `schedule`.
@@ -143,6 +215,7 @@ impl<'a> StepEngine<'a> {
         let read0 = self.state.ssd.bytes_read();
         let written0 = self.state.ssd.bytes_written();
         let loaded0 = self.param_bytes_loaded;
+        let io0 = self.io.stats();
 
         // Kick off the delayed α updates from the previous iteration — they
         // overlap this forward pass; each layer's first forward visit waits.
@@ -174,12 +247,15 @@ impl<'a> StepEngine<'a> {
         let fwd = schedule.forward_order(nl, m);
         validate_order(&fwd, nl, m, false)
             .with_context(|| format!("schedule '{}' forward order", schedule.name()))?;
+        self.io.begin_pass()?;
         let mut cache = ParamCache::empty();
-        for (l, j) in fwd {
+        for (idx, &(l, j)) in fwd.iter().enumerate() {
             self.ensure_params(&mut cache, l, true)?;
+            self.lookahead(&fwd, idx, true);
             // the layer's INPUT activation is its backward checkpoint
-            self.ilc
-                .put(&ckpt_key(l, j), acts[j].clone())
+            // (write-behind: the store overlaps this visit's compute)
+            self.io
+                .put_ckpt(&self.ilc, &ckpt_key(l, j), acts[j].clone())
                 .with_context(|| format!("ckpt store l{l} mb{j}"))?;
             let x_lit = acts[j].to_literal()?;
             let mut inputs: Vec<&xla::Literal> = vec![&x_lit];
@@ -225,6 +301,7 @@ impl<'a> StepEngine<'a> {
         let bwd = schedule.backward_order(nl, m);
         validate_order(&bwd, nl, m, true)
             .with_context(|| format!("schedule '{}' backward order", schedule.name()))?;
+        self.io.begin_pass()?;
         // Resident gradient-accumulation buffers. Under the vertical order
         // at most one is live at a time; interleaving orders keep up to one
         // per layer (ZeRO-Infinity's CPU gradient buffers).
@@ -232,9 +309,10 @@ impl<'a> StepEngine<'a> {
         grad_acc.resize_with(nl, || None);
         let mut remaining: Vec<usize> = vec![m; nl];
         let mut cache = ParamCache::empty();
-        for (l, j) in bwd {
+        for (idx, &(l, j)) in bwd.iter().enumerate() {
             self.ensure_params(&mut cache, l, false)?;
-            let x_ckpt = self.ilc.take(&ckpt_key(l, j))?;
+            self.lookahead(&bwd, idx, false);
+            let x_ckpt = self.io.take_ckpt(&self.ilc, &ckpt_key(l, j))?;
             let (x_lit, dy_lit) = (x_ckpt.to_literal()?, dxs[j].to_literal()?);
             let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &dy_lit];
             inputs.extend(cache.literals.iter());
@@ -296,6 +374,13 @@ impl<'a> StepEngine<'a> {
             self.opt.wait_embed();
         }
 
+        // Retire all in-flight lane I/O (normally a no-op: every write was
+        // awaited by its take) so the per-step SSD byte deltas are exact and
+        // any lane failure surfaces here as an error, not later or as a
+        // panic.
+        self.io.flush()?;
+        let io1 = self.io.stats();
+
         let grad_norm = self.opt.finish_iter();
         Ok(StepStats {
             loss: loss_sum / m as f64,
@@ -303,13 +388,17 @@ impl<'a> StepEngine<'a> {
             ssd_bytes_read: self.state.ssd.bytes_read() - read0,
             ssd_bytes_written: self.state.ssd.bytes_written() - written0,
             param_bytes_loaded: self.param_bytes_loaded - loaded0,
+            prefetch_hits: io1.prefetch_hits - io0.prefetch_hits,
+            prefetch_misses: io1.prefetch_misses - io0.prefetch_misses,
+            io_stall_s: io1.stall_seconds - io0.stall_seconds,
         })
     }
 
-    /// Drain all outstanding optimizer work (end of training). Safe under
-    /// every schedule: delayed dispatch is a no-op at α = 0 and the waits
-    /// are no-ops when a barrier already ran.
+    /// Drain all outstanding optimizer and I/O work (end of training). Safe
+    /// under every schedule: delayed dispatch is a no-op at α = 0 and the
+    /// waits are no-ops when a barrier already ran.
     pub fn drain(&mut self) -> Result<()> {
+        self.io.flush()?;
         self.opt.dispatch_delayed(self.state, Some(self.rt), self.step.max(1))?;
         for l in 0..self.state.manifest.config.n_layers {
             self.opt.wait_layer(l);

@@ -1,0 +1,438 @@
+//! The asynchronous I/O pipeline: schedule-lookahead parameter prefetch and
+//! checkpoint write-behind over the [`LaneExecutor`].
+//!
+//! The paper's speedups come from overlapping SSD traffic with GPU compute
+//! (Figs. 6–8). A [`Schedule`](super::schedule::Schedule) yields the full
+//! `(layer, micro-batch)` visit order up front, so the
+//! [`StepEngine`](super::engine::StepEngine) can look ahead `K` visits and
+//! issue the *next* visits' parameter loads and checkpoint reads while the
+//! current visit computes. This type is that pipeline: three dedicated
+//! serial lanes —
+//!
+//! * `ssd-read`   — checkpoint prefetch (the backward pass's `take`s),
+//! * `ssd-write`  — checkpoint write-behind (the forward pass's `put`s),
+//! * `param-upload` — parameter staging (wait for a layer's pending
+//!   optimizer updates, then snapshot its tensors for upload),
+//!
+//! with dependency tracking between them (a prefetched read of a key waits
+//! for that key's in-flight write, never for unrelated traffic). `K = 0`
+//! disables the executor entirely and reproduces the synchronous engine
+//! bit-for-bit; the pipeline then only times the compute thread's I/O
+//! stalls, so the two modes are directly comparable through
+//! [`IoStats::stall_seconds`].
+//!
+//! Lane-op failures (I/O errors *and* panics) surface as `anyhow` errors at
+//! this boundary — a panicked op poisons the executor
+//! ([`LaneExecutor::try_wait`]) instead of unwinding or deadlocking the
+//! compute thread.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::exec::lanes::{LaneExecutor, OpId};
+use crate::runtime::tensor::HostTensor;
+
+use super::ckpt::InterLayerCoordinator;
+use super::opt::OptimizerStepCoordinator;
+
+/// Lane names (one serial worker each; the rows of the Fig. 6–8 diagrams).
+pub const LANE_SSD_READ: &str = "ssd-read";
+pub const LANE_SSD_WRITE: &str = "ssd-write";
+pub const LANE_PARAM_UPLOAD: &str = "param-upload";
+
+/// Cumulative pipeline counters. `stall_seconds` is wall time the *compute*
+/// thread spent blocked on I/O — synchronous transfers at depth 0, waits on
+/// not-yet-finished prefetches at depth ≥ 1 — which is exactly the quantity
+/// the overlap is supposed to shrink.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoStats {
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub stall_seconds: f64,
+}
+
+/// Result slot filled by a lane op (errors stringified — closures cross a
+/// panic boundary and must stay `Send`).
+type OpResult<T> = std::result::Result<T, String>;
+type Slot<T> = Arc<Mutex<Option<OpResult<T>>>>;
+/// An in-flight prefetch: the lane op to wait on plus its result slot.
+type InFlight<T> = (OpId, Slot<T>);
+
+/// Time `f` and charge the elapsed wall time to `stats.stall_seconds`.
+fn timed<R>(stats: &mut IoStats, f: impl FnOnce() -> R) -> R {
+    let t0 = Instant::now();
+    let r = f();
+    stats.stall_seconds += t0.elapsed().as_secs_f64();
+    r
+}
+
+/// The engine-facing pipeline. Owned exclusively by one engine; all methods
+/// take `&mut self`, the shared state lives in the coordinators the lane
+/// closures capture by `Arc`.
+pub struct IoPipeline {
+    /// `None` at depth 0: every call degrades to the synchronous path.
+    ex: Option<LaneExecutor>,
+    depth: usize,
+    /// key → last write-behind op (completion tracking for `take`).
+    pending_writes: HashMap<String, OpId>,
+    /// key → in-flight prefetched checkpoint read.
+    pending_takes: HashMap<String, InFlight<HostTensor>>,
+    /// layer → in-flight parameter snapshot.
+    pending_params: HashMap<usize, InFlight<Vec<HostTensor>>>,
+    /// I/O errors from write-behind ops, reported at the next take/flush.
+    write_errors: Arc<Mutex<Vec<String>>>,
+    stats: IoStats,
+}
+
+impl IoPipeline {
+    /// `depth` is the schedule-lookahead K: 0 = fully synchronous (no lanes,
+    /// bit-identical to the pre-pipeline engine), K ≥ 1 = prefetch the next
+    /// K visits' loads while the current visit computes.
+    pub fn new(depth: usize) -> Self {
+        let ex = if depth > 0 {
+            Some(LaneExecutor::new(&[LANE_SSD_READ, LANE_SSD_WRITE, LANE_PARAM_UPLOAD]))
+        } else {
+            None
+        };
+        IoPipeline {
+            ex,
+            depth,
+            pending_writes: HashMap::new(),
+            pending_takes: HashMap::new(),
+            pending_params: HashMap::new(),
+            write_errors: Arc::new(Mutex::new(Vec::new())),
+            stats: IoStats::default(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn is_async(&self) -> bool {
+        self.ex.is_some()
+    }
+
+    /// Cumulative counters (snapshot at step boundaries for per-step deltas).
+    pub fn stats(&self) -> IoStats {
+        self.stats
+    }
+
+    /// Charge synchronous I/O done outside the pipeline (the engine's own
+    /// blocking loads) to the stall clock, keeping depth-0 and depth-K runs
+    /// comparable.
+    pub fn note_sync_stall(&mut self, d: Duration) {
+        self.stats.stall_seconds += d.as_secs_f64();
+    }
+
+    /// Store a checkpoint. Depth 0: synchronous. Otherwise write-behind on
+    /// the `ssd-write` lane with completion tracking, so the engine returns
+    /// to compute immediately and `take_ckpt` only waits if this write is
+    /// still in flight.
+    pub fn put_ckpt(
+        &mut self,
+        ilc: &Arc<InterLayerCoordinator>,
+        key: &str,
+        t: HostTensor,
+    ) -> Result<()> {
+        if self.ex.is_none() {
+            return timed(&mut self.stats, || ilc.put(key, t));
+        }
+        // serialize with any previous in-flight write to the same key
+        let deps: Vec<OpId> = self.pending_writes.get(key).copied().into_iter().collect();
+        let ilc2 = Arc::clone(ilc);
+        let key2 = key.to_string();
+        let errs = Arc::clone(&self.write_errors);
+        let id = self.ex.as_mut().unwrap().submit_on(LANE_SSD_WRITE, &deps, move || {
+            if let Err(e) = ilc2.put(&key2, t) {
+                errs.lock().unwrap().push(format!("ckpt write '{key2}': {e}"));
+            }
+        });
+        self.pending_writes.insert(key.to_string(), id);
+        Ok(())
+    }
+
+    /// Issue the checkpoint read for a *future* visit on the `ssd-read`
+    /// lane. No-op at depth 0 or when already in flight. The read depends on
+    /// the key's pending write-behind, if any.
+    #[allow(clippy::map_entry)] // the insert needs &mut self.ex in between
+    pub fn prefetch_take(&mut self, ilc: &Arc<InterLayerCoordinator>, key: &str) {
+        if self.ex.is_none() || self.pending_takes.contains_key(key) {
+            return;
+        }
+        let deps: Vec<OpId> = self.pending_writes.get(key).copied().into_iter().collect();
+        let slot: Slot<HostTensor> = Arc::new(Mutex::new(None));
+        let s2 = Arc::clone(&slot);
+        let ilc2 = Arc::clone(ilc);
+        let key2 = key.to_string();
+        let id = self.ex.as_mut().unwrap().submit_on(LANE_SSD_READ, &deps, move || {
+            let r = ilc2.take(&key2).map_err(|e| e.to_string());
+            *s2.lock().unwrap() = Some(r);
+        });
+        self.pending_takes.insert(key.to_string(), (id, slot));
+    }
+
+    /// Fetch (and remove) a checkpoint. Prefetched: wait only if the read is
+    /// still in flight (a *hit*). Not prefetched: wait out any write-behind
+    /// for the key, then read synchronously (a *miss* in async mode).
+    pub fn take_ckpt(
+        &mut self,
+        ilc: &Arc<InterLayerCoordinator>,
+        key: &str,
+    ) -> Result<HostTensor> {
+        if let Some((id, slot)) = self.pending_takes.remove(key) {
+            self.pending_writes.remove(key); // the read already waited on it
+            let ex = self.ex.as_ref().expect("prefetched take implies async mode");
+            timed(&mut self.stats, || ex.try_wait(id))
+                .map_err(|m| anyhow!("ckpt prefetch lane op panicked: {m}"))?;
+            self.stats.prefetch_hits += 1;
+            let res = slot
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow!("ckpt prefetch '{key}' finished without a result"))?;
+            return res.map_err(|e| anyhow!("ckpt prefetch '{key}': {e}"));
+        }
+        if let Some(id) = self.pending_writes.remove(key) {
+            let ex = self.ex.as_ref().expect("write-behind implies async mode");
+            timed(&mut self.stats, || ex.try_wait(id))
+                .map_err(|m| anyhow!("ckpt write-behind lane op panicked: {m}"))?;
+        }
+        if self.is_async() {
+            self.stats.prefetch_misses += 1;
+        }
+        self.check_write_errors()?;
+        timed(&mut self.stats, || ilc.take(key))
+    }
+
+    /// Issue a *future* visit's parameter load on the `param-upload` lane:
+    /// wait for the layer's pending optimizer updates (forward passes only —
+    /// the Fig. 8 "update layer i before its forward" dependency), then
+    /// snapshot its tensors for upload. No-op at depth 0 / already in flight.
+    #[allow(clippy::map_entry)] // the insert needs &mut self.ex in between
+    pub fn prefetch_params(
+        &mut self,
+        opt: &Arc<OptimizerStepCoordinator>,
+        layer: usize,
+        params: &Arc<Mutex<Vec<HostTensor>>>,
+        wait_updates: bool,
+    ) {
+        if self.ex.is_none() || self.pending_params.contains_key(&layer) {
+            return;
+        }
+        let slot: Slot<Vec<HostTensor>> = Arc::new(Mutex::new(None));
+        let s2 = Arc::clone(&slot);
+        let opt2 = Arc::clone(opt);
+        let p2 = Arc::clone(params);
+        let id = self.ex.as_mut().unwrap().submit_on(LANE_PARAM_UPLOAD, &[], move || {
+            if wait_updates {
+                opt2.wait_layer(layer); // params fully updated before use
+            }
+            let snap = p2.lock().unwrap().clone();
+            *s2.lock().unwrap() = Some(Ok(snap));
+        });
+        self.pending_params.insert(layer, (id, slot));
+    }
+
+    /// Claim a prefetched parameter snapshot for `layer`. `Ok(None)` means
+    /// no prefetch is in flight (a miss in async mode): the caller loads
+    /// synchronously.
+    pub fn take_params(&mut self, layer: usize) -> Result<Option<Vec<HostTensor>>> {
+        let Some((id, slot)) = self.pending_params.remove(&layer) else {
+            if self.is_async() {
+                self.stats.prefetch_misses += 1;
+            }
+            return Ok(None);
+        };
+        let ex = self.ex.as_ref().expect("prefetched params imply async mode");
+        timed(&mut self.stats, || ex.try_wait(id))
+            .map_err(|m| anyhow!("param prefetch lane op panicked: {m}"))?;
+        self.stats.prefetch_hits += 1;
+        let res = slot
+            .lock()
+            .unwrap()
+            .take()
+            .ok_or_else(|| anyhow!("param prefetch l{layer} finished without a result"))?;
+        let snap = res.map_err(|e| anyhow!("param prefetch l{layer}: {e}"))?;
+        Ok(Some(snap))
+    }
+
+    /// Pass boundary: discard stale parameter prefetches (the forward and
+    /// backward passes have different wait-for-update semantics). Normally a
+    /// no-op — every in-pass prefetch is consumed by its layer transition.
+    pub fn begin_pass(&mut self) -> Result<()> {
+        let stale: Vec<usize> = self.pending_params.keys().copied().collect();
+        for l in stale {
+            if let Some((id, _slot)) = self.pending_params.remove(&l) {
+                if let Some(ex) = self.ex.as_ref() {
+                    ex.try_wait(id)
+                        .map_err(|m| anyhow!("stale param prefetch lane op panicked: {m}"))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Step boundary: wait out all in-flight lane work and report any
+    /// write-behind failure or lane panic as an error. After `flush` the SSD
+    /// byte counters are step-accurate again.
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(ex) = self.ex.as_ref() {
+            timed(&mut self.stats, || ex.try_wait_all())
+                .map_err(|m| anyhow!("i/o lane op panicked: {m}"))?;
+        }
+        self.pending_writes.clear();
+        self.pending_takes.clear();
+        self.pending_params.clear();
+        self.check_write_errors()
+    }
+
+    fn check_write_errors(&self) -> Result<()> {
+        let mut errs = self.write_errors.lock().unwrap();
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            let msg = errs.join("; ");
+            errs.clear();
+            Err(anyhow!("checkpoint write-behind failed: {msg}"))
+        }
+    }
+
+    /// Test hook: make a lane op panic, to exercise the error boundary.
+    #[cfg(test)]
+    fn inject_panic_for_test(&mut self, msg: &'static str) {
+        if let Some(ex) = self.ex.as_mut() {
+            ex.submit_on(LANE_SSD_WRITE, &[], move || panic!("{msg}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::SsdStorage;
+
+    fn ssd_ilc(tag: &str, read_bps: f64, write_bps: f64) -> Arc<InterLayerCoordinator> {
+        let path = std::env::temp_dir().join(format!("gs_io_test_{tag}_{}", std::process::id()));
+        let ssd = Arc::new(SsdStorage::create(path, read_bps, write_bps).unwrap());
+        Arc::new(InterLayerCoordinator::new(ssd, true))
+    }
+
+    fn tensor(seed: usize, n: usize) -> HostTensor {
+        HostTensor::from_vec(&[n], (0..n).map(|i| (i + seed) as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn depth_zero_is_synchronous_passthrough() {
+        let ilc = ssd_ilc("sync", f64::INFINITY, f64::INFINITY);
+        let mut io = IoPipeline::new(0);
+        assert!(!io.is_async());
+        let t = tensor(7, 64);
+        io.put_ckpt(&ilc, "k", t.clone()).unwrap();
+        // synchronous: the checkpoint is live immediately
+        assert_eq!(ilc.live_count(), 1);
+        let back = io.take_ckpt(&ilc, "k").unwrap();
+        assert_eq!(back, t);
+        let s = io.stats();
+        assert_eq!((s.prefetch_hits, s.prefetch_misses), (0, 0));
+        io.flush().unwrap();
+    }
+
+    #[test]
+    fn write_behind_then_prefetched_take_roundtrips() {
+        let ilc = ssd_ilc("wb", f64::INFINITY, f64::INFINITY);
+        let mut io = IoPipeline::new(2);
+        let tensors: Vec<HostTensor> = (0..6).map(|i| tensor(i, 128)).collect();
+        for (i, t) in tensors.iter().enumerate() {
+            io.put_ckpt(&ilc, &format!("k{i}"), t.clone()).unwrap();
+        }
+        // prefetch half, take all — prefetched keys count as hits
+        for i in 0..3 {
+            io.prefetch_take(&ilc, &format!("k{i}"));
+        }
+        for (i, t) in tensors.iter().enumerate() {
+            let back = io.take_ckpt(&ilc, &format!("k{i}")).unwrap();
+            assert_eq!(&back, t, "k{i}");
+        }
+        let s = io.stats();
+        assert_eq!(s.prefetch_hits, 3);
+        assert_eq!(s.prefetch_misses, 3);
+        io.flush().unwrap();
+        assert_eq!(ilc.live_count(), 0);
+    }
+
+    #[test]
+    fn take_waits_for_in_flight_write() {
+        // slow writes: take must block on the write-behind, not read garbage
+        let ilc = ssd_ilc("wait", f64::INFINITY, 10_000_000.0);
+        let mut io = IoPipeline::new(1);
+        let t = tensor(3, 100_000); // 400 KB -> 40 ms at 10 MB/s
+        io.put_ckpt(&ilc, "slow", t.clone()).unwrap();
+        let back = io.take_ckpt(&ilc, "slow").unwrap();
+        assert_eq!(back, t);
+        io.flush().unwrap();
+    }
+
+    #[test]
+    fn missing_key_is_error_not_panic() {
+        let ilc = ssd_ilc("miss", f64::INFINITY, f64::INFINITY);
+        let mut io = IoPipeline::new(2);
+        assert!(io.take_ckpt(&ilc, "nope").is_err());
+        io.prefetch_take(&ilc, "ghost");
+        assert!(io.take_ckpt(&ilc, "ghost").is_err());
+        io.flush().unwrap();
+    }
+
+    /// Regression (engine boundary): a panicked lane op becomes an `anyhow`
+    /// error from `flush`, not an unwind or a hang on the compute thread.
+    #[test]
+    fn lane_panic_surfaces_as_anyhow_error() {
+        let ilc = ssd_ilc("panic", f64::INFINITY, f64::INFINITY);
+        let mut io = IoPipeline::new(1);
+        io.put_ckpt(&ilc, "fine", tensor(1, 16)).unwrap();
+        io.inject_panic_for_test("lane exploded");
+        let err = io.flush().unwrap_err().to_string();
+        assert!(err.contains("lane exploded"), "{err}");
+    }
+
+    /// The headline property: under a throttled SSD, depth-K prefetch +
+    /// write-behind strictly reduces the compute thread's I/O stall versus
+    /// the synchronous depth-0 path, with every take a prefetch hit.
+    #[test]
+    fn prefetch_reduces_stall_under_throttle() {
+        let n = 50_000; // 200 KB/tensor -> 40 ms per transfer at 5 MB/s
+        let keys = 5usize;
+        let compute = std::time::Duration::from_millis(50);
+
+        let run = |depth: usize, tag: &str| -> IoStats {
+            let ilc = ssd_ilc(tag, 5_000_000.0, 5_000_000.0);
+            let mut io = IoPipeline::new(depth);
+            for i in 0..keys {
+                io.put_ckpt(&ilc, &format!("k{i}"), tensor(i, n)).unwrap();
+                std::thread::sleep(compute); // the GPU work writes overlap
+            }
+            for i in 0..keys {
+                io.prefetch_take(&ilc, &format!("k{i}"));
+            }
+            for i in 0..keys {
+                std::thread::sleep(compute); // the GPU work reads overlap
+                io.take_ckpt(&ilc, &format!("k{i}")).unwrap();
+            }
+            io.flush().unwrap();
+            io.stats()
+        };
+
+        let sync = run(0, "stall0");
+        let asyn = run(3, "stall3");
+        assert_eq!(asyn.prefetch_hits, keys as u64);
+        assert!(
+            asyn.stall_seconds < 0.5 * sync.stall_seconds,
+            "async stall {:.3}s vs sync {:.3}s",
+            asyn.stall_seconds,
+            sync.stall_seconds
+        );
+    }
+}

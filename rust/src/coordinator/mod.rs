@@ -27,10 +27,21 @@
 //! rounding (property-tested), so Figure 13's loss-equivalence experiment
 //! runs on this exact code. [`vertical::VerticalScheduler`] and
 //! [`horizontal::HorizontalScheduler`] remain as thin named wrappers.
+//!
+//! The engine's data path is asynchronous: [`io::IoPipeline`] runs
+//! schedule-lookahead parameter prefetch and checkpoint write-behind on
+//! dedicated `ssd-read` / `ssd-write` / `param-upload` lanes
+//! ([`crate::exec::LaneExecutor`]), overlapping SSD traffic with compute the
+//! way Figs. 6–8 overlap pipeline rows. The lookahead depth is
+//! [`state::TrainerConfig::io_depth`] (`--io-depth` on the CLI); depth 0
+//! reproduces the synchronous engine bit-for-bit, and
+//! [`engine::StepStats`] reports prefetch hits/misses and the compute
+//! thread's I/O stall time so the overlap win is directly measurable.
 
 pub mod ckpt;
 pub mod engine;
 pub mod horizontal;
+pub mod io;
 pub mod opt;
 pub mod schedule;
 pub mod state;
@@ -39,6 +50,7 @@ pub mod vertical;
 pub use ckpt::InterLayerCoordinator;
 pub use engine::{StepEngine, StepStats};
 pub use horizontal::HorizontalScheduler;
+pub use io::{IoPipeline, IoStats};
 pub use opt::OptimizerStepCoordinator;
 pub use schedule::{
     ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,

@@ -28,6 +28,13 @@ pub struct TrainerConfig {
     pub use_hlo_adam: bool,
     /// Overlap optimizer steps with GPU compute on a worker thread.
     pub overlap: bool,
+    /// Schedule-lookahead depth K of the async I/O pipeline
+    /// (`coordinator::io::IoPipeline`): the engine issues the next K visits'
+    /// parameter loads and checkpoint reads while the current visit
+    /// computes, and checkpoint stores become write-behind. 0 = fully
+    /// synchronous I/O on the compute thread (bit-identical to the
+    /// pre-pipeline engine).
+    pub io_depth: usize,
     pub adam: AdamParams,
     /// Global gradient-norm clip threshold (speculative; f64::INFINITY off).
     pub clip_norm: f64,
@@ -47,6 +54,7 @@ impl Default for TrainerConfig {
             ckpt_on_ssd: false,
             use_hlo_adam: false,
             overlap: true,
+            io_depth: 2,
             adam: AdamParams { lr: 3e-4, weight_decay: 0.01, ..Default::default() },
             clip_norm: f64::INFINITY,
             ssd_path: std::env::temp_dir()

@@ -25,6 +25,10 @@ struct Pending {
     remaining_deps: usize,
     f: Option<OpFn>,
     dependents: Vec<OpId>,
+    /// A dependency panicked: this op's closure must never run (it would
+    /// observe broken state), but the op still *completes* so waiters wake
+    /// instead of deadlocking.
+    poisoned: bool,
 }
 
 #[derive(Default)]
@@ -131,6 +135,7 @@ impl LaneExecutor {
             remaining_deps: remaining,
             f: Some(Box::new(f)),
             dependents: Vec::new(),
+            poisoned: false,
         };
         if remaining == 0 {
             let f = pending.f.take().unwrap();
@@ -155,24 +160,52 @@ impl LaneExecutor {
 
     /// Block until every submitted op has completed. Panics if any op panicked.
     pub fn wait_all(&self) {
-        let mut st = self.shared.state.lock().unwrap();
-        while st.completed < st.submitted && st.panicked.is_none() {
-            st = self.shared.done_cv.wait(st).unwrap();
-        }
-        if let Some(msg) = st.panicked.take() {
+        if let Err(msg) = self.try_wait_all() {
             panic!("lane op panicked: {msg}");
         }
     }
 
     /// Block until a specific op completes.
     pub fn wait(&self, id: OpId) {
+        if let Err(msg) = self.try_wait(id) {
+            panic!("lane op panicked: {msg}");
+        }
+    }
+
+    /// Block until every submitted op has completed; `Err(message)` instead
+    /// of panicking when any op panicked. The panic message is *sticky*: once
+    /// an op has panicked the executor is poisoned and every subsequent wait
+    /// reports it, so callers can surface the failure as a proper error at
+    /// their boundary (the engine wraps it in `anyhow`) instead of unwinding.
+    pub fn try_wait_all(&self) -> Result<(), String> {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.completed < st.submitted && st.panicked.is_none() {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        match &st.panicked {
+            Some(msg) => Err(msg.clone()),
+            None => Ok(()),
+        }
+    }
+
+    /// Block until a specific op completes; `Err(message)` when the op — or
+    /// any op, the poison is executor-wide — panicked. An op whose dependency
+    /// panicked never runs but still completes (poisoned), so this returns
+    /// instead of deadlocking.
+    pub fn try_wait(&self, id: OpId) -> Result<(), String> {
         let mut st = self.shared.state.lock().unwrap();
         while st.pending.contains_key(&id) && st.panicked.is_none() {
             st = self.shared.done_cv.wait(st).unwrap();
         }
-        if let Some(msg) = st.panicked.take() {
-            panic!("lane op panicked: {msg}");
+        match &st.panicked {
+            Some(msg) => Err(msg.clone()),
+            None => Ok(()),
         }
+    }
+
+    /// The sticky panic message, if any op has panicked.
+    pub fn panicked(&self) -> Option<String> {
+        self.shared.state.lock().unwrap().panicked.clone()
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -185,17 +218,32 @@ impl Shared {
         let mut ready: Vec<(usize, OpId, OpFn)> = Vec::new();
         {
             let mut st = self.state.lock().unwrap();
+            let failed = panic.is_some();
             if let Some(msg) = panic {
                 st.panicked.get_or_insert(msg);
             }
-            let p = st.pending.remove(&id).expect("completing unknown op");
-            st.completed += 1;
-            for dep_id in p.dependents {
-                if let Some(dp) = st.pending.get_mut(&dep_id) {
-                    dp.remaining_deps -= 1;
-                    if dp.remaining_deps == 0 {
-                        let f = dp.f.take().expect("ready op has fn");
-                        ready.push((dp.lane, dep_id, f));
+            // Worklist: the op itself plus any poisoned dependents that
+            // become ready — those complete immediately (their closures are
+            // dropped, never run) so waiters wake instead of deadlocking.
+            let mut work: Vec<(OpId, bool)> = vec![(id, failed)];
+            while let Some((cur, cur_failed)) = work.pop() {
+                let p = st.pending.remove(&cur).expect("completing unknown op");
+                st.completed += 1;
+                for dep_id in p.dependents {
+                    if let Some(dp) = st.pending.get_mut(&dep_id) {
+                        dp.remaining_deps -= 1;
+                        if cur_failed {
+                            dp.poisoned = true;
+                        }
+                        if dp.remaining_deps == 0 {
+                            if dp.poisoned {
+                                dp.f = None; // never runs
+                                work.push((dep_id, true));
+                            } else {
+                                let f = dp.f.take().expect("ready op has fn");
+                                ready.push((dp.lane, dep_id, f));
+                            }
+                        }
                     }
                 }
             }
@@ -325,6 +373,64 @@ mod tests {
         });
         ex.wait_all();
         assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    /// Regression: a panicked lane op used to unwind waiters (and a panicked
+    /// dependency could leave a dependent waiter hanging). Now the panic is
+    /// sticky, dependents are poisoned (completed without running), and the
+    /// `try_*` APIs surface the failure as an error.
+    #[test]
+    fn panicked_op_fails_waiters_and_poisons_dependents() {
+        let mut ex = LaneExecutor::new(&["a", "b"]);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = Arc::clone(&ran);
+        let bad = ex.submit_on("a", &[], || panic!("kaboom"));
+        let child = ex.submit_on("b", &[bad], move || {
+            r.store(1, Ordering::SeqCst);
+        });
+        // The dependent completes (poisoned) instead of hanging, and the
+        // wait reports the failure as an error rather than panicking.
+        assert!(ex.try_wait(child).unwrap_err().contains("kaboom"));
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "poisoned op must not run");
+        // Sticky: every later wait sees the same poisoned executor.
+        assert!(ex.try_wait_all().is_err());
+        assert!(ex.try_wait(bad).is_err());
+        assert_eq!(ex.panicked().unwrap(), "kaboom");
+    }
+
+    /// A chain behind a panicked root is poisoned transitively; unrelated
+    /// ops submitted before the panic still ran to completion.
+    #[test]
+    fn poison_cascades_through_chains() {
+        let mut ex = LaneExecutor::new(&["a", "b"]);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c1 = Arc::clone(&count);
+        let ok = ex.submit_on("b", &[], move || {
+            c1.fetch_add(1, Ordering::SeqCst);
+        });
+        // the root panics only after `ok` completed, so the count below
+        // is deterministic
+        let bad = ex.submit_on("a", &[ok], || panic!("root failure"));
+        let mut prev = bad;
+        for _ in 0..4 {
+            let c = Arc::clone(&count);
+            prev = ex.submit_on("b", &[prev], move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert!(ex.try_wait(prev).is_err());
+        assert!(ex.try_wait(ok).is_err(), "sticky poison applies to all waits");
+        // only the healthy op ran; the poisoned chain never executed
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn try_wait_is_ok_on_healthy_executor() {
+        let mut ex = LaneExecutor::new(&["a"]);
+        let op = ex.submit_on("a", &[], || {});
+        assert!(ex.try_wait(op).is_ok());
+        assert!(ex.try_wait_all().is_ok());
+        assert!(ex.panicked().is_none());
     }
 
     #[test]

@@ -20,8 +20,8 @@
 //! | module | role |
 //! |---|---|
 //! | [`util`] | PRNG, stats, bf16, TSV tables, CLI parsing, bench + property-test harnesses |
-//! | [`exec`] | thread pool and pipelined stage executor (the asyncio-pipeline substrate) |
-//! | [`memory`] | GPU/CPU tier accounting, file-backed throttled SSD, pinned-buffer pool |
+//! | [`exec`] | thread pool and dependency-aware lane executor (the asyncio-pipeline substrate; lane panics surface as errors, not deadlocks) |
+//! | [`memory`] | GPU/CPU tier accounting, file-backed throttled SSD (positioned I/O, concurrent read/write lanes, atomic layout transitions), pinned-buffer pool |
 //! | [`modelcfg`] | Table 2 model zoo and per-layer size/FLOP arithmetic |
 //! | [`machine`] | Table 1 machine specs (bandwidths, capacities, compute rates) |
 //! | [`traffic`] | analytic data-movement model: horizontal vs vertical vs single-pass |
@@ -31,7 +31,7 @@
 //! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake / chunked) |
 //! | [`runtime`] | PJRT client wrapper, artifact manifests, executable cache |
 //! | [`optimizer`] | mixed-precision Adam, gradient accumulation, delay-α split, clipping |
-//! | [`coordinator`] | the three coordinators + the schedule-agnostic [`coordinator::StepEngine`] and pluggable [`coordinator::Schedule`] policies (vertical, horizontal, `chunked:G`) |
+//! | [`coordinator`] | the three coordinators + the schedule-agnostic [`coordinator::StepEngine`], pluggable [`coordinator::Schedule`] policies (vertical, horizontal, `chunked:G`), and the async [`coordinator::io::IoPipeline`] (`--io-depth K` schedule-lookahead prefetch + checkpoint write-behind; K=0 ≡ synchronous) |
 //! | [`trainer`] | end-to-end training loop; [`trainer::ScheduleKind`] names schedules uniformly across runtime, simulator, and traffic model |
 
 pub mod coordinator;

@@ -17,7 +17,7 @@ use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::SystemParams;
 use greedysnake::roofline::Roofline;
 use greedysnake::runtime::Manifest;
-use greedysnake::sim::{simulate, Schedule};
+use greedysnake::sim::{simulate_io, Schedule};
 use greedysnake::trainer::{train, ScheduleKind};
 use greedysnake::util::cli::Cli;
 use greedysnake::util::table::Table;
@@ -29,6 +29,17 @@ fn model_by_name(name: &str) -> Result<ModelCfg> {
         "175b" | "gpt-175b" => GPT_175B,
         other => bail!("unknown model '{other}' (30b|65b|175b)"),
     })
+}
+
+/// `--io-depth` grammar for `simulate`: a lookahead K, or `unbounded`/`inf`
+/// for the sim's historical infinite-prefetch assumption.
+fn parse_io_depth(s: &str) -> Result<usize> {
+    match s {
+        "unbounded" | "inf" => Ok(usize::MAX),
+        _ => s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --io-depth '{s}' (K or 'unbounded'): {e}")),
+    }
 }
 
 fn machine_by_name(name: &str) -> Result<greedysnake::machine::Machine> {
@@ -75,6 +86,13 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         .opt("seed", "rng seed", Some("42"))
         .opt("ssd-read-gbps", "simulated SSD read bandwidth (GB/s; 0 = unthrottled)", Some("0"))
         .opt("ssd-write-gbps", "simulated SSD write bandwidth (GB/s; 0 = unthrottled)", Some("0"))
+        .opt(
+            "io-depth",
+            "async I/O lookahead K: prefetch the next K visits' parameter loads and \
+             checkpoint reads, write checkpoints behind (0 = synchronous I/O, \
+             bit-identical to the pre-pipeline engine)",
+            Some("2"),
+        )
         .opt("log-every", "print every k steps", Some("1"))
         .flag("opt-on-cpu", "keep optimizer states CPU-resident (default: SSD)")
         .flag("ckpt-on-ssd", "spill activation checkpoints to SSD")
@@ -92,6 +110,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         ckpt_on_ssd: cli.has_flag("ckpt-on-ssd"),
         use_hlo_adam: cli.has_flag("hlo-adam"),
         overlap: !cli.has_flag("no-overlap"),
+        io_depth: cli.get_parsed("io-depth")?,
         adam: greedysnake::optimizer::AdamParams {
             lr: cli.get_parsed("lr")?,
             weight_decay: 0.01,
@@ -107,19 +126,24 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps}",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={}",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
+        cfg.io_depth,
     );
     let log = train(manifest, cfg, kind, steps, m, cli.get_parsed("log-every")?)?;
     let tokens_per_step = m * shape.micro_batch * shape.seq_len;
     println!(
-        "done: final loss {:.4}, {:.0} tokens/s, ssd r/w {}/{}",
+        "done: final loss {:.4}, {:.0} tokens/s, ssd r/w {}/{}, \
+         prefetch hit/miss {}/{}, i/o stall {:.2}s",
         log.final_loss(),
         log.tokens_per_s(tokens_per_step),
         greedysnake::util::stats::fmt_bytes(log.ssd_read as f64),
         greedysnake::util::stats::fmt_bytes(log.ssd_written as f64),
+        log.prefetch_hits,
+        log.prefetch_misses,
+        log.io_stall_s,
     );
     Ok(())
 }
@@ -137,6 +161,13 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
             Some("greedysnake"),
         )
         .opt("alpha", "delay ratio (greedysnake)", Some("0.3"))
+        .opt(
+            "io-depth",
+            "mirror of the runtime's --io-depth lookahead in the event sim: \
+             a parameter load may run at most K visits ahead of compute \
+             (0 = synchronous loads; 'unbounded' = the pre-pipeline sim)",
+            Some("unbounded"),
+        )
         .parse_from(args)?;
     let sp = SystemParams::new(
         machine_by_name(&cli.get("machine").unwrap())?.with_gpus(cli.get_parsed("gpus")?),
@@ -164,7 +195,8 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
             kind.sim_schedule(alpha, x)
         }
     };
-    let r = simulate(&sp, m, schedule);
+    let io_depth = parse_io_depth(&cli.get("io-depth").unwrap())?;
+    let r = simulate_io(&sp, m, schedule, io_depth);
     println!(
         "{} {} x{} M={m}: {:.1}s/iter, {:.0} tokens/s, {:.1} TFLOPs/GPU, GPU util {:.0}%",
         sp.model.name,

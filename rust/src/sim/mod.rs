@@ -12,4 +12,4 @@ pub mod engine;
 pub mod schedules;
 
 pub use engine::{DiscreteSim, Resource, SimOp};
-pub use schedules::{simulate, Schedule, SimResult};
+pub use schedules::{simulate, simulate_io, Schedule, SimResult};

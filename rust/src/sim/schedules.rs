@@ -64,11 +64,21 @@ pub struct SimResult {
     pub gpu_util: f64,
 }
 
-/// Simulate `m` micro-batches per iteration of `schedule` on `sp`.
+/// Simulate `m` micro-batches per iteration of `schedule` on `sp`, with the
+/// sim's historical unbounded-prefetch assumption (loads may run arbitrarily
+/// far ahead of compute).
 pub fn simulate(sp: &SystemParams, m: u64, schedule: Schedule) -> SimResult {
+    simulate_io(sp, m, schedule, usize::MAX)
+}
+
+/// Simulate with the runtime's `--io-depth` lookahead mirrored: a parameter
+/// load may start at most `io_depth` visits ahead of compute (0 = fully
+/// synchronous loads, `usize::MAX` = unbounded), so the simulator and the
+/// real engine predict the same overlap.
+pub fn simulate_io(sp: &SystemParams, m: u64, schedule: Schedule, io_depth: usize) -> SimResult {
     let iters = 3;
-    let (makespan_all, gpu_busy) = build_and_run(sp, m, schedule, iters);
-    let (makespan_warm, _) = build_and_run(sp, m, schedule, iters - 1);
+    let (makespan_all, gpu_busy) = build_and_run(sp, m, schedule, iters, io_depth);
+    let (makespan_warm, _) = build_and_run(sp, m, schedule, iters - 1, io_depth);
     let t_iter = (makespan_all - makespan_warm).max(1e-9);
 
     let (eff_batch, flops) = match schedule {
@@ -90,31 +100,94 @@ pub fn simulate(sp: &SystemParams, m: u64, schedule: Schedule) -> SimResult {
     }
 }
 
-fn build_and_run(sp: &SystemParams, m: u64, schedule: Schedule, iters: u32) -> (f64, f64) {
+fn build_and_run(
+    sp: &SystemParams,
+    m: u64,
+    schedule: Schedule,
+    iters: u32,
+    io_depth: usize,
+) -> (f64, f64) {
     let mut sim = DiscreteSim::new(N_RESOURCES);
+    let mut gate = IoGate::new(io_depth);
     match schedule {
         Schedule::GreedySnake { alpha, x } => {
-            build_vertical(&mut sim, sp, m, alpha, x, iters)
+            build_vertical(&mut sim, sp, m, alpha, x, iters, &mut gate)
         }
         Schedule::ZeroInfinity => {
             let pl = sp.zero_infinity_placement(m);
-            build_horizontal(&mut sim, sp, m, pl, iters)
+            build_horizontal(&mut sim, sp, m, pl, iters, &mut gate)
         }
         Schedule::TeraIo => {
             // lifetime-optimal placement: grid-searched via the perfmodel
             let pl = best_horizontal_placement(sp, m);
-            build_horizontal(&mut sim, sp, m, pl, iters)
+            build_horizontal(&mut sim, sp, m, pl, iters, &mut gate)
         }
         Schedule::Ratel => {
             let pl = sp.zero_infinity_placement(1);
-            build_ratel(&mut sim, sp, pl, iters)
+            build_ratel(&mut sim, sp, pl, iters, &mut gate)
         }
         Schedule::ChunkedVertical { group, x } => {
-            build_chunked(&mut sim, sp, m, group, x, iters)
+            build_chunked(&mut sim, sp, m, group, x, iters, &mut gate)
         }
     }
     let stats = sim.run();
     (stats.makespan, stats.busy[GPU.0])
+}
+
+/// The runtime IoPipeline's schedule-lookahead window, mirrored onto the
+/// event simulator: parameter load *t* may not start before the compute of
+/// load *t − K − 1* has finished. `K = 0` forces fully synchronous loads
+/// (each waits for the previous load's compute), `usize::MAX` disables the
+/// gate entirely — the unbounded prefetch the sim assumed before the
+/// pipeline existed (no window *and* no barriers, preserving the historic
+/// `simulate` behavior). For finite K, [`IoGate::barrier`] marks
+/// pass/iteration boundaries: the runtime's `lookahead` only scans the
+/// current pass's visit order and `flush` retires all lane I/O at the end of
+/// every step, so no load may start before the previous pass's compute has
+/// finished — without the barrier the sim would over-predict overlap at
+/// exactly those boundaries.
+struct IoGate {
+    depth: usize,
+    /// Last compute op of each load issued so far, in load order.
+    computes: Vec<usize>,
+    /// Last compute op before the most recent pass/step boundary.
+    floor: Option<usize>,
+}
+
+impl IoGate {
+    fn new(depth: usize) -> Self {
+        IoGate { depth, computes: Vec::new(), floor: None }
+    }
+
+    /// Dependencies gating the load about to be issued (index = loads so
+    /// far): the lookahead-window compute plus the current pass floor.
+    fn gate(&self) -> Vec<usize> {
+        if self.depth == usize::MAX {
+            return Vec::new();
+        }
+        let mut deps = Vec::new();
+        let t = self.computes.len();
+        if let Some(i) = t.checked_sub(self.depth + 1) {
+            deps.push(self.computes[i]);
+        }
+        // redundant (earlier than the window dep) for loads deep inside a
+        // pass; binding only for a pass's first K loads
+        deps.extend(self.floor);
+        deps
+    }
+
+    /// Record the last compute op that consumed the load just issued.
+    fn loaded(&mut self, compute_op: usize) {
+        self.computes.push(compute_op);
+    }
+
+    /// Mark a pass/iteration boundary: later loads may not start before the
+    /// compute issued so far (the runtime never looks ahead across a pass).
+    fn barrier(&mut self) {
+        if self.depth != usize::MAX {
+            self.floor = self.computes.last().copied();
+        }
+    }
 }
 
 fn best_horizontal_placement(sp: &SystemParams, m: u64) -> HPlacement {
@@ -158,6 +231,7 @@ fn build_vertical(
     alpha: f64,
     x: StorageRatios,
     iters: u32,
+    gate: &mut IoGate,
 ) {
     let n = sp.model.n_layers as usize;
     let mm = m as usize;
@@ -195,7 +269,9 @@ fn build_vertical(
                 param_deps.push(ab); // (1-α) share updated during prev bwd
             }
             // Parameter prefetch: SSD→CPU then CPU→GPU (micro-batch chunks
-            // merged into one transfer of equal total size).
+            // merged into one transfer of equal total size), gated by the
+            // lookahead window.
+            param_deps.extend(gate.gate());
             let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &param_deps);
             let ph2d = sim.op(H2D, p / pcie, &[prd]);
 
@@ -217,6 +293,7 @@ fn build_vertical(
                 let dc = sim.op(D2H, c / pcie, &[f]);
                 d2h_ckpt[i].push(dc);
             }
+            gate.loaded(*fwd[i].last().expect("m >= 1"));
             // SSD share of this layer's checkpoints, written layer-granular
             // in the next stage (overlaps layer i+1's forward).
             if x.ckpt_cpu < 1.0 {
@@ -227,6 +304,7 @@ fn build_vertical(
         }
 
         // ---------------- backward + (1-α) optimizer (Fig. 7) -------------
+        gate.barrier(); // runtime lookahead never crosses the pass boundary
         let mut bwd: Vec<Vec<usize>> = vec![Vec::new(); n];
         let mut d2h_gout: Vec<Vec<usize>> = vec![Vec::new(); n];
         let mut new_adam_b: Vec<Option<usize>> = vec![None; n];
@@ -234,7 +312,8 @@ fn build_vertical(
 
         for i in (0..n).rev() {
             // recompute needs the layer parameters again
-            let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &[]);
+            let pdeps: Vec<usize> = gate.gate();
+            let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
             let ph2d = sim.op(H2D, p / pcie, &[prd]);
             // input checkpoints: SSD share arrives one stage early
             let mut ckpt_deps: Vec<usize> = Vec::new();
@@ -266,6 +345,7 @@ fn build_vertical(
                 let dg = sim.op(D2H, c / pcie, &[b]);
                 d2h_gout[i].push(dg);
             }
+            gate.loaded(*bwd[i].last().expect("m >= 1"));
             // fully-accumulated parameter gradients leave the GPU once
             let goff = sim.op(D2H, g / pcie, &bwd[i]);
             new_grad_off[i] = Some(goff);
@@ -282,6 +362,7 @@ fn build_vertical(
         }
         prev_adam_b = new_adam_b;
         prev_grad_off = new_grad_off;
+        gate.barrier(); // the runtime flushes all lane I/O at step end
     }
 }
 
@@ -295,6 +376,7 @@ fn build_horizontal(
     m: u64,
     pl: HPlacement,
     iters: u32,
+    gate: &mut IoGate,
 ) {
     let n = sp.model.n_layers as usize;
     let mm = m as usize;
@@ -314,6 +396,7 @@ fn build_horizontal(
                 if let Some(ad) = prev_iter_adam[i] {
                     pdeps.push(ad);
                 }
+                pdeps.extend(gate.gate());
                 let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
                 let ph2d = sim.op(H2D, p / pcie, &[prd]);
                 let mut deps = vec![ph2d];
@@ -322,6 +405,7 @@ fn build_horizontal(
                 }
                 let f = sim.op(GPU, sp.t_fwd_mb(), &deps);
                 last_fwd = Some(f);
+                gate.loaded(f);
                 let dc = sim.op(D2H, c / pcie, &[f]);
                 if x.ckpt_cpu < 1.0 {
                     sim.op(SSD_W, (1.0 - x.ckpt_cpu) * c / w, &[dc]);
@@ -331,11 +415,13 @@ fn build_horizontal(
         }
 
         // -------- backward + optimizer ------------------------------------
+        gate.barrier(); // runtime lookahead never crosses the pass boundary
         let mut grad_ready: Vec<usize> = vec![0; n]; // last accumulation op
         let mut last_bwd: Option<usize> = last_fwd;
         for j in 0..mm {
             for i in (0..n).rev() {
-                let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &[]);
+                let pdeps: Vec<usize> = gate.gate();
+                let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
                 let ph2d = sim.op(H2D, p / pcie, &[prd]);
                 // checkpoint back in (SSD share first)
                 let mut cdeps = vec![d2h_ckpt[j][i]];
@@ -362,6 +448,7 @@ fn build_horizontal(
                 }
                 let b = sim.op(GPU, sp.t_bwd_mb(), &deps);
                 last_bwd = Some(b);
+                gate.loaded(b);
                 let goff = sim.op(D2H, g / 2.0 / pcie, &[b]);
                 grad_ready[i] = if pl.grad_cpu < 1.0 {
                     sim.op(SSD_W, (1.0 - pl.grad_cpu) * g / w, &[goff])
@@ -381,6 +468,7 @@ fn build_horizontal(
                 }
             }
         }
+        gate.barrier(); // the runtime flushes all lane I/O at step end
     }
 }
 
@@ -396,6 +484,7 @@ fn build_horizontal(
 /// transfers are modeled chunk-granular. No delayed-α split (the runtime
 /// supports it for chunked schedules, but the simulator models the α = 0
 /// configuration the equivalence experiments use).
+#[allow(clippy::too_many_arguments)]
 fn build_chunked(
     sim: &mut DiscreteSim,
     sp: &SystemParams,
@@ -403,6 +492,7 @@ fn build_chunked(
     group: u64,
     x: StorageRatios,
     iters: u32,
+    gate: &mut IoGate,
 ) {
     let n = sp.model.n_layers as usize;
     let g_mb = group.max(1);
@@ -425,6 +515,7 @@ fn build_chunked(
                 if let Some(ad) = prev_iter_adam[i] {
                     pdeps.push(ad);
                 }
+                pdeps.extend(gate.gate());
                 let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
                 let ph2d = sim.op(H2D, p / pcie, &[prd]);
                 let mut deps = vec![ph2d];
@@ -438,6 +529,7 @@ fn build_chunked(
                 }
                 let f = sim.op(GPU, gi * sp.t_fwd_mb(), &deps);
                 last_gpu = Some(f);
+                gate.loaded(f);
                 let dc = sim.op(D2H, gi * c / pcie, &[f]);
                 d2h_ckpt[i][ci] = dc;
                 if x.ckpt_cpu < 1.0 {
@@ -448,11 +540,13 @@ fn build_chunked(
         }
 
         // -------- backward + gradient round trips + optimizer -------------
+        gate.barrier(); // runtime lookahead never crosses the pass boundary
         let mut grad_ready: Vec<Option<usize>> = vec![None; n];
         for ci in 0..k {
             let gi = chunk_size(ci);
             for i in (0..n).rev() {
-                let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &[]);
+                let pdeps: Vec<usize> = gate.gate();
+                let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
                 let ph2d = sim.op(H2D, p / pcie, &[prd]);
                 // input checkpoints back in (SSD share first)
                 let mut cdeps = vec![d2h_ckpt[i][ci]];
@@ -475,6 +569,7 @@ fn build_chunked(
                 }
                 let b = sim.op(GPU, gi * sp.t_bwd_mb(), &deps);
                 last_gpu = Some(b);
+                gate.loaded(b);
                 let goff = sim.op(D2H, g / 2.0 / pcie, &[b]);
                 grad_ready[i] = Some(goff);
                 // optimizer step for this layer after the LAST chunk
@@ -490,6 +585,7 @@ fn build_chunked(
                 }
             }
         }
+        gate.barrier(); // the runtime flushes all lane I/O at step end
     }
 }
 
@@ -497,7 +593,13 @@ fn build_chunked(
 // Ratel single-pass pipeline
 // ---------------------------------------------------------------------------
 
-fn build_ratel(sim: &mut DiscreteSim, sp: &SystemParams, pl: HPlacement, iters: u32) {
+fn build_ratel(
+    sim: &mut DiscreteSim,
+    sp: &SystemParams,
+    pl: HPlacement,
+    iters: u32,
+    gate: &mut IoGate,
+) {
     let n = sp.model.n_layers as usize;
     let x = pl.x;
     let (r, w, pcie) = rates(sp);
@@ -518,6 +620,7 @@ fn build_ratel(sim: &mut DiscreteSim, sp: &SystemParams, pl: HPlacement, iters: 
             if let Some(ad) = prev_iter_adam[i] {
                 pdeps.push(ad);
             }
+            pdeps.extend(gate.gate());
             let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
             let ph2d = sim.op(H2D, p / pcie, &[prd]);
             let mut deps = vec![ph2d];
@@ -526,14 +629,17 @@ fn build_ratel(sim: &mut DiscreteSim, sp: &SystemParams, pl: HPlacement, iters: 
             }
             let f = sim.op(GPU, t_fwd, &deps);
             last = Some(f);
+            gate.loaded(f);
             let dc = sim.op(D2H, c / pcie, &[f]);
             if x.ckpt_cpu < 1.0 {
                 sim.op(SSD_W, (1.0 - x.ckpt_cpu) * c / w, &[dc]);
             }
             d2h_ckpt[i] = dc;
         }
+        gate.barrier(); // lookahead never crosses the pass boundary
         for i in (0..n).rev() {
-            let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &[]);
+            let pdeps: Vec<usize> = gate.gate();
+            let prd = sim.op(SSD_R, (1.0 - x.param_cpu) * p / r, &pdeps);
             let ph2d = sim.op(H2D, p / pcie, &[prd]);
             let mut cdeps = vec![d2h_ckpt[i]];
             if x.ckpt_cpu < 1.0 {
@@ -547,6 +653,7 @@ fn build_ratel(sim: &mut DiscreteSim, sp: &SystemParams, pl: HPlacement, iters: 
             }
             let b = sim.op(GPU, t_bwd, &deps);
             last = Some(b);
+            gate.loaded(b);
             let goff = sim.op(D2H, g / pcie, &[b]);
             // Ratel overlaps the optimizer with the backward pass.
             let ord = sim.op(SSD_R, (1.0 - x.opt_cpu) * o / r, &[]);
@@ -554,6 +661,7 @@ fn build_ratel(sim: &mut DiscreteSim, sp: &SystemParams, pl: HPlacement, iters: 
             sim.op(SSD_W, ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p) / w, &[ad]);
             prev_iter_adam[i] = Some(ad);
         }
+        gate.barrier(); // the runtime flushes all lane I/O at step end
     }
 }
 
@@ -656,6 +764,35 @@ mod tests {
         assert!(ch <= v * 1.02, "chunked {ch} vs vertical {v}");
         // ...but far fewer reloads than per-micro-batch horizontal
         assert!(ch >= h, "chunked {ch} vs horizontal {h}");
+    }
+
+    /// The io-depth gate mirrors the runtime lookahead: tightening the
+    /// window can only add dependencies, so iteration time is monotonically
+    /// non-increasing in K, and fully synchronous loads (K = 0) are strictly
+    /// slower than the unbounded prefetch when loads carry real SSD time.
+    #[test]
+    fn io_depth_gating_orders_iteration_times() {
+        let sp = sp();
+        let sync = simulate_io(&sp, 12, gs(0.3), 0).t_iter;
+        let k1 = simulate_io(&sp, 12, gs(0.3), 1).t_iter;
+        let k4 = simulate_io(&sp, 12, gs(0.3), 4).t_iter;
+        let unbounded = simulate_io(&sp, 12, gs(0.3), usize::MAX).t_iter;
+        assert!(sync >= k1 * 0.999, "sync {sync} vs K=1 {k1}");
+        assert!(k1 >= k4 * 0.999, "K=1 {k1} vs K=4 {k4}");
+        assert!(k4 >= unbounded * 0.999, "K=4 {k4} vs unbounded {unbounded}");
+        assert!(sync > unbounded * 1.01, "gating must cost something: {sync} vs {unbounded}");
+    }
+
+    /// `simulate` (no depth argument) is exactly the unbounded window.
+    #[test]
+    fn default_simulate_is_unbounded_lookahead() {
+        let sp = sp();
+        let a = simulate(&sp, 8, gs(0.2));
+        let b = simulate_io(&sp, 8, gs(0.2), usize::MAX);
+        assert_eq!(a.t_iter, b.t_iter);
+        let z = simulate(&sp, 8, Schedule::ZeroInfinity);
+        let z2 = simulate_io(&sp, 8, Schedule::ZeroInfinity, usize::MAX);
+        assert_eq!(z.t_iter, z2.t_iter);
     }
 
     #[test]

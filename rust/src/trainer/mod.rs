@@ -161,6 +161,13 @@ pub struct RunLog {
     pub ssd_written: u64,
     /// Layer-parameter bytes uploaded to the device (schedule-dependent).
     pub param_bytes: u64,
+    /// I/O-pipeline lookahead loads already in flight when needed
+    /// (0 at `io_depth == 0`).
+    pub prefetch_hits: u64,
+    /// Loads performed synchronously despite async mode.
+    pub prefetch_misses: u64,
+    /// Total seconds the compute thread stalled on I/O.
+    pub io_stall_s: f64,
 }
 
 impl RunLog {
@@ -220,6 +227,9 @@ pub fn train(
         log.ssd_read += stats.ssd_bytes_read;
         log.ssd_written += stats.ssd_bytes_written;
         log.param_bytes += stats.param_bytes_loaded;
+        log.prefetch_hits += stats.prefetch_hits;
+        log.prefetch_misses += stats.prefetch_misses;
+        log.io_stall_s += stats.io_stall_s;
         if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
             println!(
                 "step {s:>5}  loss {:.4}  |g| {:.3}  {:.2}s/step  ssd r/w {}/{}",
