@@ -2,9 +2,11 @@
 //! chunked-vertical scheduling on the REAL stack: identical model/seed/data,
 //! measure loss equivalence (Fig. 13 in miniature), parameter-upload bytes
 //! (the traffic the schedule controls), and SSD traffic. Then sweep the
-//! async pipeline's `--io-depth` lookahead on the vertical schedule: every
+//! async pipeline's `--io-depth` lookahead on the vertical schedule (every
 //! depth must train bit-identically while depth ≥ 1 turns loads into
-//! prefetch hits.
+//! prefetch hits), and finally the data-parallel `--workers` dimension:
+//! W ∈ {1, 2, 4} must be bit-identical end to end — the deterministic ring
+//! all-reduce's contract — while the all-reduce traffic scales as 2(W−1).
 //!
 //!     cargo run --release --example schedule_compare
 
@@ -108,6 +110,48 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(base.ssd_written, log.ssd_written, "io-depth {depth} changed SSD writes");
         assert_eq!(base.param_bytes, log.param_bytes, "io-depth {depth} changed param traffic");
         assert!(log.prefetch_hits > 0, "io-depth {depth} produced no prefetch hits");
+    }
+
+    // --- data-parallel sweep: --workers ∈ {1, 2, 4} on vertical -----------
+    // The dist engine's determinism contract: every W trains bit-identically
+    // to the single engine (losses, grad norms, parameter/moment digests).
+    let mut w_logs: Vec<(usize, RunLog)> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let mut c = cfg(&format!("w{workers}"), 0.25);
+        c.workers = workers;
+        let log =
+            train(Manifest::load("artifacts/tiny")?, c, ScheduleKind::Vertical, steps, m, 0)?;
+        w_logs.push((workers, log));
+    }
+    let mut t = Table::new(
+        "workers sweep — vertical schedule, deterministic ring all-reduce",
+        &["W", "final loss", "all-reduce bytes", "i/o stall (s)"],
+    );
+    for (workers, log) in &w_logs {
+        t.row(&[
+            workers.to_string(),
+            format!("{:.4}", log.final_loss()),
+            greedysnake::util::stats::fmt_bytes(log.allreduce_bytes as f64),
+            format!("{:.3}", log.io_stall_s),
+        ]);
+    }
+    t.emit(None);
+    let base = &w_logs[0].1;
+    assert_eq!(base.allreduce_bytes, 0, "W=1 must not ring-reduce");
+    for (workers, log) in &w_logs[1..] {
+        assert_eq!(base.losses, log.losses, "workers={workers} changed the loss trajectory");
+        assert_eq!(base.grad_norms, log.grad_norms, "workers={workers} changed grad norms");
+        assert_eq!(
+            base.param_sq_norm.to_bits(),
+            log.param_sq_norm.to_bits(),
+            "workers={workers} changed the parameters"
+        );
+        assert_eq!(
+            base.moment_sq_norm.to_bits(),
+            log.moment_sq_norm.to_bits(),
+            "workers={workers} changed the optimizer moments"
+        );
+        assert!(log.allreduce_bytes > 0, "workers={workers} moved no ring traffic");
     }
     println!("schedule_compare OK");
     Ok(())

@@ -1,0 +1,499 @@
+//! Data-parallel multi-worker engine (`--workers W`) with a deterministic
+//! chunked ring all-reduce.
+//!
+//! The paper's headline results are multi-GPU (1.93× over ZeRO-Infinity on
+//! 4 GPUs for GPT-65B); this module adds that dimension to the runtime: a
+//! [`DataParallelEngine`] partitions each step's M micro-batches
+//! *contiguously* across W worker [`StepEngine`]s — each with its own
+//! checkpoint coordinator and I/O-pipeline lanes, all over the ONE shared
+//! [`SsdStorage`](crate::memory::SsdStorage), whose throttle layer
+//! arbitrates the contended tier exactly as it does for a single worker's
+//! concurrent lanes — and combines the per-layer gradients with a
+//! deterministic chunked ring all-reduce before the eager/delayed optimizer
+//! split runs once on rank 0 through the shared
+//! [`OptimizerStepCoordinator`].
+//!
+//! ## Determinism contract
+//!
+//! `--workers W` is bit-identical to `--workers 1` (today's single
+//! [`StepEngine::step`]) for every W, schedule, and io-depth. Three things
+//! make that true:
+//!
+//! 1. **Per-visit gradients.** Workers do NOT pre-accumulate across the
+//!    worker boundary: [`StepEngine::partial_step`] returns one gradient
+//!    contribution per `(layer, micro-batch)` backward visit. f32 addition
+//!    is not associative, so summing pre-reduced worker partials would
+//!    diverge from the sequential engine in the last bits.
+//! 2. **Fixed reduction order.** The all-reduce sorts each layer's
+//!    contributions into the *canonical* order — the order the layer's
+//!    visits appear in the schedule's full backward order — and left-folds
+//!    them. That is literally the same sequence of f32 additions
+//!    [`StepEngine::step`] performs into its resident accumulation buffer,
+//!    on the same values (micro-batches are independent through forward and
+//!    backward), so the result is bit-identical — and, because the sort key
+//!    is the canonical position, invariant to worker completion order
+//!    (property-tested in `rust/tests/proptests.rs`).
+//! 3. **Ring chunking is element-local.** [`RingReduce`] splits each tensor
+//!    into chunks that circulate the ring independently (that is where a
+//!    real ring gets its bandwidth), but addition is element-wise, so the
+//!    chunk split cannot change a single bit. A real ring staggers each
+//!    chunk's start rank and thereby reduces in rank-rotation order; we pin
+//!    the fold to the canonical order instead — the price of W-invariance.
+//!
+//! Losses and head/embedding gradients reduce the same way (ascending
+//! micro-batch, head contributions before embedding contributions for
+//! `wte` — the single-engine accumulation order); the optimizer then runs
+//! once, submitting layers in descending order exactly as the single
+//! engine does, so clip accounting, gradient norms, and the α-split moment
+//! round trips are unchanged.
+//!
+//! ## What is modeled vs real
+//!
+//! Worker *compute* is serialized on the one PJRT stream (PJRT handles are
+//! not `Send`); each worker's I/O lanes still overlap its own compute, and
+//! all workers' SSD traffic is arbitrated by the shared throttle. Shared-
+//! tier *contention* between concurrently-computing workers is the
+//! discrete-event simulator's job ([`crate::sim::simulate_dist`]: per-worker
+//! compute resources, one shared `ssd-read`/`ssd-write` pair); the runtime
+//! engine's job is the determinism contract above. Per-worker stall and
+//! all-reduce time are reported through [`DistStepStats`].
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{HostTensor, TokenTensor};
+use crate::runtime::Runtime;
+
+use super::engine::{StepEngine, StepStats};
+use super::opt::OptimizerStepCoordinator;
+use super::schedule::{validate_order, Schedule};
+use super::state::ModelState;
+
+/// Contiguous micro-batch partition: worker `w` gets `out[w]`, the first
+/// `m % workers` workers get one extra micro-batch, and the ranges cover
+/// `0..m` in order (workers beyond `m` get empty ranges).
+pub fn partition(m: usize, workers: usize) -> Vec<Range<usize>> {
+    let w = workers.max(1);
+    let base = m / w;
+    let extra = m % w;
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// The deterministic chunked ring all-reduce's arithmetic core: left-fold
+/// already-canonically-ordered contributions, chunk by chunk. See the
+/// module docs for why chunking cannot change bits.
+#[derive(Clone, Copy, Debug)]
+pub struct RingReduce {
+    /// Elements per ring chunk (the granularity at which a real ring
+    /// pipelines its sends; ≥ 1).
+    pub chunk_elems: usize,
+}
+
+impl Default for RingReduce {
+    fn default() -> Self {
+        RingReduce { chunk_elems: 1 << 16 }
+    }
+}
+
+impl RingReduce {
+    /// Elementwise sum of `parts` (all the same length), folded left to
+    /// right — the fixed reduction order — one chunk at a time.
+    pub fn reduce(&self, parts: &[&[f32]]) -> Vec<f32> {
+        assert!(!parts.is_empty(), "ring reduce needs at least one contribution");
+        let n = parts[0].len();
+        let mut out = parts[0].to_vec();
+        let chunk = self.chunk_elems.max(1);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            for p in &parts[1..] {
+                debug_assert_eq!(p.len(), n, "contribution length mismatch");
+                for i in lo..hi {
+                    out[i] += p[i];
+                }
+            }
+            lo = hi;
+        }
+        out
+    }
+
+    /// Reduce parallel lists of tensors: `contribs[k][t]` is contribution
+    /// k's tensor t; contributions must already be in canonical order.
+    fn reduce_tensors(&self, contribs: &[&Vec<HostTensor>]) -> Vec<HostTensor> {
+        assert!(!contribs.is_empty());
+        (0..contribs[0].len())
+            .map(|t| {
+                let parts: Vec<&[f32]> =
+                    contribs.iter().map(|c| c[t].data.as_slice()).collect();
+                HostTensor { shape: contribs[0][t].shape.clone(), data: self.reduce(&parts) }
+            })
+            .collect()
+    }
+}
+
+/// Tensor-`t` data slices of a sorted contribution list (reduction inputs).
+fn pick<'t>(list: &'t [GradContrib], t: usize) -> Vec<&'t [f32]> {
+    list.iter().map(|(_, g)| g[t].data.as_slice()).collect()
+}
+
+/// Total bytes a W-rank ring moves to all-reduce a `payload`-byte tensor:
+/// each rank sends 2·(W−1)/W·payload (reduce-scatter + all-gather), so the
+/// ring total is 2·(W−1)·payload. 0 for a single rank.
+pub fn ring_traffic_bytes(ranks: usize, payload: u64) -> u64 {
+    if ranks <= 1 {
+        0
+    } else {
+        2 * (ranks as u64 - 1) * payload
+    }
+}
+
+/// One per-visit gradient contribution: the GLOBAL micro-batch index it
+/// came from, and the per-tensor gradients of that visit.
+pub type GradContrib = (usize, Vec<HostTensor>);
+
+/// One worker's share of a step ([`StepEngine::partial_step`]): per-visit
+/// gradient contributions tagged with their GLOBAL micro-batch index, plus
+/// the worker's data-path counters.
+pub struct WorkerPartial {
+    /// `(global micro-batch, loss)` for each owned micro-batch.
+    pub losses: Vec<(usize, f64)>,
+    /// `layer_grads[l]` = this worker's backward visits of layer `l`, in
+    /// visit order.
+    pub layer_grads: Vec<Vec<GradContrib>>,
+    /// Head contributions per owned micro-batch: `[dlnf_w, dlnf_b, dwte]`.
+    pub head_grads: Vec<GradContrib>,
+    /// Embedding-backward contributions per owned micro-batch:
+    /// `[dwte, dwpe]`.
+    pub embed_grads: Vec<GradContrib>,
+    /// Layer-parameter bytes this worker uploaded.
+    pub param_bytes: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    /// Seconds this worker's compute thread stalled on I/O.
+    pub io_stall_s: f64,
+}
+
+/// [`StepStats`] plus the per-worker breakdown the aggregate hides.
+#[derive(Clone, Debug)]
+pub struct DistStepStats {
+    /// Aggregated step metrics (loss averaged over all M micro-batches,
+    /// SSD/param bytes and stalls summed across workers, plus the
+    /// all-reduce time/traffic fields).
+    pub stats: StepStats,
+    /// Per-worker compute-thread I/O stall seconds this step (one entry per
+    /// configured worker; idle workers report 0).
+    pub worker_stall_s: Vec<f64>,
+}
+
+/// The data-parallel engine: W worker [`StepEngine`]s over one
+/// [`ModelState`] + shared SSD, a deterministic chunked ring all-reduce,
+/// and the rank-0 optimizer. See the module docs for the determinism
+/// contract.
+pub struct DataParallelEngine<'a> {
+    state: &'a ModelState,
+    rt: &'a Runtime,
+    /// The one optimizer coordinator all workers share (rank 0's).
+    pub opt: Arc<OptimizerStepCoordinator>,
+    workers: Vec<StepEngine<'a>>,
+    ring: RingReduce,
+    step: u64,
+}
+
+impl<'a> DataParallelEngine<'a> {
+    /// Build `workers` worker engines sharing one optimizer coordinator.
+    /// `workers == 1` is the degenerate case used to cross-check the
+    /// determinism contract against [`StepEngine::step`].
+    pub fn new(state: &'a ModelState, rt: &'a Runtime, workers: usize) -> Result<Self> {
+        let workers = workers.max(1);
+        let opt = OptimizerStepCoordinator::new(state);
+        opt.seed_ssd(state)?;
+        let opt = Arc::new(opt);
+        let engines = (0..workers)
+            .map(|_| StepEngine::with_coordinator(state, rt, Arc::clone(&opt)))
+            .collect();
+        Ok(DataParallelEngine {
+            state,
+            rt,
+            opt,
+            workers: engines,
+            ring: RingReduce::default(),
+            step: 0,
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// One data-parallel training iteration over `m` micro-batches. The
+    /// phase structure mirrors [`StepEngine::step`] exactly: delayed-α
+    /// dispatch first (overlapping the forward), workers' compute, the
+    /// deterministic reduce, then optimizer submission in descending layer
+    /// order and the embedding update.
+    pub fn step(
+        &mut self,
+        schedule: &dyn Schedule,
+        tokens: &[TokenTensor],
+        targets: &[TokenTensor],
+    ) -> Result<DistStepStats> {
+        let m = tokens.len();
+        assert_eq!(m, targets.len());
+        assert!(m > 0, "a step needs at least one micro-batch");
+        let nl = self.state.manifest.config.n_layers;
+        if self.state.cfg.alpha > 0.0 && !schedule.supports_delay() {
+            bail!(
+                "schedule '{}' has no delayed-step support (α must be 0, got {})",
+                schedule.name(),
+                self.state.cfg.alpha
+            );
+        }
+        self.step += 1;
+        let read0 = self.state.ssd.bytes_read();
+        let written0 = self.state.ssd.bytes_written();
+
+        // Delayed α updates from the previous iteration overlap this
+        // forward; every worker's first visit of a layer waits on them
+        // through the shared coordinator.
+        if schedule.supports_delay() {
+            self.opt.dispatch_delayed(
+                self.state,
+                Some(self.rt),
+                self.step.saturating_sub(1).max(1),
+            )?;
+        }
+        self.opt.wait_embed();
+
+        // The canonical backward order defines each layer's reduction
+        // order; validate the full orders once up front (workers validate
+        // their restrictions again).
+        let fwd_full = schedule.forward_order(nl, m);
+        validate_order(&fwd_full, nl, m, false)
+            .with_context(|| format!("schedule '{}' forward order", schedule.name()))?;
+        let bwd_full = schedule.backward_order(nl, m);
+        validate_order(&bwd_full, nl, m, true)
+            .with_context(|| format!("schedule '{}' backward order", schedule.name()))?;
+        // canonical_pos[l][j] = rank of micro-batch j among layer l's
+        // backward visits in the FULL order.
+        let mut canonical_pos: Vec<Vec<usize>> = vec![vec![0; m]; nl];
+        let mut seen: Vec<usize> = vec![0; nl];
+        for &(l, j) in &bwd_full {
+            canonical_pos[l][j] = seen[l];
+            seen[l] += 1;
+        }
+
+        // ---------------- worker compute ----------------
+        // Serialized on the one PJRT stream (see module docs); each worker
+        // keeps its own I/O lanes and stall clock.
+        let parts = partition(m, self.workers.len());
+        let mut partials: Vec<WorkerPartial> = Vec::new();
+        let mut worker_stall_s = vec![0.0f64; self.workers.len()];
+        for (w, range) in parts.iter().enumerate() {
+            if range.is_empty() {
+                continue;
+            }
+            let p = self.workers[w].partial_step(schedule, tokens, targets, range.clone())?;
+            worker_stall_s[w] = p.io_stall_s;
+            partials.push(p);
+        }
+        let active = partials.len();
+
+        // ---------------- deterministic chunked ring all-reduce -----------
+        let t_red = Instant::now();
+        let mut allreduce_bytes = 0u64;
+        // loss: left-fold in ascending micro-batch order (the single
+        // engine's head-loop accumulation order)
+        let mut losses: Vec<(usize, f64)> = Vec::with_capacity(m);
+        for p in &partials {
+            losses.extend(p.losses.iter().copied());
+        }
+        losses.sort_by_key(|&(j, _)| j);
+        let mut loss_sum = 0.0f64;
+        for &(_, l) in &losses {
+            loss_sum += l;
+        }
+
+        // per-layer gradients, canonical order per layer
+        let mut reduced: Vec<Option<Vec<HostTensor>>> = Vec::new();
+        reduced.resize_with(nl, || None);
+        for l in 0..nl {
+            let mut contribs: Vec<GradContrib> = Vec::with_capacity(m);
+            for p in &mut partials {
+                contribs.append(&mut p.layer_grads[l]);
+            }
+            // the sort key is the canonical position, so worker completion
+            // order cannot matter
+            contribs.sort_by_key(|&(j, _)| canonical_pos[l][j]);
+            if contribs.len() != m {
+                bail!("layer {l}: {} gradient contributions for {m} micro-batches", contribs.len());
+            }
+            let lists: Vec<&Vec<HostTensor>> = contribs.iter().map(|(_, g)| g).collect();
+            let grads = self.ring.reduce_tensors(&lists);
+            for g in &grads {
+                allreduce_bytes += ring_traffic_bytes(active, g.bytes());
+            }
+            reduced[l] = Some(grads);
+        }
+
+        // head/embedding gradients: ascending micro-batch, head before
+        // embedding for wte — the single engine's accumulation order
+        let mut head: Vec<GradContrib> = Vec::with_capacity(m);
+        let mut emb: Vec<GradContrib> = Vec::with_capacity(m);
+        for p in &mut partials {
+            head.append(&mut p.head_grads);
+            emb.append(&mut p.embed_grads);
+        }
+        head.sort_by_key(|&(j, _)| j);
+        emb.sort_by_key(|&(j, _)| j);
+        if head.len() != m || emb.len() != m {
+            bail!("head/embed contributions incomplete: {}/{} of {m}", head.len(), emb.len());
+        }
+        let dlnf_w = {
+            let parts = pick(&head, 0);
+            HostTensor { shape: head[0].1[0].shape.clone(), data: self.ring.reduce(&parts) }
+        };
+        let dlnf_b = {
+            let parts = pick(&head, 1);
+            HostTensor { shape: head[0].1[1].shape.clone(), data: self.ring.reduce(&parts) }
+        };
+        let dwte = {
+            let mut parts = pick(&head, 2);
+            parts.extend(pick(&emb, 0));
+            HostTensor { shape: head[0].1[2].shape.clone(), data: self.ring.reduce(&parts) }
+        };
+        let dwpe = {
+            let parts = pick(&emb, 1);
+            HostTensor { shape: emb[0].1[1].shape.clone(), data: self.ring.reduce(&parts) }
+        };
+        for t in [&dlnf_w, &dlnf_b, &dwte, &dwpe] {
+            allreduce_bytes += ring_traffic_bytes(active, t.bytes());
+        }
+        let allreduce_s = t_red.elapsed().as_secs_f64();
+
+        // ---------------- rank-0 optimizer ---------------------------------
+        // Descending layer order — exactly the order the single engine's
+        // eager (and deferred) submissions retire in — then the embedding
+        // group, so clip accounting and the gradient norm are unchanged.
+        for l in (0..nl).rev() {
+            let grads = reduced[l].take().expect("reduced gradients");
+            self.opt.submit_eager(self.state, Some(self.rt), l, grads, self.step)?;
+        }
+        self.opt.submit_embed(self.state, vec![dwte, dwpe, dlnf_w, dlnf_b], self.step)?;
+        if schedule.end_of_step_barrier() {
+            for l in 0..nl {
+                self.opt.wait_layer(l);
+            }
+            self.opt.wait_embed();
+        }
+        let grad_norm = self.opt.finish_iter();
+
+        let mut stats = StepStats {
+            loss: loss_sum / m as f64,
+            grad_norm,
+            ssd_bytes_read: self.state.ssd.bytes_read() - read0,
+            ssd_bytes_written: self.state.ssd.bytes_written() - written0,
+            param_bytes_loaded: 0,
+            prefetch_hits: 0,
+            prefetch_misses: 0,
+            io_stall_s: 0.0,
+            allreduce_s,
+            allreduce_bytes,
+        };
+        for p in &partials {
+            stats.param_bytes_loaded += p.param_bytes;
+            stats.prefetch_hits += p.prefetch_hits;
+            stats.prefetch_misses += p.prefetch_misses;
+            stats.io_stall_s += p.io_stall_s;
+        }
+        Ok(DistStepStats { stats, worker_stall_s })
+    }
+
+    /// Drain all outstanding I/O and optimizer work (end of training):
+    /// flush every worker's lanes, then drive the one shared coordinator
+    /// the way [`StepEngine::drain`] does.
+    pub fn drain(&mut self) -> Result<()> {
+        for w in &mut self.workers {
+            w.flush_io()?;
+        }
+        self.opt.dispatch_delayed(self.state, Some(self.rt), self.step.max(1))?;
+        for l in 0..self.state.manifest.config.n_layers {
+            self.opt.wait_layer(l);
+        }
+        self.opt.wait_embed();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        for m in [0usize, 1, 3, 4, 7, 16] {
+            for w in [1usize, 2, 3, 4, 8] {
+                let parts = partition(m, w);
+                assert_eq!(parts.len(), w);
+                let mut next = 0;
+                for r in &parts {
+                    assert_eq!(r.start, next, "m={m} w={w}");
+                    next = r.end;
+                }
+                assert_eq!(next, m, "ranges must cover 0..{m}");
+                let sizes: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "m={m} w={w}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_reduce_is_left_fold_sum() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![10.0f32, 20.0, 30.0];
+        let c = vec![100.0f32, 200.0, 300.0];
+        for chunk in [1usize, 2, 3, 64] {
+            let ring = RingReduce { chunk_elems: chunk };
+            let got = ring.reduce(&[a.as_slice(), b.as_slice(), c.as_slice()]);
+            assert_eq!(got, vec![111.0, 222.0, 333.0], "chunk={chunk}");
+        }
+        // single contribution is the identity
+        let ring = RingReduce::default();
+        assert_eq!(ring.reduce(&[a.as_slice()]), a);
+    }
+
+    /// Chunk splits cannot change bits: addition is element-local.
+    #[test]
+    fn ring_reduce_chunking_is_bit_invariant() {
+        let mut rng = crate::util::prng::Prng::new(0xD157);
+        let n = 257;
+        let parts: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..n).map(|_| (rng.next_f32() - 0.5) * 3.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = parts.iter().map(|v| v.as_slice()).collect();
+        let base = RingReduce { chunk_elems: 1 }.reduce(&refs);
+        for chunk in [2usize, 7, 64, 1000] {
+            let got = RingReduce { chunk_elems: chunk }.reduce(&refs);
+            assert!(
+                got.iter().zip(&base).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "chunk={chunk} changed bits"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_traffic_matches_2w_minus_1_formula() {
+        assert_eq!(ring_traffic_bytes(1, 1000), 0);
+        assert_eq!(ring_traffic_bytes(2, 1000), 2000);
+        assert_eq!(ring_traffic_bytes(4, 1000), 6000);
+    }
+}

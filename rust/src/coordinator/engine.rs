@@ -65,6 +65,13 @@ pub struct StepStats {
     /// `param-upload` lane, which is part of the overlap win — so depth-0
     /// and depth-K runs measure the same blocking set and stay comparable.
     pub io_stall_s: f64,
+    /// Wall seconds spent in the deterministic ring all-reduce combining the
+    /// workers' gradients ([`super::dist::DataParallelEngine`]). 0 on the
+    /// single-worker engine.
+    pub allreduce_s: f64,
+    /// Ring traffic the all-reduce moved this step, summed across ranks
+    /// (2·(W−1)·payload for W active workers). 0 on the single-worker engine.
+    pub allreduce_bytes: u64,
 }
 
 /// Accumulate into an optional buffer.
@@ -104,18 +111,32 @@ impl<'a> StepEngine<'a> {
     pub fn new(state: &'a ModelState, rt: &'a Runtime) -> Result<Self> {
         let opt = OptimizerStepCoordinator::new(state);
         opt.seed_ssd(state)?;
-        Ok(StepEngine {
+        Ok(Self::with_coordinator(state, rt, Arc::new(opt)))
+    }
+
+    /// Build an engine sharing an externally owned optimizer coordinator —
+    /// how [`super::dist::DataParallelEngine`] gives its W workers one
+    /// coordinator, so every worker's forward waits on the same pending
+    /// (eager and delayed) updates (the Fig. 8 dependency) while each keeps
+    /// its own checkpoint coordinator and I/O-pipeline lanes. The caller is
+    /// responsible for having seeded the SSD moments once.
+    pub fn with_coordinator(
+        state: &'a ModelState,
+        rt: &'a Runtime,
+        opt: Arc<OptimizerStepCoordinator>,
+    ) -> Self {
+        StepEngine {
             state,
             rt,
             ilc: Arc::new(InterLayerCoordinator::new(
                 Arc::clone(&state.ssd),
                 state.cfg.ckpt_on_ssd,
             )),
-            opt: Arc::new(opt),
+            opt,
             io: IoPipeline::new(state.cfg.io_depth),
             step: 0,
             param_bytes_loaded: 0,
-        })
+        }
     }
 
     /// Iterations executed so far.
@@ -194,6 +215,14 @@ impl<'a> StepEngine<'a> {
 
     /// One training iteration over `m` micro-batches under `schedule`.
     /// `tokens[j]` / `targets[j]`: micro-batch j, shaped (B, T).
+    ///
+    /// KEEP IN SYNC with [`Self::partial_step`]: the data-parallel path
+    /// re-implements this stage dispatch with per-visit gradient retention
+    /// (it cannot share the resident-accumulation control flow without
+    /// losing the eager-optimizer/backward overlap), and the bit-equality
+    /// contract between the two is what the gradient-equivalence suite in
+    /// `rust/tests/integration.rs` pins down. Any change to stage inputs,
+    /// checkpoint keying, or I/O sequencing here must be mirrored there.
     pub fn step(
         &mut self,
         schedule: &dyn Schedule,
@@ -391,7 +420,176 @@ impl<'a> StepEngine<'a> {
             prefetch_hits: io1.prefetch_hits - io0.prefetch_hits,
             prefetch_misses: io1.prefetch_misses - io0.prefetch_misses,
             io_stall_s: io1.stall_seconds - io0.stall_seconds,
+            allreduce_s: 0.0,
+            allreduce_bytes: 0,
         })
+    }
+
+    /// One worker's share of a data-parallel step: forward, head-loss, and
+    /// backward over the micro-batches in `mbs` (a contiguous slice of the
+    /// GLOBAL 0..M index space; `tokens`/`targets` are the full global
+    /// arrays), with NO optimizer work. Gradients come back at per-visit
+    /// granularity — one entry per `(layer, micro-batch)` backward visit, in
+    /// this worker's visit order — so [`super::dist::DataParallelEngine`]
+    /// can replay the canonical schedule accumulation order exactly and stay
+    /// bit-identical to [`Self::step`] at W = 1. Checkpoint keys carry the
+    /// global micro-batch index, so W workers sharing one SSD never collide.
+    ///
+    /// The visit orders are the schedule's full orders filtered to `mbs`:
+    /// restriction preserves legality (validated), and it preserves each
+    /// layer's relative visit order, which the reduction depends on.
+    pub fn partial_step(
+        &mut self,
+        schedule: &dyn Schedule,
+        tokens: &[TokenTensor],
+        targets: &[TokenTensor],
+        mbs: std::ops::Range<usize>,
+    ) -> Result<super::dist::WorkerPartial> {
+        let m = tokens.len();
+        assert_eq!(m, targets.len());
+        assert!(!mbs.is_empty() && mbs.end <= m, "worker range {mbs:?} outside 0..{m}");
+        let nl = self.state.manifest.config.n_layers;
+        self.step += 1;
+        let loaded0 = self.param_bytes_loaded;
+        let io0 = self.io.stats();
+
+        // ---------------- forward ----------------
+        let embed_lits = {
+            let guard = self.state.embed.lock().unwrap();
+            (guard[0].to_literal()?, guard[1].to_literal()?)
+        };
+        let mut acts: Vec<Option<HostTensor>> = (0..m).map(|_| None).collect();
+        for j in mbs.clone() {
+            let out = self.rt.execute(
+                Stage::EmbedFwd,
+                &[tokens[j].to_literal()?, embed_lits.0.clone(), embed_lits.1.clone()],
+            )?;
+            acts[j] = Some(HostTensor::from_literal(&out[0])?);
+        }
+        drop(embed_lits);
+
+        let fwd: Vec<(usize, usize)> = schedule
+            .forward_order(nl, m)
+            .into_iter()
+            .filter(|&(_, j)| mbs.contains(&j))
+            .collect();
+        let local: Vec<(usize, usize)> = fwd.iter().map(|&(l, j)| (l, j - mbs.start)).collect();
+        validate_order(&local, nl, mbs.len(), false)
+            .with_context(|| format!("schedule '{}' restricted forward order", schedule.name()))?;
+        self.io.begin_pass()?;
+        let mut cache = ParamCache::empty();
+        for (idx, &(l, j)) in fwd.iter().enumerate() {
+            self.ensure_params(&mut cache, l, true)?;
+            self.lookahead(&fwd, idx, true);
+            let x_prev = acts[j].as_ref().expect("activation for owned micro-batch");
+            self.io
+                .put_ckpt(&self.ilc, &ckpt_key(l, j), x_prev.clone())
+                .with_context(|| format!("ckpt store l{l} mb{j}"))?;
+            let x_lit = x_prev.to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = vec![&x_lit];
+            inputs.extend(cache.literals.iter());
+            let out = self.rt.execute(Stage::LayerFwd, &inputs)?;
+            acts[j] = Some(HostTensor::from_literal(&out[0])?);
+        }
+
+        // ---------------- head: per-micro-batch loss + grads --------------
+        let mut losses: Vec<(usize, f64)> = Vec::with_capacity(mbs.len());
+        let mut dxs: Vec<Option<HostTensor>> = (0..m).map(|_| None).collect();
+        let mut head_grads: Vec<super::dist::GradContrib> = Vec::with_capacity(mbs.len());
+        {
+            let (wte_lit, lnf_w_lit, lnf_b_lit) = {
+                let guard = self.state.embed.lock().unwrap();
+                (guard[0].to_literal()?, guard[2].to_literal()?, guard[3].to_literal()?)
+            };
+            for j in mbs.clone() {
+                let out = self.rt.execute(
+                    Stage::HeadLoss,
+                    &[
+                        &acts[j].as_ref().expect("forward output").to_literal()?,
+                        &lnf_w_lit,
+                        &lnf_b_lit,
+                        &wte_lit,
+                        &targets[j].to_literal()?,
+                    ],
+                )?;
+                losses.push((j, out[0].to_vec::<f32>()?[0] as f64));
+                dxs[j] = Some(HostTensor::from_literal(&out[1])?);
+                // [dlnf_w, dlnf_b, dwte] — the head's contribution order
+                head_grads.push((
+                    j,
+                    vec![
+                        HostTensor::from_literal(&out[2])?,
+                        HostTensor::from_literal(&out[3])?,
+                        HostTensor::from_literal(&out[4])?,
+                    ],
+                ));
+            }
+        }
+
+        // ---------------- backward (grads retained per visit) -------------
+        let bwd: Vec<(usize, usize)> = schedule
+            .backward_order(nl, m)
+            .into_iter()
+            .filter(|&(_, j)| mbs.contains(&j))
+            .collect();
+        let local: Vec<(usize, usize)> = bwd.iter().map(|&(l, j)| (l, j - mbs.start)).collect();
+        validate_order(&local, nl, mbs.len(), true)
+            .with_context(|| format!("schedule '{}' restricted backward order", schedule.name()))?;
+        self.io.begin_pass()?;
+        let mut layer_grads: Vec<Vec<super::dist::GradContrib>> = Vec::new();
+        layer_grads.resize_with(nl, Vec::new);
+        let mut cache = ParamCache::empty();
+        for (idx, &(l, j)) in bwd.iter().enumerate() {
+            self.ensure_params(&mut cache, l, false)?;
+            self.lookahead(&bwd, idx, false);
+            let x_ckpt = self.io.take_ckpt(&self.ilc, &ckpt_key(l, j))?;
+            let (x_lit, dy_lit) =
+                (x_ckpt.to_literal()?, dxs[j].as_ref().expect("head dx").to_literal()?);
+            let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &dy_lit];
+            inputs.extend(cache.literals.iter());
+            let out = self.rt.execute(Stage::LayerBwd, &inputs)?;
+            dxs[j] = Some(HostTensor::from_literal(&out[0])?);
+            layer_grads[l].push((
+                j,
+                out[1..].iter().map(HostTensor::from_literal).collect::<Result<_>>()?,
+            ));
+        }
+
+        // ---------------- embedding backward ------------------------------
+        let mut embed_grads: Vec<super::dist::GradContrib> = Vec::with_capacity(mbs.len());
+        for j in mbs.clone() {
+            let out = self.rt.execute(
+                Stage::EmbedBwd,
+                &[tokens[j].to_literal()?, dxs[j].as_ref().expect("bwd dx").to_literal()?],
+            )?;
+            // [dwte, dwpe] — the embedding's contribution order
+            embed_grads.push((
+                j,
+                vec![HostTensor::from_literal(&out[0])?, HostTensor::from_literal(&out[1])?],
+            ));
+        }
+
+        // retire all lane I/O before the reduce (exact SSD byte accounting,
+        // lane failures surface here)
+        self.io.flush()?;
+        let io1 = self.io.stats();
+        Ok(super::dist::WorkerPartial {
+            losses,
+            layer_grads,
+            head_grads,
+            embed_grads,
+            param_bytes: self.param_bytes_loaded - loaded0,
+            prefetch_hits: io1.prefetch_hits - io0.prefetch_hits,
+            prefetch_misses: io1.prefetch_misses - io0.prefetch_misses,
+            io_stall_s: io1.stall_seconds - io0.stall_seconds,
+        })
+    }
+
+    /// Retire all in-flight lane I/O without touching optimizer state —
+    /// [`super::dist::DataParallelEngine::drain`] flushes every worker's
+    /// lanes, then drives the one shared optimizer coordinator itself.
+    pub fn flush_io(&mut self) -> Result<()> {
+        self.io.flush()
     }
 
     /// Drain all outstanding optimizer and I/O work (end of training). Safe

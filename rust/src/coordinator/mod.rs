@@ -37,8 +37,15 @@
 //! reproduces the synchronous engine bit-for-bit, and
 //! [`engine::StepStats`] reports prefetch hits/misses and the compute
 //! thread's I/O stall time so the overlap win is directly measurable.
+//!
+//! The data-parallel dimension lives in [`dist`]: `--workers W` partitions
+//! each step's micro-batches across W worker engines (own I/O lanes, one
+//! shared throttled SSD) and combines gradients with a deterministic
+//! chunked ring all-reduce whose fixed reduction order makes every W
+//! bit-identical to W = 1 — see [`dist`]'s module docs for the contract.
 
 pub mod ckpt;
+pub mod dist;
 pub mod engine;
 pub mod horizontal;
 pub mod io;
@@ -48,6 +55,7 @@ pub mod state;
 pub mod vertical;
 
 pub use ckpt::InterLayerCoordinator;
+pub use dist::{DataParallelEngine, DistStepStats, RingReduce};
 pub use engine::{StepEngine, StepStats};
 pub use horizontal::HorizontalScheduler;
 pub use io::{IoPipeline, IoStats};

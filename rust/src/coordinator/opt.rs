@@ -395,11 +395,7 @@ mod tests {
             alpha,
             opt_on_ssd,
             overlap,
-            ssd_path: std::env::temp_dir().join(format!(
-                "gs_opt_test_{alpha}_{opt_on_ssd}_{overlap}_{}",
-                std::process::id()
-            )),
-            ..Default::default()
+            ..TrainerConfig::for_test(&format!("opt_{alpha}_{opt_on_ssd}_{overlap}"))
         };
         Some(ModelState::init(m, cfg).unwrap())
     }
@@ -479,11 +475,7 @@ mod tests {
         let Some(m) = Manifest::load_if_built("artifacts/tiny") else { return };
         let cfg = TrainerConfig {
             clip_norm: 1e-9, // everything violates
-            opt_on_ssd: false,
-            overlap: false,
-            ssd_path: std::env::temp_dir()
-                .join(format!("gs_opt_clip_{}", std::process::id())),
-            ..Default::default()
+            ..TrainerConfig::for_test("opt_clip")
         };
         let state = ModelState::init(m, cfg).unwrap();
         let coord = OptimizerStepCoordinator::new(&state);

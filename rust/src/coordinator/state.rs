@@ -35,6 +35,14 @@ pub struct TrainerConfig {
     /// synchronous I/O on the compute thread (bit-identical to the
     /// pre-pipeline engine).
     pub io_depth: usize,
+    /// Data-parallel worker count W (`--workers`). Each step's micro-batches
+    /// are partitioned contiguously across W model replicas
+    /// ([`crate::coordinator::dist::DataParallelEngine`]), each with its own
+    /// I/O pipeline over the one shared SSD, and per-layer gradients are
+    /// combined with a deterministic chunked ring all-reduce before the
+    /// optimizer runs once on rank 0 — bit-identical to `workers == 1`
+    /// (today's single [`crate::coordinator::StepEngine`]) for every W.
+    pub workers: usize,
     pub adam: AdamParams,
     /// Global gradient-norm clip threshold (speculative; f64::INFINITY off).
     pub clip_norm: f64,
@@ -55,6 +63,7 @@ impl Default for TrainerConfig {
             use_hlo_adam: false,
             overlap: true,
             io_depth: 2,
+            workers: 1,
             adam: AdamParams { lr: 3e-4, weight_decay: 0.01, ..Default::default() },
             clip_norm: f64::INFINITY,
             ssd_path: std::env::temp_dir()
@@ -62,6 +71,31 @@ impl Default for TrainerConfig {
             ssd_read_bps: f64::INFINITY,
             ssd_write_bps: f64::INFINITY,
             seed: 42,
+        }
+    }
+}
+
+impl TrainerConfig {
+    /// Canonical test fixture: the deterministic small-run baseline (α = 0,
+    /// CPU-resident moments, no overlap worker — the settings every ad-hoc
+    /// test fixture used to duplicate) with a process- AND instance-unique
+    /// temp `ssd_path`, so concurrent tests — in particular the multi-worker
+    /// suites, which open the backing file from several engines — can never
+    /// collide on an SSD file. Override individual fields with struct-update
+    /// syntax: `TrainerConfig { opt_on_ssd: true, ..TrainerConfig::for_test("t") }`.
+    pub fn for_test(tag: &str) -> TrainerConfig {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let uniq = NEXT.fetch_add(1, Ordering::Relaxed);
+        TrainerConfig {
+            alpha: 0.0,
+            opt_on_ssd: false,
+            overlap: false,
+            ssd_path: std::env::temp_dir().join(format!(
+                "gs_test_{tag}_{}_{uniq}",
+                std::process::id()
+            )),
+            ..Default::default()
         }
     }
 }
@@ -146,6 +180,43 @@ impl ModelState {
         guard.iter().map(|t| t.to_literal()).collect()
     }
 
+    /// Sum of squares over ALL optimizer moments (m and v), wherever they
+    /// live — CPU-resident buffers or the α-split SSD objects. Iteration
+    /// order is fixed (layer, tensor, kind, part), so the f64 fold is
+    /// deterministic: the gradient-equivalence suite uses exact bit equality
+    /// of this digest to pin W-worker training to the W = 1 baseline.
+    pub fn moment_sq_norm(&self) -> Result<f64> {
+        use super::opt::{part_key, Part};
+        let sq = |xs: &[f32]| xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        let mut s = 0.0;
+        if self.cfg.opt_on_ssd {
+            let mut buf = Vec::new();
+            for l in 0..self.manifest.config.n_layers {
+                for t in 0..self.manifest.layer_params.len() {
+                    for kind in ['m', 'v'] {
+                        for part in [Part::Eager, Part::Delayed] {
+                            let key = part_key(l, t, kind, part);
+                            if self.ssd.contains(&key) {
+                                self.ssd.get_f32(&key, &mut buf)?;
+                                s += sq(&buf);
+                            }
+                        }
+                    }
+                }
+            }
+        } else {
+            for lo in &self.layer_opt {
+                for st in lo.lock().unwrap().iter() {
+                    s += sq(&st.m) + sq(&st.v);
+                }
+            }
+        }
+        for st in self.embed_opt.lock().unwrap().iter() {
+            s += sq(&st.m) + sq(&st.v);
+        }
+        Ok(s)
+    }
+
     /// Loss-bearing scalar state summary (debug/observability).
     pub fn param_sq_norm(&self) -> f64 {
         let mut s = 0.0;
@@ -175,14 +246,22 @@ mod tests {
         let m = Manifest::load_if_built("artifacts/tiny")?;
         let cfg = TrainerConfig {
             opt_on_ssd,
-            ssd_path: std::env::temp_dir().join(format!(
-                "gs_state_test_{}_{}",
-                opt_on_ssd,
-                std::process::id()
-            )),
-            ..Default::default()
+            ..TrainerConfig::for_test(&format!("state_{opt_on_ssd}"))
         };
         Some(ModelState::init(m, cfg).unwrap())
+    }
+
+    /// Two fixtures with the SAME tag must still get distinct SSD paths —
+    /// this is what keeps the multi-worker suites from colliding on a
+    /// backing file (the bug class `for_test` exists to kill).
+    #[test]
+    fn for_test_paths_are_unique_even_for_equal_tags() {
+        let a = TrainerConfig::for_test("same");
+        let b = TrainerConfig::for_test("same");
+        assert_ne!(a.ssd_path, b.ssd_path);
+        assert_eq!(a.alpha, 0.0);
+        assert!(!a.opt_on_ssd && !a.overlap);
+        assert_eq!(a.workers, 1);
     }
 
     #[test]

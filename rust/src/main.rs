@@ -17,7 +17,7 @@ use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::SystemParams;
 use greedysnake::roofline::Roofline;
 use greedysnake::runtime::Manifest;
-use greedysnake::sim::{simulate_io, Schedule};
+use greedysnake::sim::{simulate_dist, simulate_io, Schedule};
 use greedysnake::trainer::{train, ScheduleKind};
 use greedysnake::util::cli::Cli;
 use greedysnake::util::table::Table;
@@ -93,6 +93,13 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
              bit-identical to the pre-pipeline engine)",
             Some("2"),
         )
+        .opt(
+            "workers",
+            "data-parallel worker count W: micro-batches split contiguously across W \
+             model replicas sharing the SSD, gradients combined by a deterministic \
+             chunked ring all-reduce (bit-identical to --workers 1 for every W)",
+            Some("1"),
+        )
         .opt("log-every", "print every k steps", Some("1"))
         .flag("opt-on-cpu", "keep optimizer states CPU-resident (default: SSD)")
         .flag("ckpt-on-ssd", "spill activation checkpoints to SSD")
@@ -111,6 +118,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         use_hlo_adam: cli.has_flag("hlo-adam"),
         overlap: !cli.has_flag("no-overlap"),
         io_depth: cli.get_parsed("io-depth")?,
+        workers: cli.get_parsed::<usize>("workers")?.max(1),
         adam: greedysnake::optimizer::AdamParams {
             lr: cli.get_parsed("lr")?,
             weight_decay: 0.01,
@@ -126,12 +134,14 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={}",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
         cfg.io_depth,
+        cfg.workers,
     );
+    let workers = cfg.workers;
     let log = train(manifest, cfg, kind, steps, m, cli.get_parsed("log-every")?)?;
     let tokens_per_step = m * shape.micro_batch * shape.seq_len;
     println!(
@@ -145,6 +155,15 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         log.prefetch_misses,
         log.io_stall_s,
     );
+    if workers > 1 {
+        let stalls: Vec<String> = log.worker_stall_s.iter().map(|s| format!("{s:.2}s")).collect();
+        println!(
+            "workers: per-worker i/o stall [{}], all-reduce {:.2}s / {}",
+            stalls.join(", "),
+            log.allreduce_s,
+            greedysnake::util::stats::fmt_bytes(log.allreduce_bytes as f64),
+        );
+    }
     Ok(())
 }
 
@@ -168,6 +187,14 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
              (0 = synchronous loads; 'unbounded' = the pre-pipeline sim)",
             Some("unbounded"),
         )
+        .opt(
+            "workers",
+            "data-parallel workers W: per-worker compute resources over shared SSDs, \
+             ring all-reduce + rank-0 optimizer (M is the GLOBAL micro-batch count, \
+             split contiguously across workers)",
+            Some("1"),
+        )
+        .opt("ssds", "modeled SSDs shared by the workers (round-robin)", Some("1"))
         .parse_from(args)?;
     let sp = SystemParams::new(
         machine_by_name(&cli.get("machine").unwrap())?.with_gpus(cli.get_parsed("gpus")?),
@@ -196,12 +223,29 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
         }
     };
     let io_depth = parse_io_depth(&cli.get("io-depth").unwrap())?;
-    let r = simulate_io(&sp, m, schedule, io_depth);
+    let workers: usize = cli.get_parsed("workers")?;
+    let ssds: usize = cli.get_parsed("ssds")?;
+    let r = if workers > 1 || ssds > 1 {
+        // the dist sim models each GPU as an explicit worker with its own
+        // resources (tokens are global-M, SSD bandwidth per modeled device);
+        // simulate_io instead folds n_gpus into its rates — mixing the two
+        // normalizations would make the numbers incomparable
+        if sp.node.n_gpus != 1 {
+            bail!(
+                "--workers/--ssds model the GPUs explicitly; use --gpus 1 (got {})",
+                sp.node.n_gpus
+            );
+        }
+        simulate_dist(&sp, m, schedule, io_depth, workers.max(1), ssds.max(1))
+    } else {
+        simulate_io(&sp, m, schedule, io_depth)
+    };
     println!(
-        "{} {} x{} M={m}: {:.1}s/iter, {:.0} tokens/s, {:.1} TFLOPs/GPU, GPU util {:.0}%",
+        "{} {} x{} M={m} W={}: {:.1}s/iter, {:.0} tokens/s, {:.1} TFLOPs/GPU, GPU util {:.0}%",
         sp.model.name,
         sp.node.machine.name,
         sp.node.n_gpus,
+        workers.max(1),
         r.t_iter,
         r.tokens_per_s,
         r.tflops_per_gpu,

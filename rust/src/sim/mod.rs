@@ -7,9 +7,16 @@
 //! warm-up/drain, and cross-stage interference emerge instead of being
 //! assumed away. This produces the "measured" series of Figures 10–12 on
 //! the simulated testbed (DESIGN.md §Substitutions).
+//!
+//! The data-parallel dimension lives in [`dist`]: W workers with their own
+//! compute resources over one shared `ssd-read`/`ssd-write` pair (or
+//! several — `--ssds`), a modeled ring all-reduce, and a rank-0 optimizer,
+//! mirroring the runtime's `--workers W` engine.
 
+pub mod dist;
 pub mod engine;
 pub mod schedules;
 
+pub use dist::simulate_dist;
 pub use engine::{DiscreteSim, Resource, SimOp};
 pub use schedules::{simulate, simulate_io, Schedule, SimResult};

@@ -146,7 +146,7 @@ fn build_and_run(
 /// every step, so no load may start before the previous pass's compute has
 /// finished — without the barrier the sim would over-predict overlap at
 /// exactly those boundaries.
-struct IoGate {
+pub(crate) struct IoGate {
     depth: usize,
     /// Last compute op of each load issued so far, in load order.
     computes: Vec<usize>,
@@ -155,13 +155,13 @@ struct IoGate {
 }
 
 impl IoGate {
-    fn new(depth: usize) -> Self {
+    pub(crate) fn new(depth: usize) -> Self {
         IoGate { depth, computes: Vec::new(), floor: None }
     }
 
     /// Dependencies gating the load about to be issued (index = loads so
     /// far): the lookahead-window compute plus the current pass floor.
-    fn gate(&self) -> Vec<usize> {
+    pub(crate) fn gate(&self) -> Vec<usize> {
         if self.depth == usize::MAX {
             return Vec::new();
         }
@@ -177,13 +177,13 @@ impl IoGate {
     }
 
     /// Record the last compute op that consumed the load just issued.
-    fn loaded(&mut self, compute_op: usize) {
+    pub(crate) fn loaded(&mut self, compute_op: usize) {
         self.computes.push(compute_op);
     }
 
     /// Mark a pass/iteration boundary: later loads may not start before the
     /// compute issued so far (the runtime never looks ahead across a pass).
-    fn barrier(&mut self) {
+    pub(crate) fn barrier(&mut self) {
         if self.depth != usize::MAX {
             self.floor = self.computes.last().copied();
         }

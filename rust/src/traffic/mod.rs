@@ -6,6 +6,13 @@
 //! `shards` GPUs, parameter/gradient/optimizer bytes divide by `shards`
 //! (each GPU moves only its shard over its own PCIe link; the all-gather is
 //! inter-GPU traffic, not host traffic).
+//!
+//! The `*_dp` methods give the W-way data-parallel aggregates (micro-batches
+//! split contiguously across W full model replicas — the `--workers W`
+//! runtime/sim dimension): SSD/host traffic is the share-wise sum, which
+//! collapses field-for-field to the single-worker forms at W = 1
+//! (property-tested), and [`Workload::allreduce_bytes_per_worker`] is the
+//! ring traffic that stays OFF the host tier.
 
 use crate::modelcfg::{ModelCfg, BYTES_FP, BYTES_LP};
 
@@ -161,6 +168,69 @@ impl Workload {
         t
     }
 
+    /// Contiguous micro-batch shares of `m` across `workers` data-parallel
+    /// workers — the same split [`crate::coordinator::dist::partition`]
+    /// gives the runtime engine (one source of truth for the partition
+    /// policy), with idle workers' empty shares dropped.
+    pub fn dp_shares(&self, workers: u64) -> Vec<u64> {
+        crate::coordinator::dist::partition(self.m as usize, workers.max(1) as usize)
+            .iter()
+            .map(|r| r.len() as u64)
+            .filter(|&s| s > 0)
+            .collect()
+    }
+
+    /// Sum a per-worker closed form over the data-parallel shares: each
+    /// active worker is a full model replica running `f` over its own
+    /// micro-batch share, so aggregate SSD/host traffic is the share-wise
+    /// sum. At `workers == 1` this IS the single-worker form (the collapse
+    /// property the proptests pin down).
+    fn dp_sum(&self, workers: u64, f: impl Fn(&Workload) -> Traffic) -> Traffic {
+        let mut total = Traffic::default();
+        for share in self.dp_shares(workers) {
+            let t = f(&Workload { m: share, ..*self });
+            total.param_load += t.param_load;
+            total.ckpt_load += t.ckpt_load;
+            total.grad_load += t.grad_load;
+            total.ckpt_store += t.ckpt_store;
+            total.grad_store += t.grad_store;
+        }
+        total
+    }
+
+    /// Aggregate per-iteration traffic of W-way data-parallel vertical
+    /// scheduling: every worker reloads the FULL parameter set once per
+    /// pass (param traffic ×W — the multi-worker SSD pressure the fig12
+    /// scaling bench measures), while checkpoint totals *shrink* slightly
+    /// (each worker keeps its own boundary micro-batch resident).
+    pub fn vertical_dp(&self, workers: u64) -> Traffic {
+        self.dp_sum(workers, |w| w.vertical())
+    }
+
+    /// W-way horizontal: parameters reload per (worker micro-batch) so the
+    /// total is W-invariant; gradient round trips split per worker.
+    pub fn horizontal_dp(&self, workers: u64) -> Traffic {
+        self.dp_sum(workers, |w| w.horizontal())
+    }
+
+    /// W-way chunked-vertical (each worker chunks its own share).
+    pub fn chunked_vertical_dp(&self, group: u64, workers: u64) -> Traffic {
+        self.dp_sum(workers, |w| w.chunked_vertical(group))
+    }
+
+    /// Ring all-reduce bytes EACH worker moves per iteration to combine the
+    /// fp32 gradients: 2·(W−1)/W · grad bytes (reduce-scatter +
+    /// all-gather); 0 at W = 1. Inter-GPU traffic — it rides PCIe/NVLink,
+    /// not the SSD, which is why it does not appear in [`Traffic`].
+    pub fn allreduce_bytes_per_worker(&self, workers: u64) -> u64 {
+        let w = workers.max(1);
+        if w <= 1 {
+            0
+        } else {
+            2 * (w - 1) * self.grad_fp() / w
+        }
+    }
+
     /// §3.2 — single forward-backward pass (Ratel-style) at batch size
     /// `batch = B·M` with `extra_ckpt` doubling checkpoint frequency
     /// (attention/FFN boundary checkpoints).
@@ -282,6 +352,47 @@ mod tests {
         // totals order the same way for transformer-scale layer/ckpt ratios
         let c2 = w.chunked_vertical(2).total();
         assert!(w.vertical().total() < c2 && c2 < w.horizontal().total());
+    }
+
+    /// Data-parallel closed forms: W = 1 collapses exactly to the
+    /// single-worker formulas; shares cover M; vertical parameter traffic
+    /// scales with the number of ACTIVE workers while horizontal's total is
+    /// W-invariant (it already reloads per micro-batch).
+    #[test]
+    fn dp_forms_collapse_and_scale() {
+        let w = wl(16);
+        assert_eq!(w.vertical_dp(1), w.vertical());
+        assert_eq!(w.horizontal_dp(1), w.horizontal());
+        assert_eq!(w.chunked_vertical_dp(2, 1), w.chunked_vertical(2));
+        for workers in [2u64, 3, 4, 16, 20] {
+            let shares = w.dp_shares(workers);
+            assert_eq!(shares.iter().sum::<u64>(), w.m, "W={workers}");
+            let active = shares.len() as u64;
+            assert_eq!(
+                w.vertical_dp(workers).param_load,
+                active * 2 * w.ms_lp(),
+                "W={workers}"
+            );
+            assert_eq!(w.vertical_dp(workers).grad_store, active * w.grad_fp());
+            assert_eq!(w.horizontal_dp(workers).param_load, w.horizontal().param_load);
+        }
+    }
+
+    /// The shared-tier pressure the fig12 bench measures: total vertical
+    /// SSD/host loads grow with W (every replica re-reads the model), and
+    /// the all-reduce formula matches 2(W−1)/W.
+    #[test]
+    fn dp_vertical_loads_grow_with_workers() {
+        let w = wl(16);
+        let mut prev = w.vertical_dp(1).total_load();
+        for workers in [2u64, 4, 8] {
+            let cur = w.vertical_dp(workers).total_load();
+            assert!(cur > prev, "W={workers}: {cur} <= {prev}");
+            prev = cur;
+        }
+        assert_eq!(w.allreduce_bytes_per_worker(1), 0);
+        assert_eq!(w.allreduce_bytes_per_worker(2), w.grad_fp());
+        assert_eq!(w.allreduce_bytes_per_worker(4), 2 * 3 * w.grad_fp() / 4);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::schedule::{
     ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,
 };
-use crate::coordinator::{ModelState, StepEngine, TrainerConfig};
+use crate::coordinator::{DataParallelEngine, ModelState, StepEngine, StepStats, TrainerConfig};
 use crate::perfmodel::StorageRatios;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::TokenTensor;
@@ -166,8 +166,22 @@ pub struct RunLog {
     pub prefetch_hits: u64,
     /// Loads performed synchronously despite async mode.
     pub prefetch_misses: u64,
-    /// Total seconds the compute thread stalled on I/O.
+    /// Total seconds the compute thread stalled on I/O (summed across
+    /// workers in a `--workers W` run).
     pub io_stall_s: f64,
+    /// Per-worker share of `io_stall_s`, cumulative over the run (one entry
+    /// per configured worker; a single-worker run has one entry).
+    pub worker_stall_s: Vec<f64>,
+    /// Total wall seconds in the deterministic ring all-reduce (0 at W = 1).
+    pub allreduce_s: f64,
+    /// Total ring all-reduce traffic, summed across ranks (0 at W = 1).
+    pub allreduce_bytes: u64,
+    /// Σx² over all parameters after the final drain — a deterministic
+    /// digest the W-equivalence suite compares bit-for-bit.
+    pub param_sq_norm: f64,
+    /// Σx² over all optimizer moments (CPU- or SSD-resident) after the
+    /// final drain — same role as `param_sq_norm`.
+    pub moment_sq_norm: f64,
 }
 
 impl RunLog {
@@ -194,6 +208,13 @@ impl RunLog {
 /// Train `steps` iterations of `m` micro-batches under `kind`'s schedule.
 /// Prints one line per `log_every` steps when it is > 0. Every schedule
 /// runs through the same engine and drains uniformly at the end.
+///
+/// `cfg.workers` picks the driver: 1 runs the single [`StepEngine`]
+/// (today's path, byte-for-byte); W > 1 runs the
+/// [`DataParallelEngine`], whose deterministic ring all-reduce makes the
+/// run bit-identical to W = 1 — same losses, gradient norms, and (via
+/// [`RunLog::param_sq_norm`]/[`RunLog::moment_sq_norm`]) parameters and
+/// optimizer moments.
 pub fn train(
     manifest: Manifest,
     cfg: TrainerConfig,
@@ -202,14 +223,23 @@ pub fn train(
     m: usize,
     log_every: u64,
 ) -> Result<RunLog> {
+    enum Driver<'a> {
+        Single(StepEngine<'a>),
+        Dist(DataParallelEngine<'a>),
+    }
     let shape = manifest.config;
     let rt = Runtime::load(&manifest)?;
     let state = ModelState::init(manifest, cfg)?;
     let mut corpus = SyntheticCorpus::new(shape.vocab, state.cfg.seed);
-    let mut log = RunLog::default();
+    let workers = state.cfg.workers.max(1);
+    let mut log = RunLog { worker_stall_s: vec![0.0; workers], ..Default::default() };
 
     let policy = kind.policy();
-    let mut engine = StepEngine::new(&state, &rt)?;
+    let mut driver = if workers <= 1 {
+        Driver::Single(StepEngine::new(&state, &rt)?)
+    } else {
+        Driver::Dist(DataParallelEngine::new(&state, &rt, workers)?)
+    };
     for s in 0..steps {
         let mut toks = Vec::with_capacity(m);
         let mut tgts = Vec::with_capacity(m);
@@ -219,7 +249,17 @@ pub fn train(
             tgts.push(b);
         }
         let t0 = std::time::Instant::now();
-        let stats = engine.step(policy.as_ref(), &toks, &tgts)?;
+        let (stats, per_worker): (StepStats, Vec<f64>) = match &mut driver {
+            Driver::Single(engine) => {
+                let st = engine.step(policy.as_ref(), &toks, &tgts)?;
+                let stall = st.io_stall_s;
+                (st, vec![stall])
+            }
+            Driver::Dist(engine) => {
+                let d = engine.step(policy.as_ref(), &toks, &tgts)?;
+                (d.stats, d.worker_stall_s)
+            }
+        };
         let dt = t0.elapsed().as_secs_f64();
         log.losses.push(stats.loss);
         log.grad_norms.push(stats.grad_norm);
@@ -230,6 +270,11 @@ pub fn train(
         log.prefetch_hits += stats.prefetch_hits;
         log.prefetch_misses += stats.prefetch_misses;
         log.io_stall_s += stats.io_stall_s;
+        log.allreduce_s += stats.allreduce_s;
+        log.allreduce_bytes += stats.allreduce_bytes;
+        for (acc, v) in log.worker_stall_s.iter_mut().zip(&per_worker) {
+            *acc += v;
+        }
         if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
             println!(
                 "step {s:>5}  loss {:.4}  |g| {:.3}  {:.2}s/step  ssd r/w {}/{}",
@@ -241,7 +286,12 @@ pub fn train(
             );
         }
     }
-    engine.drain()?;
+    match &mut driver {
+        Driver::Single(engine) => engine.drain()?,
+        Driver::Dist(engine) => engine.drain()?,
+    }
+    log.param_sq_norm = state.param_sq_norm();
+    log.moment_sq_norm = state.moment_sq_norm()?;
     Ok(log)
 }
 
@@ -250,14 +300,7 @@ mod tests {
     use super::*;
 
     fn cfg(tag: &str) -> TrainerConfig {
-        TrainerConfig {
-            alpha: 0.0,
-            opt_on_ssd: false,
-            overlap: false,
-            ssd_path: std::env::temp_dir()
-                .join(format!("gs_trainer_{tag}_{}", std::process::id())),
-            ..Default::default()
-        }
+        TrainerConfig::for_test(tag)
     }
 
     #[test]

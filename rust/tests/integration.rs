@@ -16,13 +16,7 @@ use greedysnake::sim::{simulate, Schedule};
 use greedysnake::trainer::{train, RunLog, ScheduleKind};
 
 fn cfg(tag: &str) -> TrainerConfig {
-    TrainerConfig {
-        alpha: 0.0,
-        opt_on_ssd: false,
-        overlap: false,
-        ssd_path: std::env::temp_dir().join(format!("gs_itest_{tag}_{}", std::process::id())),
-        ..Default::default()
-    }
+    TrainerConfig::for_test(tag)
 }
 
 /// `None` (skip) when artifacts/PJRT are unavailable.
@@ -196,6 +190,124 @@ fn io_depth_gradient_equivalence_across_schedules() {
             );
         }
     }
+}
+
+/// The set of data-parallel worker counts the equivalence suite compares
+/// against the W = 1 baseline. CI's `--workers` matrix narrows it via
+/// `GS_TEST_WORKERS` (comma-separated) so each job pins one W.
+fn test_worker_set() -> Vec<usize> {
+    std::env::var("GS_TEST_WORKERS")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect::<Vec<usize>>())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4])
+}
+
+/// The data-parallel acceptance property: for every schedule × io-depth
+/// {0, 2} × W in the matrix, training is BIT-identical to the W = 1
+/// single-engine baseline — same losses, gradient norms, SSD byte totals,
+/// and (through the Σx² digests) the exact same parameters and optimizer
+/// moments. This is the determinism contract of `coordinator::dist`: the
+/// ring all-reduce replays the schedule's canonical accumulation order.
+#[test]
+fn dp_workers_bit_identical_to_single_engine() {
+    let kinds = [
+        ScheduleKind::Vertical,
+        ScheduleKind::ChunkedVertical(2),
+        ScheduleKind::Horizontal,
+    ];
+    for kind in kinds {
+        for depth in [0usize, 2] {
+            let mk = |w: usize| {
+                let tag = format!("dpw{w}_d{depth}_{kind}").replace(':', "_");
+                let mut c = cfg(&tag);
+                c.io_depth = depth;
+                c.workers = w;
+                c.opt_on_ssd = true;
+                c.ckpt_on_ssd = true;
+                c
+            };
+            let Some(base) = run("dp_base", kind, mk(1), 4, 4) else { return };
+            assert!(base.ssd_read > 0, "{kind:?}: offloaded run must touch the SSD");
+            for w in test_worker_set() {
+                let log = run("dp_w", kind, mk(w), 4, 4).unwrap();
+                assert_eq!(
+                    base.losses, log.losses,
+                    "{kind:?} depth {depth} W={w}: losses diverged"
+                );
+                assert_eq!(
+                    base.grad_norms, log.grad_norms,
+                    "{kind:?} depth {depth} W={w}: grad norms diverged"
+                );
+                assert_eq!(
+                    base.ssd_read, log.ssd_read,
+                    "{kind:?} depth {depth} W={w}: SSD read totals diverged"
+                );
+                assert_eq!(
+                    base.ssd_written, log.ssd_written,
+                    "{kind:?} depth {depth} W={w}: SSD write totals diverged"
+                );
+                assert_eq!(
+                    base.param_sq_norm.to_bits(),
+                    log.param_sq_norm.to_bits(),
+                    "{kind:?} depth {depth} W={w}: parameters diverged"
+                );
+                assert_eq!(
+                    base.moment_sq_norm.to_bits(),
+                    log.moment_sq_norm.to_bits(),
+                    "{kind:?} depth {depth} W={w}: optimizer moments diverged"
+                );
+                if w > 1 {
+                    assert!(
+                        log.allreduce_bytes > 0,
+                        "{kind:?} W={w}: the ring moved no bytes"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The delayed-α split composes with data parallelism: the shared
+/// coordinator makes every worker's first forward visit of a layer wait on
+/// its pending delayed update, so W = 2 stays bit-identical to W = 1 even
+/// at α > 0 (where update/compute overlap is at its most tangled).
+#[test]
+fn dp_workers_bit_identical_under_alpha_delay() {
+    let mk = |w: usize| {
+        let mut c = cfg(&format!("dpa_{w}"));
+        c.alpha = 0.25;
+        c.opt_on_ssd = true;
+        c.workers = w;
+        c
+    };
+    let Some(base) = run("dpa1", ScheduleKind::Vertical, mk(1), 6, 4) else { return };
+    let two = run("dpa2", ScheduleKind::Vertical, mk(2), 6, 4).unwrap();
+    assert_eq!(base.losses, two.losses, "α-delay losses diverged at W=2");
+    assert_eq!(base.grad_norms, two.grad_norms);
+    assert_eq!(base.param_sq_norm.to_bits(), two.param_sq_norm.to_bits());
+    assert_eq!(base.moment_sq_norm.to_bits(), two.moment_sq_norm.to_bits());
+}
+
+/// Worker-level stall accounting must stay consistent on a throttled
+/// shared SSD: the aggregate `io_stall_s` is exactly the sum of the
+/// per-worker shares, and every configured worker gets an entry.
+#[test]
+fn dp_worker_stall_accounting_sums_consistently() {
+    let mut c = cfg("dpstall");
+    c.workers = 2;
+    c.ckpt_on_ssd = true;
+    c.ssd_read_bps = 3e6;
+    c.ssd_write_bps = 3e6;
+    let Some(log) = run("dpstall", ScheduleKind::Vertical, c, 3, 4) else { return };
+    assert_eq!(log.worker_stall_s.len(), 2);
+    let sum: f64 = log.worker_stall_s.iter().sum();
+    assert!(
+        (sum - log.io_stall_s).abs() <= 1e-9 * (1.0 + log.io_stall_s.abs()),
+        "per-worker stalls {sum} must sum to the aggregate {}",
+        log.io_stall_s
+    );
+    assert!(log.io_stall_s > 0.0, "a throttled offloaded run must stall");
 }
 
 /// On a throttled SSD with checkpoints offloaded, the lookahead pipeline

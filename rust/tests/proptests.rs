@@ -3,6 +3,7 @@
 //! batching (gradient accumulation), state placement (LP constraints,
 //! packing), and the discrete-event engine.
 
+use greedysnake::coordinator::dist::{partition, ring_traffic_bytes, RingReduce};
 use greedysnake::coordinator::VerticalScheduler;
 use greedysnake::lp::simplex::{LinProg, LpOutcome};
 use greedysnake::lp::solve_config;
@@ -105,6 +106,163 @@ fn prop_lp_solutions_respect_constraints() {
         // LP times are at least the compute lower bounds
         if res.t_f < m as f64 * sp.t_fwd_mb() - 1e-9 {
             return Err("t_f below compute bound".into());
+        }
+        Ok(())
+    });
+}
+
+/// Ring all-reduce: for arbitrary tensor lengths, contribution counts, and
+/// chunk splits, the deterministic chunked ring equals the straight
+/// left-fold sum bit-for-bit — chunking is element-local, so it cannot
+/// perturb the fixed reduction order.
+#[test]
+fn prop_ring_all_reduce_equals_straight_sum() {
+    check("ring-sum", 120, |rng| {
+        let n = gen::usize_in(rng, 1, 400);
+        let k = gen::usize_in(rng, 1, 9);
+        let parts: Vec<Vec<f32>> = (0..k).map(|_| gen::vec_f32(rng, n, 2.0)).collect();
+        let refs: Vec<&[f32]> = parts.iter().map(|v| v.as_slice()).collect();
+        let mut want = parts[0].clone();
+        for p in &parts[1..] {
+            for (a, b) in want.iter_mut().zip(p) {
+                *a += b;
+            }
+        }
+        for _ in 0..3 {
+            let chunk = gen::usize_in(rng, 1, n + 16);
+            let got = RingReduce { chunk_elems: chunk }.reduce(&refs);
+            if got.len() != n {
+                return Err(format!("length {} != {n}", got.len()));
+            }
+            for i in 0..n {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!(
+                        "chunk={chunk} i={i}: {} != {} (bits differ)",
+                        got[i], want[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Ring all-reduce: the engine's reduce pipeline is invariant to worker
+/// COMPLETION order. Mirrors `DataParallelEngine::step`'s structure — the
+/// canonically-tagged contributions are partitioned into contiguous worker
+/// shares, the workers' lists are merged in a RANDOM completion order,
+/// sorted by canonical tag, and ring-folded — and the result must equal an
+/// independently computed straight sum in canonical tag order, bit for bit,
+/// for every completion permutation.
+#[test]
+fn prop_ring_reduce_invariant_to_completion_order() {
+    check("ring-order", 80, |rng| {
+        let n = gen::usize_in(rng, 1, 200);
+        let k = gen::usize_in(rng, 1, 8);
+        let parts: Vec<Vec<f32>> = (0..k).map(|_| gen::vec_f32(rng, n, 1.0)).collect();
+        // independent baseline: sequential left-fold in canonical tag order
+        let mut want = parts[0].clone();
+        for p in &parts[1..] {
+            for (a, b) in want.iter_mut().zip(p) {
+                *a += b;
+            }
+        }
+        // contiguous worker shares of the tag space, arriving in a random
+        // completion order
+        let workers = gen::usize_in(rng, 1, k);
+        let mut order: Vec<std::ops::Range<usize>> = partition(k, workers);
+        rng.shuffle(&mut order);
+        let mut tagged: Vec<(usize, &[f32])> = Vec::with_capacity(k);
+        for share in &order {
+            tagged.extend(share.clone().map(|i| (i, parts[i].as_slice())));
+        }
+        // the engine's recovery step: sort by canonical tag, then fold
+        tagged.sort_by_key(|&(i, _)| i);
+        let refs: Vec<&[f32]> = tagged.iter().map(|&(_, p)| p).collect();
+        let ring = RingReduce { chunk_elems: gen::usize_in(rng, 1, n + 4) };
+        let got = ring.reduce(&refs);
+        for i in 0..n {
+            if got[i].to_bits() != want[i].to_bits() {
+                return Err(format!(
+                    "i={i}: completion order {order:?} changed the result"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The micro-batch partition: contiguous, covering, balanced to within one
+/// micro-batch, for any (m, workers).
+#[test]
+fn prop_partition_contiguous_and_balanced() {
+    check("dp-partition", 100, |rng| {
+        let m = gen::usize_in(rng, 0, 64);
+        let w = gen::usize_in(rng, 1, 12);
+        let parts = partition(m, w);
+        if parts.len() != w {
+            return Err(format!("{} ranges for {w} workers", parts.len()));
+        }
+        let mut next = 0;
+        for r in &parts {
+            if r.start != next {
+                return Err(format!("gap before {r:?}"));
+            }
+            next = r.end;
+        }
+        if next != m {
+            return Err(format!("covered {next} of {m}"));
+        }
+        let sizes: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+        let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        if hi - lo > 1 {
+            return Err(format!("unbalanced {sizes:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Multi-worker traffic closed forms: W = 1 collapses EXACTLY to the
+/// single-worker forms, shares always cover M, vertical parameter traffic
+/// scales with the active worker count, horizontal's total is W-invariant,
+/// and the ring formula is 0 at W = 1.
+#[test]
+fn prop_traffic_dp_collapses_to_single_worker() {
+    check("traffic-dp", 60, |rng| {
+        let model = ModelCfg::new("t", 4 + rng.next_below(60), 8, 512 * (1 + rng.next_below(16)));
+        let w1 = Workload {
+            model,
+            micro_batch: 1 + rng.next_below(8),
+            seq_len: 512,
+            m: 1 + rng.next_below(32),
+            shards: 1,
+        };
+        let workers = 1 + rng.next_below(10);
+        if w1.vertical_dp(1) != w1.vertical()
+            || w1.horizontal_dp(1) != w1.horizontal()
+            || w1.chunked_vertical_dp(2, 1) != w1.chunked_vertical(2)
+        {
+            return Err("W=1 must collapse to the single-worker forms".into());
+        }
+        let shares = w1.dp_shares(workers);
+        if shares.iter().sum::<u64>() != w1.m {
+            return Err(format!("shares {shares:?} don't cover m={}", w1.m));
+        }
+        let active = shares.len() as u64;
+        if w1.vertical_dp(workers).param_load != active * 2 * w1.ms_lp() {
+            return Err("vertical param traffic must scale with active workers".into());
+        }
+        if w1.horizontal_dp(workers).param_load != w1.horizontal().param_load {
+            return Err("horizontal param traffic must be W-invariant".into());
+        }
+        if w1.allreduce_bytes_per_worker(1) != 0 {
+            return Err("no ring traffic for a single worker".into());
+        }
+        if workers > 1 && w1.allreduce_bytes_per_worker(workers) == 0 {
+            return Err("multi-worker ring traffic must be positive".into());
+        }
+        if ring_traffic_bytes(1, 1234) != 0 {
+            return Err("ring totals must vanish at one rank".into());
         }
         Ok(())
     });
