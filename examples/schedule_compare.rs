@@ -153,6 +153,57 @@ fn main() -> anyhow::Result<()> {
         );
         assert!(log.allreduce_bytes > 0, "workers={workers} moved no ring traffic");
     }
+
+    // --- sharded optimizer sweep: --shard-optimizer, W ∈ {1, 2, 4} --------
+    // ZeRO-style: reduce-scatter + per-rank shard updates + parameter
+    // all-gather. Must stay bit-identical to the unsharded W=1 baseline
+    // (the Adam update is partition-invariant), while W > 1 reports both
+    // reduce-scatter and all-gather ring traffic.
+    let mut s_logs: Vec<(usize, RunLog)> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let mut c = cfg(&format!("sh{workers}"), 0.25);
+        c.workers = workers;
+        c.shard_optimizer = true;
+        let log =
+            train(Manifest::load("artifacts/tiny")?, c, ScheduleKind::Vertical, steps, m, 0)?;
+        s_logs.push((workers, log));
+    }
+    let mut t = Table::new(
+        "shard-optimizer sweep — reduce-scatter + per-rank update + all-gather",
+        &["W", "final loss", "reduce-scatter bytes", "all-gather bytes"],
+    );
+    for (workers, log) in &s_logs {
+        t.row(&[
+            workers.to_string(),
+            format!("{:.4}", log.final_loss()),
+            greedysnake::util::stats::fmt_bytes(log.allreduce_bytes as f64),
+            greedysnake::util::stats::fmt_bytes(log.allgather_bytes as f64),
+        ]);
+    }
+    t.emit(None);
+    let base = &w_logs[0].1; // the unsharded W=1 run
+    assert_eq!(s_logs[0].1.allgather_bytes, 0, "W=1 must not all-gather");
+    for (workers, log) in &s_logs {
+        assert_eq!(
+            base.losses, log.losses,
+            "shard-optimizer W={workers} changed the loss trajectory"
+        );
+        assert_eq!(base.grad_norms, log.grad_norms, "shard W={workers} changed grad norms");
+        assert_eq!(
+            base.param_sq_norm.to_bits(),
+            log.param_sq_norm.to_bits(),
+            "shard-optimizer W={workers} changed the parameters"
+        );
+        assert_eq!(
+            base.moment_sq_norm.to_bits(),
+            log.moment_sq_norm.to_bits(),
+            "shard-optimizer W={workers} changed the optimizer moments"
+        );
+        if *workers > 1 {
+            assert!(log.allreduce_bytes > 0, "W={workers} reduce-scattered nothing");
+            assert!(log.allgather_bytes > 0, "W={workers} all-gathered nothing");
+        }
+    }
     println!("schedule_compare OK");
     Ok(())
 }

@@ -16,7 +16,7 @@ use greedysnake::lp;
 use greedysnake::machine::MACHINE2_A100;
 use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::{StorageRatios, SystemParams};
-use greedysnake::sim::{simulate_dist, Schedule, SimResult};
+use greedysnake::sim::{simulate_dist, DistConfig, Schedule, SimResult};
 use greedysnake::traffic::Workload;
 use greedysnake::util::json::Json;
 use greedysnake::util::table::Table;
@@ -52,14 +52,15 @@ fn main() {
         "Fig. 12 (scaling) — GPT-65B A100, W workers over shared SSDs (tokens/s)",
         &["W", "1 SSD", "speedup", "2 SSDs", "speedup", "all-reduce/worker"],
     );
-    let base1 = simulate_dist(&sp, m, sched, usize::MAX, 1, 1);
-    let base2 = simulate_dist(&sp, m, sched, usize::MAX, 1, 2);
+    let dist = |w: usize, ssds: usize| DistConfig { workers: w, ssds, ..DistConfig::default() };
+    let base1 = simulate_dist(&sp, m, sched, dist(1, 1));
+    let base2 = simulate_dist(&sp, m, sched, dist(1, 2));
     let mut shared: BTreeMap<String, Json> = BTreeMap::new();
     let mut dual: BTreeMap<String, Json> = BTreeMap::new();
     let mut last_speedup = 1.0;
     for w in [1usize, 2, 4] {
-        let one = simulate_dist(&sp, m, sched, usize::MAX, w, 1);
-        let two = simulate_dist(&sp, m, sched, usize::MAX, w, 2);
+        let one = simulate_dist(&sp, m, sched, dist(w, 1));
+        let two = simulate_dist(&sp, m, sched, dist(w, 2));
         let s1 = base1.t_iter / one.t_iter;
         let s2 = base2.t_iter / two.t_iter;
         t.row(&[

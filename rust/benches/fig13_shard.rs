@@ -1,0 +1,165 @@
+//! Fig. 13 (sharded-optimizer panel) — ZeRO-style sharded optimizer states
+//! vs the rank-0 optimizer at W ∈ {1, 2, 4}:
+//!
+//! * **simulated** (GPT-65B on the A100 node, `sim::simulate_dist`):
+//!   reduce-scatter + per-rank 1/W update + parameter all-gather against
+//!   the full rank-0 update, per-worker interconnect legs and SSD pairs;
+//! * **closed forms** (`traffic::Workload`): per-rank optimizer SSD round
+//!   trips — the acceptance property is that they scale ~1/W under
+//!   `--shard-optimizer` while the rank-0 path is W-invariant — plus the
+//!   reduce-scatter / all-gather ring totals;
+//! * **real runtime** (when the AOT artifacts are built): a short
+//!   `--shard-optimizer --workers 2` run must be bit-identical to the
+//!   `--workers 1` baseline (losses and Σx² parameter/moment digests).
+//!
+//! Emits `bench_out/fig13_shard.json` (uploaded as a CI artifact) plus a
+//! human-readable table.
+
+use std::collections::BTreeMap;
+
+use greedysnake::coordinator::TrainerConfig;
+use greedysnake::lp;
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::perfmodel::{StorageRatios, SystemParams};
+use greedysnake::sim::{simulate_dist, DistConfig, Schedule};
+use greedysnake::traffic::Workload;
+use greedysnake::trainer::{train, ScheduleKind};
+use greedysnake::util::json::Json;
+use greedysnake::util::table::Table;
+
+fn main() {
+    let m = 32u64;
+    let alpha = 0.3;
+    let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+    let x = lp::solve_config(&sp, m, alpha)
+        .map(|r| r.ratios)
+        .unwrap_or(StorageRatios::ALL_SSD);
+    let sched = Schedule::GreedySnake { alpha, x };
+    let wl = Workload { model: GPT_65B, micro_batch: 2, seq_len: SEQ_LEN, m, shards: 1 };
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("model".to_string(), Json::Str("gpt-65b".to_string()));
+    report.insert("machine".to_string(), Json::Str("a100".to_string()));
+    report.insert("schedule".to_string(), Json::Str(sched.kind_name()));
+    report.insert("m_global".to_string(), Json::Num(m as f64));
+    report.insert("alpha".to_string(), Json::Num(alpha));
+
+    let mut t = Table::new(
+        "Fig. 13 (sharded optimizer) — GPT-65B A100, rank-0 vs ZeRO-style sharded",
+        &[
+            "W",
+            "rank-0 tok/s",
+            "sharded tok/s",
+            "speedup",
+            "opt SSD/rank (rank-0)",
+            "opt SSD/rank (sharded)",
+            "reduce-scatter",
+            "all-gather",
+        ],
+    );
+    let mut per_w: BTreeMap<String, Json> = BTreeMap::new();
+    let full_rt = wl.opt_ssd_round_trip_bytes();
+    for w in [1usize, 2, 4] {
+        let base = DistConfig { workers: w, ssds: 1, ..DistConfig::default() };
+        let rank0 = simulate_dist(&sp, m, sched, base);
+        let sharded =
+            simulate_dist(&sp, m, sched, DistConfig { shard_optimizer: true, ..base });
+        let speedup = rank0.t_iter / sharded.t_iter;
+        let per_rank = wl.sharded_opt_ssd_bytes_per_rank(w as u64);
+        // the acceptance property: per-rank optimizer SSD bytes ~1/W
+        assert!(
+            per_rank <= full_rt / w as u64 + w as u64,
+            "W={w}: per-rank opt bytes {per_rank} not ~1/W of {full_rt}"
+        );
+        t.row(&[
+            w.to_string(),
+            format!("{:.0}", rank0.tokens_per_s),
+            format!("{:.0}", sharded.tokens_per_s),
+            format!("{speedup:.2}x"),
+            greedysnake::util::stats::fmt_bytes(full_rt as f64),
+            greedysnake::util::stats::fmt_bytes(per_rank as f64),
+            greedysnake::util::stats::fmt_bytes(wl.reduce_scatter_bytes_total(w as u64) as f64),
+            greedysnake::util::stats::fmt_bytes(wl.allgather_bytes_total(w as u64) as f64),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("rank0_t_iter_s".to_string(), Json::Num(rank0.t_iter));
+        o.insert("sharded_t_iter_s".to_string(), Json::Num(sharded.t_iter));
+        o.insert("rank0_tokens_per_s".to_string(), Json::Num(rank0.tokens_per_s));
+        o.insert("sharded_tokens_per_s".to_string(), Json::Num(sharded.tokens_per_s));
+        o.insert("speedup_sharded_vs_rank0".to_string(), Json::Num(speedup));
+        o.insert(
+            "opt_ssd_bytes_per_rank_rank0".to_string(),
+            Json::Num(full_rt as f64),
+        );
+        o.insert(
+            "opt_ssd_bytes_per_rank_sharded".to_string(),
+            Json::Num(per_rank as f64),
+        );
+        o.insert(
+            "reduce_scatter_bytes_total".to_string(),
+            Json::Num(wl.reduce_scatter_bytes_total(w as u64) as f64),
+        );
+        o.insert(
+            "allgather_bytes_total".to_string(),
+            Json::Num(wl.allgather_bytes_total(w as u64) as f64),
+        );
+        per_w.insert(w.to_string(), Json::Obj(o));
+    }
+    t.emit(Some("bench_out/fig13_shard.tsv"));
+    report.insert("workers".to_string(), Json::Obj(per_w));
+    println!(
+        "per-rank optimizer SSD round trip: {} at W=1 -> {} at W=4 (~1/W)",
+        greedysnake::util::stats::fmt_bytes(full_rt as f64),
+        greedysnake::util::stats::fmt_bytes(wl.sharded_opt_ssd_bytes_per_rank(4) as f64),
+    );
+
+    // ---- real-runtime equivalence leg (skips without AOT artifacts) ------
+    let runtime_status = match greedysnake::runtime::test_artifacts("artifacts/tiny") {
+        None => {
+            println!("runtime equivalence: skipped (artifacts/tiny not built)");
+            "skipped".to_string()
+        }
+        Some(_) => {
+            let mk = |tag: &str, workers: usize, shard: bool| TrainerConfig {
+                alpha: 0.25,
+                opt_on_ssd: true,
+                workers,
+                shard_optimizer: shard,
+                ssd_path: std::env::temp_dir()
+                    .join(format!("gs_f13sh_{tag}_{}", std::process::id())),
+                ..Default::default()
+            };
+            let manifest = || greedysnake::runtime::Manifest::load("artifacts/tiny").unwrap();
+            let base =
+                train(manifest(), mk("w1", 1, false), ScheduleKind::Vertical, 6, 4, 0).unwrap();
+            let sharded =
+                train(manifest(), mk("w2s", 2, true), ScheduleKind::Vertical, 6, 4, 0).unwrap();
+            assert_eq!(base.losses, sharded.losses, "sharded losses diverged");
+            assert_eq!(
+                base.param_sq_norm.to_bits(),
+                sharded.param_sq_norm.to_bits(),
+                "sharded parameters diverged"
+            );
+            assert_eq!(
+                base.moment_sq_norm.to_bits(),
+                sharded.moment_sq_norm.to_bits(),
+                "sharded optimizer moments diverged"
+            );
+            assert!(sharded.allgather_bytes > 0, "sharded run gathered nothing");
+            println!(
+                "runtime equivalence: W=2 sharded bit-identical to W=1 \
+                 (reduce-scatter {}, all-gather {})",
+                greedysnake::util::stats::fmt_bytes(sharded.allreduce_bytes as f64),
+                greedysnake::util::stats::fmt_bytes(sharded.allgather_bytes as f64),
+            );
+            "ok".to_string()
+        }
+    };
+    report.insert("runtime_equivalence".to_string(), Json::Str(runtime_status));
+
+    std::fs::create_dir_all("bench_out").expect("create bench_out");
+    let path = "bench_out/fig13_shard.json";
+    std::fs::write(path, Json::Obj(report).to_string_compact()).expect("write shard report");
+    println!("shard report -> {path}");
+}

@@ -47,6 +47,35 @@
 //! engine does, so clip accounting, gradient norms, and the α-split moment
 //! round trips are unchanged.
 //!
+//! ## Sharded optimizer states (`--shard-optimizer`)
+//!
+//! With [`TrainerConfig::shard_optimizer`](super::state::TrainerConfig),
+//! the rank-0 optimizer becomes ZeRO-style: the gradients *reduce-scatter*
+//! (each of the W ranks keeps only its contiguous element shard of the
+//! reduced gradient), each rank runs the eager/delayed Adam update on its
+//! own parameter shard through the shared
+//! [`OptimizerStepCoordinator`] (α split applied per shard, per-rank moment
+//! SSD objects — so CPU-optimizer work and per-rank optimizer SSD round
+//! trips shrink ~1/W), and the updated parameter shards *all-gather* before
+//! the next iteration's parameter prefetch
+//! ([`IoPipeline::prefetch_params`](super::io::IoPipeline) waits out the
+//! pending shard updates through the shared coordinator exactly as it waits
+//! the rank-0 update). The determinism contract is unchanged: the
+//! reduce-scatter reuses the SAME canonical-order left-fold per shard
+//! ([`RingReduce`] chunking is element-local), and the fused Adam update is
+//! partition-invariant, so `--shard-optimizer --workers W` stays
+//! bit-identical to `--workers 1` — including the `Σx²` parameter/moment
+//! digests — for every schedule, io-depth, and α. (The one caveat: with a
+//! *finite* `clip_norm`, a violation landing between a step's eager
+//! submission and its delayed dispatch changes which elements see the
+//! corrective scale; since sharding moves the eager/delayed boundary, exact
+//! bit-identity under sharding assumes the speculative scale is stable —
+//! `clip_norm = ∞`, the default, always is.) Sharding partitions optimizer
+//! state across ALL configured ranks (the process group), not just the
+//! ranks that own micro-batches, so the reduce-scatter/all-gather byte
+//! accounting uses the group size W while the unsharded all-reduce counts
+//! active workers.
+//!
 //! ## What is modeled vs real
 //!
 //! Worker *compute* is serialized on the one PJRT stream (PJRT handles are
@@ -149,11 +178,44 @@ fn pick<'t>(list: &'t [GradContrib], t: usize) -> Vec<&'t [f32]> {
 /// Total bytes a W-rank ring moves to all-reduce a `payload`-byte tensor:
 /// each rank sends 2·(W−1)/W·payload (reduce-scatter + all-gather), so the
 /// ring total is 2·(W−1)·payload. 0 for a single rank.
+///
+/// This is the single source of truth for ring byte accounting: the
+/// runtime engine, the discrete-event simulator
+/// ([`crate::sim::simulate_dist`]), and the analytic traffic model
+/// ([`crate::traffic::Workload`]) all derive their ring totals from this
+/// function and its two halves below, so the closed forms and the measured
+/// counters can never drift apart.
 pub fn ring_traffic_bytes(ranks: usize, payload: u64) -> u64 {
+    ring_reduce_scatter_bytes(ranks, payload) + ring_allgather_bytes(ranks, payload)
+}
+
+/// Total bytes a W-rank ring reduce-scatter moves: each rank sends
+/// (W−1)/W·payload, so the ring total is (W−1)·payload. 0 for one rank.
+pub fn ring_reduce_scatter_bytes(ranks: usize, payload: u64) -> u64 {
     if ranks <= 1 {
         0
     } else {
-        2 * (ranks as u64 - 1) * payload
+        (ranks as u64 - 1) * payload
+    }
+}
+
+/// Total bytes a W-rank ring all-gather moves: same (W−1)·payload as the
+/// reduce-scatter half (each rank receives the other W−1 shards).
+pub fn ring_allgather_bytes(ranks: usize, payload: u64) -> u64 {
+    ring_reduce_scatter_bytes(ranks, payload)
+}
+
+/// Fraction of a payload EACH rank's ring leg moves in one reduce-scatter
+/// (equally, one all-gather): (W−1)/W — the discrete-event simulator sizes
+/// its per-worker interconnect ops with this, so the sim's modeled ring
+/// traffic and the byte helpers above agree by construction
+/// (`ranks · frac · payload = (W−1) · payload`). A full all-reduce leg is
+/// twice this. 0 for a single rank.
+pub fn ring_leg_frac(ranks: usize) -> f64 {
+    if ranks <= 1 {
+        0.0
+    } else {
+        (ranks - 1) as f64 / ranks as f64
     }
 }
 
@@ -190,8 +252,10 @@ pub struct DistStepStats {
     /// SSD/param bytes and stalls summed across workers, plus the
     /// all-reduce time/traffic fields).
     pub stats: StepStats,
-    /// Per-worker compute-thread I/O stall seconds this step (one entry per
-    /// configured worker; idle workers report 0).
+    /// Per-worker compute-thread I/O stall seconds this step, one entry per
+    /// ACTIVE worker in rank order. Workers with an empty micro-batch
+    /// partition (W > M) do no work and get NO entry — reporting them as
+    /// genuine 0-stall workers would dilute per-worker averages.
     pub worker_stall_s: Vec<f64>,
 }
 
@@ -202,19 +266,35 @@ pub struct DistStepStats {
 pub struct DataParallelEngine<'a> {
     state: &'a ModelState,
     rt: &'a Runtime,
-    /// The one optimizer coordinator all workers share (rank 0's).
+    /// The one optimizer coordinator all workers share (rank 0's — or, with
+    /// `--shard-optimizer`, the coordinator that fans each update out over
+    /// the W per-rank shards).
     pub opt: Arc<OptimizerStepCoordinator>,
     workers: Vec<StepEngine<'a>>,
     ring: RingReduce,
+    /// ZeRO-style sharded optimizer states (see the module docs).
+    shard: bool,
     step: u64,
 }
 
 impl<'a> DataParallelEngine<'a> {
     /// Build `workers` worker engines sharing one optimizer coordinator.
     /// `workers == 1` is the degenerate case used to cross-check the
-    /// determinism contract against [`StepEngine::step`].
+    /// determinism contract against [`StepEngine::step`]. The sharded
+    /// optimizer path is taken when `state.cfg.shard_optimizer` is set and
+    /// `workers > 1`.
     pub fn new(state: &'a ModelState, rt: &'a Runtime, workers: usize) -> Result<Self> {
         let workers = workers.max(1);
+        if state.cfg.shard_optimizer && workers != state.cfg.workers.max(1) {
+            // the coordinator's shard layout (and the moment digest) derive
+            // from cfg.workers; a mismatched engine worker count would ring
+            // over one group size while updating another's shards
+            bail!(
+                "--shard-optimizer: engine worker count {workers} must equal \
+                 TrainerConfig.workers {}",
+                state.cfg.workers.max(1)
+            );
+        }
         let opt = OptimizerStepCoordinator::new(state);
         opt.seed_ssd(state)?;
         let opt = Arc::new(opt);
@@ -227,6 +307,7 @@ impl<'a> DataParallelEngine<'a> {
             opt,
             workers: engines,
             ring: RingReduce::default(),
+            shard: state.cfg.shard_optimizer && workers > 1,
             step: 0,
         })
     }
@@ -296,18 +377,37 @@ impl<'a> DataParallelEngine<'a> {
         // keeps its own I/O lanes and stall clock.
         let parts = partition(m, self.workers.len());
         let mut partials: Vec<WorkerPartial> = Vec::new();
-        let mut worker_stall_s = vec![0.0f64; self.workers.len()];
         for (w, range) in parts.iter().enumerate() {
             if range.is_empty() {
                 continue;
             }
             let p = self.workers[w].partial_step(schedule, tokens, targets, range.clone())?;
-            worker_stall_s[w] = p.io_stall_s;
             partials.push(p);
         }
         let active = partials.len();
+        // per-ACTIVE-worker stall shares, rank order (idle ranks get none)
+        let worker_stall_s: Vec<f64> = partials.iter().map(|p| p.io_stall_s).collect();
 
-        // ---------------- deterministic chunked ring all-reduce -----------
+        // Ring byte accounting: the unsharded all-reduce runs among the
+        // ACTIVE workers (idle ranks contribute nothing and receive
+        // nothing); the sharded reduce-scatter spans the whole group — every
+        // configured rank owns an optimizer shard and must receive its slice
+        // of the reduced gradient.
+        let shard = self.shard;
+        let group = self.workers.len();
+        let grad_ring_bytes = |payload: u64| {
+            if shard {
+                ring_reduce_scatter_bytes(group, payload)
+            } else {
+                ring_traffic_bytes(active, payload)
+            }
+        };
+
+        // ---------------- deterministic chunked ring reduce ----------------
+        // All-reduce on the rank-0 path; reduce-scatter under
+        // `--shard-optimizer` (same canonical-order left-fold — each rank
+        // simply keeps only its shard of the result, which cannot change a
+        // bit of it).
         let t_red = Instant::now();
         let mut allreduce_bytes = 0u64;
         // loss: left-fold in ascending micro-batch order (the single
@@ -339,7 +439,7 @@ impl<'a> DataParallelEngine<'a> {
             let lists: Vec<&Vec<HostTensor>> = contribs.iter().map(|(_, g)| g).collect();
             let grads = self.ring.reduce_tensors(&lists);
             for g in &grads {
-                allreduce_bytes += ring_traffic_bytes(active, g.bytes());
+                allreduce_bytes += grad_ring_bytes(g.bytes());
             }
             reduced[l] = Some(grads);
         }
@@ -375,14 +475,19 @@ impl<'a> DataParallelEngine<'a> {
             HostTensor { shape: emb[0].1[1].shape.clone(), data: self.ring.reduce(&parts) }
         };
         for t in [&dlnf_w, &dlnf_b, &dwte, &dwpe] {
+            // the embedding/head group stays unsharded (it updates like a
+            // single layer on the shared coordinator), so its gradients
+            // all-reduce among the active workers in both modes
             allreduce_bytes += ring_traffic_bytes(active, t.bytes());
         }
         let allreduce_s = t_red.elapsed().as_secs_f64();
 
-        // ---------------- rank-0 optimizer ---------------------------------
+        // ---------------- optimizer (rank-0 or per-rank sharded) -----------
         // Descending layer order — exactly the order the single engine's
         // eager (and deferred) submissions retire in — then the embedding
         // group, so clip accounting and the gradient norm are unchanged.
+        // Under `--shard-optimizer` the shared coordinator fans each
+        // submission out over the W per-rank shards (α split per shard).
         for l in (0..nl).rev() {
             let grads = reduced[l].take().expect("reduced gradients");
             self.opt.submit_eager(self.state, Some(self.rt), l, grads, self.step)?;
@@ -396,6 +501,19 @@ impl<'a> DataParallelEngine<'a> {
         }
         let grad_norm = self.opt.finish_iter();
 
+        // Sharded mode: the updated parameter shards all-gather so every
+        // rank holds the full updated model before the next iteration's
+        // parameter prefetch (the IoPipeline's `param-upload` lane waits out
+        // the pending shard updates through the shared coordinator, so the
+        // gather is ordered after them). Accounted to the step that produced
+        // the shards; params are f32 on this substrate.
+        let allgather_bytes = if shard {
+            let layer_params = nl as u64 * (self.state.manifest.layer_numel() * 4) as u64;
+            ring_allgather_bytes(group, layer_params)
+        } else {
+            0
+        };
+
         let mut stats = StepStats {
             loss: loss_sum / m as f64,
             grad_norm,
@@ -407,6 +525,7 @@ impl<'a> DataParallelEngine<'a> {
             io_stall_s: 0.0,
             allreduce_s,
             allreduce_bytes,
+            allgather_bytes,
         };
         for p in &partials {
             stats.param_bytes_loaded += p.param_bytes;
@@ -495,5 +614,24 @@ mod tests {
         assert_eq!(ring_traffic_bytes(1, 1000), 0);
         assert_eq!(ring_traffic_bytes(2, 1000), 2000);
         assert_eq!(ring_traffic_bytes(4, 1000), 6000);
+    }
+
+    /// The all-reduce is exactly reduce-scatter + all-gather, for every rank
+    /// count — the identity the sharded byte accounting rests on.
+    #[test]
+    fn ring_halves_sum_to_all_reduce() {
+        for ranks in 0..10usize {
+            for payload in [0u64, 1, 777, 1 << 20] {
+                assert_eq!(
+                    ring_reduce_scatter_bytes(ranks, payload)
+                        + ring_allgather_bytes(ranks, payload),
+                    ring_traffic_bytes(ranks, payload),
+                    "ranks={ranks} payload={payload}"
+                );
+            }
+        }
+        assert_eq!(ring_reduce_scatter_bytes(4, 1000), 3000);
+        assert_eq!(ring_allgather_bytes(4, 1000), 3000);
+        assert_eq!(ring_reduce_scatter_bytes(1, 1000), 0);
     }
 }

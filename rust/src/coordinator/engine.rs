@@ -70,8 +70,15 @@ pub struct StepStats {
     /// single-worker engine.
     pub allreduce_s: f64,
     /// Ring traffic the all-reduce moved this step, summed across ranks
-    /// (2·(W−1)·payload for W active workers). 0 on the single-worker engine.
+    /// (2·(W−1)·payload for W active workers). Under `--shard-optimizer`
+    /// this counts the gradient *reduce-scatter* ((W−1)·payload over the
+    /// whole group) instead. 0 on the single-worker engine.
     pub allreduce_bytes: u64,
+    /// Ring traffic of the parameter all-gather that republishes the
+    /// per-rank updated shards under `--shard-optimizer` ((W−1)·param
+    /// payload, performed before the next iteration's prefetch). 0 on the
+    /// single-worker engine and the rank-0 (unsharded) optimizer path.
+    pub allgather_bytes: u64,
 }
 
 /// Accumulate into an optional buffer.
@@ -422,6 +429,7 @@ impl<'a> StepEngine<'a> {
             io_stall_s: io1.stall_seconds - io0.stall_seconds,
             allreduce_s: 0.0,
             allreduce_bytes: 0,
+            allgather_bytes: 0,
         })
     }
 

@@ -25,6 +25,16 @@
 //! this boundary — a panicked op poisons the executor
 //! ([`LaneExecutor::try_wait`]) instead of unwinding or deadlocking the
 //! compute thread.
+//!
+//! Under `--shard-optimizer`
+//! ([`super::dist`]), the `param-upload` lane is also where the parameter
+//! *all-gather* ordering lives: a prefetched load waits out the layer's
+//! pending optimizer updates through the shared coordinator, and in sharded
+//! mode those pending handles cover every rank's shard update — so by the
+//! time the snapshot is taken, the per-rank updated shards have been
+//! republished into the full parameter tensor (host memory plays the
+//! gathered copy; [`crate::coordinator::StepStats::allgather_bytes`]
+//! accounts the ring traffic a real multi-GPU gather would move).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};

@@ -43,6 +43,12 @@
 //! shared throttled SSD) and combines gradients with a deterministic
 //! chunked ring all-reduce whose fixed reduction order makes every W
 //! bit-identical to W = 1 — see [`dist`]'s module docs for the contract.
+//! `--shard-optimizer` turns the rank-0 optimizer into ZeRO-style
+//! partitioned states: the ring becomes a reduce-scatter, every rank
+//! updates its contiguous 1/W parameter shard through the shared
+//! [`opt::OptimizerStepCoordinator`] (α split per shard, per-rank moment
+//! SSD objects), and the updated shards all-gather before the next
+//! iteration's prefetch — same bit-identity contract.
 
 pub mod ckpt;
 pub mod dist;

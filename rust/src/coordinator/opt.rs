@@ -7,6 +7,25 @@
 //! the backward pass (Fig. 7), the *delayed* part `[split, n)` during the
 //! next iteration's forward (Fig. 8) — so each part round-trips exactly its
 //! own bytes, like the paper's partial-state transfers.
+//!
+//! ## ZeRO-style sharding (`--shard-optimizer`)
+//!
+//! With [`TrainerConfig::shard_optimizer`] and `workers > 1`, every tensor's
+//! element space is partitioned contiguously across the W ranks (the same
+//! [`partition`](super::dist::partition) policy the micro-batches use), each
+//! rank owns and updates only its shard, and the α split applies *per
+//! shard* — rank r's eager part is the first (1−α) of r's shard, its
+//! delayed tail the rest, so every rank keeps an optimizer/forward overlap
+//! share (guaranteed non-empty by [`delay_split`]'s ceil rounding). The SSD
+//! layout becomes one (rank, part) object per moment vector
+//! ([`shard_part_key`]), so a rank's round trip moves ~1/W of the bytes the
+//! rank-0 path moves. [`submit_eager`](OptimizerStepCoordinator::submit_eager)
+//! and [`dispatch_delayed`](OptimizerStepCoordinator::dispatch_delayed) keep
+//! their signatures: callers hand over full reduced gradients and the
+//! coordinator fans the update out over the ranks internally. Because the
+//! fused Adam expression is partition-invariant (§6.5; property-tested in
+//! `optimizer::tests`), the sharded update is element-for-element
+//! bit-identical to the unsharded one.
 
 use std::sync::{Arc, Mutex};
 
@@ -36,6 +55,22 @@ pub fn part_key(layer: usize, tensor: usize, kind: char, part: Part) -> String {
     format!("opt_{kind}_l{layer}_t{tensor}_{suffix}")
 }
 
+/// SSD key for rank `rank`'s split moment object in the sharded
+/// (`--shard-optimizer`) layout.
+pub fn shard_part_key(
+    layer: usize,
+    tensor: usize,
+    kind: char,
+    rank: usize,
+    part: Part,
+) -> String {
+    let suffix = match part {
+        Part::Eager => "e",
+        Part::Delayed => "d",
+    };
+    format!("opt_{kind}_l{layer}_t{tensor}_r{rank}_{suffix}")
+}
+
 /// Pending update handles for one layer.
 #[derive(Default)]
 struct LayerPending {
@@ -52,36 +87,58 @@ pub struct OptimizerStepCoordinator {
     embed_pending: Mutex<Option<TaskHandle<()>>>,
     pub clip: Mutex<ClipMonitor>,
     cfg: TrainerConfig,
+    /// Optimizer-state shard count: `cfg.workers` under `--shard-optimizer`
+    /// (every rank owns a contiguous element shard of each tensor), else 1
+    /// (the rank-0 path — one whole-tensor update).
+    shards: usize,
 }
 
 impl OptimizerStepCoordinator {
     pub fn new(state: &ModelState) -> Self {
         let nl = state.manifest.config.n_layers;
+        let shards = if state.cfg.shard_optimizer { state.cfg.workers.max(1) } else { 1 };
         OptimizerStepCoordinator {
             pool: ThreadPool::new(1), // one CPU-optimizer lane, like cpu_adam
             pending: (0..nl).map(|_| Mutex::new(LayerPending::default())).collect(),
             embed_pending: Mutex::new(None),
             clip: Mutex::new(ClipMonitor::new(state.cfg.clip_norm)),
             cfg: state.cfg.clone(),
+            shards,
         }
     }
 
+    /// Optimizer-state shard count (1 on the unsharded rank-0 path).
+    pub fn n_shards(&self) -> usize {
+        self.shards
+    }
+
     /// Seed the split SSD objects for all layers (called once at startup
-    /// when `opt_on_ssd`).
+    /// when `opt_on_ssd`): one (eager, delayed) object pair per tensor, or
+    /// one pair per (rank, tensor) in the sharded layout. Only non-empty
+    /// parts get an object — exactly the parts
+    /// [`shard_part_range`] reports non-empty, so the update paths never
+    /// read a missing key.
     pub fn seed_ssd(&self, state: &ModelState) -> Result<()> {
         if !self.cfg.opt_on_ssd {
             return Ok(());
         }
         for l in 0..state.manifest.config.n_layers {
             for (t, spec) in state.manifest.layer_params.iter().enumerate() {
-                let split = delay_split(spec.numel, self.cfg.alpha);
-                for kind in ['m', 'v'] {
-                    state.ssd.put_f32(&part_key(l, t, kind, Part::Eager), &vec![0.0; split])?;
-                    if spec.numel > split {
-                        state.ssd.put_f32(
-                            &part_key(l, t, kind, Part::Delayed),
-                            &vec![0.0; spec.numel - split],
-                        )?;
+                for r in 0..self.shards {
+                    for part in [Part::Eager, Part::Delayed] {
+                        let (lo, hi) =
+                            shard_part_range(spec.numel, self.cfg.alpha, r, self.shards, part);
+                        if lo == hi {
+                            continue;
+                        }
+                        for kind in ['m', 'v'] {
+                            let key = if self.shards > 1 {
+                                shard_part_key(l, t, kind, r, part)
+                            } else {
+                                part_key(l, t, kind, part)
+                            };
+                            state.ssd.put_f32(&key, &vec![0.0; hi - lo])?;
+                        }
                     }
                 }
             }
@@ -91,7 +148,10 @@ impl OptimizerStepCoordinator {
 
     /// Submit the eager (1-α) update for layer `l` with its freshly
     /// accumulated gradients. Overlaps on the worker unless configured
-    /// inline. The gradients are retained for the delayed part.
+    /// inline. The gradients are retained for the delayed part. In sharded
+    /// mode the update fans out over the W per-rank shards (disjoint element
+    /// ranges of the same tensors — partition-invariant, so results match
+    /// the whole-tensor update bit for bit).
     pub fn submit_eager(
         &self,
         state: &ModelState,
@@ -100,7 +160,8 @@ impl OptimizerStepCoordinator {
         grads: Vec<HostTensor>,
         step: u64,
     ) -> Result<()> {
-        // speculative-clip accounting happens as gradients arrive
+        // speculative-clip accounting happens as gradients arrive — once per
+        // tensor, sharded or not (the global-norm bookkeeping is unsharded)
         {
             let mut clip = self.clip.lock().unwrap();
             for g in &grads {
@@ -111,11 +172,12 @@ impl OptimizerStepCoordinator {
         let grads = Arc::new(grads);
         let mut pend = self.pending[l].lock().unwrap();
         pend.held_grads = Some(Arc::clone(&grads));
+        let shards = self.shards;
 
         if self.cfg.use_hlo_adam {
             // PJRT is not Send: run inline through the AOT kernel.
             let rt = rt.expect("use_hlo_adam requires a Runtime");
-            apply_update_hlo(state, rt, l, &grads, step, scale, Part::Eager, &self.cfg)?;
+            apply_update_hlo(state, rt, l, &grads, step, scale, shards, Part::Eager, &self.cfg)?;
             pend.eager = None;
         } else if self.cfg.overlap {
             let params = Arc::clone(&state.layers[l]);
@@ -124,8 +186,10 @@ impl OptimizerStepCoordinator {
             let cfg = self.cfg.clone();
             let g2 = Arc::clone(&grads);
             pend.eager = Some(self.pool.submit(move || {
-                apply_update_rust(&params, &opts, &ssd, l, &g2, step, scale, Part::Eager, &cfg)
-                    .expect("eager optimizer update");
+                apply_update_rust(
+                    &params, &opts, &ssd, l, &g2, step, scale, shards, Part::Eager, &cfg,
+                )
+                .expect("eager optimizer update");
             }));
         } else {
             apply_update_rust(
@@ -136,6 +200,7 @@ impl OptimizerStepCoordinator {
                 &grads,
                 step,
                 scale,
+                shards,
                 Part::Eager,
                 &self.cfg,
             )?;
@@ -145,7 +210,9 @@ impl OptimizerStepCoordinator {
     }
 
     /// Dispatch all delayed (α) updates — called at the start of the next
-    /// iteration so they overlap its forward pass (Fig. 8).
+    /// iteration so they overlap its forward pass (Fig. 8). Sharded mode
+    /// dispatches every rank's delayed tail (each rank delays the α-fraction
+    /// of its own shard).
     pub fn dispatch_delayed(
         &self,
         state: &ModelState,
@@ -155,6 +222,7 @@ impl OptimizerStepCoordinator {
         if self.cfg.alpha <= 0.0 {
             return Ok(());
         }
+        let shards = self.shards;
         for l in 0..state.manifest.config.n_layers {
             let mut pend = self.pending[l].lock().unwrap();
             let Some(grads) = pend.held_grads.take() else {
@@ -163,7 +231,9 @@ impl OptimizerStepCoordinator {
             let scale = self.clip.lock().unwrap().speculative_scale();
             if self.cfg.use_hlo_adam {
                 let rt = rt.expect("use_hlo_adam requires a Runtime");
-                apply_update_hlo(state, rt, l, &grads, step, scale, Part::Delayed, &self.cfg)?;
+                apply_update_hlo(
+                    state, rt, l, &grads, step, scale, shards, Part::Delayed, &self.cfg,
+                )?;
             } else if self.cfg.overlap {
                 let params = Arc::clone(&state.layers[l]);
                 let opts = Arc::clone(&state.layer_opt[l]);
@@ -171,7 +241,8 @@ impl OptimizerStepCoordinator {
                 let cfg = self.cfg.clone();
                 pend.delayed = Some(self.pool.submit(move || {
                     apply_update_rust(
-                        &params, &opts, &ssd, l, &grads, step, scale, Part::Delayed, &cfg,
+                        &params, &opts, &ssd, l, &grads, step, scale, shards, Part::Delayed,
+                        &cfg,
                     )
                     .expect("delayed optimizer update");
                 }));
@@ -184,6 +255,7 @@ impl OptimizerStepCoordinator {
                     &grads,
                     step,
                     scale,
+                    shards,
                     Part::Delayed,
                     &self.cfg,
                 )?;
@@ -261,16 +333,47 @@ impl OptimizerStepCoordinator {
     }
 }
 
-/// Range covered by a part for a tensor of `n` elements.
-fn part_range(n: usize, alpha: f64, part: Part) -> (usize, usize) {
-    let split = delay_split(n, alpha);
+/// Element range covered by rank `rank`'s `part` for a tensor of `n`
+/// elements sharded `shards` ways: the tensor partitions contiguously
+/// across ranks — the same balanced split
+/// [`partition`](super::dist::partition) produces, computed in closed form
+/// here because this sits on the per-(layer, tensor, rank, part) optimizer
+/// hot path (equality with `partition` is unit-tested) — and the α split
+/// applies within each rank's shard. At
+/// `shards == 1` this is exactly the historical global α split
+/// (`Eager = [0, split)`, `Delayed = [split, n)`).
+pub fn shard_part_range(
+    n: usize,
+    alpha: f64,
+    rank: usize,
+    shards: usize,
+    part: Part,
+) -> (usize, usize) {
+    let w = shards.max(1);
+    let (base, extra) = (n / w, n % w);
+    let start = rank * base + rank.min(extra);
+    let end = start + base + usize::from(rank < extra);
+    let split = start + delay_split(end - start, alpha);
     match part {
-        Part::Eager => (0, split),
-        Part::Delayed => (split, n),
+        Part::Eager => (start, split),
+        Part::Delayed => (split, end),
     }
 }
 
-/// The Send-safe Rust update path (runs on the worker).
+/// SSD key for the (rank, part) moment object — the sharded layout when
+/// `shards > 1`, the historical global layout otherwise.
+fn moment_key(l: usize, t: usize, kind: char, rank: usize, shards: usize, part: Part) -> String {
+    if shards > 1 {
+        shard_part_key(l, t, kind, rank, part)
+    } else {
+        part_key(l, t, kind, part)
+    }
+}
+
+/// The Send-safe Rust update path (runs on the worker). Covers `part` of
+/// every tensor across ALL `shards` rank shards (the rank fan-out lives
+/// here, so every call site updates the whole tensor's share of `part`;
+/// `shards = 1` is the whole-tensor rank-0 path).
 #[allow(clippy::too_many_arguments)]
 fn apply_update_rust(
     params: &Arc<Mutex<Vec<HostTensor>>>,
@@ -280,47 +383,62 @@ fn apply_update_rust(
     grads: &Arc<Vec<HostTensor>>,
     step: u64,
     scale: f32,
+    shards: usize,
     part: Part,
     cfg: &TrainerConfig,
 ) -> Result<()> {
     let hp: AdamParams = cfg.adam;
+    let shards = shards.max(1);
     let mut pguard = params.lock().unwrap();
     for (t, g) in grads.iter().enumerate() {
         let n = g.numel();
-        let (lo, hi) = part_range(n, cfg.alpha, part);
-        if lo == hi {
-            continue;
-        }
-        if cfg.opt_on_ssd {
-            // round-trip exactly this part's bytes through the throttled SSD
-            let key_m = part_key(l, t, 'm', part);
-            let key_v = part_key(l, t, 'v', part);
-            let mut m = Vec::new();
-            let mut v = Vec::new();
-            ssd.get_f32(&key_m, &mut m)?;
-            ssd.get_f32(&key_v, &mut v)?;
-            let mut st = AdamState { m, v };
-            adam_step_rust(
-                &mut pguard[t].data[lo..hi],
-                &mut st,
-                &g.data[lo..hi],
-                &hp,
-                step,
-                scale,
-                0,
-                hi - lo,
-            );
-            ssd.put_f32(&key_m, &st.m)?;
-            ssd.put_f32(&key_v, &st.v)?;
-        } else {
-            let mut oguard = opts.lock().unwrap();
-            adam_step_rust(&mut pguard[t].data, &mut oguard[t], &g.data, &hp, step, scale, lo, hi);
+        for rank in 0..shards {
+            let (lo, hi) = shard_part_range(n, cfg.alpha, rank, shards, part);
+            if lo == hi {
+                continue;
+            }
+            if cfg.opt_on_ssd {
+                // round-trip exactly this part's bytes through the throttled
+                // SSD (~1/W of the tensor per rank in sharded mode)
+                let key_m = moment_key(l, t, 'm', rank, shards, part);
+                let key_v = moment_key(l, t, 'v', rank, shards, part);
+                let mut m = Vec::new();
+                let mut v = Vec::new();
+                ssd.get_f32(&key_m, &mut m)?;
+                ssd.get_f32(&key_v, &mut v)?;
+                let mut st = AdamState { m, v };
+                adam_step_rust(
+                    &mut pguard[t].data[lo..hi],
+                    &mut st,
+                    &g.data[lo..hi],
+                    &hp,
+                    step,
+                    scale,
+                    0,
+                    hi - lo,
+                );
+                ssd.put_f32(&key_m, &st.m)?;
+                ssd.put_f32(&key_v, &st.v)?;
+            } else {
+                let mut oguard = opts.lock().unwrap();
+                adam_step_rust(
+                    &mut pguard[t].data,
+                    &mut oguard[t],
+                    &g.data,
+                    &hp,
+                    step,
+                    scale,
+                    lo,
+                    hi,
+                );
+            }
         }
     }
     Ok(())
 }
 
-/// The inline AOT-kernel path (PJRT not Send).
+/// The inline AOT-kernel path (PJRT not Send). Same part coverage and rank
+/// fan-out as [`apply_update_rust`].
 #[allow(clippy::too_many_arguments)]
 fn apply_update_hlo(
     state: &ModelState,
@@ -329,54 +447,58 @@ fn apply_update_hlo(
     grads: &Arc<Vec<HostTensor>>,
     step: u64,
     scale: f32,
+    shards: usize,
     part: Part,
     cfg: &TrainerConfig,
 ) -> Result<()> {
     let chunk = state.manifest.config.adam_chunk;
+    let shards = shards.max(1);
     let mut pguard = state.layers[l].lock().unwrap();
     for (t, g) in grads.iter().enumerate() {
         let n = g.numel();
-        let (lo, hi) = part_range(n, cfg.alpha, part);
-        if lo == hi {
-            continue;
-        }
-        if cfg.opt_on_ssd {
-            let key_m = part_key(l, t, 'm', part);
-            let key_v = part_key(l, t, 'v', part);
-            let mut m = Vec::new();
-            let mut v = Vec::new();
-            state.ssd.get_f32(&key_m, &mut m)?;
-            state.ssd.get_f32(&key_v, &mut v)?;
-            let mut st = AdamState { m, v };
-            let len = hi - lo;
-            adam_step_hlo(
-                rt,
-                chunk,
-                &mut pguard[t].data[lo..hi],
-                &mut st,
-                &g.data[lo..hi],
-                &cfg.adam,
-                step,
-                scale,
-                0,
-                len,
-            )?;
-            state.ssd.put_f32(&key_m, &st.m)?;
-            state.ssd.put_f32(&key_v, &st.v)?;
-        } else {
-            let mut oguard = state.layer_opt[l].lock().unwrap();
-            adam_step_hlo(
-                rt,
-                chunk,
-                &mut pguard[t].data,
-                &mut oguard[t],
-                &g.data,
-                &cfg.adam,
-                step,
-                scale,
-                lo,
-                hi,
-            )?;
+        for rank in 0..shards {
+            let (lo, hi) = shard_part_range(n, cfg.alpha, rank, shards, part);
+            if lo == hi {
+                continue;
+            }
+            if cfg.opt_on_ssd {
+                let key_m = moment_key(l, t, 'm', rank, shards, part);
+                let key_v = moment_key(l, t, 'v', rank, shards, part);
+                let mut m = Vec::new();
+                let mut v = Vec::new();
+                state.ssd.get_f32(&key_m, &mut m)?;
+                state.ssd.get_f32(&key_v, &mut v)?;
+                let mut st = AdamState { m, v };
+                let len = hi - lo;
+                adam_step_hlo(
+                    rt,
+                    chunk,
+                    &mut pguard[t].data[lo..hi],
+                    &mut st,
+                    &g.data[lo..hi],
+                    &cfg.adam,
+                    step,
+                    scale,
+                    0,
+                    len,
+                )?;
+                state.ssd.put_f32(&key_m, &st.m)?;
+                state.ssd.put_f32(&key_v, &st.v)?;
+            } else {
+                let mut oguard = state.layer_opt[l].lock().unwrap();
+                adam_step_hlo(
+                    rt,
+                    chunk,
+                    &mut pguard[t].data,
+                    &mut oguard[t],
+                    &g.data,
+                    &cfg.adam,
+                    step,
+                    scale,
+                    lo,
+                    hi,
+                )?;
+            }
         }
     }
     Ok(())
@@ -468,6 +590,97 @@ mod tests {
         coord.wait_layer(0);
         let after = state.layers[0].lock().unwrap().clone();
         assert_ne!(mid[t].data[split..], after[t].data[split..]);
+    }
+
+    /// `shard_part_range` pure-function invariants: for any (n, α, W), the
+    /// rank × part ranges are disjoint, ascending, cover `[0, n)` exactly,
+    /// and tile the SAME rank boundaries as `dist::partition` (the closed
+    /// form exists only to avoid the hot-path Vec allocation); at W = 1
+    /// they reproduce the historical global α split.
+    #[test]
+    fn shard_part_range_partitions_exactly() {
+        for n in [0usize, 1, 2, 3, 7, 64, 1000] {
+            for alpha in [0.0, 0.25, 0.5] {
+                for shards in [1usize, 2, 3, 4, 8] {
+                    let ranges = crate::coordinator::dist::partition(n, shards);
+                    let mut next = 0;
+                    for r in 0..shards {
+                        for part in [Part::Eager, Part::Delayed] {
+                            let (lo, hi) = shard_part_range(n, alpha, r, shards, part);
+                            assert!(lo <= hi, "n={n} α={alpha} W={shards} r={r}");
+                            assert_eq!(lo, next, "gap at n={n} α={alpha} W={shards} r={r}");
+                            next = hi;
+                        }
+                        // rank boundaries match dist::partition exactly
+                        let (elo, _) = shard_part_range(n, alpha, r, shards, Part::Eager);
+                        let (dlo, dhi) = shard_part_range(n, alpha, r, shards, Part::Delayed);
+                        assert_eq!(elo, ranges[r].start, "n={n} W={shards} r={r}");
+                        assert_eq!(dhi, ranges[r].end, "n={n} W={shards} r={r}");
+                        // every non-empty shard keeps a delayed tail at α > 0
+                        if alpha > 0.0 && dhi > elo {
+                            assert!(dhi > dlo, "n={n} α={alpha} W={shards} r={r}: no delay");
+                        }
+                    }
+                    assert_eq!(next, n, "n={n} α={alpha} W={shards}: not covered");
+                }
+                // W = 1 is the global split
+                let split = delay_split(n, alpha);
+                assert_eq!(shard_part_range(n, alpha, 0, 1, Part::Eager), (0, split));
+                assert_eq!(shard_part_range(n, alpha, 0, 1, Part::Delayed), (split, n));
+            }
+        }
+    }
+
+    /// The sharded (ZeRO-style) update must equal one plain full-range Adam
+    /// step bit-for-bit across storage/overlap modes and α values — the
+    /// partition-invariance that makes `--shard-optimizer` bit-identical to
+    /// the rank-0 path.
+    #[test]
+    fn sharded_update_matches_unsharded() {
+        let reference = {
+            let Some(state) = mk_state(0.0, false, false) else { return };
+            let coord = OptimizerStepCoordinator::new(&state);
+            let grads = fake_grads(&state, 1);
+            coord.submit_eager(&state, None, 0, grads, 1).unwrap();
+            coord.wait_layer(0);
+            let snapshot = state.layers[0].lock().unwrap().clone();
+            snapshot
+        };
+        for (alpha, on_ssd, overlap, workers) in [
+            (0.0, false, false, 2),
+            (0.25, false, false, 3),
+            (0.25, true, false, 2),
+            (0.25, true, true, 4),
+            (0.5, true, false, 2),
+        ] {
+            let m = Manifest::load_if_built("artifacts/tiny").expect("gated above");
+            let cfg = TrainerConfig {
+                alpha,
+                opt_on_ssd: on_ssd,
+                overlap,
+                workers,
+                shard_optimizer: true,
+                ..TrainerConfig::for_test(&format!("optsh_{alpha}_{on_ssd}_{overlap}_{workers}"))
+            };
+            let state = ModelState::init(m, cfg).unwrap();
+            let coord = OptimizerStepCoordinator::new(&state);
+            assert_eq!(coord.n_shards(), workers);
+            coord.seed_ssd(&state).unwrap();
+            let grads = fake_grads(&state, 1);
+            coord.submit_eager(&state, None, 0, grads, 1).unwrap();
+            coord.dispatch_delayed(&state, None, 1).unwrap();
+            coord.wait_layer(0);
+            let got = state.layers[0].lock().unwrap().clone();
+            for (a, b) in reference.iter().zip(&got) {
+                for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "alpha={alpha} ssd={on_ssd} ov={overlap} W={workers} i={i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

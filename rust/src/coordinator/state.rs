@@ -43,6 +43,17 @@ pub struct TrainerConfig {
     /// optimizer runs once on rank 0 — bit-identical to `workers == 1`
     /// (today's single [`crate::coordinator::StepEngine`]) for every W.
     pub workers: usize,
+    /// ZeRO-style sharded optimizer states (`--shard-optimizer`): with
+    /// `workers > 1`, each rank owns a contiguous element shard of every
+    /// layer tensor's optimizer state and updates only that shard (α-split
+    /// applied per shard), so CPU-optimizer work and per-rank optimizer SSD
+    /// round trips shrink ~1/W. Gradients reduce-scatter instead of
+    /// all-reducing and the updated parameter shards all-gather before the
+    /// next iteration's prefetch. Still bit-identical to `workers == 1`
+    /// (the Adam update is partition-invariant; see
+    /// [`crate::coordinator::dist`]'s determinism contract). No effect at
+    /// `workers == 1`.
+    pub shard_optimizer: bool,
     pub adam: AdamParams,
     /// Global gradient-norm clip threshold (speculative; f64::INFINITY off).
     pub clip_norm: f64,
@@ -64,6 +75,7 @@ impl Default for TrainerConfig {
             overlap: true,
             io_depth: 2,
             workers: 1,
+            shard_optimizer: false,
             adam: AdamParams { lr: 3e-4, weight_decay: 0.01, ..Default::default() },
             clip_norm: f64::INFINITY,
             ssd_path: std::env::temp_dir()
@@ -181,26 +193,42 @@ impl ModelState {
     }
 
     /// Sum of squares over ALL optimizer moments (m and v), wherever they
-    /// live — CPU-resident buffers or the α-split SSD objects. Iteration
-    /// order is fixed (layer, tensor, kind, part), so the f64 fold is
-    /// deterministic: the gradient-equivalence suite uses exact bit equality
-    /// of this digest to pin W-worker training to the W = 1 baseline.
+    /// live — CPU-resident buffers or the α-split SSD objects (global or
+    /// per-rank sharded layout). The digest is layout-canonical: each
+    /// tensor's moment vector is first reassembled into ONE buffer in
+    /// ascending element order (eager-then-delayed; rank-major in the
+    /// sharded layout — the parts tile `0..n` contiguously either way) and
+    /// squared with a single flat fold, so the f64 addition sequence — and
+    /// therefore the exact bits — cannot depend on how the α split or the
+    /// `--shard-optimizer` sharding grouped the storage. The
+    /// gradient-equivalence suite uses exact bit equality of this digest to
+    /// pin W-worker (and sharded-optimizer) training to the W = 1 baseline.
     pub fn moment_sq_norm(&self) -> Result<f64> {
-        use super::opt::{part_key, Part};
+        use super::opt::{part_key, shard_part_key, Part};
         let sq = |xs: &[f32]| xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        let shards = if self.cfg.shard_optimizer { self.cfg.workers.max(1) } else { 1 };
         let mut s = 0.0;
         if self.cfg.opt_on_ssd {
             let mut buf = Vec::new();
+            let mut full = Vec::new();
             for l in 0..self.manifest.config.n_layers {
                 for t in 0..self.manifest.layer_params.len() {
                     for kind in ['m', 'v'] {
-                        for part in [Part::Eager, Part::Delayed] {
-                            let key = part_key(l, t, kind, part);
-                            if self.ssd.contains(&key) {
-                                self.ssd.get_f32(&key, &mut buf)?;
-                                s += sq(&buf);
+                        full.clear();
+                        for r in 0..shards {
+                            for part in [Part::Eager, Part::Delayed] {
+                                let key = if shards > 1 {
+                                    shard_part_key(l, t, kind, r, part)
+                                } else {
+                                    part_key(l, t, kind, part)
+                                };
+                                if self.ssd.contains(&key) {
+                                    self.ssd.get_f32(&key, &mut buf)?;
+                                    full.extend_from_slice(&buf);
+                                }
                             }
                         }
+                        s += sq(&full);
                     }
                 }
             }
@@ -262,6 +290,7 @@ mod tests {
         assert_eq!(a.alpha, 0.0);
         assert!(!a.opt_on_ssd && !a.overlap);
         assert_eq!(a.workers, 1);
+        assert!(!a.shard_optimizer);
     }
 
     #[test]

@@ -17,6 +17,10 @@ pub struct Machine {
     pub cpu_mem: u64,
     /// Host→device and device→host bandwidth (PCIe Gen4 x16 effective).
     pub pcie_bw: f64,
+    /// Inter-GPU interconnect bandwidth per GPU (NVLink, or PCIe P2P on
+    /// boards without it) — the link the ring collective legs ride in the
+    /// multi-worker simulator, distinct from the host PCIe lanes.
+    pub link_bw: f64,
     /// SSD read / write bandwidth, bytes/s.
     pub ssd_read_bw: f64,
     pub ssd_write_bw: f64,
@@ -33,6 +37,7 @@ pub const MACHINE1_A5000: Machine = Machine {
     gpu_mem: 24 * GIB,
     cpu_mem: 256 * GIB,
     pcie_bw: 24.0e9,
+    link_bw: 20.0e9, // no NVLink: P2P rides PCIe Gen4
     ssd_read_bw: 6.5e9,  // PM9A3 seq read
     ssd_write_bw: 3.5e9, // PM9A3 seq write
     gpu_flops: 65.0e12,  // sustained bf16 training (≈70% of 91.1 peak... anchored to §6.2)
@@ -45,6 +50,7 @@ pub const MACHINE2_A100: Machine = Machine {
     gpu_mem: 40 * GIB,
     cpu_mem: 400 * GIB,
     pcie_bw: 24.0e9,
+    link_bw: 150.0e9, // NVLink3 effective per-GPU collective bandwidth
     ssd_read_bw: 3.2e9,  // shared cloud storage (paper notes contention)
     ssd_write_bw: 2.8e9,
     gpu_flops: 135.0e12, // sustained bf16 training on A100-40GB
@@ -93,6 +99,13 @@ impl NodeSpec {
         self.machine.pcie_bw
     }
 
+    /// Inter-GPU interconnect bandwidth per GPU — the ring-collective legs'
+    /// resource in the multi-worker simulator (NVLink, or PCIe P2P where
+    /// there is none). Independent of the host PCIe lanes.
+    pub fn link_bw_per_gpu(&self) -> f64 {
+        self.machine.link_bw
+    }
+
     /// SSD bandwidth is a single shared resource across GPUs.
     pub fn ssd_read_bw(&self) -> f64 {
         self.machine.ssd_read_bw
@@ -128,6 +141,18 @@ mod tests {
         let node = MACHINE2_A100.with_gpus(4);
         assert!((node.total_flops() - 4.0 * MACHINE2_A100.gpu_flops).abs() < 1.0);
         assert_eq!(node.ssd_read_bw(), MACHINE2_A100.ssd_read_bw);
+    }
+
+    #[test]
+    fn link_bandwidths_are_sane() {
+        // NVLink beats PCIe on the A100 node; the A5000 node's P2P link is
+        // PCIe-class (no NVLink), and both comfortably beat the SSD.
+        assert!(MACHINE2_A100.link_bw > MACHINE2_A100.pcie_bw);
+        assert!(MACHINE1_A5000.link_bw <= MACHINE1_A5000.pcie_bw);
+        for m in [MACHINE1_A5000, MACHINE2_A100] {
+            assert!(m.link_bw > m.ssd_read_bw);
+            assert_eq!(m.with_gpus(2).link_bw_per_gpu(), m.link_bw);
+        }
     }
 
     #[test]

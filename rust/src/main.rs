@@ -17,7 +17,7 @@ use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::SystemParams;
 use greedysnake::roofline::Roofline;
 use greedysnake::runtime::Manifest;
-use greedysnake::sim::{simulate_dist, simulate_io, Schedule};
+use greedysnake::sim::{simulate_dist, simulate_io, DistConfig, Schedule};
 use greedysnake::trainer::{train, ScheduleKind};
 use greedysnake::util::cli::Cli;
 use greedysnake::util::table::Table;
@@ -101,6 +101,13 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
             Some("1"),
         )
         .opt("log-every", "print every k steps", Some("1"))
+        .flag(
+            "shard-optimizer",
+            "ZeRO-style sharded optimizer states: reduce-scatter gradients, each rank \
+             updates its contiguous parameter shard (α-split per shard, ~1/W of the \
+             optimizer SSD round trip per rank), parameter all-gather before the next \
+             iteration's prefetch — still bit-identical to --workers 1",
+        )
         .flag("opt-on-cpu", "keep optimizer states CPU-resident (default: SSD)")
         .flag("ckpt-on-ssd", "spill activation checkpoints to SSD")
         .flag("hlo-adam", "run Adam through the AOT Pallas kernel")
@@ -119,6 +126,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         overlap: !cli.has_flag("no-overlap"),
         io_depth: cli.get_parsed("io-depth")?,
         workers: cli.get_parsed::<usize>("workers")?.max(1),
+        shard_optimizer: cli.has_flag("shard-optimizer"),
         adam: greedysnake::optimizer::AdamParams {
             lr: cli.get_parsed("lr")?,
             weight_decay: 0.01,
@@ -134,14 +142,16 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{}",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
         cfg.io_depth,
         cfg.workers,
+        if cfg.shard_optimizer { " shard-optimizer" } else { "" },
     );
     let workers = cfg.workers;
+    let sharded = cfg.shard_optimizer && workers > 1;
     let log = train(manifest, cfg, kind, steps, m, cli.get_parsed("log-every")?)?;
     let tokens_per_step = m * shape.micro_batch * shape.seq_len;
     println!(
@@ -156,13 +166,28 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         log.io_stall_s,
     );
     if workers > 1 {
+        // worker_stall_s has one entry per ACTIVE worker (idle ranks under
+        // W > M are not reported as fake 0-stall workers)
         let stalls: Vec<String> = log.worker_stall_s.iter().map(|s| format!("{s:.2}s")).collect();
+        let idle = workers.saturating_sub(log.worker_stall_s.len());
+        let idle_note = if idle > 0 {
+            format!(" ({idle} idle rank{})", if idle == 1 { "" } else { "s" })
+        } else {
+            String::new()
+        };
         println!(
-            "workers: per-worker i/o stall [{}], all-reduce {:.2}s / {}",
+            "workers: per-active-worker i/o stall [{}]{idle_note}, {} {:.2}s / {}",
             stalls.join(", "),
+            if sharded { "reduce-scatter" } else { "all-reduce" },
             log.allreduce_s,
             greedysnake::util::stats::fmt_bytes(log.allreduce_bytes as f64),
         );
+        if sharded {
+            println!(
+                "workers: param all-gather {}",
+                greedysnake::util::stats::fmt_bytes(log.allgather_bytes as f64),
+            );
+        }
     }
     Ok(())
 }
@@ -195,6 +220,12 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
             Some("1"),
         )
         .opt("ssds", "modeled SSDs shared by the workers (round-robin)", Some("1"))
+        .flag(
+            "shard-optimizer",
+            "ZeRO-style sharded optimizer in the dist sim: reduce-scatter legs on the \
+             inter-GPU link, per-rank 1/W CPU update + optimizer SSD round trip, \
+             parameter all-gather before the next forward",
+        )
         .parse_from(args)?;
     let sp = SystemParams::new(
         machine_by_name(&cli.get("machine").unwrap())?.with_gpus(cli.get_parsed("gpus")?),
@@ -225,7 +256,8 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
     let io_depth = parse_io_depth(&cli.get("io-depth").unwrap())?;
     let workers: usize = cli.get_parsed("workers")?;
     let ssds: usize = cli.get_parsed("ssds")?;
-    let r = if workers > 1 || ssds > 1 {
+    let shard_optimizer = cli.has_flag("shard-optimizer");
+    let r = if workers > 1 || ssds > 1 || shard_optimizer {
         // the dist sim models each GPU as an explicit worker with its own
         // resources (tokens are global-M, SSD bandwidth per modeled device);
         // simulate_io instead folds n_gpus into its rates — mixing the two
@@ -236,7 +268,13 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
                 sp.node.n_gpus
             );
         }
-        simulate_dist(&sp, m, schedule, io_depth, workers.max(1), ssds.max(1))
+        let cfg = DistConfig {
+            workers: workers.max(1),
+            ssds: ssds.max(1),
+            io_depth,
+            shard_optimizer,
+        };
+        simulate_dist(&sp, m, schedule, cfg)
     } else {
         simulate_io(&sp, m, schedule, io_depth)
     };

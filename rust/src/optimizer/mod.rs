@@ -103,8 +103,20 @@ pub fn adam_step_rust(
 /// The delay-α split point for a parameter vector of length `n`: the first
 /// `split` elements update in the backward phase, the tail α-fraction
 /// `[split, n)` is delayed to the next forward.
+///
+/// The delayed share rounds UP (`split = n − ⌈n·α⌉`), so whenever
+/// `α > 0 && n > 0` at least one element is delayed. The old
+/// `(n·(1−α)).round()` quantized the tail to zero for small `n` (e.g.
+/// `delay_split(1, 0.25) == 1` delayed nothing), silently disabling the
+/// optimizer/forward overlap on small shards — exactly the regime the
+/// sharded optimizer (`--shard-optimizer`) creates by splitting every
+/// tensor into W per-rank pieces.
 pub fn delay_split(n: usize, alpha: f64) -> usize {
-    ((n as f64) * (1.0 - alpha)).round() as usize
+    if alpha <= 0.0 || n == 0 {
+        return n;
+    }
+    let delayed = ((n as f64) * alpha).ceil().min(n as f64) as usize;
+    n - delayed
 }
 
 /// Gradient-clipping bookkeeping with speculative optimizer steps.
@@ -264,6 +276,29 @@ mod tests {
         assert_eq!(delay_split(100, 1.0), 0);
         assert_eq!(delay_split(100, 0.25), 75);
         assert_eq!(delay_split(0, 0.5), 0);
+    }
+
+    /// Regression: α > 0 must always delay at least one element for n > 0 —
+    /// `.round()` used to quantize the tail to zero on small shards (e.g.
+    /// `delay_split(1, 0.25)` was 1, delaying nothing).
+    #[test]
+    fn delay_split_small_shards_always_delay() {
+        assert_eq!(delay_split(1, 0.25), 0); // the single element is delayed
+        assert_eq!(delay_split(2, 0.25), 1);
+        assert_eq!(delay_split(3, 0.1), 2);
+        for n in 1..64usize {
+            for alpha in [0.01, 0.1, 0.25, 0.3, 0.5, 0.9, 1.0] {
+                let split = delay_split(n, alpha);
+                assert!(split < n, "n={n} α={alpha}: no delayed element");
+                // and the eager share never exceeds the (1-α) fraction
+                assert!(
+                    split as f64 <= (n as f64) * (1.0 - alpha) + 1e-9,
+                    "n={n} α={alpha}: eager share {split} too large"
+                );
+            }
+            // α = 0 keeps everything eager
+            assert_eq!(delay_split(n, 0.0), n);
+        }
     }
 
     #[test]

@@ -1,12 +1,13 @@
 //! Multi-worker (data-parallel) discrete-event simulation — the
 //! `--workers W` mirror of [`crate::coordinator::dist::DataParallelEngine`].
 //!
-//! W workers each get their own compute resources (GPU, H2D, D2H lanes) but
-//! share `ssds` SSD read/write resource pairs (workers are assigned
-//! round-robin), so contention on the shared tier — the effect MLP-Offload
-//! (arXiv 2509.02480) shows dominates multi-worker offloaded scaling — is
-//! modeled rather than assumed away. The iteration structure matches the
-//! runtime engine:
+//! W workers each get their own compute resources (GPU, H2D, D2H lanes, an
+//! inter-GPU interconnect leg, and a CPU-optimizer core) but share `ssds`
+//! SSD read/write resource pairs (workers are assigned round-robin), so
+//! contention on the shared tier — the effect MLP-Offload (arXiv
+//! 2509.02480) shows dominates multi-worker offloaded scaling — is modeled
+//! rather than assumed away. The iteration structure matches the runtime
+//! engine:
 //!
 //! * each worker runs its contiguous micro-batch share through the
 //!   schedule's traversal (the visit order restricted to its share, grouped
@@ -14,19 +15,27 @@
 //!   runtime's one-layer cache, gated by the per-worker `--io-depth`
 //!   lookahead window;
 //! * fully-accumulated per-layer gradients leave each worker once
-//!   (D2H, fp32), then a ring all-reduce joins all workers — modeled as one
-//!   barrier-dependent op per worker moving 2·(W−1)/W·g over its PCIe lane;
-//! * the optimizer runs ONCE per layer (rank 0's CPU + rank 0's SSD pair
-//!   for the moment round trips), and every worker's next-iteration load of
-//!   that layer waits on it — the cross-worker "update before forward"
-//!   dependency.
-//!
-//! The delayed-α split is not modeled here (α = 0 semantics, like the
-//! single-worker chunked builder): the multi-worker question this answers
-//! is shared-SSD scaling, which the fig12 scaling bench
-//! (`bench_out/fig12_scaling.json`) sweeps over W ∈ {1, 2, 4}.
+//!   (D2H, fp32), then a ring collective joins all workers — each leg rides
+//!   its worker's *interconnect* resource
+//!   ([`NodeSpec::link_bw_per_gpu`](crate::machine::NodeSpec) — NVLink, or
+//!   PCIe P2P where there is none), a first-class resource distinct from
+//!   the host PCIe lanes the parameter/checkpoint traffic uses;
+//! * the optimizer mirrors the runtime's two modes. **Rank-0** (default):
+//!   the full update runs once per layer on rank 0's CPU + SSD pair, and
+//!   every worker's next-iteration load of that layer waits on it.
+//!   **Sharded** ([`DistConfig::shard_optimizer`]): the ring leg is a
+//!   reduce-scatter ((W−1)/W·g per rank), each rank updates its 1/W shard
+//!   on its OWN CPU core with ~1/W of the optimizer-state SSD round trip on
+//!   its own assigned SSD pair, and the updated parameter shards
+//!   all-gather ((W−1)/W·p per rank) before the next iteration's parameter
+//!   prefetch — the ZeRO-style partitioning that makes CPU-optimizer time
+//!   shrink with W;
+//! * the delayed-α split is modeled like the single-worker vertical builder
+//!   (Fig. 8): the α share of each layer's update dispatches at the start
+//!   of the next iteration, overlapping its forward, and that layer's
+//!   parameter loads wait on it (per rank in sharded mode).
 
-use crate::coordinator::dist::partition;
+use crate::coordinator::dist::{partition, ring_leg_frac};
 use crate::coordinator::schedule::{
     ChunkedVerticalSchedule, HorizontalSchedule, Schedule as Traversal, VerticalSchedule,
 };
@@ -35,23 +44,36 @@ use crate::perfmodel::{StorageRatios, SystemParams};
 use super::engine::{DiscreteSim, Resource};
 use super::schedules::{IoGate, Schedule, SimResult};
 
+/// Multi-worker simulation knobs (the `--workers/--ssds/--io-depth/
+/// --shard-optimizer` CLI surface).
+#[derive(Clone, Copy, Debug)]
+pub struct DistConfig {
+    /// Data-parallel worker count W (≥ 1).
+    pub workers: usize,
+    /// Modeled SSDs shared by the workers (round-robin assignment).
+    pub ssds: usize,
+    /// Per-worker lookahead window (`usize::MAX` = unbounded).
+    pub io_depth: usize,
+    /// ZeRO-style sharded optimizer states: reduce-scatter + per-rank
+    /// update + parameter all-gather instead of the rank-0 optimizer.
+    pub shard_optimizer: bool,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig { workers: 1, ssds: 1, io_depth: usize::MAX, shard_optimizer: false }
+    }
+}
+
 /// Simulate `m` GLOBAL micro-batches per iteration, split contiguously
-/// across `workers` data-parallel workers sharing `ssds` SSDs. `io_depth`
-/// is the per-worker lookahead window (`usize::MAX` = unbounded).
+/// across `cfg.workers` data-parallel workers sharing `cfg.ssds` SSDs.
 /// `workers == 1, ssds == 1` is the degenerate single-worker pipeline.
-pub fn simulate_dist(
-    sp: &SystemParams,
-    m: u64,
-    schedule: Schedule,
-    io_depth: usize,
-    workers: usize,
-    ssds: usize,
-) -> SimResult {
+pub fn simulate_dist(sp: &SystemParams, m: u64, schedule: Schedule, cfg: DistConfig) -> SimResult {
     let iters = 3;
-    let (mk_all, busy_all) = build_and_run(sp, m, schedule, iters, io_depth, workers, ssds);
-    let (mk_warm, _) = build_and_run(sp, m, schedule, iters - 1, io_depth, workers, ssds);
+    let (mk_all, busy_all) = build_and_run(sp, m, schedule, iters, cfg);
+    let (mk_warm, _) = build_and_run(sp, m, schedule, iters - 1, cfg);
     let t_iter = (mk_all - mk_warm).max(1e-9);
-    let w = workers.max(1) as f64;
+    let w = cfg.workers.max(1) as f64;
     let tokens = (m * sp.micro_batch * sp.seq_len) as f64;
     let flops = sp.model.iter_flops(sp.micro_batch, sp.seq_len, m);
     SimResult {
@@ -70,6 +92,16 @@ fn ratios_of(sp: &SystemParams, m: u64, schedule: Schedule) -> StorageRatios {
         Schedule::ZeroInfinity | Schedule::TeraIo | Schedule::Ratel => {
             sp.zero_infinity_placement(m).x
         }
+    }
+}
+
+/// The delay ratio the dist builder models: GreedySnake's α; 0 for every
+/// other system (the chunked builder, like its single-worker counterpart,
+/// models the α = 0 configuration the equivalence experiments use).
+fn alpha_of(schedule: Schedule) -> f64 {
+    match schedule {
+        Schedule::GreedySnake { alpha, .. } => alpha,
+        _ => 0.0,
     }
 }
 
@@ -112,31 +144,39 @@ fn build_and_run(
     m: u64,
     schedule: Schedule,
     iters: u32,
-    io_depth: usize,
-    workers: usize,
-    ssds: usize,
+    cfg: DistConfig,
 ) -> (f64, f64) {
-    let w_n = workers.max(1);
-    let s_n = ssds.max(1);
-    // layout: per worker [gpu, h2d, d2h], then per ssd [read, write], then
-    // the rank-0 optimizer CPU
-    let n_res = 3 * w_n + 2 * s_n + 1;
-    let gpu = |w: usize| Resource(3 * w);
-    let h2d = |w: usize| Resource(3 * w + 1);
-    let d2h = |w: usize| Resource(3 * w + 2);
-    let ssd_r = |w: usize| Resource(3 * w_n + 2 * (w % s_n));
-    let ssd_w = |w: usize| Resource(3 * w_n + 2 * (w % s_n) + 1);
-    let cpu = Resource(3 * w_n + 2 * s_n);
+    let w_n = cfg.workers.max(1);
+    let s_n = cfg.ssds.max(1);
+    let io_depth = cfg.io_depth;
+    let shard = cfg.shard_optimizer && w_n > 1;
+    // layout: per worker [gpu, h2d, d2h, link, cpu], then per ssd
+    // [read, write]. The rank-0 optimizer is worker 0's CPU core; sharded
+    // mode uses every worker's core.
+    let n_res = 5 * w_n + 2 * s_n;
+    let gpu = |w: usize| Resource(5 * w);
+    let h2d = |w: usize| Resource(5 * w + 1);
+    let d2h = |w: usize| Resource(5 * w + 2);
+    let link = |w: usize| Resource(5 * w + 3);
+    let cpu = |w: usize| Resource(5 * w + 4);
+    let ssd_r = |w: usize| Resource(5 * w_n + 2 * (w % s_n));
+    let ssd_w = |w: usize| Resource(5 * w_n + 2 * (w % s_n) + 1);
     let mut sim = DiscreteSim::new(n_res);
 
     let x = ratios_of(sp, m, schedule);
+    let alpha = alpha_of(schedule);
     let policy = traversal_of(schedule);
     let n = sp.model.n_layers as usize;
     // each modeled SSD provides the node's full bandwidth (sharing between
     // workers is explicit through the resource, not a rate divisor)
-    let (r, wbw, pcie) =
-        (sp.node.ssd_read_bw(), sp.node.ssd_write_bw(), sp.node.pcie_bw_per_gpu());
+    let (r, wbw, pcie, lbw) = (
+        sp.node.ssd_read_bw(),
+        sp.node.ssd_write_bw(),
+        sp.node.pcie_bw_per_gpu(),
+        sp.node.link_bw_per_gpu(),
+    );
     let (p, g, o, c) = (sp.p_lp(), sp.g_fp(), sp.o_bytes(), sp.c_bytes());
+    let w_f = w_n as f64; // optimizer shard divisor (sharded mode)
 
     let parts = partition(m as usize, w_n);
     let active: Vec<usize> = (0..w_n).filter(|&w| !parts[w].is_empty()).collect();
@@ -153,28 +193,77 @@ fn build_and_run(
         })
         .collect();
 
-    let ring_frac = if active.len() > 1 {
-        2.0 * (active.len() as f64 - 1.0) / active.len() as f64
-    } else {
-        0.0
-    };
+    // ring leg fractions — the same (W−1)/W arithmetic the byte helpers in
+    // coordinator::dist use, so modeled traffic and closed forms agree. The
+    // unsharded all-reduce runs among ACTIVE workers; the sharded
+    // reduce-scatter / all-gather span the whole group (every rank owns an
+    // optimizer shard).
+    let allreduce_frac = 2.0 * ring_leg_frac(active.len());
+    let shard_frac = ring_leg_frac(w_n);
     let mut gates: Vec<IoGate> = (0..w_n).map(|_| IoGate::new(io_depth)).collect();
-    // per-layer optimizer op of the previous iteration (shared: rank 0
-    // updates once; every worker's next load waits on it)
-    let mut prev_adam: Vec<Option<usize>> = vec![None; n];
+    // per-layer ops of the previous iteration the next one depends on:
+    // the eager update(s) a layer's parameter load must wait for (rank-0
+    // Adam op, or the all-gather legs in sharded mode) ...
+    let mut prev_update: Vec<Vec<usize>> = vec![Vec::new(); n];
+    // ... and the ring ops whose reduced gradients the delayed-α share
+    // consumes (empty until the layer's first backward).
+    let mut prev_grad_ready: Vec<Vec<usize>> = vec![Vec::new(); n];
     // each worker's GPU is one serial stream across the whole run
     let mut last_gpu: Vec<Option<usize>> = vec![None; w_n];
 
     for _it in 0..iters {
+        // -------- delayed α share (overlaps this forward, Fig. 8) ---------
+        // Dispatched once per layer at iteration start — exactly the
+        // runtime's dispatch_delayed — and every worker's forward load of
+        // the layer waits on it through `delayed_ops`.
+        let mut delayed_ops: Vec<Vec<usize>> = vec![Vec::new(); n];
+        if alpha > 0.0 {
+            for l in 0..n {
+                if prev_grad_ready[l].is_empty() {
+                    continue; // first iteration: nothing accumulated yet
+                }
+                if shard {
+                    for rk in 0..w_n {
+                        let ord =
+                            sim.op(ssd_r(rk), alpha * (1.0 - x.opt_cpu) * o / w_f / r, &[]);
+                        let mut adeps = prev_grad_ready[l].clone();
+                        adeps.push(ord);
+                        let ad = sim.op(cpu(rk), alpha * sp.t_adam_layer() / w_f, &adeps);
+                        sim.op(
+                            ssd_w(rk),
+                            alpha * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p)
+                                / w_f
+                                / wbw,
+                            &[ad],
+                        );
+                        delayed_ops[l].push(ad);
+                    }
+                } else {
+                    let ord = sim.op(ssd_r(0), alpha * (1.0 - x.opt_cpu) * o / r, &[]);
+                    let mut adeps = prev_grad_ready[l].clone();
+                    adeps.push(ord);
+                    let ad = sim.op(cpu(0), alpha * sp.t_adam_layer(), &adeps);
+                    sim.op(
+                        ssd_w(0),
+                        alpha * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p) / wbw,
+                        &[ad],
+                    );
+                    delayed_ops[l].push(ad);
+                }
+            }
+        }
+
         // fwd_ckpt[w][l] = the layer's checkpoint ops per span, in span order
         let mut fwd_ckpt: Vec<Vec<Vec<CkptOps>>> = vec![vec![Vec::new(); n]; w_n];
         // -------- forward, per worker --------------------------------------
         for &w in &active {
             for &(l, span) in &worker_spans[w].0 {
                 let mut pdeps: Vec<usize> = gates[w].gate();
-                if let Some(ad) = prev_adam[l] {
-                    pdeps.push(ad); // cross-worker "update before forward"
-                }
+                // cross-worker "update layer l before its forward": the
+                // previous iteration's eager update / all-gather, plus this
+                // iteration's delayed α share
+                pdeps.extend(&prev_update[l]);
+                pdeps.extend(&delayed_ops[l]);
                 let prd = sim.op(ssd_r(w), (1.0 - x.param_cpu) * p / r, &pdeps);
                 let ph2d = sim.op(h2d(w), p / pcie, &[prd]);
                 let mut deps = vec![ph2d];
@@ -234,29 +323,70 @@ fn build_and_run(
             gates[w].barrier(); // the runtime flushes all lane I/O at step end
         }
 
-        // -------- ring all-reduce + rank-0 optimizer, per layer ------------
+        // -------- ring collective + (1-α) optimizer, per layer -------------
         // Descending layer order, like the runtime's submission order.
         for l in (0..n).rev() {
             let offs: Vec<usize> = active
                 .iter()
                 .map(|&w| grad_off[w][l].expect("worker offloaded layer gradient"))
                 .collect();
-            // the ring is a barrier: every worker's legs depend on all
-            // workers' offloads; each moves 2(W-1)/W·g over its PCIe lane
-            let mut reduced: Vec<usize> = Vec::with_capacity(active.len());
-            for &w in &active {
-                reduced.push(sim.op(h2d(w), ring_frac * g / pcie, &offs));
+            if shard {
+                // reduce-scatter: every rank's leg depends on all workers'
+                // offloads and moves (W−1)/W·g over ITS interconnect
+                let rs_legs: Vec<usize> = (0..w_n)
+                    .map(|rk| sim.op(link(rk), shard_frac * g / lbw, &offs))
+                    .collect();
+                // per-rank eager update: 1/W of the CPU Adam work and of the
+                // optimizer-state round trip, on the rank's own SSD pair
+                let adam_ops: Vec<usize> = (0..w_n)
+                    .map(|rk| {
+                        let ord = sim.op(
+                            ssd_r(rk),
+                            (1.0 - alpha) * (1.0 - x.opt_cpu) * o / w_f / r,
+                            &[],
+                        );
+                        let ad = sim.op(
+                            cpu(rk),
+                            (1.0 - alpha) * sp.t_adam_layer() / w_f,
+                            &[rs_legs[rk], ord],
+                        );
+                        sim.op(
+                            ssd_w(rk),
+                            (1.0 - alpha)
+                                * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p)
+                                / w_f
+                                / wbw,
+                            &[ad],
+                        );
+                        ad
+                    })
+                    .collect();
+                // all-gather of the updated parameter shards — the next
+                // iteration's parameter prefetch of this layer waits on it
+                let ag_legs: Vec<usize> = (0..w_n)
+                    .map(|rk| sim.op(link(rk), shard_frac * p / lbw, &adam_ops))
+                    .collect();
+                prev_update[l] = ag_legs;
+                prev_grad_ready[l] = rs_legs;
+            } else {
+                // all-reduce among the active workers: each leg moves
+                // 2·(W−1)/W·g over its worker's interconnect
+                let legs: Vec<usize> = active
+                    .iter()
+                    .map(|&w| sim.op(link(w), allreduce_frac * g / lbw, &offs))
+                    .collect();
+                let ord = sim.op(ssd_r(0), (1.0 - alpha) * (1.0 - x.opt_cpu) * o / r, &[]);
+                let mut adeps = legs.clone();
+                adeps.push(ord);
+                let ad = sim.op(cpu(0), (1.0 - alpha) * sp.t_adam_layer(), &adeps);
+                sim.op(
+                    ssd_w(0),
+                    (1.0 - alpha) * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p) / wbw,
+                    &[ad],
+                );
+                prev_update[l] = vec![ad];
+                prev_grad_ready[l] = legs;
             }
-            let ord = sim.op(ssd_r(0), (1.0 - x.opt_cpu) * o / r, &[]);
-            let mut adeps = reduced;
-            adeps.push(ord);
-            let ad = sim.op(cpu, sp.t_adam_layer(), &adeps);
-            sim.op(
-                ssd_w(0),
-                ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p) / wbw,
-                &[ad],
-            );
-            prev_adam[l] = Some(ad);
         }
     }
 
@@ -281,14 +411,18 @@ mod tests {
         Schedule::GreedySnake { alpha: 0.0, x }
     }
 
+    fn cfg(workers: usize, ssds: usize) -> DistConfig {
+        DistConfig { workers, ssds, ..DistConfig::default() }
+    }
+
     /// The satellite contention property: two workers hammering ONE SSD are
     /// strictly slower than the same two workers over two modeled SSDs.
     #[test]
     fn shared_ssd_contention_slows_two_workers() {
         let sp = sp();
         let x = StorageRatios::ALL_SSD;
-        let one = simulate_dist(&sp, 16, gs(x), usize::MAX, 2, 1).t_iter;
-        let two = simulate_dist(&sp, 16, gs(x), usize::MAX, 2, 2).t_iter;
+        let one = simulate_dist(&sp, 16, gs(x), cfg(2, 1)).t_iter;
+        let two = simulate_dist(&sp, 16, gs(x), cfg(2, 2)).t_iter;
         assert!(
             one > two * 1.02,
             "one shared SSD {one} must cost more than two: {two}"
@@ -305,9 +439,9 @@ mod tests {
     fn scaling_is_monotone_but_sublinear() {
         let sp = sp();
         let x = StorageRatios { ckpt_cpu: 1.0, param_cpu: 0.75, opt_cpu: 1.0 };
-        let t1 = simulate_dist(&sp, 16, gs(x), usize::MAX, 1, 1).t_iter;
-        let t2 = simulate_dist(&sp, 16, gs(x), usize::MAX, 2, 1).t_iter;
-        let t4 = simulate_dist(&sp, 16, gs(x), usize::MAX, 4, 1).t_iter;
+        let t1 = simulate_dist(&sp, 16, gs(x), cfg(1, 1)).t_iter;
+        let t2 = simulate_dist(&sp, 16, gs(x), cfg(2, 1)).t_iter;
+        let t4 = simulate_dist(&sp, 16, gs(x), cfg(4, 1)).t_iter;
         assert!(t2 < t1, "W=2 {t2} must beat W=1 {t1}");
         assert!(t4 < t2, "W=4 {t4} must beat W=2 {t2}");
         assert!(
@@ -325,12 +459,16 @@ mod tests {
     fn w1_tracks_single_worker_sim() {
         let sp = sp();
         let x = StorageRatios::ALL_CPU;
-        let dist = simulate_dist(&sp, 12, gs(x), usize::MAX, 1, 1).t_iter;
-        let single =
-            super::super::schedules::simulate(&sp, 12, Schedule::GreedySnake { alpha: 0.0, x })
-                .t_iter;
-        let ratio = dist / single;
-        assert!(ratio > 0.5 && ratio < 2.0, "dist {dist} vs single {single}");
+        for alpha in [0.0, 0.3] {
+            let sched = Schedule::GreedySnake { alpha, x };
+            let dist = simulate_dist(&sp, 12, sched, cfg(1, 1)).t_iter;
+            let single = super::super::schedules::simulate(&sp, 12, sched).t_iter;
+            let ratio = dist / single;
+            assert!(
+                ratio > 0.5 && ratio < 2.0,
+                "α={alpha}: dist {dist} vs single {single}"
+            );
+        }
     }
 
     /// Tightening the per-worker lookahead window can only slow things down
@@ -339,13 +477,13 @@ mod tests {
     fn io_depth_gating_monotone_for_workers() {
         let sp = sp();
         let x = StorageRatios { ckpt_cpu: 1.0, param_cpu: 0.5, opt_cpu: 0.2 };
-        let sync = simulate_dist(&sp, 12, gs(x), 0, 2, 1).t_iter;
-        let unbounded = simulate_dist(&sp, 12, gs(x), usize::MAX, 2, 1).t_iter;
+        let sync = simulate_dist(&sp, 12, gs(x), DistConfig { io_depth: 0, ..cfg(2, 1) }).t_iter;
+        let unbounded = simulate_dist(&sp, 12, gs(x), cfg(2, 1)).t_iter;
         assert!(sync >= unbounded * 0.999, "sync {sync} vs unbounded {unbounded}");
     }
 
     /// All traversal policies run through the dist builder (spans differ,
-    /// plumbing must not).
+    /// plumbing must not), in both optimizer modes.
     #[test]
     fn all_schedules_build_and_run() {
         let sp = sp();
@@ -356,13 +494,115 @@ mod tests {
             Schedule::ChunkedVertical { group: 2, x },
         ] {
             for w in [1usize, 2, 3, 4] {
-                let r = simulate_dist(&sp, 8, s, usize::MAX, w, 1);
-                assert!(r.t_iter.is_finite() && r.t_iter > 0.0, "{s:?} W={w}");
-                assert!(r.gpu_util > 0.0 && r.gpu_util <= 1.0, "{s:?} W={w}");
+                for shard in [false, true] {
+                    let c = DistConfig { shard_optimizer: shard, ..cfg(w, 1) };
+                    let r = simulate_dist(&sp, 8, s, c);
+                    assert!(
+                        r.t_iter.is_finite() && r.t_iter > 0.0,
+                        "{s:?} W={w} shard={shard}"
+                    );
+                    assert!(
+                        r.gpu_util > 0.0 && r.gpu_util <= 1.0,
+                        "{s:?} W={w} shard={shard}"
+                    );
+                }
             }
         }
         // more workers than micro-batches: extras idle, still well-formed
-        let r = simulate_dist(&sp, 2, gs(x), usize::MAX, 4, 2);
+        let r = simulate_dist(&sp, 2, gs(x), cfg(4, 2));
         assert!(r.t_iter.is_finite() && r.t_iter > 0.0);
+        let r = simulate_dist(&sp, 2, gs(x), DistConfig { shard_optimizer: true, ..cfg(4, 2) });
+        assert!(r.t_iter.is_finite() && r.t_iter > 0.0);
+    }
+
+    /// The tentpole property: in the CPU-optimizer-bound regime (optimizer
+    /// states on the shared SSD, everything else CPU-resident), sharding
+    /// the optimizer strictly beats the rank-0 update at W = 4 — the
+    /// per-rank 1/W CPU + SSD round trips are the whole point of the
+    /// ZeRO-style split — and the sharded path never helps at W = 1.
+    #[test]
+    fn sharded_optimizer_beats_rank0_when_optimizer_bound() {
+        let sp = sp();
+        let x = StorageRatios { ckpt_cpu: 1.0, param_cpu: 1.0, opt_cpu: 0.0 };
+        let sched = gs(x);
+        let rank0 = simulate_dist(&sp, 16, sched, cfg(4, 4)).t_iter;
+        let sharded =
+            simulate_dist(&sp, 16, sched, DistConfig { shard_optimizer: true, ..cfg(4, 4) })
+                .t_iter;
+        assert!(
+            sharded < rank0 * 0.98,
+            "sharded {sharded} must beat rank-0 {rank0} when optimizer-bound"
+        );
+        // degenerate W=1: both modes are the same pipeline
+        let a = simulate_dist(&sp, 16, sched, cfg(1, 1)).t_iter;
+        let b =
+            simulate_dist(&sp, 16, sched, DistConfig { shard_optimizer: true, ..cfg(1, 1) })
+                .t_iter;
+        assert!((a - b).abs() <= 1e-9 * a.max(1.0), "W=1: {a} vs {b}");
+    }
+
+    /// Delayed-α modeling in the dist sim. In the transition regime the
+    /// single-worker sim's `delayed_alpha_helps_in_transition_region` pins
+    /// down (same placement, same M), the W = 1 dist build must show the
+    /// same effect: some α > 0 beats α = 0, because the delayed share
+    /// overlaps the next forward instead of blocking it. At W = 2 (where a
+    /// saturated shared SSD can make the makespan α-invariant) every α must
+    /// still build and run in both optimizer modes.
+    #[test]
+    fn delayed_alpha_modeled_in_dist() {
+        let sp = sp();
+        let x = StorageRatios { ckpt_cpu: 1.0, param_cpu: 0.5, opt_cpu: 0.2 };
+        let a0 = simulate_dist(&sp, 12, Schedule::GreedySnake { alpha: 0.0, x }, cfg(1, 1));
+        let mut best = a0.tokens_per_s;
+        for alpha in [0.1, 0.2, 0.3, 0.4, 0.5] {
+            let r = simulate_dist(&sp, 12, Schedule::GreedySnake { alpha, x }, cfg(1, 1));
+            assert!(r.t_iter.is_finite() && r.t_iter > 0.0, "α={alpha}");
+            best = best.max(r.tokens_per_s);
+        }
+        // the sim is deterministic, so any consistent gain is real modeling
+        // (the fine-grained single-worker builder shows ~3% here; the
+        // span-granular dist builder is coarser, so only a conservative
+        // floor is pinned)
+        assert!(
+            best > a0.tokens_per_s * 1.005,
+            "some α must help at W=1: best {best} vs α=0 {}",
+            a0.tokens_per_s
+        );
+        for shard in [false, true] {
+            let c = DistConfig { shard_optimizer: shard, ..cfg(2, 1) };
+            for alpha in [0.0, 0.25, 0.5] {
+                let r = simulate_dist(&sp, 12, Schedule::GreedySnake { alpha, x }, c);
+                assert!(
+                    r.t_iter.is_finite() && r.t_iter > 0.0,
+                    "α={alpha} shard={shard}"
+                );
+            }
+        }
+    }
+
+    /// The interconnect is a first-class resource: starving it slows the
+    /// multi-worker iteration, and the single-worker pipeline (no ring)
+    /// does not care.
+    #[test]
+    fn link_bandwidth_is_a_real_resource() {
+        let mut slow_mach = MACHINE2_A100;
+        slow_mach.link_bw = 2.0e8; // 0.2 GB/s: the ring becomes the bottleneck
+        let mut model = GPT_65B;
+        model.n_layers = 8;
+        let fast = SystemParams::new(MACHINE2_A100.with_gpus(1), model, 2, SEQ_LEN);
+        let slow = SystemParams::new(slow_mach.with_gpus(1), model, 2, SEQ_LEN);
+        let x = StorageRatios::ALL_CPU;
+        let t_fast = simulate_dist(&fast, 16, gs(x), cfg(2, 1)).t_iter;
+        let t_slow = simulate_dist(&slow, 16, gs(x), cfg(2, 1)).t_iter;
+        assert!(
+            t_slow > t_fast * 1.05,
+            "throttled link {t_slow} must cost more than NVLink {t_fast}"
+        );
+        let s_fast = simulate_dist(&fast, 16, gs(x), cfg(1, 1)).t_iter;
+        let s_slow = simulate_dist(&slow, 16, gs(x), cfg(1, 1)).t_iter;
+        assert!(
+            (s_fast - s_slow).abs() <= 1e-9 * s_fast.max(1.0),
+            "W=1 has no ring: {s_fast} vs {s_slow}"
+        );
     }
 }

@@ -9,14 +9,19 @@
 //! the simulated testbed (DESIGN.md §Substitutions).
 //!
 //! The data-parallel dimension lives in [`dist`]: W workers with their own
-//! compute resources over one shared `ssd-read`/`ssd-write` pair (or
-//! several — `--ssds`), a modeled ring all-reduce, and a rank-0 optimizer,
-//! mirroring the runtime's `--workers W` engine.
+//! compute resources (incl. a first-class inter-GPU interconnect for the
+//! ring-collective legs and a per-worker CPU-optimizer core) over one
+//! shared `ssd-read`/`ssd-write` pair (or several — `--ssds`), a modeled
+//! ring all-reduce feeding a rank-0 optimizer — or, with
+//! [`dist::DistConfig::shard_optimizer`], a reduce-scatter feeding
+//! ZeRO-style per-rank shard updates plus a parameter all-gather — and the
+//! delayed-α split overlapping the next forward, mirroring the runtime's
+//! `--workers W [--shard-optimizer]` engine.
 
 pub mod dist;
 pub mod engine;
 pub mod schedules;
 
-pub use dist::simulate_dist;
+pub use dist::{simulate_dist, DistConfig};
 pub use engine::{DiscreteSim, Resource, SimOp};
 pub use schedules::{simulate, simulate_io, Schedule, SimResult};

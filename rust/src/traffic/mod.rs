@@ -12,8 +12,19 @@
 //! runtime/sim dimension): SSD/host traffic is the share-wise sum, which
 //! collapses field-for-field to the single-worker forms at W = 1
 //! (property-tested), and [`Workload::allreduce_bytes_per_worker`] is the
-//! ring traffic that stays OFF the host tier.
+//! ring traffic that stays OFF the host tier. All ring byte counts derive
+//! from the [`crate::coordinator::dist`] helpers (one source of truth with
+//! the runtime engine and the event simulator): the all-reduce counts the
+//! *effective* (active) workers — ranks without a micro-batch share move
+//! nothing — while the `--shard-optimizer` reduce-scatter / all-gather
+//! forms span the whole group, because every configured rank owns an
+//! optimizer shard. The sharded forms also give the per-rank optimizer
+//! SSD round trip (~1/W of the rank-0 path's), the quantity the
+//! fig13_shard bench sweeps.
 
+use crate::coordinator::dist::{
+    ring_allgather_bytes, ring_reduce_scatter_bytes, ring_traffic_bytes,
+};
 use crate::modelcfg::{ModelCfg, BYTES_FP, BYTES_LP};
 
 /// Inputs to the traffic model.
@@ -218,17 +229,87 @@ impl Workload {
         self.dp_sum(workers, |w| w.chunked_vertical(group))
     }
 
-    /// Ring all-reduce bytes EACH worker moves per iteration to combine the
-    /// fp32 gradients: 2·(W−1)/W · grad bytes (reduce-scatter +
-    /// all-gather); 0 at W = 1. Inter-GPU traffic — it rides PCIe/NVLink,
-    /// not the SSD, which is why it does not appear in [`Traffic`].
+    /// Number of workers that actually receive a micro-batch share
+    /// (min(W, M) for M ≥ 1) — the rank count the all-reduce runs over,
+    /// matching the runtime engine's `active` count so the closed form and
+    /// the measured `allreduce_bytes` can never disagree when W > M.
+    pub fn effective_workers(&self, workers: u64) -> u64 {
+        (self.dp_shares(workers).len() as u64).max(1)
+    }
+
+    /// Total ring all-reduce bytes per iteration to combine the fp32
+    /// gradients, summed across ranks: 2·(Wₑ−1)·grad bytes for Wₑ
+    /// *effective* workers — exactly the runtime's
+    /// [`ring_traffic_bytes`] accounting. Inter-GPU traffic — it rides the
+    /// interconnect, not the SSD, which is why it does not appear in
+    /// [`Traffic`].
+    pub fn allreduce_bytes_total(&self, workers: u64) -> u64 {
+        ring_traffic_bytes(self.effective_workers(workers) as usize, self.grad_fp())
+    }
+
+    /// Ring all-reduce bytes EACH active worker moves per iteration:
+    /// `total ⧸ Wₑ` rounded up (2·(Wₑ−1)/Wₑ · grad bytes); 0 when only one
+    /// worker is active. Same effective-worker count and rounding as
+    /// [`Workload::allreduce_bytes_total`] — `per_worker · Wₑ` covers the
+    /// total with less than one worker's slack (property-tested).
     pub fn allreduce_bytes_per_worker(&self, workers: u64) -> u64 {
-        let w = workers.max(1);
-        if w <= 1 {
-            0
-        } else {
-            2 * (w - 1) * self.grad_fp() / w
-        }
+        let active = self.effective_workers(workers);
+        self.allreduce_bytes_total(workers).div_ceil(active)
+    }
+
+    /// Total gradient reduce-scatter bytes per iteration under
+    /// `--shard-optimizer`: (W−1)·grad bytes over the whole group — every
+    /// configured rank owns an optimizer shard and receives its slice, so
+    /// the group size (not the active count) is the ring size.
+    pub fn reduce_scatter_bytes_total(&self, workers: u64) -> u64 {
+        ring_reduce_scatter_bytes(workers.max(1) as usize, self.grad_fp())
+    }
+
+    /// Reduce-scatter bytes EACH rank moves under `--shard-optimizer`
+    /// (total ⧸ W rounded up).
+    pub fn reduce_scatter_bytes_per_worker(&self, workers: u64) -> u64 {
+        self.reduce_scatter_bytes_total(workers).div_ceil(workers.max(1))
+    }
+
+    /// Total parameter all-gather bytes per iteration under
+    /// `--shard-optimizer`: (W−1)·ms (low-precision parameters) over the
+    /// whole group, republishing each rank's updated shard before the next
+    /// iteration's prefetch. NOTE: this closed form models the paper's
+    /// bf16-parameter gather; the runtime's measured
+    /// `RunLog::allgather_bytes` counts f32 parameter bytes (the
+    /// reproduction substrate keeps params in f32), so the two share the
+    /// (W−1)·payload *shape* but differ by the precision factor — only the
+    /// gradient ring (fp32 in both) matches byte-for-byte.
+    pub fn allgather_bytes_total(&self, workers: u64) -> u64 {
+        ring_allgather_bytes(workers.max(1) as usize, self.ms_lp())
+    }
+
+    /// All-gather bytes EACH rank moves under `--shard-optimizer`
+    /// (total ⧸ W rounded up).
+    pub fn allgather_bytes_per_worker(&self, workers: u64) -> u64 {
+        self.allgather_bytes_total(workers).div_ceil(workers.max(1))
+    }
+
+    /// Optimizer-state bytes per FSDP shard (master + m + v, fp32) — the
+    /// paper's `o` summed over the stack; the perfmodel's
+    /// [`o_bytes`](crate::perfmodel::SystemParams::o_bytes) × N.
+    pub fn opt_state_bytes(&self) -> u64 {
+        self.model.n_layers * self.model.layer_opt_state_bytes() / self.shards
+    }
+
+    /// Per-iteration optimizer-state SSD round trip with fully SSD-resident
+    /// states: every byte is read before the update and written back after
+    /// → 2·o·N. On the rank-0 path ONE rank moves all of it.
+    pub fn opt_ssd_round_trip_bytes(&self) -> u64 {
+        2 * self.opt_state_bytes()
+    }
+
+    /// Per-RANK optimizer-state SSD round trip under `--shard-optimizer`:
+    /// each rank round-trips only its 1/W shard (total ⧸ W rounded up) —
+    /// the ~1/W scaling the fig13_shard bench measures, and the reason the
+    /// CPU/SSD optimizer path stops being the W-invariant bottleneck.
+    pub fn sharded_opt_ssd_bytes_per_rank(&self, workers: u64) -> u64 {
+        self.opt_ssd_round_trip_bytes().div_ceil(workers.max(1))
     }
 
     /// §3.2 — single forward-backward pass (Ratel-style) at batch size
@@ -392,7 +473,72 @@ mod tests {
         }
         assert_eq!(w.allreduce_bytes_per_worker(1), 0);
         assert_eq!(w.allreduce_bytes_per_worker(2), w.grad_fp());
-        assert_eq!(w.allreduce_bytes_per_worker(4), 2 * 3 * w.grad_fp() / 4);
+        assert_eq!(
+            w.allreduce_bytes_per_worker(4),
+            (2 * 3 * w.grad_fp()).div_ceil(4)
+        );
+    }
+
+    /// The satellite consistency fix: the closed form counts the same
+    /// EFFECTIVE workers the runtime engine does, so when W > M the idle
+    /// ranks move nothing — and per-worker × active covers the total with
+    /// less than one worker's slack (same rounding everywhere).
+    #[test]
+    fn allreduce_counts_effective_workers_like_the_runtime() {
+        use crate::coordinator::dist::ring_traffic_bytes;
+        for m in [1u64, 2, 3, 5, 16] {
+            let w = Workload { m, ..wl(1) };
+            for workers in 1..=8u64 {
+                let active = w.effective_workers(workers);
+                assert_eq!(active, workers.min(m), "m={m} W={workers}");
+                // the closed-form total IS the runtime's accounting
+                assert_eq!(
+                    w.allreduce_bytes_total(workers),
+                    ring_traffic_bytes(active as usize, w.grad_fp()),
+                    "m={m} W={workers}"
+                );
+                let per = w.allreduce_bytes_per_worker(workers);
+                let total = w.allreduce_bytes_total(workers);
+                assert!(per * active >= total, "m={m} W={workers}");
+                assert!(per * active < total + active, "m={m} W={workers}");
+                // W > M: only M ranks ring; W = 1 rings nothing
+                if workers > m {
+                    assert_eq!(total, ring_traffic_bytes(m as usize, w.grad_fp()));
+                }
+            }
+        }
+    }
+
+    /// Sharded (ZeRO-style) closed forms: reduce-scatter + all-gather over
+    /// the whole group, and per-rank optimizer SSD round trips ~1/W of the
+    /// rank-0 path's.
+    #[test]
+    fn sharded_forms_scale_with_group() {
+        let w = wl(16);
+        // rs + ag of the SAME payload would equal the all-reduce; here the
+        // gather moves params (lp), the scatter grads (fp32)
+        assert_eq!(w.reduce_scatter_bytes_total(1), 0);
+        assert_eq!(w.allgather_bytes_total(1), 0);
+        assert_eq!(w.reduce_scatter_bytes_total(4), 3 * w.grad_fp());
+        assert_eq!(w.allgather_bytes_total(4), 3 * w.ms_lp());
+        assert_eq!(
+            w.reduce_scatter_bytes_per_worker(4),
+            (3 * w.grad_fp()).div_ceil(4)
+        );
+        // per-rank optimizer SSD round trip shrinks ~1/W
+        let full = w.opt_ssd_round_trip_bytes();
+        assert_eq!(full, 2 * w.opt_state_bytes());
+        assert_eq!(w.sharded_opt_ssd_bytes_per_rank(1), full);
+        for workers in [2u64, 4, 8] {
+            let per = w.sharded_opt_ssd_bytes_per_rank(workers);
+            assert_eq!(per, full.div_ceil(workers), "W={workers}");
+            assert!(per * workers >= full && per * workers < full + workers);
+        }
+        // the group (not the active count) sizes the sharded rings: W=8
+        // ranks all hold shards even when m < W
+        let small = Workload { m: 2, ..w };
+        assert_eq!(small.reduce_scatter_bytes_total(8), 7 * small.grad_fp());
+        assert_eq!(small.allreduce_bytes_total(8), 2 * small.grad_fp());
     }
 
     #[test]

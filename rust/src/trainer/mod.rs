@@ -169,13 +169,21 @@ pub struct RunLog {
     /// Total seconds the compute thread stalled on I/O (summed across
     /// workers in a `--workers W` run).
     pub io_stall_s: f64,
-    /// Per-worker share of `io_stall_s`, cumulative over the run (one entry
-    /// per configured worker; a single-worker run has one entry).
+    /// Per-worker share of `io_stall_s`, cumulative over the run — one
+    /// entry per ACTIVE worker in rank order (ranks whose micro-batch
+    /// partition is empty, i.e. W > M, do no work and get no entry, so
+    /// per-worker averages aren't diluted by idle ranks). A single-worker
+    /// run has one entry.
     pub worker_stall_s: Vec<f64>,
     /// Total wall seconds in the deterministic ring all-reduce (0 at W = 1).
     pub allreduce_s: f64,
-    /// Total ring all-reduce traffic, summed across ranks (0 at W = 1).
+    /// Total ring gradient traffic, summed across ranks (0 at W = 1):
+    /// all-reduce bytes on the rank-0 optimizer path, reduce-scatter bytes
+    /// under `--shard-optimizer`.
     pub allreduce_bytes: u64,
+    /// Total parameter all-gather traffic under `--shard-optimizer`
+    /// (0 at W = 1 and on the rank-0 path).
+    pub allgather_bytes: u64,
     /// Σx² over all parameters after the final drain — a deterministic
     /// digest the W-equivalence suite compares bit-for-bit.
     pub param_sq_norm: f64,
@@ -232,7 +240,8 @@ pub fn train(
     let state = ModelState::init(manifest, cfg)?;
     let mut corpus = SyntheticCorpus::new(shape.vocab, state.cfg.seed);
     let workers = state.cfg.workers.max(1);
-    let mut log = RunLog { worker_stall_s: vec![0.0; workers], ..Default::default() };
+    // worker_stall_s grows to the per-step ACTIVE worker count on first use
+    let mut log = RunLog::default();
 
     let policy = kind.policy();
     let mut driver = if workers <= 1 {
@@ -272,8 +281,12 @@ pub fn train(
         log.io_stall_s += stats.io_stall_s;
         log.allreduce_s += stats.allreduce_s;
         log.allreduce_bytes += stats.allreduce_bytes;
-        for (acc, v) in log.worker_stall_s.iter_mut().zip(&per_worker) {
-            *acc += v;
+        log.allgather_bytes += stats.allgather_bytes;
+        for (i, v) in per_worker.iter().enumerate() {
+            if log.worker_stall_s.len() <= i {
+                log.worker_stall_s.push(0.0);
+            }
+            log.worker_stall_s[i] += v;
         }
         if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
             println!(

@@ -258,11 +258,67 @@ fn prop_traffic_dp_collapses_to_single_worker() {
         if w1.allreduce_bytes_per_worker(1) != 0 {
             return Err("no ring traffic for a single worker".into());
         }
-        if workers > 1 && w1.allreduce_bytes_per_worker(workers) == 0 {
+        // the ring runs among the EFFECTIVE workers: with more than one
+        // active rank it must move bytes; with a single active rank (e.g.
+        // W > 1 but M = 1) it must move none — the runtime's accounting
+        let eff = w1.effective_workers(workers);
+        if eff > 1 && w1.allreduce_bytes_per_worker(workers) == 0 {
             return Err("multi-worker ring traffic must be positive".into());
+        }
+        if eff <= 1 && w1.allreduce_bytes_per_worker(workers) != 0 {
+            return Err("a lone active worker must move no ring traffic".into());
         }
         if ring_traffic_bytes(1, 1234) != 0 {
             return Err("ring totals must vanish at one rank".into());
+        }
+        Ok(())
+    });
+}
+
+/// The satellite byte-consistency property: for W ∈ {1..8} and every M
+/// (including M < W), the closed-form all-reduce total equals the runtime's
+/// `ring_traffic_bytes` over the effective worker count, per-worker × active
+/// covers the total within one worker's rounding slack, and the sharded
+/// reduce-scatter + all-gather halves reassemble the all-reduce identity on
+/// a common payload.
+#[test]
+fn prop_ring_bytes_consistent_between_runtime_and_closed_form() {
+    use greedysnake::coordinator::dist::{ring_allgather_bytes, ring_reduce_scatter_bytes};
+    check("ring-bytes", 80, |rng| {
+        let model = ModelCfg::new("t", 4 + rng.next_below(60), 8, 512 * (1 + rng.next_below(16)));
+        let m = 1 + rng.next_below(12);
+        let w = Workload { model, micro_batch: 1 + rng.next_below(8), seq_len: 512, m, shards: 1 };
+        for workers in 1..=8u64 {
+            let active = w.effective_workers(workers);
+            if active != workers.min(m) {
+                return Err(format!("m={m} W={workers}: effective {active}"));
+            }
+            let total = w.allreduce_bytes_total(workers);
+            if total != ring_traffic_bytes(active as usize, w.grad_fp()) {
+                return Err(format!("m={m} W={workers}: closed form != runtime total"));
+            }
+            let per = w.allreduce_bytes_per_worker(workers);
+            if per * active < total || per * active >= total + active {
+                return Err(format!(
+                    "m={m} W={workers}: per {per} × active {active} vs total {total}"
+                ));
+            }
+            // sharded halves: rs + ag of a common payload == the all-reduce
+            let payload = w.grad_fp();
+            let rs = ring_reduce_scatter_bytes(workers as usize, payload);
+            let ag = ring_allgather_bytes(workers as usize, payload);
+            if rs + ag != ring_traffic_bytes(workers as usize, payload) {
+                return Err(format!("W={workers}: rs {rs} + ag {ag} != all-reduce"));
+            }
+            if w.reduce_scatter_bytes_total(workers) != rs {
+                return Err(format!("W={workers}: traffic rs diverged from helper"));
+            }
+            // per-rank optimizer SSD round trips shrink ~1/W
+            let full = w.opt_ssd_round_trip_bytes();
+            let per_rank = w.sharded_opt_ssd_bytes_per_rank(workers);
+            if per_rank != full.div_ceil(workers) {
+                return Err(format!("W={workers}: per-rank opt bytes {per_rank}"));
+            }
         }
         Ok(())
     });
