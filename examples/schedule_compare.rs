@@ -204,6 +204,59 @@ fn main() -> anyhow::Result<()> {
             assert!(log.allgather_bytes > 0, "W={workers} all-gathered nothing");
         }
     }
+    // --- store-backend sweep: single SSD vs striped:2 vs DRAM-cached ------
+    // The pluggable TensorStore contract: backends only change where bytes
+    // live, so all three train bit-identically; striping accounts the same
+    // SSD bytes over parallel paths, while the cache tier absorbs them
+    // (the counters drop to the closed form's zero residual).
+    let mut b_logs: Vec<(&str, RunLog)> = Vec::new();
+    for (tag, ssds, cache_mb) in
+        [("ssd", 1usize, 0usize), ("striped:2", 2, 0), ("cached", 1, 256)]
+    {
+        let mut c = cfg(&format!("store_{ssds}_{cache_mb}"), 0.25);
+        c.ssds = ssds;
+        c.cpu_cache_mb = cache_mb;
+        let log =
+            train(Manifest::load("artifacts/tiny")?, c, ScheduleKind::Vertical, steps, m, 0)?;
+        b_logs.push((tag, log));
+    }
+    let mut t = Table::new(
+        "store-backend sweep — pluggable TensorStore, vertical schedule",
+        &["backend", "final loss", "ssd read", "ssd written", "cache hit/miss/evict"],
+    );
+    for (tag, log) in &b_logs {
+        t.row(&[
+            tag.to_string(),
+            format!("{:.4}", log.final_loss()),
+            greedysnake::util::stats::fmt_bytes(log.ssd_read as f64),
+            greedysnake::util::stats::fmt_bytes(log.ssd_written as f64),
+            format!("{}/{}/{}", log.cache_hits, log.cache_misses, log.cache_evictions),
+        ]);
+    }
+    t.emit(None);
+    let base = &b_logs[0].1;
+    for (tag, log) in &b_logs[1..] {
+        assert_eq!(base.losses, log.losses, "store backend {tag} changed the losses");
+        assert_eq!(base.grad_norms, log.grad_norms, "{tag} changed grad norms");
+        assert_eq!(
+            base.param_sq_norm.to_bits(),
+            log.param_sq_norm.to_bits(),
+            "store backend {tag} changed the parameters"
+        );
+        assert_eq!(
+            base.moment_sq_norm.to_bits(),
+            log.moment_sq_norm.to_bits(),
+            "store backend {tag} changed the optimizer moments"
+        );
+    }
+    let striped = &b_logs[1].1;
+    assert_eq!(base.ssd_read, striped.ssd_read, "striping must account the same bytes");
+    assert_eq!(base.ssd_written, striped.ssd_written);
+    let cached = &b_logs[2].1;
+    assert!(base.ssd_read > 0);
+    assert_eq!(cached.ssd_read, 0, "a fitting cache absorbs every read");
+    assert!(cached.cache_hits > 0, "the cache tier never hit");
+
     println!("schedule_compare OK");
     Ok(())
 }

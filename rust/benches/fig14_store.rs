@@ -1,0 +1,206 @@
+//! Fig. 14 (storage-tier panel) — the pluggable TensorStore backends under
+//! a throttled SSD: single device vs striped-2 vs DRAM-cached.
+//!
+//! * **simulated** (GPT-65B on the A100 node, `sim::simulate_store`): an
+//!   SSD-bound placement (everything offloaded) with 1 vs 2 striped
+//!   devices (2× aggregate bandwidth) and with a fitting DRAM cache
+//!   (fit-or-nothing absorption → the ALL_CPU placement);
+//! * **closed forms** (`traffic::Workload`): the SSD-resident working set,
+//!   the runtime store's per-iteration byte counters, and the cached
+//!   residual (0 when the working set fits, full traffic when not);
+//! * **real runtime** (when the AOT artifacts are built): short throttled
+//!   runs through each backend must be bit-identical (losses + Σx²
+//!   digests), striped-2 must strictly reduce wall-clock, and the cached
+//!   run's measured `ssd_read` must equal the closed form's residual
+//!   EXACTLY (zero — every get is a DRAM hit).
+//!
+//! Emits `bench_out/fig14_store.json` (uploaded as a CI artifact) plus a
+//! human-readable table.
+
+use std::collections::BTreeMap;
+
+use greedysnake::coordinator::TrainerConfig;
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::perfmodel::{StorageRatios, SystemParams};
+use greedysnake::sim::{simulate_store, Schedule};
+use greedysnake::traffic::Workload;
+use greedysnake::trainer::{train, RunLog, ScheduleKind};
+use greedysnake::util::json::Json;
+use greedysnake::util::table::Table;
+
+fn main() {
+    let m = 16u64;
+    let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+    let x = StorageRatios::ALL_SSD; // the storage tier IS the bottleneck
+    let sched = Schedule::GreedySnake { alpha: 0.0, x };
+    let wl = Workload { model: GPT_65B, micro_batch: 2, seq_len: SEQ_LEN, m, shards: 1 };
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("model".to_string(), Json::Str("gpt-65b".to_string()));
+    report.insert("machine".to_string(), Json::Str("a100".to_string()));
+    report.insert("schedule".to_string(), Json::Str(sched.kind_name()));
+    report.insert("m".to_string(), Json::Num(m as f64));
+
+    // ---- sim sweep --------------------------------------------------------
+    let ws = wl.ssd_working_set_bytes(x.param_cpu, x.ckpt_cpu, x.opt_cpu);
+    let single = simulate_store(&sp, m, sched, usize::MAX, 1, 0);
+    let striped = simulate_store(&sp, m, sched, usize::MAX, 2, 0);
+    let cached = simulate_store(&sp, m, sched, usize::MAX, 1, ws);
+    assert!(
+        striped.t_iter < single.t_iter,
+        "striped-2 sim {} must beat single {}",
+        striped.t_iter,
+        single.t_iter
+    );
+    assert!(
+        cached.t_iter < single.t_iter,
+        "fitting cache sim {} must beat single {}",
+        cached.t_iter,
+        single.t_iter
+    );
+    let mut t = Table::new(
+        "Fig. 14 (storage tier) — GPT-65B A100, all-SSD placement",
+        &["backend", "t_iter (s)", "tokens/s", "speedup vs single"],
+    );
+    let mut sim_obj: BTreeMap<String, Json> = BTreeMap::new();
+    for (name, r) in
+        [("single-ssd", single), ("striped-2", striped), ("dram-cached", cached)]
+    {
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", r.t_iter),
+            format!("{:.0}", r.tokens_per_s),
+            format!("{:.2}x", single.t_iter / r.t_iter),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("t_iter_s".to_string(), Json::Num(r.t_iter));
+        o.insert("tokens_per_s".to_string(), Json::Num(r.tokens_per_s));
+        o.insert(
+            "speedup_vs_single".to_string(),
+            Json::Num(single.t_iter / r.t_iter),
+        );
+        sim_obj.insert(name.to_string(), Json::Obj(o));
+    }
+    t.emit(Some("bench_out/fig14_store.tsv"));
+    report.insert("sim".to_string(), Json::Obj(sim_obj));
+
+    // ---- closed forms -----------------------------------------------------
+    let mut forms: BTreeMap<String, Json> = BTreeMap::new();
+    forms.insert("ssd_working_set_bytes".to_string(), Json::Num(ws as f64));
+    forms.insert(
+        "store_read_bytes_per_iter".to_string(),
+        Json::Num(wl.store_read_bytes(true, true) as f64),
+    );
+    forms.insert(
+        "cached_residual_fitting".to_string(),
+        Json::Num(wl.cached_store_read_bytes(
+            true,
+            true,
+            wl.store_working_set_bytes(true, true),
+        ) as f64),
+    );
+    forms.insert(
+        "cached_residual_undersized".to_string(),
+        Json::Num(wl.cached_store_read_bytes(true, true, 1) as f64),
+    );
+    // the fit-or-nothing law in numbers
+    assert_eq!(
+        wl.cached_store_read_bytes(true, true, wl.store_working_set_bytes(true, true)),
+        0
+    );
+    assert_eq!(
+        wl.cached_store_read_bytes(true, true, 1),
+        wl.store_read_bytes(true, true)
+    );
+    report.insert("closed_forms".to_string(), Json::Obj(forms));
+    println!(
+        "closed forms: working set {}, per-iter store reads {}",
+        greedysnake::util::stats::fmt_bytes(ws as f64),
+        greedysnake::util::stats::fmt_bytes(wl.store_read_bytes(true, true) as f64),
+    );
+
+    // ---- real-runtime leg (skips without AOT artifacts) -------------------
+    let runtime_status = match greedysnake::runtime::test_artifacts("artifacts/tiny") {
+        None => {
+            println!("runtime store leg: skipped (artifacts/tiny not built)");
+            "skipped".to_string()
+        }
+        Some(_) => {
+            let mk = |tag: &str, ssds: usize, cache_mb: usize| TrainerConfig {
+                alpha: 0.0,
+                opt_on_ssd: true,
+                ckpt_on_ssd: true,
+                overlap: false,
+                io_depth: 0,
+                ssd_read_bps: 4e6,
+                ssd_write_bps: 4e6,
+                ssds,
+                cpu_cache_mb: cache_mb,
+                ssd_path: std::env::temp_dir()
+                    .join(format!("gs_f14_{tag}_{}", std::process::id())),
+                ..Default::default()
+            };
+            let manifest = || greedysnake::runtime::Manifest::load("artifacts/tiny").unwrap();
+            let go = |tag: &str, ssds: usize, cache_mb: usize| -> RunLog {
+                train(manifest(), mk(tag, ssds, cache_mb), ScheduleKind::Vertical, 3, 3, 0)
+                    .unwrap()
+            };
+            let single = go("s1", 1, 0);
+            let striped = go("s2", 2, 0);
+            // unthrottled-equivalent cache run: no SSD traffic to throttle
+            let cached = go("c", 1, 256);
+            for (name, log) in [("striped-2", &striped), ("cached", &cached)] {
+                assert_eq!(single.losses, log.losses, "{name}: losses diverged");
+                assert_eq!(
+                    single.param_sq_norm.to_bits(),
+                    log.param_sq_norm.to_bits(),
+                    "{name}: parameters diverged"
+                );
+                assert_eq!(
+                    single.moment_sq_norm.to_bits(),
+                    log.moment_sq_norm.to_bits(),
+                    "{name}: moments diverged"
+                );
+            }
+            let t1: f64 = single.step_seconds.iter().sum();
+            let t2: f64 = striped.step_seconds.iter().sum();
+            assert!(
+                t2 < t1,
+                "striped-2 runtime {t2:.3}s must strictly undercut single {t1:.3}s"
+            );
+            // the closed form matches the measured counters EXACTLY
+            assert!(single.ssd_read > 0);
+            assert_eq!(
+                cached.ssd_read, 0,
+                "fitting cache: measured residual must equal the closed form (0)"
+            );
+            assert_eq!(cached.ssd_written, 0);
+            let mut o = BTreeMap::new();
+            o.insert("single_wall_s".to_string(), Json::Num(t1));
+            o.insert("striped2_wall_s".to_string(), Json::Num(t2));
+            o.insert(
+                "single_ssd_read_bytes".to_string(),
+                Json::Num(single.ssd_read as f64),
+            );
+            o.insert(
+                "cached_ssd_read_bytes".to_string(),
+                Json::Num(cached.ssd_read as f64),
+            );
+            o.insert("cache_hits".to_string(), Json::Num(cached.cache_hits as f64));
+            report.insert("runtime".to_string(), Json::Obj(o));
+            println!(
+                "runtime store leg: single {t1:.2}s vs striped-2 {t2:.2}s; \
+                 cached ssd reads {} (closed form: 0)",
+                cached.ssd_read,
+            );
+            "ok".to_string()
+        }
+    };
+    report.insert("runtime_status".to_string(), Json::Str(runtime_status));
+
+    std::fs::create_dir_all("bench_out").expect("create bench_out");
+    let path = "bench_out/fig14_store.json";
+    std::fs::write(path, Json::Obj(report).to_string_compact()).expect("write store report");
+    println!("store report -> {path}");
+}

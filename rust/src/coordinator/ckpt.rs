@@ -1,19 +1,24 @@
 //! Inter-layer Tensor Coordinator: activation checkpoints (forward) and
 //! inter-layer gradients (backward) share one store with CPU-or-SSD
 //! placement — the two data types have the same access pattern (§5).
+//!
+//! The offloaded path goes through the pluggable
+//! [`TensorStore`](crate::memory::store::TensorStore), so checkpoints ride
+//! whatever backend the run configured (single SSD, striped multi-SSD, or
+//! the DRAM-cached tier) with identical bytes either way.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::memory::SsdStorage;
+use crate::memory::store::TensorStore;
 use crate::runtime::tensor::HostTensor;
 
 /// Keyed activation/gradient store.
 pub struct InterLayerCoordinator {
     cpu: Mutex<HashMap<String, HostTensor>>,
-    ssd: Arc<SsdStorage>,
+    ssd: Arc<dyn TensorStore>,
     to_ssd: bool,
     /// Stats: bytes moved through each path.
     pub cpu_bytes: std::sync::atomic::AtomicU64,
@@ -26,7 +31,7 @@ pub fn ckpt_key(layer: usize, mb: usize) -> String {
 }
 
 impl InterLayerCoordinator {
-    pub fn new(ssd: Arc<SsdStorage>, to_ssd: bool) -> Self {
+    pub fn new(ssd: Arc<dyn TensorStore>, to_ssd: bool) -> Self {
         InterLayerCoordinator {
             cpu: Mutex::new(HashMap::new()),
             ssd,
@@ -119,9 +124,9 @@ impl InterLayerCoordinator {
 mod tests {
     use super::*;
 
-    fn ssd() -> Arc<SsdStorage> {
+    fn ssd() -> Arc<dyn TensorStore> {
         Arc::new(
-            SsdStorage::create_unthrottled(
+            crate::memory::SsdStorage::create_unthrottled(
                 std::env::temp_dir().join(format!("gs_ckpt_test_{}", std::process::id())),
             )
             .unwrap(),

@@ -6,7 +6,9 @@
 //! [`DataParallelEngine`] partitions each step's M micro-batches
 //! *contiguously* across W worker [`StepEngine`]s — each with its own
 //! checkpoint coordinator and I/O-pipeline lanes, all over the ONE shared
-//! [`SsdStorage`](crate::memory::SsdStorage), whose throttle layer
+//! [`TensorStore`](crate::memory::store::TensorStore) tier (single SSD,
+//! striped multi-SSD, or DRAM-cached — `--ssds`/`--cpu-cache-mb`), whose
+//! throttle layer
 //! arbitrates the contended tier exactly as it does for a single worker's
 //! concurrent lanes — and combines the per-layer gradients with a
 //! deterministic chunked ring all-reduce before the eager/delayed optimizer
@@ -93,6 +95,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::memory::store::TensorStore;
 use crate::runtime::tensor::{HostTensor, TokenTensor};
 use crate::runtime::Runtime;
 
@@ -339,8 +342,9 @@ impl<'a> DataParallelEngine<'a> {
             );
         }
         self.step += 1;
-        let read0 = self.state.ssd.bytes_read();
-        let written0 = self.state.ssd.bytes_written();
+        let read0 = self.state.store.bytes_read();
+        let written0 = self.state.store.bytes_written();
+        let cache0 = self.state.store.cache_stats().total;
 
         // Delayed α updates from the previous iteration overlap this
         // forward; every worker's first visit of a layer waits on them
@@ -514,11 +518,12 @@ impl<'a> DataParallelEngine<'a> {
             0
         };
 
+        let cache1 = self.state.store.cache_stats().total;
         let mut stats = StepStats {
             loss: loss_sum / m as f64,
             grad_norm,
-            ssd_bytes_read: self.state.ssd.bytes_read() - read0,
-            ssd_bytes_written: self.state.ssd.bytes_written() - written0,
+            ssd_bytes_read: self.state.store.bytes_read() - read0,
+            ssd_bytes_written: self.state.store.bytes_written() - written0,
             param_bytes_loaded: 0,
             prefetch_hits: 0,
             prefetch_misses: 0,
@@ -526,6 +531,9 @@ impl<'a> DataParallelEngine<'a> {
             allreduce_s,
             allreduce_bytes,
             allgather_bytes,
+            cache_hits: cache1.hits - cache0.hits,
+            cache_misses: cache1.misses - cache0.misses,
+            cache_evictions: cache1.evictions - cache0.evictions,
         };
         for p in &partials {
             stats.param_bytes_loaded += p.param_bytes;

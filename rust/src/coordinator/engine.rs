@@ -33,6 +33,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::memory::store::TensorStore;
 use crate::runtime::tensor::{HostTensor, TokenTensor};
 use crate::runtime::{Runtime, Stage};
 
@@ -79,6 +80,14 @@ pub struct StepStats {
     /// payload, performed before the next iteration's prefetch). 0 on the
     /// single-worker engine and the rank-0 (unsharded) optimizer path.
     pub allgather_bytes: u64,
+    /// DRAM cache-tier hits this step (0 without `--cpu-cache-mb` — see
+    /// [`crate::memory::CachedStore`]). A hit is a `get` served from DRAM
+    /// without touching the SSD tier.
+    pub cache_hits: u64,
+    /// Cache-tier misses this step (reads that fell through to the SSD).
+    pub cache_misses: u64,
+    /// Cache-tier LRU evictions this step (dirty victims write back).
+    pub cache_evictions: u64,
 }
 
 /// Accumulate into an optional buffer.
@@ -136,7 +145,7 @@ impl<'a> StepEngine<'a> {
             state,
             rt,
             ilc: Arc::new(InterLayerCoordinator::new(
-                Arc::clone(&state.ssd),
+                Arc::clone(&state.store),
                 state.cfg.ckpt_on_ssd,
             )),
             opt,
@@ -248,8 +257,9 @@ impl<'a> StepEngine<'a> {
             );
         }
         self.step += 1;
-        let read0 = self.state.ssd.bytes_read();
-        let written0 = self.state.ssd.bytes_written();
+        let read0 = self.state.store.bytes_read();
+        let written0 = self.state.store.bytes_written();
+        let cache0 = self.state.store.cache_stats().total;
         let loaded0 = self.param_bytes_loaded;
         let io0 = self.io.stats();
 
@@ -418,11 +428,12 @@ impl<'a> StepEngine<'a> {
         let io1 = self.io.stats();
 
         let grad_norm = self.opt.finish_iter();
+        let cache1 = self.state.store.cache_stats().total;
         Ok(StepStats {
             loss: loss_sum / m as f64,
             grad_norm,
-            ssd_bytes_read: self.state.ssd.bytes_read() - read0,
-            ssd_bytes_written: self.state.ssd.bytes_written() - written0,
+            ssd_bytes_read: self.state.store.bytes_read() - read0,
+            ssd_bytes_written: self.state.store.bytes_written() - written0,
             param_bytes_loaded: self.param_bytes_loaded - loaded0,
             prefetch_hits: io1.prefetch_hits - io0.prefetch_hits,
             prefetch_misses: io1.prefetch_misses - io0.prefetch_misses,
@@ -430,6 +441,9 @@ impl<'a> StepEngine<'a> {
             allreduce_s: 0.0,
             allreduce_bytes: 0,
             allgather_bytes: 0,
+            cache_hits: cache1.hits - cache0.hits,
+            cache_misses: cache1.misses - cache0.misses,
+            cache_evictions: cache1.evictions - cache0.evictions,
         })
     }
 

@@ -21,6 +21,12 @@
 //! stalls, so the two modes are directly comparable through
 //! [`IoStats::stall_seconds`].
 //!
+//! The pipeline is storage-agnostic: it moves tensors through the
+//! [`InterLayerCoordinator`], which itself writes whatever
+//! [`TensorStore`](crate::memory::store::TensorStore) backend the run
+//! configured — a single SSD, a striped multi-SSD set, or the DRAM-cached
+//! tier — so lookahead depth and backend compose freely.
+//!
 //! Lane-op failures (I/O errors *and* panics) surface as `anyhow` errors at
 //! this boundary — a panicked op poisons the executor
 //! ([`LaneExecutor::try_wait`]) instead of unwinding or deadlocking the

@@ -38,6 +38,16 @@
 //! [`engine::StepStats`] reports prefetch hits/misses and the compute
 //! thread's I/O stall time so the overlap win is directly measurable.
 //!
+//! Every coordinator I/O path goes through the pluggable
+//! [`crate::memory::store::TensorStore`] tier rather than a concrete SSD
+//! type: `--ssds N` stripes objects across N throttled devices
+//! ([`crate::memory::StripedStore`]) and `--cpu-cache-mb` puts a bounded
+//! DRAM write-back cache in front ([`crate::memory::CachedStore`]). The
+//! backends are bit-identical by contract — they move the same bytes to
+//! different places — so every equivalence suite in this crate holds
+//! across them; [`engine::StepStats`] additionally reports the cache
+//! tier's hit/miss/evict counters.
+//!
 //! The data-parallel dimension lives in [`dist`]: `--workers W` partitions
 //! each step's micro-batches across W worker engines (own I/O lanes, one
 //! shared throttled SSD) and combines gradients with a deterministic

@@ -2,7 +2,8 @@
 //! trips, CPU Adam execution (worker-overlapped Rust path or inline AOT
 //! Pallas kernel), and the §4.4 delay-α split.
 //!
-//! Optimizer state for each (layer, tensor) is stored as two SSD objects,
+//! Optimizer state for each (layer, tensor) is stored as two objects on
+//! the pluggable [`TensorStore`](crate::memory::store::TensorStore) tier,
 //! split at the α boundary — the *eager* part `[0, split)` updates during
 //! the backward pass (Fig. 7), the *delayed* part `[split, n)` during the
 //! next iteration's forward (Fig. 8) — so each part round-trips exactly its
@@ -32,7 +33,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::exec::pool::{TaskHandle, ThreadPool};
-use crate::memory::SsdStorage;
+use crate::memory::store::TensorStore;
 use crate::optimizer::{adam_step_hlo, adam_step_rust, delay_split, AdamParams, AdamState, ClipMonitor};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::Runtime;
@@ -137,7 +138,7 @@ impl OptimizerStepCoordinator {
                             } else {
                                 part_key(l, t, kind, part)
                             };
-                            state.ssd.put_f32(&key, &vec![0.0; hi - lo])?;
+                            state.store.put_f32(&key, &vec![0.0; hi - lo])?;
                         }
                     }
                 }
@@ -182,12 +183,12 @@ impl OptimizerStepCoordinator {
         } else if self.cfg.overlap {
             let params = Arc::clone(&state.layers[l]);
             let opts = Arc::clone(&state.layer_opt[l]);
-            let ssd = Arc::clone(&state.ssd);
+            let store = Arc::clone(&state.store);
             let cfg = self.cfg.clone();
             let g2 = Arc::clone(&grads);
             pend.eager = Some(self.pool.submit(move || {
                 apply_update_rust(
-                    &params, &opts, &ssd, l, &g2, step, scale, shards, Part::Eager, &cfg,
+                    &params, &opts, &store, l, &g2, step, scale, shards, Part::Eager, &cfg,
                 )
                 .expect("eager optimizer update");
             }));
@@ -195,7 +196,7 @@ impl OptimizerStepCoordinator {
             apply_update_rust(
                 &state.layers[l],
                 &state.layer_opt[l],
-                &state.ssd,
+                &state.store,
                 l,
                 &grads,
                 step,
@@ -237,11 +238,11 @@ impl OptimizerStepCoordinator {
             } else if self.cfg.overlap {
                 let params = Arc::clone(&state.layers[l]);
                 let opts = Arc::clone(&state.layer_opt[l]);
-                let ssd = Arc::clone(&state.ssd);
+                let store = Arc::clone(&state.store);
                 let cfg = self.cfg.clone();
                 pend.delayed = Some(self.pool.submit(move || {
                     apply_update_rust(
-                        &params, &opts, &ssd, l, &grads, step, scale, shards, Part::Delayed,
+                        &params, &opts, &store, l, &grads, step, scale, shards, Part::Delayed,
                         &cfg,
                     )
                     .expect("delayed optimizer update");
@@ -250,7 +251,7 @@ impl OptimizerStepCoordinator {
                 apply_update_rust(
                     &state.layers[l],
                     &state.layer_opt[l],
-                    &state.ssd,
+                    &state.store,
                     l,
                     &grads,
                     step,
@@ -378,7 +379,7 @@ fn moment_key(l: usize, t: usize, kind: char, rank: usize, shards: usize, part: 
 fn apply_update_rust(
     params: &Arc<Mutex<Vec<HostTensor>>>,
     opts: &Arc<Mutex<Vec<AdamState>>>,
-    ssd: &Arc<SsdStorage>,
+    store: &Arc<dyn TensorStore>,
     l: usize,
     grads: &Arc<Vec<HostTensor>>,
     step: u64,
@@ -404,8 +405,8 @@ fn apply_update_rust(
                 let key_v = moment_key(l, t, 'v', rank, shards, part);
                 let mut m = Vec::new();
                 let mut v = Vec::new();
-                ssd.get_f32(&key_m, &mut m)?;
-                ssd.get_f32(&key_v, &mut v)?;
+                store.get_f32(&key_m, &mut m)?;
+                store.get_f32(&key_v, &mut v)?;
                 let mut st = AdamState { m, v };
                 adam_step_rust(
                     &mut pguard[t].data[lo..hi],
@@ -417,8 +418,8 @@ fn apply_update_rust(
                     0,
                     hi - lo,
                 );
-                ssd.put_f32(&key_m, &st.m)?;
-                ssd.put_f32(&key_v, &st.v)?;
+                store.put_f32(&key_m, &st.m)?;
+                store.put_f32(&key_v, &st.v)?;
             } else {
                 let mut oguard = opts.lock().unwrap();
                 adam_step_rust(
@@ -466,8 +467,8 @@ fn apply_update_hlo(
                 let key_v = moment_key(l, t, 'v', rank, shards, part);
                 let mut m = Vec::new();
                 let mut v = Vec::new();
-                state.ssd.get_f32(&key_m, &mut m)?;
-                state.ssd.get_f32(&key_v, &mut v)?;
+                state.store.get_f32(&key_m, &mut m)?;
+                state.store.get_f32(&key_v, &mut v)?;
                 let mut st = AdamState { m, v };
                 let len = hi - lo;
                 adam_step_hlo(
@@ -482,8 +483,8 @@ fn apply_update_hlo(
                     0,
                     len,
                 )?;
-                state.ssd.put_f32(&key_m, &st.m)?;
-                state.ssd.put_f32(&key_v, &st.v)?;
+                state.store.put_f32(&key_m, &st.m)?;
+                state.store.put_f32(&key_v, &st.v)?;
             } else {
                 let mut oguard = state.layer_opt[l].lock().unwrap();
                 adam_step_hlo(

@@ -4,6 +4,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::memory::store::{CachedStore, StripedStore, TensorStore};
 use crate::memory::SsdStorage;
 use crate::optimizer::{AdamParams, AdamState};
 use crate::runtime::manifest::Manifest;
@@ -61,6 +62,20 @@ pub struct TrainerConfig {
     pub ssd_path: std::path::PathBuf,
     pub ssd_read_bps: f64,
     pub ssd_write_bps: f64,
+    /// Number of independent SSD devices to stripe the store across
+    /// (`--ssds`; the runtime twin of the sim flag). 1 = the single-device
+    /// [`SsdStorage`] path; N > 1 = [`StripedStore`] — each object's
+    /// extents round-robin over N backing files (`{ssd_path}.d{i}`), each
+    /// with its OWN read/write throttle, so one object's transfer proceeds
+    /// over N parallel paths. Bit-identical to `ssds = 1`.
+    pub ssds: usize,
+    /// Bounded CPU-DRAM write-back cache in front of the store, MiB
+    /// (`--cpu-cache-mb`; 0 = off). Hot objects (moments, checkpoints) are
+    /// served from DRAM — absorbed traffic never reaches the SSD tier —
+    /// with LRU eviction + dirty write-back when the budget
+    /// ([`crate::memory::Tier`]-accounted) runs out. Bit-identical to the
+    /// uncached path.
+    pub cpu_cache_mb: usize,
     /// Seed for parameter init and the synthetic corpus.
     pub seed: u64,
 }
@@ -82,6 +97,8 @@ impl Default for TrainerConfig {
                 .join(format!("greedysnake_ssd_{}", std::process::id())),
             ssd_read_bps: f64::INFINITY,
             ssd_write_bps: f64::INFINITY,
+            ssds: 1,
+            cpu_cache_mb: 0,
             seed: 42,
         }
     }
@@ -128,9 +145,37 @@ pub struct ModelState {
     /// CPU-resident moments (empty when `opt_on_ssd`).
     pub layer_opt: Vec<Arc<Mutex<Vec<AdamState>>>>,
     pub embed_opt: Arc<Mutex<Vec<AdamState>>>,
-    /// The SSD tier holding offloaded optimizer state.
-    pub ssd: Arc<SsdStorage>,
+    /// The pluggable storage tier holding offloaded optimizer state and
+    /// spilled checkpoints — single SSD, striped multi-SSD, or DRAM-cached
+    /// per [`TrainerConfig::ssds`] / [`TrainerConfig::cpu_cache_mb`]. Every
+    /// backend is bit-identical (see `memory::store`); only byte placement
+    /// and wall time differ.
+    pub store: Arc<dyn TensorStore>,
     pub cfg: TrainerConfig,
+}
+
+/// Build the configured [`TensorStore`] backend stack for `cfg`.
+fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
+    let base: Arc<dyn TensorStore> = if cfg.ssds > 1 {
+        Arc::new(StripedStore::create(
+            &cfg.ssd_path,
+            cfg.ssds,
+            cfg.ssd_read_bps,
+            cfg.ssd_write_bps,
+        )?)
+    } else {
+        Arc::new(SsdStorage::create(
+            &cfg.ssd_path,
+            cfg.ssd_read_bps,
+            cfg.ssd_write_bps,
+        )?)
+    };
+    let store: Arc<dyn TensorStore> = if cfg.cpu_cache_mb > 0 {
+        Arc::new(CachedStore::new(base, (cfg.cpu_cache_mb as u64) << 20))
+    } else {
+        base
+    };
+    Ok(store)
 }
 
 impl ModelState {
@@ -141,11 +186,7 @@ impl ModelState {
         let nl = manifest.config.n_layers;
         let mut layers = Vec::with_capacity(nl);
         let mut layer_opt = Vec::with_capacity(nl);
-        let ssd = Arc::new(SsdStorage::create(
-            &cfg.ssd_path,
-            cfg.ssd_read_bps,
-            cfg.ssd_write_bps,
-        )?);
+        let store = build_store(&cfg)?;
 
         for _l in 0..nl {
             let params: Vec<HostTensor> = manifest
@@ -180,7 +221,7 @@ impl ModelState {
             embed: Arc::new(Mutex::new(embed)),
             layer_opt,
             embed_opt: Arc::new(Mutex::new(embed_opt)),
-            ssd,
+            store,
             cfg,
         })
     }
@@ -222,8 +263,8 @@ impl ModelState {
                                 } else {
                                     part_key(l, t, kind, part)
                                 };
-                                if self.ssd.contains(&key) {
-                                    self.ssd.get_f32(&key, &mut buf)?;
+                                if self.store.contains(&key) {
+                                    self.store.get_f32(&key, &mut buf)?;
                                     full.extend_from_slice(&buf);
                                 }
                             }
@@ -291,6 +332,32 @@ mod tests {
         assert!(!a.opt_on_ssd && !a.overlap);
         assert_eq!(a.workers, 1);
         assert!(!a.shard_optimizer);
+    }
+
+    /// `build_store` assembles the configured backend stack; every backend
+    /// must round-trip bytes identically (the bit-identity contract).
+    #[test]
+    fn store_backend_selection_round_trips() {
+        let configs = [
+            TrainerConfig::for_test("store_ssd"),
+            TrainerConfig { ssds: 2, ..TrainerConfig::for_test("store_striped") },
+            TrainerConfig { cpu_cache_mb: 4, ..TrainerConfig::for_test("store_cached") },
+            TrainerConfig {
+                ssds: 3,
+                cpu_cache_mb: 4,
+                ..TrainerConfig::for_test("store_both")
+            },
+        ];
+        for cfg in configs {
+            let store = super::build_store(&cfg).unwrap();
+            let xs: Vec<f32> = (0..513).map(|i| i as f32 * 0.25).collect();
+            store.put_f32("opt_m_l0_t0_e", &xs).unwrap();
+            let mut out = Vec::new();
+            store.get_f32("opt_m_l0_t0_e", &mut out).unwrap();
+            assert_eq!(out, xs, "ssds={} cache={}", cfg.ssds, cfg.cpu_cache_mb);
+            assert!(store.contains("opt_m_l0_t0_e"));
+            assert_eq!(store.len_of("opt_m_l0_t0_e"), Some(513 * 4));
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::SystemParams;
 use greedysnake::roofline::Roofline;
 use greedysnake::runtime::Manifest;
-use greedysnake::sim::{simulate_dist, simulate_io, DistConfig, Schedule};
+use greedysnake::sim::{simulate_dist, simulate_store, DistConfig, Schedule};
 use greedysnake::trainer::{train, ScheduleKind};
 use greedysnake::util::cli::Cli;
 use greedysnake::util::table::Table;
@@ -94,6 +94,20 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
             Some("2"),
         )
         .opt(
+            "ssds",
+            "stripe the store across N independent SSD devices (one backing file and \
+             throttle each; objects split round-robin, shares move in parallel) — \
+             the runtime twin of `simulate --ssds`; bit-identical to 1",
+            Some("1"),
+        )
+        .opt(
+            "cpu-cache-mb",
+            "bounded CPU-DRAM write-back cache in front of the store, MiB (LRU with \
+             dirty write-back; absorbed reads/writes never reach the SSD tier; \
+             0 = off; bit-identical either way)",
+            Some("0"),
+        )
+        .opt(
             "workers",
             "data-parallel worker count W: micro-batches split contiguously across W \
              model replicas sharing the SSD, gradients combined by a deterministic \
@@ -134,6 +148,8 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         },
         ssd_read_bps: if r > 0.0 { r * 1e9 } else { f64::INFINITY },
         ssd_write_bps: if w > 0.0 { w * 1e9 } else { f64::INFINITY },
+        ssds: cli.get_parsed::<usize>("ssds")?.max(1),
+        cpu_cache_mb: cli.get_parsed("cpu-cache-mb")?,
         seed: cli.get_parsed("seed")?,
         ..Default::default()
     };
@@ -142,16 +158,19 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{}",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{} ssds={} cpu-cache={}MiB",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
         cfg.io_depth,
         cfg.workers,
         if cfg.shard_optimizer { " shard-optimizer" } else { "" },
+        cfg.ssds,
+        cfg.cpu_cache_mb,
     );
     let workers = cfg.workers;
     let sharded = cfg.shard_optimizer && workers > 1;
+    let cached = cfg.cpu_cache_mb > 0;
     let log = train(manifest, cfg, kind, steps, m, cli.get_parsed("log-every")?)?;
     let tokens_per_step = m * shape.micro_batch * shape.seq_len;
     println!(
@@ -189,6 +208,15 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
             );
         }
     }
+    if cached {
+        println!(
+            "cpu-cache: hit/miss/evict {}/{}/{}",
+            log.cache_hits, log.cache_misses, log.cache_evictions,
+        );
+        for (cat, [h, mi, e]) in &log.cache_by_cat {
+            println!("cpu-cache: {cat}: hit/miss/evict {h}/{mi}/{e}");
+        }
+    }
     Ok(())
 }
 
@@ -220,6 +248,13 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
             Some("1"),
         )
         .opt("ssds", "modeled SSDs shared by the workers (round-robin)", Some("1"))
+        .opt(
+            "cpu-cache-mb",
+            "modeled CPU-DRAM cache tier, MiB: when the schedule's SSD-resident \
+             working set fits, its traffic is served from DRAM (the runtime \
+             --cpu-cache-mb mirror; fit-or-nothing LRU law, see traffic::Workload)",
+            Some("0"),
+        )
         .flag(
             "shard-optimizer",
             "ZeRO-style sharded optimizer in the dist sim: reduce-scatter legs on the \
@@ -256,6 +291,7 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
     let io_depth = parse_io_depth(&cli.get("io-depth").unwrap())?;
     let workers: usize = cli.get_parsed("workers")?;
     let ssds: usize = cli.get_parsed("ssds")?;
+    let cache_bytes = (cli.get_parsed::<u64>("cpu-cache-mb")?) << 20;
     let shard_optimizer = cli.has_flag("shard-optimizer");
     let r = if workers > 1 || ssds > 1 || shard_optimizer {
         // the dist sim models each GPU as an explicit worker with its own
@@ -273,10 +309,11 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
             ssds: ssds.max(1),
             io_depth,
             shard_optimizer,
+            cache_bytes,
         };
         simulate_dist(&sp, m, schedule, cfg)
     } else {
-        simulate_io(&sp, m, schedule, io_depth)
+        simulate_store(&sp, m, schedule, io_depth, 1, cache_bytes)
     };
     println!(
         "{} {} x{} M={m} W={}: {:.1}s/iter, {:.0} tokens/s, {:.1} TFLOPs/GPU, GPU util {:.0}%",

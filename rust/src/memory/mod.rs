@@ -1,14 +1,18 @@
 //! Three-tier memory hierarchy substrate: GPU / CPU capacity-accounted
 //! tiers, a bandwidth-throttled file-backed SSD (the NVMe stand-in — see
-//! DESIGN.md §Substitutions), and the §5 pinned-buffer pool with the
-//! dynamic-programming power-of-two packing.
+//! DESIGN.md §Substitutions), the pluggable [`store::TensorStore`] object
+//! tier the coordinators do all their I/O through (single SSD, striped
+//! multi-SSD, or DRAM-cached — backend-bit-identical by contract), and the
+//! §5 pinned-buffer pool with the dynamic-programming power-of-two packing.
 
 pub mod pinned;
 pub mod ssd;
+pub mod store;
 pub mod throttle;
 pub mod tier;
 
 pub use pinned::PinnedPool;
 pub use ssd::SsdStorage;
+pub use store::{CacheCounters, CacheStats, CachedStore, SsdBackend, StripedStore, TensorStore};
 pub use throttle::Throttle;
 pub use tier::Tier;

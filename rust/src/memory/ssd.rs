@@ -92,6 +92,11 @@ impl SsdStorage {
     }
 
     fn allocate(&self, len: u64) -> Extent {
+        if len == 0 {
+            // canonical empty extent: offset 0, so it never pins the
+            // high-water mark (which shrinks when tail extents free)
+            return Extent { offset: 0, len: 0 };
+        }
         let mut l = self.layout.lock().unwrap();
         // best-fit over the free list
         let mut best: Option<usize> = None;
@@ -131,6 +136,17 @@ impl SsdStorage {
         if idx > 0 && l.free[idx - 1].offset + l.free[idx - 1].len == l.free[idx].offset {
             l.free[idx - 1].len += l.free[idx].len;
             l.free.remove(idx);
+        }
+        // A trailing free extent is reclaimable space, not footprint: shrink
+        // the high-water mark back to the last live byte (the free list is
+        // coalesced, so at most one extent can touch `end`). Without this,
+        // `footprint()` only ever grew — churny delete/put workloads made
+        // the backing file look permanently as large as its worst moment.
+        if let Some(&last) = l.free.last() {
+            if last.offset + last.len == l.end {
+                l.end = last.offset;
+                l.free.pop();
+            }
         }
     }
 
@@ -345,6 +361,47 @@ mod tests {
         ssd.delete("b"); // middle join: one 300-byte extent
         ssd.put("big", &[7u8; 300]).unwrap();
         assert_eq!(ssd.footprint(), 300);
+    }
+
+    /// Regression: the high-water mark used to only ever grow — freeing a
+    /// tail extent (via `delete` or a shrinking `put`) must give the space
+    /// back, coalescing through interior holes that reach the end.
+    #[test]
+    fn footprint_shrinks_when_tail_extent_freed() {
+        let ssd = SsdStorage::create_unthrottled(tmp("shrink")).unwrap();
+        for (k, v) in [("a", 100), ("b", 100), ("c", 100)] {
+            ssd.put(k, &vec![0u8; v]).unwrap();
+        }
+        assert_eq!(ssd.footprint(), 300);
+        ssd.delete("c"); // tail extent: reclaimed immediately
+        assert_eq!(ssd.footprint(), 200);
+        ssd.delete("a"); // interior hole: footprint unchanged
+        assert_eq!(ssd.footprint(), 200);
+        ssd.delete("b"); // coalesces [0,100)+[100,200) through to the end
+        assert_eq!(ssd.footprint(), 0);
+        ssd.check_consistency().unwrap();
+        // a put that frees the old tail extent (its new bytes land in an
+        // interior hole) reclaims the tail too
+        ssd.put("a", &[1u8; 100]).unwrap();
+        ssd.put("t", &[2u8; 100]).unwrap();
+        assert_eq!(ssd.footprint(), 200);
+        ssd.delete("a"); // interior hole: footprint unchanged
+        assert_eq!(ssd.footprint(), 200);
+        ssd.put("t", &[3u8; 50]).unwrap(); // fits the hole; old tail freed
+        assert_eq!(ssd.footprint(), 50, "put freeing the tail must shrink");
+        ssd.check_consistency().unwrap();
+        let mut out = Vec::new();
+        ssd.get("t", &mut out).unwrap();
+        assert_eq!(out, vec![3u8; 50]);
+    }
+
+    #[test]
+    fn get_f32_rejects_unaligned_length() {
+        let ssd = SsdStorage::create_unthrottled(tmp("unaligned")).unwrap();
+        ssd.put("bad", &[1u8, 2, 3, 4, 5]).unwrap();
+        let mut out = vec![9.0f32];
+        let err = ssd.get_f32("bad", &mut out).unwrap_err().to_string();
+        assert!(err.contains("f32-aligned"), "{err}");
     }
 
     #[test]

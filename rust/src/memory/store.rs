@@ -1,0 +1,903 @@
+//! Pluggable tensor-object storage — the extension point behind every
+//! coordinator I/O path.
+//!
+//! The trainer's moments and checkpoints used to flow through one
+//! hard-wired `Arc<SsdStorage>`; [`TensorStore`] abstracts that tier so the
+//! storage backend is a runtime choice:
+//!
+//! * [`SsdBackend`] — the existing single file-backed throttled store
+//!   ([`SsdStorage`]), byte-for-byte the historical path;
+//! * [`StripedStore`] — stripes each object round-robin across N
+//!   independent [`SsdStorage`] devices, each with its OWN throttle, and
+//!   moves the per-device shares on parallel threads — one object's read or
+//!   write proceeds over N paths at once (`--ssds N` on `greedysnake
+//!   train`, the runtime twin of the sim's `--ssds` flag);
+//! * [`CachedStore`] — a bounded CPU-DRAM write-back cache in front of any
+//!   inner store (`--cpu-cache-mb`), capacity-accounted against a
+//!   [`Tier`], LRU eviction with dirty write-back, and per-[`Category`]
+//!   hit/miss/evict counters ([`CacheStats`]) surfaced through
+//!   `StepStats`/`RunLog`.
+//!
+//! ## Bit-identity contract
+//!
+//! A backend only changes **where bytes live and how fast they move** —
+//! never the bytes. Every backend must return exactly the data last `put`
+//! under a key, so training through any backend is bit-identical to the
+//! seed `SsdBackend` path: same losses, gradient norms, and Σx²
+//! parameter/moment digests (pinned by the store-backend axis of the
+//! gradient-equivalence suite in `rust/tests/integration.rs` and the
+//! striped-vs-single property test in `rust/tests/proptests.rs`). Byte
+//! *accounting* may legitimately differ only for [`CachedStore`], whose
+//! `bytes_read`/`bytes_written` report the traffic that actually reached
+//! the backing store — cache absorption is the measured quantity.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, ensure, Result};
+
+use super::ssd::SsdStorage;
+use super::tier::{Category, Tier};
+
+/// The pluggable storage tier every coordinator I/O path goes through.
+///
+/// Implementations must be internally synchronized (`&self` methods are
+/// called concurrently from the I/O lanes and the optimizer worker) and
+/// must never return torn bytes for racing same-key operations.
+pub trait TensorStore: Send + Sync {
+    /// Write `data` under `key`, replacing any previous object.
+    fn put(&self, key: &str, data: &[u8]) -> Result<()>;
+
+    /// Read the object at `key` into `out` (resized to fit).
+    fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()>;
+
+    /// Remove an object if present; returns whether it existed.
+    fn delete(&self, key: &str) -> bool;
+
+    fn contains(&self, key: &str) -> bool;
+
+    /// Stored byte length of `key`, if present.
+    fn len_of(&self, key: &str) -> Option<u64>;
+
+    /// Total bytes moved through the backing read path.
+    fn bytes_read(&self) -> u64;
+
+    /// Total bytes moved through the backing write path.
+    fn bytes_written(&self) -> u64;
+
+    /// Backing-storage high-water mark (summed across devices).
+    fn footprint(&self) -> u64;
+
+    /// Cache-tier counters; all-zero for backends without a cache.
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+
+    // Typed helpers for the f32 tensors the trainer stores. ----------------
+
+    fn put_f32(&self, key: &str, data: &[f32]) -> Result<()> {
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        self.put(key, bytes)
+    }
+
+    /// Read an f32 object; errors (instead of truncating) if the stored
+    /// byte length is not a multiple of 4 — a corrupt or mistyped object.
+    fn get_f32(&self, key: &str, out: &mut Vec<f32>) -> Result<()> {
+        let mut raw = Vec::new();
+        self.get(key, &mut raw)?;
+        ensure!(
+            raw.len() % 4 == 0,
+            "object '{key}' not f32-aligned ({} bytes)",
+            raw.len()
+        );
+        out.resize(raw.len() / 4, 0.0);
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, raw.len());
+        }
+        Ok(())
+    }
+}
+
+/// The historical single-device backend: [`SsdStorage`] IS the store.
+pub type SsdBackend = SsdStorage;
+
+impl TensorStore for SsdStorage {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        SsdStorage::put(self, key, data)
+    }
+
+    fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()> {
+        SsdStorage::get(self, key, out)
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        SsdStorage::delete(self, key)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        SsdStorage::contains(self, key)
+    }
+
+    fn len_of(&self, key: &str) -> Option<u64> {
+        SsdStorage::len_of(self, key)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        SsdStorage::bytes_read(self)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        SsdStorage::bytes_written(self)
+    }
+
+    fn footprint(&self) -> u64 {
+        SsdStorage::footprint(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StripedStore
+// ---------------------------------------------------------------------------
+
+/// Multi-SSD striping: each object splits into fixed-size chunks assigned
+/// round-robin across N independent [`SsdStorage`] devices (device `d` holds
+/// chunks `d, d+N, d+2N, …` concatenated as one per-device sub-object), and
+/// the per-device shares transfer on parallel threads — every device's
+/// throttle runs at once, so a single object's read or write completes in
+/// ~1/N the wall time of the single-device path.
+///
+/// The chunk size is `min(stripe, ⌈len/N⌉)`, so even objects smaller than
+/// one stripe still spread over all devices (parallel paths for every
+/// object, balanced shares). Same-key operations serialize on a per-key
+/// lock so a racing overwrite can never hand a reader shares from two
+/// different generations (the cross-device analog of `SsdStorage`'s
+/// generation-validated reads); different keys proceed fully in parallel.
+pub struct StripedStore {
+    devices: Vec<SsdStorage>,
+    stripe: u64,
+    /// Per-key RwLock: writers (put/delete) exclusive, readers shared.
+    locks: Mutex<HashMap<String, Arc<RwLock<()>>>>,
+}
+
+impl StripedStore {
+    /// Default stripe-chunk size, bytes.
+    pub const DEFAULT_STRIPE: u64 = 64 * 1024;
+
+    /// Objects below this size move their shares sequentially: a thread
+    /// spawn costs tens of microseconds, which dominates a sub-32 KiB
+    /// transfer even at throttled rates — parallelism only pays on the
+    /// large tensors that carry the byte volume. Layout is unaffected.
+    const PARALLEL_MIN: usize = 32 * 1024;
+
+    /// Create `devices` backing files `{base}.d{i}`, each throttled at the
+    /// FULL per-device rates (independent paths — aggregate bandwidth
+    /// scales with the device count, which is the point of striping).
+    pub fn create<P: AsRef<Path>>(
+        base: P,
+        devices: usize,
+        read_bps: f64,
+        write_bps: f64,
+    ) -> Result<Self> {
+        Self::with_stripe(base, devices, read_bps, write_bps, Self::DEFAULT_STRIPE)
+    }
+
+    pub fn with_stripe<P: AsRef<Path>>(
+        base: P,
+        devices: usize,
+        read_bps: f64,
+        write_bps: f64,
+        stripe: u64,
+    ) -> Result<Self> {
+        ensure!(devices >= 1, "striped store needs at least one device");
+        ensure!(stripe >= 1, "stripe chunk must be at least one byte");
+        let devices = (0..devices)
+            .map(|i| {
+                let path = format!("{}.d{i}", base.as_ref().display());
+                SsdStorage::create(path, read_bps, write_bps)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StripedStore { devices, stripe, locks: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn key_lock(&self, key: &str) -> Arc<RwLock<()>> {
+        self.locks
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(RwLock::new(())))
+            .clone()
+    }
+
+    /// Chunk size for an object of `len` bytes: capped at ⌈len/N⌉ so every
+    /// device participates, floored at 1.
+    fn chunk_size(&self, len: u64) -> u64 {
+        let n = self.devices.len() as u64;
+        len.div_ceil(n).min(self.stripe).max(1)
+    }
+}
+
+impl TensorStore for StripedStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let lock = self.key_lock(key);
+        let _g = lock.write().unwrap();
+        let n = self.devices.len();
+        if n == 1 {
+            return self.devices[0].put(key, data);
+        }
+        let chunk = self.chunk_size(data.len() as u64) as usize;
+        let mut shares: Vec<Vec<u8>> = vec![Vec::new(); n];
+        let mut j = 0usize;
+        let mut off = 0usize;
+        while off < data.len() {
+            let end = (off + chunk).min(data.len());
+            shares[j % n].extend_from_slice(&data[off..end]);
+            j += 1;
+            off = end;
+        }
+        // every device gets its (possibly empty) share
+        if data.len() < Self::PARALLEL_MIN {
+            for (dev, share) in self.devices.iter().zip(shares.iter()) {
+                dev.put(key, share)?;
+            }
+            return Ok(());
+        }
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .devices
+                .iter()
+                .zip(shares.iter())
+                .map(|(dev, share)| s.spawn(move || dev.put(key, share)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("striped put thread")).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()> {
+        let lock = self.key_lock(key);
+        let _g = lock.read().unwrap();
+        let n = self.devices.len();
+        if n == 1 {
+            return self.devices[0].get(key, out);
+        }
+        // device 0's share (~len/N) sizes the transfer; small objects skip
+        // the per-device threads (see PARALLEL_MIN)
+        let small = self
+            .devices[0]
+            .len_of(key)
+            .is_some_and(|l| (l as usize).saturating_mul(n) < Self::PARALLEL_MIN);
+        let mut shares = Vec::with_capacity(n);
+        if small {
+            for dev in &self.devices {
+                let mut buf = Vec::new();
+                dev.get(key, &mut buf)?;
+                shares.push(buf);
+            }
+        } else {
+            let reads: Vec<Result<Vec<u8>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .devices
+                    .iter()
+                    .map(|dev| {
+                        s.spawn(move || {
+                            let mut buf = Vec::new();
+                            dev.get(key, &mut buf).map(|_| buf)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("striped get thread")).collect()
+            });
+            for r in reads {
+                shares.push(r?);
+            }
+        }
+        // de-interleave: the chunk layout is a pure function of the total
+        // length, so the shares reassemble deterministically
+        let len: usize = shares.iter().map(|s| s.len()).sum();
+        let chunk = self.chunk_size(len as u64) as usize;
+        out.clear();
+        out.reserve(len);
+        let mut offsets = vec![0usize; n];
+        let mut j = 0usize;
+        let mut taken = 0usize;
+        while taken < len {
+            let take = chunk.min(len - taken);
+            let d = j % n;
+            ensure!(
+                offsets[d] + take <= shares[d].len(),
+                "striped object '{key}': device {d} share too short ({} of {} bytes)",
+                shares[d].len(),
+                offsets[d] + take
+            );
+            out.extend_from_slice(&shares[d][offsets[d]..offsets[d] + take]);
+            offsets[d] += take;
+            j += 1;
+            taken += take;
+        }
+        for (d, off) in offsets.iter().enumerate() {
+            ensure!(
+                *off == shares[d].len(),
+                "striped object '{key}': device {d} share has {} trailing bytes",
+                shares[d].len() - off
+            );
+        }
+        Ok(())
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        let lock = self.key_lock(key);
+        let _g = lock.write().unwrap();
+        let mut any = false;
+        for dev in &self.devices {
+            any |= dev.delete(key);
+        }
+        // The lock entry deliberately stays in the map: a racer that already
+        // cloned its Arc must keep serializing against later ops on the same
+        // key — removing it would let that racer run unserialized against a
+        // fresh lock (torn cross-device reads). The map is bounded by the
+        // distinct-key universe (moment keys + the reused ckpt key set).
+        any
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.devices[0].contains(key)
+    }
+
+    fn len_of(&self, key: &str) -> Option<u64> {
+        // every device holds a (possibly empty) share of every object
+        self.devices[0].len_of(key)?;
+        Some(self.devices.iter().map(|d| d.len_of(key).unwrap_or(0)).sum())
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.devices.iter().map(|d| d.bytes_read()).sum()
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.devices.iter().map(|d| d.bytes_written()).sum()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.devices.iter().map(|d| d.footprint()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CachedStore
+// ---------------------------------------------------------------------------
+
+/// Hit/miss/evict counts for one slice of the cache tier.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Cumulative cache-tier counters, total and per data [`Category`].
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub total: CacheCounters,
+    pub by_cat: BTreeMap<Category, CacheCounters>,
+}
+
+impl CacheStats {
+    fn hit(&mut self, cat: Category) {
+        self.total.hits += 1;
+        self.by_cat.entry(cat).or_default().hits += 1;
+    }
+
+    fn miss(&mut self, cat: Category) {
+        self.total.misses += 1;
+        self.by_cat.entry(cat).or_default().misses += 1;
+    }
+
+    fn evict(&mut self, cat: Category) {
+        self.total.evictions += 1;
+        self.by_cat.entry(cat).or_default().evictions += 1;
+    }
+}
+
+/// The data [`Category`] a store key belongs to (keys are structured:
+/// `opt_*` moment objects, `ilc_*` inter-layer checkpoints/gradients).
+fn category_of(key: &str) -> Category {
+    if key.starts_with("opt_") {
+        Category::OptimizerStates
+    } else if key.starts_with("ilc_") {
+        Category::Checkpoints
+    } else {
+        Category::Working
+    }
+}
+
+struct CacheEntry {
+    data: Vec<u8>,
+    /// Written since last backing-store sync (write-back on eviction).
+    dirty: bool,
+    cat: Category,
+    last_used: u64,
+}
+
+struct CacheState {
+    map: HashMap<String, CacheEntry>,
+    tick: u64,
+    /// Bumped by every put/delete. A miss-fill snapshots this before its
+    /// unlocked backing-store read and only publishes the bytes into the
+    /// cache if nothing mutated in between — otherwise a racing put that
+    /// was immediately LRU-evicted (or a racing delete) would be shadowed
+    /// by a stale clean entry.
+    mutations: u64,
+    stats: CacheStats,
+}
+
+/// Bounded CPU-DRAM write-back cache in front of any [`TensorStore`].
+///
+/// `put` lands in DRAM (dirty) and only reaches the backing store when the
+/// LRU eviction needs the room; `get` serves hits from DRAM without
+/// touching the backing store at all. Capacity is accounted against an
+/// owned [`Tier`] (per-[`Category`] budgeting like the GPU/CPU tiers), and
+/// objects larger than the whole cache write through. `bytes_read` /
+/// `bytes_written` report the INNER store's counters — the SSD-visible
+/// traffic the cache is supposed to absorb — so a fitting working set shows
+/// up as those counters simply not growing.
+pub struct CachedStore {
+    inner: Arc<dyn TensorStore>,
+    tier: Tier,
+    state: Mutex<CacheState>,
+}
+
+impl CachedStore {
+    pub fn new(inner: Arc<dyn TensorStore>, capacity_bytes: u64) -> Self {
+        CachedStore {
+            inner,
+            tier: Tier::new("cpu-cache", capacity_bytes),
+            state: Mutex::new(CacheState {
+                map: HashMap::new(),
+                tick: 0,
+                mutations: 0,
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// The capacity-accounting tier (budget + per-category usage).
+    pub fn tier(&self) -> &Tier {
+        &self.tier
+    }
+
+    /// Bytes currently resident in the DRAM cache.
+    pub fn cached_bytes(&self) -> u64 {
+        self.tier.used()
+    }
+
+    /// Write all dirty entries back to the inner store (entries stay cached
+    /// clean). Training never needs this — reads go through the same cache
+    /// — but it makes the backing store complete at a quiescent point.
+    pub fn flush(&self) -> Result<()> {
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        for (k, e) in st.map.iter_mut() {
+            if e.dirty {
+                self.inner.put(k, &e.data)?;
+                e.dirty = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Evict LRU entries (writing dirty ones back) until `bytes` fit.
+    /// Caller holds the state lock — the write-back deliberately happens
+    /// under it (releasing mid-eviction would reopen the stale-read windows
+    /// the mutation counter closes). The cost only bites in the sustained-
+    /// eviction regime, where the fit-or-nothing law already says the cache
+    /// is mis-sized and absorbing nothing.
+    fn make_room(&self, st: &mut CacheState, bytes: u64) -> Result<()> {
+        while self.tier.free_bytes() < bytes {
+            let victim = st
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| (*k).clone());
+            let Some(k) = victim else {
+                bail!("cpu-cache: cannot make room for {bytes} bytes (cache empty)");
+            };
+            let e = st.map.remove(&k).expect("victim exists");
+            self.tier.release(e.data.len() as u64, e.cat);
+            if e.dirty {
+                self.inner.put(&k, &e.data)?;
+            }
+            st.stats.evict(e.cat);
+        }
+        Ok(())
+    }
+}
+
+impl TensorStore for CachedStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let cat = category_of(key);
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        st.mutations += 1;
+        if let Some(old) = st.map.remove(key) {
+            // superseded in place: the old bytes never need a write-back
+            self.tier.release(old.data.len() as u64, old.cat);
+        }
+        let bytes = data.len() as u64;
+        if bytes > self.tier.capacity() {
+            // larger than the whole cache: write through
+            return self.inner.put(key, data);
+        }
+        self.make_room(st, bytes)?;
+        self.tier.reserve(bytes, cat).expect("make_room freed capacity");
+        st.tick += 1;
+        let tick = st.tick;
+        st.map.insert(
+            key.to_string(),
+            CacheEntry { data: data.to_vec(), dirty: true, cat, last_used: tick },
+        );
+        Ok(())
+    }
+
+    fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()> {
+        let cat = category_of(key);
+        let mut0 = {
+            let mut guard = self.state.lock().unwrap();
+            let st = &mut *guard;
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(e) = st.map.get_mut(key) {
+                e.last_used = tick;
+                out.clear();
+                out.extend_from_slice(&e.data);
+                st.stats.hit(cat);
+                return Ok(());
+            }
+            st.stats.miss(cat);
+            st.mutations
+        };
+        // miss: fill from the backing store outside the lock
+        let mut buf = Vec::new();
+        self.inner.get(key, &mut buf)?;
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        if let Some(e) = st.map.get(key) {
+            // a racing put published a newer object while we read the
+            // backing store; theirs wins
+            out.clear();
+            out.extend_from_slice(&e.data);
+            return Ok(());
+        }
+        let bytes = buf.len() as u64;
+        // publish into the cache only if no put/delete raced the unlocked
+        // read (see CacheState::mutations) — a stale clean entry would
+        // shadow the newer generation the racer left in the backing store
+        if st.mutations == mut0 && bytes <= self.tier.capacity() {
+            self.make_room(st, bytes)?;
+            self.tier.reserve(bytes, cat).expect("make_room freed capacity");
+            st.tick += 1;
+            let tick = st.tick;
+            st.map.insert(
+                key.to_string(),
+                CacheEntry { data: buf.clone(), dirty: false, cat, last_used: tick },
+            );
+        }
+        out.clear();
+        out.extend_from_slice(&buf);
+        Ok(())
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        // the inner delete stays under the state lock so a concurrent
+        // miss-fill cannot read the object between our mutation bump and
+        // its disappearance, then resurrect it into the cache
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        st.mutations += 1;
+        let cached = if let Some(e) = st.map.remove(key) {
+            self.tier.release(e.data.len() as u64, e.cat);
+            true
+        } else {
+            false
+        };
+        let inner = self.inner.delete(key);
+        cached || inner
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.state.lock().unwrap().map.contains_key(key) || self.inner.contains(key)
+    }
+
+    fn len_of(&self, key: &str) -> Option<u64> {
+        if let Some(e) = self.state.lock().unwrap().map.get(key) {
+            return Some(e.data.len() as u64);
+        }
+        self.inner.len_of(key)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.inner.bytes_read()
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.inner.footprint()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.state.lock().unwrap().stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gs_store_test_{name}_{}", std::process::id()))
+    }
+
+    fn striped(name: &str, n: usize) -> StripedStore {
+        StripedStore::create(tmp(name), n, f64::INFINITY, f64::INFINITY).unwrap()
+    }
+
+    #[test]
+    fn ssd_backend_roundtrips_through_trait_object() {
+        let store: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("dyn")).unwrap());
+        store.put("k", b"hello").unwrap();
+        let mut out = Vec::new();
+        store.get("k", &mut out).unwrap();
+        assert_eq!(out, b"hello");
+        assert_eq!(store.len_of("k"), Some(5));
+        assert!(store.contains("k"));
+        assert!(store.delete("k"));
+        assert!(!store.contains("k"));
+        assert_eq!(store.cache_stats().total, CacheCounters::default());
+    }
+
+    #[test]
+    fn trait_get_f32_rejects_unaligned_length() {
+        let store: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("align")).unwrap());
+        store.put("bad", &[1u8, 2, 3, 4, 5]).unwrap();
+        let mut out = Vec::new();
+        let err = store.get_f32("bad", &mut out).unwrap_err().to_string();
+        assert!(err.contains("f32-aligned"), "{err}");
+        // clean lengths still round-trip
+        store.put_f32("good", &[1.0, 2.5, -3.0]).unwrap();
+        store.get_f32("good", &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.5, -3.0]);
+    }
+
+    #[test]
+    fn striped_roundtrip_various_sizes_and_devices() {
+        for n in 1..=4usize {
+            let s = striped(&format!("rt{n}"), n);
+            for (i, len) in [0usize, 1, 2, 3, 63, 64, 65, 1000, 200_000].iter().enumerate() {
+                let data: Vec<u8> = (0..*len).map(|b| (b * 7 + i + n) as u8).collect();
+                let key = format!("k{i}");
+                s.put(&key, &data).unwrap();
+                let mut out = Vec::new();
+                s.get(&key, &mut out).unwrap();
+                assert_eq!(out, data, "n={n} len={len}");
+                assert_eq!(s.len_of(&key), Some(*len as u64), "n={n} len={len}");
+                assert!(s.contains(&key));
+            }
+            // overwrite with a different length
+            s.put("k0", &[9u8; 777]).unwrap();
+            let mut out = Vec::new();
+            s.get("k0", &mut out).unwrap();
+            assert_eq!(out, vec![9u8; 777]);
+        }
+    }
+
+    #[test]
+    fn striped_byte_accounting_matches_object_sizes() {
+        let s = striped("acct", 3);
+        s.put("a", &vec![1u8; 10_000]).unwrap();
+        s.put("b", &vec![2u8; 5_000]).unwrap();
+        assert_eq!(s.bytes_written(), 15_000);
+        let mut out = Vec::new();
+        s.get("a", &mut out).unwrap();
+        assert_eq!(s.bytes_read(), 10_000);
+        assert!(s.delete("a"));
+        assert!(!s.contains("a"));
+        assert!(!s.delete("a"));
+    }
+
+    #[test]
+    fn striped_missing_key_errors() {
+        let s = striped("miss", 2);
+        let mut out = Vec::new();
+        assert!(s.get("nope", &mut out).is_err());
+        assert_eq!(s.len_of("nope"), None);
+    }
+
+    /// Two throttled devices move one object's halves in parallel, so the
+    /// transfer takes ~half the single-device wall time.
+    #[test]
+    fn striped_write_runs_devices_in_parallel() {
+        let one =
+            StripedStore::create(tmp("par1"), 1, f64::INFINITY, 10_000_000.0).unwrap();
+        let two =
+            StripedStore::create(tmp("par2"), 2, f64::INFINITY, 10_000_000.0).unwrap();
+        let data = vec![5u8; 600_000]; // 60 ms at 10 MB/s on one device
+        let t0 = std::time::Instant::now();
+        one.put("x", &data).unwrap();
+        let t_one = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        two.put("x", &data).unwrap();
+        let t_two = t0.elapsed();
+        assert!(
+            t_two.as_secs_f64() < 0.75 * t_one.as_secs_f64(),
+            "striped write {t_two:?} must undercut single-device {t_one:?}"
+        );
+    }
+
+    #[test]
+    fn cached_store_absorbs_repeat_traffic() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_abs")).unwrap());
+        let cache = CachedStore::new(Arc::clone(&inner), 1 << 20);
+        cache.put("opt_m_l0_t0_e", &vec![1u8; 4096]).unwrap();
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            cache.get("opt_m_l0_t0_e", &mut out).unwrap();
+            cache.put("opt_m_l0_t0_e", &out).unwrap();
+        }
+        // the backing store never saw a byte
+        assert_eq!(cache.bytes_read(), 0);
+        assert_eq!(cache.bytes_written(), 0);
+        assert_eq!(inner.bytes_written(), 0);
+        let stats = cache.cache_stats();
+        assert_eq!(stats.total.hits, 10);
+        assert_eq!(stats.total.misses, 0);
+        assert_eq!(
+            stats.by_cat.get(&Category::OptimizerStates).unwrap().hits,
+            10
+        );
+        assert_eq!(cache.cached_bytes(), 4096);
+    }
+
+    #[test]
+    fn cached_store_evicts_lru_with_write_back() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_lru")).unwrap());
+        let cache = CachedStore::new(Arc::clone(&inner), 2048);
+        cache.put("ilc_a", &vec![1u8; 1024]).unwrap();
+        cache.put("ilc_b", &vec![2u8; 1024]).unwrap();
+        // touch a so b is the LRU victim
+        let mut out = Vec::new();
+        cache.get("ilc_a", &mut out).unwrap();
+        cache.put("ilc_c", &vec![3u8; 1024]).unwrap(); // evicts b (dirty)
+        assert_eq!(inner.bytes_written(), 1024, "the evicted dirty entry wrote back");
+        assert!(inner.contains("ilc_b"));
+        assert!(!inner.contains("ilc_a"), "resident entries stay DRAM-only");
+        // b still readable (re-faulted from the backing store: a miss)
+        cache.get("ilc_b", &mut out).unwrap();
+        assert_eq!(out, vec![2u8; 1024]);
+        let stats = cache.cache_stats();
+        assert_eq!(stats.total.evictions >= 1, true, "{stats:?}");
+        assert!(stats.total.misses >= 1);
+        assert_eq!(
+            stats.by_cat.get(&Category::Checkpoints).unwrap().evictions,
+            stats.total.evictions
+        );
+    }
+
+    #[test]
+    fn cached_store_delete_covers_dirty_only_entries() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_del")).unwrap());
+        let cache = CachedStore::new(inner, 1 << 16);
+        cache.put("k", b"abc").unwrap();
+        assert!(cache.contains("k"));
+        assert_eq!(cache.len_of("k"), Some(3));
+        assert!(cache.delete("k"), "dirty-only entry must still report deleted");
+        assert!(!cache.contains("k"));
+        let mut out = Vec::new();
+        assert!(cache.get("k", &mut out).is_err());
+        assert!(!cache.delete("k"));
+    }
+
+    #[test]
+    fn cached_store_write_through_for_oversized_objects() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_big")).unwrap());
+        let cache = CachedStore::new(Arc::clone(&inner), 1024);
+        cache.put("big", &vec![7u8; 4096]).unwrap();
+        assert_eq!(inner.bytes_written(), 4096, "oversized objects write through");
+        assert_eq!(cache.cached_bytes(), 0);
+        let mut out = Vec::new();
+        cache.get("big", &mut out).unwrap();
+        assert_eq!(out, vec![7u8; 4096]);
+    }
+
+    #[test]
+    fn cached_store_flush_writes_dirty_entries() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_flush")).unwrap());
+        let cache = CachedStore::new(Arc::clone(&inner), 1 << 16);
+        cache.put("opt_x", &vec![1u8; 100]).unwrap();
+        assert!(!inner.contains("opt_x"));
+        cache.flush().unwrap();
+        assert!(inner.contains("opt_x"));
+        // second flush is a no-op (entries now clean)
+        cache.flush().unwrap();
+        assert_eq!(inner.bytes_written(), 100);
+    }
+
+    /// Same-key hammer through the trait object, across all three backends:
+    /// concurrent puts and gets must never deadlock or hand a reader torn
+    /// bytes (every writer writes a constant fill, so any successful read
+    /// must be uniform).
+    #[test]
+    fn same_key_hammer_through_trait_object() {
+        let ssd: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("ham_ssd")).unwrap());
+        let str3: Arc<dyn TensorStore> = Arc::new(striped("ham_str", 3));
+        let cached: Arc<dyn TensorStore> = Arc::new(CachedStore::new(
+            Arc::new(SsdStorage::create_unthrottled(tmp("ham_c")).unwrap()),
+            // small enough to force eviction churn mid-hammer
+            2048,
+        ));
+        let backends = vec![("ssd", ssd), ("striped", str3), ("cached", cached)];
+        for (name, store) in backends {
+            store.put("hot", &[255u8; 64]).unwrap();
+            let mut handles: Vec<_> = (0..6u8)
+                .map(|t| {
+                    let store = Arc::clone(&store);
+                    std::thread::spawn(move || {
+                        for i in 0..40usize {
+                            let len = 128 + (t as usize * 37 + i * 13) % 512;
+                            store.put("hot", &vec![t; len]).unwrap();
+                            let own = format!("own{t}");
+                            store.put(&own, &[t; 96]).unwrap();
+                            let mut out = Vec::new();
+                            store.get(&own, &mut out).unwrap();
+                            assert_eq!(out, vec![t; 96], "private key torn");
+                        }
+                    })
+                })
+                .collect();
+            for _ in 0..2 {
+                let store = Arc::clone(&store);
+                handles.push(std::thread::spawn(move || {
+                    for _ in 0..80 {
+                        let mut out = Vec::new();
+                        store.get("hot", &mut out).unwrap();
+                        assert!(
+                            !out.is_empty() && out.iter().all(|&b| b == out[0]),
+                            "torn read: {out:?}"
+                        );
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap_or_else(|_| panic!("{name}: hammer thread panicked"));
+            }
+            let mut out = Vec::new();
+            store.get("hot", &mut out).unwrap();
+            assert!(!out.is_empty() && out.iter().all(|&b| b == out[0]), "{name}: {out:?}");
+        }
+    }
+
+    #[test]
+    fn category_classification_follows_key_prefixes() {
+        assert_eq!(category_of("opt_m_l0_t1_e"), Category::OptimizerStates);
+        assert_eq!(category_of("ilc_ckpt_l0_mb2"), Category::Checkpoints);
+        assert_eq!(category_of("misc"), Category::Working);
+    }
+}

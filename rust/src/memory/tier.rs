@@ -67,6 +67,14 @@ impl Tier {
 
     /// Reserve `bytes` under `cat`; fails if it would exceed capacity.
     pub fn alloc(&self, bytes: u64, cat: Category) -> Result<Allocation<'_>> {
+        self.reserve(bytes, cat)?;
+        Ok(Allocation { tier: self, bytes, cat })
+    }
+
+    /// Reserve `bytes` under `cat` WITHOUT an RAII ticket — for long-lived
+    /// holders (the [`crate::memory::store::CachedStore`] cache entries)
+    /// that pair every reservation with an explicit [`Tier::release`].
+    pub fn reserve(&self, bytes: u64, cat: Category) -> Result<()> {
         let mut u = self.usage.lock().unwrap();
         if u.used + bytes > self.capacity {
             bail!(
@@ -81,7 +89,7 @@ impl Tier {
         u.used += bytes;
         u.peak = u.peak.max(u.used);
         *u.by_cat.entry(cat).or_default() += bytes;
-        Ok(Allocation { tier: self, bytes, cat })
+        Ok(())
     }
 
     pub fn used(&self) -> u64 {
@@ -100,7 +108,9 @@ impl Tier {
         self.usage.lock().unwrap().by_cat.get(&cat).copied().unwrap_or(0)
     }
 
-    fn release(&self, bytes: u64, cat: Category) {
+    /// Return `bytes` reserved under `cat` (the pair of [`Tier::reserve`];
+    /// [`Allocation`] calls this on drop).
+    pub fn release(&self, bytes: u64, cat: Category) {
         let mut u = self.usage.lock().unwrap();
         u.used -= bytes;
         if let Some(c) = u.by_cat.get_mut(&cat) {
@@ -170,6 +180,17 @@ mod tests {
         a.shrink_to(100);
         assert_eq!(t.used(), 100);
         assert_eq!(t.free_bytes(), 900);
+    }
+
+    #[test]
+    fn owned_reserve_release_roundtrip() {
+        let t = Tier::new("cache", 1000);
+        t.reserve(600, Category::OptimizerStates).unwrap();
+        assert_eq!(t.used(), 600);
+        assert!(t.reserve(500, Category::OptimizerStates).is_err());
+        t.release(600, Category::OptimizerStates);
+        assert_eq!(t.used(), 0);
+        assert_eq!(t.peak(), 600);
     }
 
     #[test]

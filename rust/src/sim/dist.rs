@@ -57,11 +57,22 @@ pub struct DistConfig {
     /// ZeRO-style sharded optimizer states: reduce-scatter + per-rank
     /// update + parameter all-gather instead of the rank-0 optimizer.
     pub shard_optimizer: bool,
+    /// Modeled CPU-DRAM cache tier, bytes (the runtime `--cpu-cache-mb`
+    /// mirror): when the schedule's SSD-resident working set fits, its
+    /// traffic is served from DRAM — the same fit-or-nothing law
+    /// `sim::schedules::simulate_store` applies. 0 = off.
+    pub cache_bytes: u64,
 }
 
 impl Default for DistConfig {
     fn default() -> Self {
-        DistConfig { workers: 1, ssds: 1, io_depth: usize::MAX, shard_optimizer: false }
+        DistConfig {
+            workers: 1,
+            ssds: 1,
+            io_depth: usize::MAX,
+            shard_optimizer: false,
+            cache_bytes: 0,
+        }
     }
 }
 
@@ -146,6 +157,10 @@ fn build_and_run(
     iters: u32,
     cfg: DistConfig,
 ) -> (f64, f64) {
+    // the DRAM cache tier (fit-or-nothing absorption) adjusts the
+    // explicit-placement schedules' ratios exactly as the single-worker
+    // store mirror does
+    let schedule = super::schedules::cache_adjusted(sp, m, schedule, cfg.cache_bytes);
     let w_n = cfg.workers.max(1);
     let s_n = cfg.ssds.max(1);
     let io_depth = cfg.io_depth;
@@ -578,6 +593,27 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The dist sim's DRAM-cache mirror: a fitting cache serves the
+    /// SSD-resident state from DRAM and strictly beats the uncached run on
+    /// a shared contended SSD; a too-small cache changes nothing.
+    #[test]
+    fn cache_tier_absorbs_in_dist_sim() {
+        let sp = sp();
+        let sched = Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_SSD };
+        let none = simulate_dist(&sp, 16, sched, cfg(2, 1)).t_iter;
+        let tiny =
+            simulate_dist(&sp, 16, sched, DistConfig { cache_bytes: 1 << 20, ..cfg(2, 1) })
+                .t_iter;
+        assert_eq!(tiny, none, "a 1 MiB cache absorbs nothing here");
+        let huge =
+            simulate_dist(&sp, 16, sched, DistConfig { cache_bytes: u64::MAX, ..cfg(2, 1) })
+                .t_iter;
+        assert!(
+            huge < 0.99 * none,
+            "fitting cache {huge} must beat the SSD-bound dist run {none}"
+        );
     }
 
     /// The interconnect is a first-class resource: starving it slows the

@@ -8,6 +8,13 @@
 //! assumed away. This produces the "measured" series of Figures 10–12 on
 //! the simulated testbed (DESIGN.md §Substitutions).
 //!
+//! The runtime's storage-tier knobs are mirrored by
+//! [`schedules::simulate_store`]: `--ssds N` striping multiplies SSD
+//! bandwidth (N independent throttles moving one object's shares in
+//! parallel) and `--cpu-cache-mb` applies the fit-or-nothing DRAM-cache
+//! absorption law shared with `traffic::Workload` and the runtime
+//! `CachedStore`.
+//!
 //! The data-parallel dimension lives in [`dist`]: W workers with their own
 //! compute resources (incl. a first-class inter-GPU interconnect for the
 //! ring-collective legs and a per-worker CPU-optimizer core) over one
@@ -24,4 +31,4 @@ pub mod schedules;
 
 pub use dist::{simulate_dist, DistConfig};
 pub use engine::{DiscreteSim, Resource, SimOp};
-pub use schedules::{simulate, simulate_io, Schedule, SimResult};
+pub use schedules::{simulate, simulate_io, simulate_store, Schedule, SimResult};

@@ -71,6 +71,83 @@ pub fn simulate(sp: &SystemParams, m: u64, schedule: Schedule) -> SimResult {
     simulate_io(sp, m, schedule, usize::MAX)
 }
 
+/// Simulate with the runtime's storage-tier knobs mirrored on top of the
+/// `--io-depth` lookahead:
+///
+/// * `ssds` — striping across N independent devices multiplies the
+///   available SSD read/write bandwidth by N (the runtime's
+///   [`StripedStore`](crate::memory::StripedStore) moves each object's
+///   shares over N parallel throttles, which at layer-granular transfers
+///   is exactly an N× aggregate-bandwidth path);
+/// * `cache_bytes` — the CPU-DRAM cache tier: when the schedule's
+///   SSD-resident working set fits
+///   ([`Workload::cache_absorbs`](crate::traffic::Workload), the
+///   fit-or-nothing LRU law shared with the runtime and the closed forms),
+///   that traffic is served from DRAM — modeled by promoting the placement
+///   ratios to `ALL_CPU`. Heuristic-placement baselines (ZeRO-Infinity /
+///   TeraIO / Ratel) keep their own placement and ignore the cache knob.
+///
+/// `ssds = 1, cache_bytes = 0` is exactly [`simulate_io`].
+pub fn simulate_store(
+    sp: &SystemParams,
+    m: u64,
+    schedule: Schedule,
+    io_depth: usize,
+    ssds: usize,
+    cache_bytes: u64,
+) -> SimResult {
+    let sp2 = scale_ssd_bandwidth(sp, ssds);
+    let schedule2 = cache_adjusted(&sp2, m, schedule, cache_bytes);
+    simulate_io(&sp2, m, schedule2, io_depth)
+}
+
+/// N striped devices = N× aggregate SSD bandwidth (each device keeps its
+/// own full-rate throttle; shares move in parallel).
+pub(crate) fn scale_ssd_bandwidth(sp: &SystemParams, ssds: usize) -> SystemParams {
+    let k = ssds.max(1) as f64;
+    let mut sp2 = *sp;
+    sp2.node.machine.ssd_read_bw *= k;
+    sp2.node.machine.ssd_write_bw *= k;
+    sp2
+}
+
+/// Apply the DRAM-cache fit-or-nothing law to an explicit-placement
+/// schedule: if the SSD-resident working set fits in `cache_bytes`, its
+/// traffic is served from DRAM (ratios promote to `ALL_CPU`); otherwise
+/// the cyclic sweep defeats the LRU and nothing is absorbed.
+pub(crate) fn cache_adjusted(
+    sp: &SystemParams,
+    m: u64,
+    schedule: Schedule,
+    cache_bytes: u64,
+) -> Schedule {
+    if cache_bytes == 0 {
+        return schedule;
+    }
+    let wl = crate::traffic::Workload {
+        model: sp.model,
+        micro_batch: sp.micro_batch,
+        seq_len: sp.seq_len,
+        m,
+        shards: sp.node.n_gpus,
+    };
+    let absorb = |x: StorageRatios| -> StorageRatios {
+        let ws = wl.ssd_working_set_bytes(x.param_cpu, x.ckpt_cpu, x.opt_cpu);
+        if wl.cache_absorbs(ws, cache_bytes) {
+            StorageRatios::ALL_CPU
+        } else {
+            x
+        }
+    };
+    match schedule {
+        Schedule::GreedySnake { alpha, x } => Schedule::GreedySnake { alpha, x: absorb(x) },
+        Schedule::ChunkedVertical { group, x } => {
+            Schedule::ChunkedVertical { group, x: absorb(x) }
+        }
+        other => other,
+    }
+}
+
 /// Simulate with the runtime's `--io-depth` lookahead mirrored: a parameter
 /// load may start at most `io_depth` visits ahead of compute (0 = fully
 /// synchronous loads, `usize::MAX` = unbounded), so the simulator and the
@@ -793,6 +870,55 @@ mod tests {
         let z = simulate(&sp, 8, Schedule::ZeroInfinity);
         let z2 = simulate_io(&sp, 8, Schedule::ZeroInfinity, usize::MAX);
         assert_eq!(z.t_iter, z2.t_iter);
+    }
+
+    /// The non-gated striping acceptance property: with SSD-resident state,
+    /// striping over 2 devices strictly reduces the simulated iteration
+    /// time, and `ssds = 1, cache = 0` reproduces `simulate_io` exactly.
+    #[test]
+    fn striped_ssd_bandwidth_speeds_ssd_bound_schedule() {
+        let sp = sp();
+        let sched = Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_SSD };
+        let one = simulate_store(&sp, 8, sched, usize::MAX, 1, 0);
+        let two = simulate_store(&sp, 8, sched, usize::MAX, 2, 0);
+        assert!(
+            two.t_iter < 0.99 * one.t_iter,
+            "2 striped devices {} must beat 1 {}",
+            two.t_iter,
+            one.t_iter
+        );
+        let plain = simulate_io(&sp, 8, sched, usize::MAX);
+        assert_eq!(one.t_iter, plain.t_iter, "ssds=1 cache=0 must be simulate_io");
+    }
+
+    /// The non-gated cache acceptance property: absorption is
+    /// fit-or-nothing — a cache below the working set changes nothing, a
+    /// fitting one serves the SSD-resident state from DRAM (exactly the
+    /// ALL_CPU placement) and strictly beats the SSD-bound run.
+    #[test]
+    fn cache_absorption_follows_fit_or_nothing_law() {
+        let sp = sp();
+        let sched = Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_SSD };
+        let none = simulate_store(&sp, 8, sched, usize::MAX, 1, 0);
+        let tiny = simulate_store(&sp, 8, sched, usize::MAX, 1, 1 << 20);
+        assert_eq!(tiny.t_iter, none.t_iter, "a 1 MiB cache absorbs nothing here");
+        let huge = simulate_store(&sp, 8, sched, usize::MAX, 1, u64::MAX);
+        assert!(
+            huge.t_iter < 0.99 * none.t_iter,
+            "a fitting cache {} must beat the SSD-bound run {}",
+            huge.t_iter,
+            none.t_iter
+        );
+        let all_cpu = simulate_io(
+            &sp,
+            8,
+            Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_CPU },
+            usize::MAX,
+        );
+        assert_eq!(
+            huge.t_iter, all_cpu.t_iter,
+            "full absorption IS the ALL_CPU placement"
+        );
     }
 
     #[test]

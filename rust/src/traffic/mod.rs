@@ -21,6 +21,12 @@
 //! optimizer shard. The sharded forms also give the per-rank optimizer
 //! SSD round trip (~1/W of the rank-0 path's), the quantity the
 //! fig13_shard bench sweeps.
+//!
+//! The CPU-DRAM cache tier (`--cpu-cache-mb`) has its closed forms here
+//! too: [`Workload::ssd_working_set_bytes`] + [`Workload::cache_absorbs`]
+//! give the fit-or-nothing LRU law the event sim applies, and the
+//! `store_*`/`cached_store_*` family mirrors the runtime `TensorStore`
+//! byte counters exactly (what the fig14_store bench cross-checks).
 
 use crate::coordinator::dist::{
     ring_allgather_bytes, ring_reduce_scatter_bytes, ring_traffic_bytes,
@@ -312,6 +318,85 @@ impl Workload {
         self.opt_ssd_round_trip_bytes().div_ceil(workers.max(1))
     }
 
+    // ---- CPU-DRAM cache tier (closed forms shared by runtime + sim) ------
+
+    /// SSD-resident working set of one iteration under placement shares
+    /// (`*_cpu` = fraction already in CPU DRAM; the SSD keeps the rest):
+    /// low-precision parameters, all M live checkpoints, and the optimizer
+    /// states. This is what a DRAM cache tier must hold to absorb the
+    /// schedule's repeat SSD traffic.
+    pub fn ssd_working_set_bytes(&self, param_cpu: f64, ckpt_cpu: f64, opt_cpu: f64) -> u64 {
+        let param = (1.0 - param_cpu) * self.ms_lp() as f64;
+        let ckpt = (1.0 - ckpt_cpu) * (self.m * self.cs()) as f64;
+        let opt = (1.0 - opt_cpu) * self.opt_state_bytes() as f64;
+        (param + ckpt + opt).ceil() as u64
+    }
+
+    /// The fit-or-nothing LRU law: a bounded cache in front of cyclically
+    /// swept state absorbs ALL repeat traffic when the working set fits and
+    /// essentially NONE when it does not (a cyclic sweep over a set larger
+    /// than the cache evicts every entry before its re-use — LRU's
+    /// pathological case). Runtime ([`crate::memory::CachedStore`]), event
+    /// sim (`sim::simulate_store`), and these closed forms all apply this
+    /// same law, so the three stacks agree on absorbed bytes.
+    pub fn cache_absorbs(&self, working_set: u64, cache_bytes: u64) -> bool {
+        working_set > 0 && cache_bytes >= working_set
+    }
+
+    // ---- runtime TensorStore byte counters (exact mirrors) ---------------
+
+    /// The m+v moment bytes the RUNTIME keeps on its store per shard (fp32;
+    /// master parameters stay host-resident in `ModelState`, so unlike
+    /// [`Workload::opt_state_bytes`] this counts 2 — not 3 — state streams).
+    pub fn runtime_moment_bytes(&self) -> u64 {
+        2 * self.model.n_layers * self.model.params_per_layer() * BYTES_FP / self.shards
+    }
+
+    /// Bytes the runtime's `TensorStore` READS per steady-state iteration:
+    /// every moment object round-trips once per iteration (`opt_on_ssd`)
+    /// and every (layer, micro-batch) checkpoint is read back once
+    /// (`ckpt_on_ssd`). Exactly the per-step `StepStats::ssd_bytes_read` of
+    /// an uncached run — the quantity the cache tier absorbs.
+    pub fn store_read_bytes(&self, opt_on_ssd: bool, ckpt_on_ssd: bool) -> u64 {
+        // numerically the working set: every live store byte is read exactly
+        // once per iteration (moments round-trip, checkpoints read back), so
+        // the two closed forms are one expression — kept as one function so
+        // they cannot drift apart silently
+        self.store_working_set_bytes(opt_on_ssd, ckpt_on_ssd)
+    }
+
+    /// Bytes the runtime's `TensorStore` WRITES per steady-state iteration
+    /// (same symmetry: moments written back, checkpoints stored once).
+    pub fn store_write_bytes(&self, opt_on_ssd: bool, ckpt_on_ssd: bool) -> u64 {
+        self.store_read_bytes(opt_on_ssd, ckpt_on_ssd)
+    }
+
+    /// The runtime store's working set: all live moment objects plus the
+    /// peak live checkpoint set (all M·N checkpoints at the fwd/bwd turn).
+    pub fn store_working_set_bytes(&self, opt_on_ssd: bool, ckpt_on_ssd: bool) -> u64 {
+        (if opt_on_ssd { self.runtime_moment_bytes() } else { 0 })
+            + (if ckpt_on_ssd { self.m * self.cs() } else { 0 })
+    }
+
+    /// Residual SSD reads per iteration under a DRAM cache of `cache_bytes`
+    /// in front of the runtime store — the fit-or-nothing law: 0 when the
+    /// working set fits (every get is a DRAM hit; the measured
+    /// `RunLog::ssd_read` of a cached run is exactly 0), the full
+    /// [`Workload::store_read_bytes`] when it does not.
+    pub fn cached_store_read_bytes(
+        &self,
+        opt_on_ssd: bool,
+        ckpt_on_ssd: bool,
+        cache_bytes: u64,
+    ) -> u64 {
+        let ws = self.store_working_set_bytes(opt_on_ssd, ckpt_on_ssd);
+        if self.cache_absorbs(ws, cache_bytes) {
+            0
+        } else {
+            self.store_read_bytes(opt_on_ssd, ckpt_on_ssd)
+        }
+    }
+
     /// §3.2 — single forward-backward pass (Ratel-style) at batch size
     /// `batch = B·M` with `extra_ckpt` doubling checkpoint frequency
     /// (attention/FFN boundary checkpoints).
@@ -539,6 +624,52 @@ mod tests {
         let small = Workload { m: 2, ..w };
         assert_eq!(small.reduce_scatter_bytes_total(8), 7 * small.grad_fp());
         assert_eq!(small.allreduce_bytes_total(8), 2 * small.grad_fp());
+    }
+
+    /// The DRAM cache tier's fit-or-nothing law and its working-set
+    /// arithmetic (shared with `sim::simulate_store` and the runtime
+    /// `CachedStore`).
+    #[test]
+    fn cache_absorption_is_fit_or_nothing() {
+        let w = wl(4);
+        let ws = w.ssd_working_set_bytes(0.0, 0.0, 0.0);
+        assert_eq!(ws, w.ms_lp() + 4 * w.cs() + w.opt_state_bytes());
+        assert!(w.cache_absorbs(ws, ws));
+        assert!(w.cache_absorbs(ws, ws + 1));
+        assert!(!w.cache_absorbs(ws, ws - 1));
+        assert!(!w.cache_absorbs(0, 1 << 40), "an empty set has nothing to absorb");
+        // CPU placement shrinks the SSD-resident working set
+        let half = w.ssd_working_set_bytes(0.5, 1.0, 1.0);
+        assert_eq!(half, w.ms_lp() / 2);
+        assert_eq!(w.ssd_working_set_bytes(1.0, 1.0, 1.0), 0);
+    }
+
+    /// The runtime-store closed forms mirror the `TensorStore` counters:
+    /// moments are TWO fp32 streams (m, v — master params stay host
+    /// resident), checkpoints round-trip once per (layer, micro-batch), and
+    /// the cached residual is zero exactly when the working set fits.
+    #[test]
+    fn runtime_store_forms_mirror_the_counters() {
+        let w = wl(4);
+        assert_eq!(
+            w.runtime_moment_bytes(),
+            2 * GPT_65B.n_layers * GPT_65B.params_per_layer() * 4
+        );
+        assert_eq!(w.store_read_bytes(true, false), w.runtime_moment_bytes());
+        assert_eq!(w.store_read_bytes(false, true), 4 * w.cs());
+        assert_eq!(
+            w.store_read_bytes(true, true),
+            w.store_write_bytes(true, true),
+            "the store's read/write traffic is symmetric"
+        );
+        assert_eq!(w.store_read_bytes(false, false), 0);
+        let ws = w.store_working_set_bytes(true, true);
+        assert_eq!(w.cached_store_read_bytes(true, true, ws), 0);
+        assert_eq!(
+            w.cached_store_read_bytes(true, true, ws - 1),
+            w.store_read_bytes(true, true),
+            "a cache one byte short absorbs nothing (LRU cyclic sweep)"
+        );
     }
 
     #[test]

@@ -184,6 +184,17 @@ pub struct RunLog {
     /// Total parameter all-gather traffic under `--shard-optimizer`
     /// (0 at W = 1 and on the rank-0 path).
     pub allgather_bytes: u64,
+    /// DRAM cache-tier hits over the run (0 without `--cpu-cache-mb`).
+    pub cache_hits: u64,
+    /// Cache-tier misses (reads that fell through to the SSD tier).
+    pub cache_misses: u64,
+    /// Cache-tier LRU evictions (dirty victims wrote back to the SSD).
+    pub cache_evictions: u64,
+    /// Per-category cumulative cache counters at end of run — one
+    /// `(category, [hits, misses, evictions])` entry per data category the
+    /// cache saw (`OptimizerStates`, `Checkpoints`, …). Empty without a
+    /// cache tier.
+    pub cache_by_cat: Vec<(String, [u64; 3])>,
     /// Σx² over all parameters after the final drain — a deterministic
     /// digest the W-equivalence suite compares bit-for-bit.
     pub param_sq_norm: f64,
@@ -282,6 +293,9 @@ pub fn train(
         log.allreduce_s += stats.allreduce_s;
         log.allreduce_bytes += stats.allreduce_bytes;
         log.allgather_bytes += stats.allgather_bytes;
+        log.cache_hits += stats.cache_hits;
+        log.cache_misses += stats.cache_misses;
+        log.cache_evictions += stats.cache_evictions;
         for (i, v) in per_worker.iter().enumerate() {
             if log.worker_stall_s.len() <= i {
                 log.worker_stall_s.push(0.0);
@@ -305,6 +319,12 @@ pub fn train(
     }
     log.param_sq_norm = state.param_sq_norm();
     log.moment_sq_norm = state.moment_sq_norm()?;
+    {
+        use crate::memory::store::TensorStore;
+        for (cat, c) in &state.store.cache_stats().by_cat {
+            log.cache_by_cat.push((format!("{cat:?}"), [c.hits, c.misses, c.evictions]));
+        }
+    }
     Ok(log)
 }
 

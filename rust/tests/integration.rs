@@ -567,3 +567,188 @@ fn seeds_vary_but_converge() {
     assert!(a.final_loss() < a.losses[0]);
     assert!(b.final_loss() < b.losses[0]);
 }
+
+/// The store backends the equivalence suite compares against the
+/// single-SSD baseline. CI's store matrix narrows it via `GS_TEST_STORE`
+/// (comma-separated ∈ {ssd, striped, cached}) so each job pins one
+/// backend; "ssd" is the baseline itself and compares trivially.
+fn test_store_set() -> Vec<String> {
+    std::env::var("GS_TEST_STORE")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect::<Vec<String>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec!["striped".to_string(), "cached".to_string()])
+}
+
+fn apply_store_backend(c: &mut TrainerConfig, backend: &str) {
+    match backend {
+        "ssd" => {}
+        "striped" => c.ssds = 2,
+        "cached" => c.cpu_cache_mb = 64,
+        other => panic!("unknown GS_TEST_STORE backend '{other}' (ssd|striped|cached)"),
+    }
+}
+
+/// The store-backend acceptance property (tentpole): every backend —
+/// single SSD, striped 2-device, DRAM-cached — trains BIT-identically
+/// across schedules × io-depth {0, 2} × workers {1, 2}: same losses,
+/// gradient norms, and Σx² parameter/moment digests. Backends only change
+/// where bytes live. The striped backend must additionally account the
+/// exact same SSD byte totals (its per-device shares sum to the object
+/// sizes); the cached backend must strictly REDUCE `ssd_read` — with a
+/// 64 MiB cache the tiny model's working set fits, so per the fit-or-
+/// nothing closed form (`traffic::Workload::cached_store_read_bytes`) the
+/// residual SSD traffic is exactly zero.
+#[test]
+fn store_backends_bit_identical_to_seed() {
+    let kinds = [
+        ScheduleKind::Vertical,
+        ScheduleKind::ChunkedVertical(2),
+        ScheduleKind::Horizontal,
+    ];
+    for kind in kinds {
+        for depth in [0usize, 2] {
+            for w in [1usize, 2] {
+                let mk = |backend: &str| {
+                    let tag =
+                        format!("st_{backend}_w{w}_d{depth}_{kind}").replace(':', "_");
+                    let mut c = cfg(&tag);
+                    c.io_depth = depth;
+                    c.workers = w;
+                    c.opt_on_ssd = true;
+                    c.ckpt_on_ssd = true;
+                    apply_store_backend(&mut c, backend);
+                    c
+                };
+                let Some(base) = run("st_base", kind, mk("ssd"), 3, 4) else { return };
+                assert!(base.ssd_read > 0, "{kind:?}: offloaded run must touch the SSD");
+                for backend in test_store_set() {
+                    if backend == "ssd" {
+                        continue; // the baseline itself
+                    }
+                    let log = run("st_b", kind, mk(&backend), 3, 4).unwrap();
+                    assert_eq!(
+                        base.losses, log.losses,
+                        "{kind:?} d{depth} W={w} {backend}: losses diverged"
+                    );
+                    assert_eq!(
+                        base.grad_norms, log.grad_norms,
+                        "{kind:?} d{depth} W={w} {backend}: grad norms diverged"
+                    );
+                    assert_eq!(
+                        base.param_sq_norm.to_bits(),
+                        log.param_sq_norm.to_bits(),
+                        "{kind:?} d{depth} W={w} {backend}: parameters diverged"
+                    );
+                    assert_eq!(
+                        base.moment_sq_norm.to_bits(),
+                        log.moment_sq_norm.to_bits(),
+                        "{kind:?} d{depth} W={w} {backend}: moments diverged"
+                    );
+                    match backend.as_str() {
+                        "striped" => {
+                            assert_eq!(
+                                base.ssd_read, log.ssd_read,
+                                "{kind:?} d{depth} W={w}: striped read totals diverged"
+                            );
+                            assert_eq!(
+                                base.ssd_written, log.ssd_written,
+                                "{kind:?} d{depth} W={w}: striped write totals diverged"
+                            );
+                        }
+                        "cached" => {
+                            assert!(
+                                log.ssd_read < base.ssd_read,
+                                "{kind:?} d{depth} W={w}: cache must reduce SSD reads"
+                            );
+                            assert_eq!(
+                                log.ssd_read, 0,
+                                "{kind:?} d{depth} W={w}: a fitting cache's residual \
+                                 SSD reads are exactly 0 (the closed form)"
+                            );
+                            assert!(
+                                log.cache_hits > 0,
+                                "{kind:?} d{depth} W={w}: the cache never hit"
+                            );
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The striping acceptance property (runtime half): under a throttled SSD
+/// with both moments and checkpoints offloaded, striping over 2 devices
+/// strictly reduces wall-clock — each device carries half the bytes on its
+/// OWN full-rate throttle, in parallel — while training identically.
+#[test]
+fn throttled_striped_store_reduces_wall_clock() {
+    let mk = |tag: &str, ssds: usize| {
+        let mut c = cfg(tag);
+        c.opt_on_ssd = true;
+        c.ckpt_on_ssd = true;
+        c.io_depth = 0; // serial I/O: the striping win is isolated
+        c.ssd_read_bps = 4e6;
+        c.ssd_write_bps = 4e6;
+        c.ssds = ssds;
+        c
+    };
+    let Some(single) = run("strt1", ScheduleKind::Vertical, mk("strt1", 1), 2, 2) else {
+        return;
+    };
+    let striped = run("strt2", ScheduleKind::Vertical, mk("strt2", 2), 2, 2).unwrap();
+    assert_eq!(single.losses, striped.losses, "striping must not change numerics");
+    assert_eq!(single.ssd_read, striped.ssd_read, "same bytes, different paths");
+    let t1: f64 = single.step_seconds.iter().sum();
+    let t2: f64 = striped.step_seconds.iter().sum();
+    assert!(
+        t2 < t1,
+        "striped-2 wall clock {t2:.3}s must strictly undercut single-device {t1:.3}s"
+    );
+}
+
+/// The cache acceptance property (runtime half): a DRAM cache that fits
+/// the working set absorbs ALL store traffic — the measured counters drop
+/// to exactly the closed form's residual (zero) — while training stays
+/// bit-identical and the per-category counters attribute the hits.
+#[test]
+fn cached_store_absorbs_all_ssd_traffic() {
+    let mk = |tag: &str, cache_mb: usize| {
+        let mut c = cfg(tag);
+        c.opt_on_ssd = true;
+        c.ckpt_on_ssd = true;
+        c.cpu_cache_mb = cache_mb;
+        c
+    };
+    let Some(base) = run("cch0", ScheduleKind::Vertical, mk("cch0", 0), 4, 3) else {
+        return;
+    };
+    let cached = run("cch1", ScheduleKind::Vertical, mk("cch1", 256), 4, 3).unwrap();
+    assert_eq!(base.losses, cached.losses, "caching must not change numerics");
+    assert_eq!(
+        base.param_sq_norm.to_bits(),
+        cached.param_sq_norm.to_bits()
+    );
+    assert_eq!(
+        base.moment_sq_norm.to_bits(),
+        cached.moment_sq_norm.to_bits()
+    );
+    assert!(base.ssd_read > 0 && base.ssd_written > 0);
+    // fit-or-nothing closed form: residual reads AND writes are exactly 0
+    assert_eq!(cached.ssd_read, 0, "every get must be a DRAM hit");
+    assert_eq!(cached.ssd_written, 0, "write-back never triggered (no eviction)");
+    assert!(cached.cache_hits > 0);
+    assert_eq!(cached.cache_evictions, 0);
+    assert!(
+        cached.cache_by_cat.iter().any(|(cat, c)| cat == "OptimizerStates" && c[0] > 0),
+        "per-category counters must attribute moment hits: {:?}",
+        cached.cache_by_cat
+    );
+}

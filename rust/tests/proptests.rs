@@ -491,3 +491,136 @@ fn prop_prng_stream_independence() {
         Ok(())
     });
 }
+
+/// Store-backend equivalence: a [`StripedStore`] over any N ∈ 1..4 devices
+/// is content-identical AND byte-accounting-consistent with the
+/// single-device `SsdBackend` across arbitrary key/size sequences —
+/// puts (incl. overwrites with different lengths), deletes, and gets. This
+/// is the property that makes `--ssds N` bit-identical to the seed path:
+/// striping only changes where bytes live.
+#[test]
+fn prop_striped_store_matches_ssd_backend() {
+    use greedysnake::memory::{SsdStorage, StripedStore, TensorStore};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    check("striped-store-equiv", 25, |rng| {
+        let n = gen::usize_in(rng, 1, 4);
+        let uniq = UNIQ.fetch_add(1, Ordering::Relaxed);
+        let base = std::env::temp_dir().join(format!(
+            "gs_prop_store_{}_{uniq}",
+            std::process::id()
+        ));
+        let flat = std::env::temp_dir().join(format!(
+            "gs_prop_store_flat_{}_{uniq}",
+            std::process::id()
+        ));
+        let ssd = SsdStorage::create_unthrottled(flat).map_err(|e| e.to_string())?;
+        let striped = StripedStore::create(&base, n, f64::INFINITY, f64::INFINITY)
+            .map_err(|e| e.to_string())?;
+        let keys = ["a", "b", "c", "d", "e"];
+        for op in 0..40 {
+            let key = keys[gen::usize_in(rng, 0, keys.len() - 1)];
+            match gen::usize_in(rng, 0, 3) {
+                0 | 1 => {
+                    let len = gen::usize_in(rng, 0, 5000);
+                    let fill = gen::usize_in(rng, 0, 255) as u8;
+                    let data: Vec<u8> =
+                        (0..len).map(|i| fill.wrapping_add(i as u8)).collect();
+                    ssd.put(key, &data).map_err(|e| e.to_string())?;
+                    striped.put(key, &data).map_err(|e| e.to_string())?;
+                }
+                2 => {
+                    let a = ssd.delete(key);
+                    let b = striped.delete(key);
+                    if a != b {
+                        return Err(format!("op {op}: delete('{key}') {a} vs {b}"));
+                    }
+                }
+                _ => {
+                    let mut x = Vec::new();
+                    let mut y = Vec::new();
+                    let ra = ssd.get(key, &mut x);
+                    let rb = striped.get(key, &mut y);
+                    if ra.is_ok() != rb.is_ok() {
+                        return Err(format!(
+                            "op {op}: get('{key}') presence {} vs {}",
+                            ra.is_ok(),
+                            rb.is_ok()
+                        ));
+                    }
+                    if ra.is_ok() && x != y {
+                        return Err(format!(
+                            "op {op}: get('{key}') content mismatch ({} vs {} bytes)",
+                            x.len(),
+                            y.len()
+                        ));
+                    }
+                }
+            }
+            if ssd.contains(key) != striped.contains(key) {
+                return Err(format!("op {op}: contains('{key}') diverged"));
+            }
+            if ssd.len_of(key) != striped.len_of(key) {
+                return Err(format!(
+                    "op {op}: len_of('{key}') {:?} vs {:?}",
+                    ssd.len_of(key),
+                    striped.len_of(key)
+                ));
+            }
+            if ssd.bytes_read() != striped.bytes_read() {
+                return Err(format!(
+                    "op {op}: read accounting {} vs {}",
+                    ssd.bytes_read(),
+                    striped.bytes_read()
+                ));
+            }
+            if ssd.bytes_written() != striped.bytes_written() {
+                return Err(format!(
+                    "op {op}: write accounting {} vs {}",
+                    ssd.bytes_written(),
+                    striped.bytes_written()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The DRAM-cache residual closed form composes with the schedule traffic
+/// forms: for any M and capacity, the residual is either 0 (fits) or the
+/// full store traffic (doesn't) — never anything in between — and the
+/// working set is monotone in the offloaded share.
+#[test]
+fn prop_cache_residual_is_all_or_nothing() {
+    check("cache-residual", 60, |rng| {
+        let m = gen::usize_in(rng, 1, 32) as u64;
+        let w = Workload {
+            model: GPT_65B,
+            micro_batch: 2,
+            seq_len: SEQ_LEN,
+            m,
+            shards: 1,
+        };
+        let opt = gen::usize_in(rng, 0, 1) == 1;
+        let ckpt = gen::usize_in(rng, 0, 1) == 1;
+        let ws = w.store_working_set_bytes(opt, ckpt);
+        let cap = (gen::f64_in(rng, 0.0, 2.0) * ws as f64) as u64;
+        let residual = w.cached_store_read_bytes(opt, ckpt, cap);
+        let full = w.store_read_bytes(opt, ckpt);
+        if residual != 0 && residual != full {
+            return Err(format!("residual {residual} not in {{0, {full}}}"));
+        }
+        if ws > 0 && cap >= ws && residual != 0 {
+            return Err(format!("cap {cap} >= ws {ws} must absorb everything"));
+        }
+        if cap < ws && residual != full {
+            return Err(format!("cap {cap} < ws {ws} must absorb nothing"));
+        }
+        // working set monotone in the offloaded share
+        let both = w.store_working_set_bytes(true, true);
+        if both < ws {
+            return Err("working set must grow with the offloaded share".into());
+        }
+        Ok(())
+    });
+}
