@@ -7,6 +7,9 @@
 //! prefetch hits), and finally the data-parallel `--workers` dimension:
 //! W ∈ {1, 2, 4} must be bit-identical end to end — the deterministic ring
 //! all-reduce's contract — while the all-reduce traffic scales as 2(W−1).
+//! A final `--precision` sweep pins the storage-codec contract: strict f32
+//! is the baseline, the mixed codecs halve checkpoint + parameter bytes
+//! exactly while training within tolerance, deterministically.
 //!
 //!     cargo run --release --example schedule_compare
 
@@ -256,6 +259,59 @@ fn main() -> anyhow::Result<()> {
     assert!(base.ssd_read > 0);
     assert_eq!(cached.ssd_read, 0, "a fitting cache absorbs every read");
     assert!(cached.cache_hits > 0, "the cache tier never hit");
+
+    // --- precision sweep: --precision ∈ {f32, mixed:f16, mixed:bf16} ------
+    // The two-tier equivalence contract: strict f32 is the bit-identity
+    // baseline; the mixed codecs halve the checkpoint byte stream and the
+    // parameter-upload accounting EXACTLY (2 B/elem vs 4) while training
+    // within tolerance of the f32 run, and every mixed run is
+    // self-deterministic (bit-identical on repeat). The store carries ONLY
+    // checkpoints here (opt on CPU), so the byte ratio is pure codec
+    // arithmetic.
+    use greedysnake::memory::Precision;
+    let mut p_logs: Vec<(&str, RunLog)> = Vec::new();
+    for (i, prec) in ["f32", "mixed:f16", "mixed:bf16", "mixed:f16"].into_iter().enumerate() {
+        let mut c = cfg(&format!("prec{i}"), 0.25);
+        c.opt_on_ssd = false;
+        c.ckpt_on_ssd = true;
+        c.precision = Precision::parse(prec)?;
+        let log =
+            train(Manifest::load("artifacts/tiny")?, c, ScheduleKind::Vertical, steps, m, 0)?;
+        p_logs.push((prec, log));
+    }
+    let mut t = Table::new(
+        "precision sweep — storage codecs, vertical schedule, ckpt-on-ssd",
+        &["precision", "final loss", "param upload", "ssd read", "ssd written"],
+    );
+    for (tag, log) in &p_logs {
+        t.row(&[
+            tag.to_string(),
+            format!("{:.4}", log.final_loss()),
+            greedysnake::util::stats::fmt_bytes(log.param_bytes as f64),
+            greedysnake::util::stats::fmt_bytes(log.ssd_read as f64),
+            greedysnake::util::stats::fmt_bytes(log.ssd_written as f64),
+        ]);
+    }
+    t.emit(None);
+    let strict = &p_logs[0].1;
+    assert!(strict.ssd_read > 0 && strict.ssd_written > 0);
+    for (tag, log) in &p_logs[1..] {
+        let mut dev = 0.0f64;
+        for (a, b) in strict.losses.iter().zip(&log.losses) {
+            dev = dev.max((a - b).abs());
+        }
+        println!("{tag}: max per-step loss deviation vs f32: {dev:.5}");
+        assert!(dev < 0.1, "{tag} must train within tolerance of strict f32: {dev}");
+        // the headline halving, at the real store counters: encoded
+        // checkpoint traffic is exactly 0.5× (≤ the 0.55× acceptance bound)
+        assert_eq!(2 * log.ssd_read, strict.ssd_read, "{tag}: reads must halve");
+        assert_eq!(2 * log.ssd_written, strict.ssd_written, "{tag}: writes must halve");
+        assert_eq!(2 * log.param_bytes, strict.param_bytes, "{tag}: param accounting halves");
+    }
+    let (first, repeat) = (&p_logs[1].1, &p_logs[3].1);
+    assert_eq!(first.losses, repeat.losses, "mixed:f16 must be self-deterministic");
+    assert_eq!(first.param_sq_norm.to_bits(), repeat.param_sq_norm.to_bits());
+    assert_eq!(first.moment_sq_norm.to_bits(), repeat.moment_sq_norm.to_bits());
 
     println!("schedule_compare OK");
     Ok(())

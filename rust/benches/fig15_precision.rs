@@ -1,0 +1,254 @@
+//! Fig. 15 (precision panel) — mixed-precision storage codecs under the
+//! TensorStore: strict f32 vs `mixed:f16`/`mixed:bf16` end to end.
+//!
+//! * **simulated** (`sim::simulate_store_prec`): the per-category storage
+//!   byte multipliers ([`greedysnake::perfmodel::ByteMults`]) applied to an
+//!   SSD-bound placement across the schedule families — mixed precision
+//!   must strictly undercut strict f32 wherever the storage tier binds;
+//! * **closed forms** (`traffic::Workload::*_enc`): encoded per-iteration
+//!   store bytes under each [`PrecisionPolicy`] — moments stay f32 under
+//!   every policy, checkpoints halve EXACTLY under the mixed policies, and
+//!   the fit-or-nothing cache law is evaluated per policy (a cache sized to
+//!   the f16 working set absorbs mixed but not strict);
+//! * **real runtime** (when the AOT artifacts are built): short runs with
+//!   the store carrying only checkpoints (`--opt-on-ssd false`), where the
+//!   measured `ssd_read`/`ssd_written`/`param_bytes` under `mixed:f16` must
+//!   be ≤ 0.55× strict f32 (exactly 0.5× by construction) and losses must
+//!   track the strict run within tolerance.
+//!
+//! Emits `bench_out/fig15_precision.json` (uploaded as a CI artifact) plus
+//! a human-readable table.
+
+use std::collections::BTreeMap;
+
+use greedysnake::coordinator::TrainerConfig;
+use greedysnake::machine::MACHINE2_A100;
+use greedysnake::memory::Precision;
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::perfmodel::{ByteMults, StorageRatios, SystemParams};
+use greedysnake::sim::{simulate_store_prec, Schedule};
+use greedysnake::traffic::Workload;
+use greedysnake::trainer::{train, RunLog, ScheduleKind};
+use greedysnake::util::json::Json;
+use greedysnake::util::table::Table;
+
+fn main() {
+    let m = 16u64;
+    let sp = SystemParams::new(MACHINE2_A100.with_gpus(1), GPT_65B, 2, SEQ_LEN);
+    let x = StorageRatios::ALL_SSD; // the storage tier IS the bottleneck
+    let wl = Workload { model: GPT_65B, micro_batch: 2, seq_len: SEQ_LEN, m, shards: 1 };
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("model".to_string(), Json::Str("gpt-65b".to_string()));
+    report.insert("machine".to_string(), Json::Str("a100".to_string()));
+    report.insert("m".to_string(), Json::Num(m as f64));
+
+    // ---- sim sweep: schedules × precision ---------------------------------
+    let precisions = [Precision::F32, Precision::MixedF16, Precision::MixedBf16];
+    let scheds = [
+        Schedule::GreedySnake { alpha: 0.0, x },
+        Schedule::ZeroInfinity,
+        Schedule::TeraIo,
+    ];
+    let mut t = Table::new(
+        "Fig. 15 (precision) — GPT-65B A100, all-SSD placement",
+        &["schedule", "precision", "t_iter (s)", "speedup vs f32"],
+    );
+    let mut sim_obj: BTreeMap<String, Json> = BTreeMap::new();
+    for sched in scheds {
+        let strict = simulate_store_prec(
+            &sp,
+            m,
+            sched,
+            usize::MAX,
+            1,
+            0,
+            ByteMults::for_precision(Precision::F32),
+        );
+        for p in precisions {
+            let r = simulate_store_prec(
+                &sp,
+                m,
+                sched,
+                usize::MAX,
+                1,
+                0,
+                ByteMults::for_precision(p),
+            );
+            assert!(
+                r.t_iter <= strict.t_iter,
+                "{}/{p}: mixed sim {} must not exceed strict {}",
+                sched.kind_name(),
+                r.t_iter,
+                strict.t_iter
+            );
+            t.row(&[
+                sched.kind_name(),
+                format!("{p}"),
+                format!("{:.2}", r.t_iter),
+                format!("{:.2}x", strict.t_iter / r.t_iter),
+            ]);
+            let mut o = BTreeMap::new();
+            o.insert("t_iter_s".to_string(), Json::Num(r.t_iter));
+            o.insert("tokens_per_s".to_string(), Json::Num(r.tokens_per_s));
+            o.insert(
+                "speedup_vs_f32".to_string(),
+                Json::Num(strict.t_iter / r.t_iter),
+            );
+            sim_obj.insert(format!("{}/{p}", sched.kind_name()), Json::Obj(o));
+        }
+    }
+    // the SSD-bound GreedySnake leg must see a STRICT win from halving
+    let gs_strict = simulate_store_prec(
+        &sp,
+        m,
+        scheds[0],
+        usize::MAX,
+        1,
+        0,
+        ByteMults::for_precision(Precision::F32),
+    );
+    let gs_mixed = simulate_store_prec(
+        &sp,
+        m,
+        scheds[0],
+        usize::MAX,
+        1,
+        0,
+        ByteMults::for_precision(Precision::MixedF16),
+    );
+    assert!(
+        gs_mixed.t_iter < gs_strict.t_iter,
+        "all-SSD GreedySnake: mixed sim {} must beat strict {}",
+        gs_mixed.t_iter,
+        gs_strict.t_iter
+    );
+    t.emit(Some("bench_out/fig15_precision.tsv"));
+    report.insert("sim".to_string(), Json::Obj(sim_obj));
+
+    // ---- closed forms: encoded store bytes per policy ---------------------
+    let mut forms: BTreeMap<String, Json> = BTreeMap::new();
+    let strict_pol = Precision::F32.policy();
+    for p in precisions {
+        let pol = p.policy();
+        let mut o = BTreeMap::new();
+        o.insert(
+            "moment_bytes".to_string(),
+            Json::Num(wl.runtime_moment_bytes_enc(&pol) as f64),
+        );
+        o.insert(
+            "store_read_bytes".to_string(),
+            Json::Num(wl.store_read_bytes_enc(true, true, &pol) as f64),
+        );
+        o.insert(
+            "working_set_bytes".to_string(),
+            Json::Num(wl.store_working_set_bytes_enc(true, true, &pol) as f64),
+        );
+        forms.insert(format!("{p}"), Json::Obj(o));
+        // Adam moments stay f32 under EVERY policy …
+        assert_eq!(
+            wl.runtime_moment_bytes_enc(&pol),
+            wl.runtime_moment_bytes_enc(&strict_pol)
+        );
+        // … and the checkpoint stream halves EXACTLY under the mixed ones.
+        if !pol.is_strict_f32() {
+            assert_eq!(
+                2 * wl.store_read_bytes_enc(false, true, &pol),
+                wl.store_read_bytes_enc(false, true, &strict_pol),
+                "{p}: encoded checkpoint bytes must be exactly half of strict f32"
+            );
+        }
+    }
+    // fit-or-nothing per policy: a cache sized to the f16 working set
+    // absorbs the mixed run but overflows on its strict f32 twin.
+    let f16_pol = Precision::MixedF16.policy();
+    let f16_ws = wl.store_working_set_bytes_enc(true, true, &f16_pol);
+    assert_eq!(wl.cached_store_read_bytes_enc(true, true, &f16_pol, f16_ws), 0);
+    assert_eq!(
+        wl.cached_store_read_bytes_enc(true, true, &strict_pol, f16_ws),
+        wl.store_read_bytes_enc(true, true, &strict_pol)
+    );
+    forms.insert("f16_working_set_bytes".to_string(), Json::Num(f16_ws as f64));
+    report.insert("closed_forms".to_string(), Json::Obj(forms));
+    println!(
+        "closed forms: f16 working set {} vs strict {}",
+        greedysnake::util::stats::fmt_bytes(f16_ws as f64),
+        greedysnake::util::stats::fmt_bytes(
+            wl.store_working_set_bytes_enc(true, true, &strict_pol) as f64
+        ),
+    );
+
+    // ---- real-runtime leg (skips without AOT artifacts) -------------------
+    let runtime_status = match greedysnake::runtime::test_artifacts("artifacts/tiny") {
+        None => {
+            println!("runtime precision leg: skipped (artifacts/tiny not built)");
+            "skipped".to_string()
+        }
+        Some(_) => {
+            // store carries ONLY checkpoints so the byte ratio is pure
+            // codec arithmetic: 2 B/elem vs 4 B/elem = exactly 0.5×.
+            let mk = |tag: &str, precision: Precision| TrainerConfig {
+                alpha: 0.0,
+                opt_on_ssd: false,
+                ckpt_on_ssd: true,
+                overlap: false,
+                io_depth: 0,
+                precision,
+                ssd_path: std::env::temp_dir()
+                    .join(format!("gs_f15_{tag}_{}", std::process::id())),
+                ..Default::default()
+            };
+            let manifest = || greedysnake::runtime::Manifest::load("artifacts/tiny").unwrap();
+            let go = |tag: &str, precision: Precision| -> RunLog {
+                train(manifest(), mk(tag, precision), ScheduleKind::Vertical, 3, 3, 0)
+                    .unwrap()
+            };
+            let strict = go("f32", Precision::F32);
+            let mixed = go("f16", Precision::MixedF16);
+            assert!(strict.ssd_read > 0 && strict.ssd_written > 0);
+            let traffic = |log: &RunLog| log.ssd_read + log.ssd_written + log.param_bytes;
+            let ratio = traffic(&mixed) as f64 / traffic(&strict) as f64;
+            assert!(
+                ratio <= 0.55,
+                "mixed:f16 param+checkpoint traffic ratio {ratio:.3} must be <= 0.55"
+            );
+            // and with a checkpoint-only store the halving is EXACT
+            assert_eq!(2 * mixed.ssd_read, strict.ssd_read);
+            assert_eq!(2 * mixed.ssd_written, strict.ssd_written);
+            let max_dev = strict
+                .losses
+                .iter()
+                .zip(&mixed.losses)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(
+                max_dev < 0.1,
+                "mixed:f16 losses must track strict f32 (max dev {max_dev:.3e})"
+            );
+            let mut o = BTreeMap::new();
+            o.insert(
+                "strict_store_bytes".to_string(),
+                Json::Num((strict.ssd_read + strict.ssd_written) as f64),
+            );
+            o.insert(
+                "mixed_store_bytes".to_string(),
+                Json::Num((mixed.ssd_read + mixed.ssd_written) as f64),
+            );
+            o.insert("traffic_ratio".to_string(), Json::Num(ratio));
+            o.insert("max_loss_dev".to_string(), Json::Num(max_dev));
+            report.insert("runtime".to_string(), Json::Obj(o));
+            println!(
+                "runtime precision leg: mixed:f16 traffic ratio {ratio:.3} \
+                 (bound 0.55), max loss dev {max_dev:.3e}",
+            );
+            "ok".to_string()
+        }
+    };
+    report.insert("runtime_status".to_string(), Json::Str(runtime_status));
+
+    std::fs::create_dir_all("bench_out").expect("create bench_out");
+    let path = "bench_out/fig15_precision.json";
+    std::fs::write(path, Json::Obj(report).to_string_compact())
+        .expect("write precision report");
+    println!("precision report -> {path}");
+}

@@ -81,6 +81,36 @@ fn main() -> anyhow::Result<()> {
         ssd.get_f32("k", &mut out).unwrap();
         black_box(out.len())
     });
+    // the get_f32 scratch-buffer fix: the old default decoded through a
+    // fresh Vec each call; the trait default now stages through a reusable
+    // thread-local. The replica below re-creates the allocate-per-call
+    // behavior for the before/after delta.
+    use greedysnake::memory::store::TensorStore;
+    b3.run("get_f32_alloc_per_call", || {
+        let mut raw: Vec<u8> = Vec::new();
+        TensorStore::get(&ssd, "k", &mut raw).unwrap();
+        out.clear();
+        out.extend(raw.chunks_exact(4).map(|c| {
+            f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+        }));
+        black_box(out.len())
+    });
+    b3.run("get_f32_reuse_scratch", || {
+        TensorStore::get_f32(&ssd, "k", &mut out).unwrap();
+        black_box(out.len())
+    });
+    // the codec boundary on the same object (encode + decode per pass)
+    let codec_store = greedysnake::memory::CodecStore::new(
+        std::sync::Arc::new(SsdStorage::create_unthrottled(
+            std::env::temp_dir().join(format!("gs_bench_codec_{}", std::process::id())),
+        )?),
+        greedysnake::memory::Precision::MixedF16.policy(),
+    );
+    b3.run("codec_f16_put_get_4MB", || {
+        codec_store.put_f32("ilc_k", &buf).unwrap();
+        codec_store.get_f32("ilc_k", &mut out).unwrap();
+        black_box(out.len())
+    });
 
     // --- lane executor dispatch overhead ------------------------------------
     let mut b4 = Bench::new("lanes").warmup(2).iters(10);

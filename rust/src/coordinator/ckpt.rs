@@ -5,7 +5,11 @@
 //! The offloaded path goes through the pluggable
 //! [`TensorStore`](crate::memory::store::TensorStore), so checkpoints ride
 //! whatever backend the run configured (single SSD, striped multi-SSD, or
-//! the DRAM-cached tier) with identical bytes either way.
+//! the DRAM-cached tier — optionally under the mixed-precision codec
+//! layer, which stores `ilc_*` objects in half precision). `ssd_bytes`
+//! reports *encoded* bytes — the traffic that actually crossed the store
+//! boundary — so the counter halves under `--precision mixed:*` exactly
+//! like the store's own `bytes_read`/`bytes_written`.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -45,8 +49,11 @@ impl InterLayerCoordinator {
     pub fn put(&self, key: &str, t: HostTensor) -> Result<()> {
         use std::sync::atomic::Ordering::Relaxed;
         if self.to_ssd {
-            self.ssd_bytes.fetch_add(t.bytes(), Relaxed);
-            self.ssd.put_f32(&format!("ilc_{key}"), &t.data)?;
+            let skey = format!("ilc_{key}");
+            self.ssd.put_f32(&skey, &t.data)?;
+            // account the bytes as stored (encoded under a mixed-precision
+            // policy), not the logical f32 size
+            self.ssd_bytes.fetch_add(self.ssd.len_of(&skey).unwrap_or(t.bytes()), Relaxed);
             // shape needed for reconstruction
             self.cpu.lock().unwrap().insert(
                 format!("{key}__shape"),
@@ -73,11 +80,13 @@ impl InterLayerCoordinator {
                 .remove(&format!("{key}__shape"))
                 .ok_or_else(|| anyhow!("no checkpoint '{key}'"))?;
             let shape: Vec<usize> = shape_t.data.iter().map(|&d| d as usize).collect();
+            let skey = format!("ilc_{key}");
+            let stored = self.ssd.len_of(&skey);
             let mut data = Vec::new();
-            self.ssd.get_f32(&format!("ilc_{key}"), &mut data)?;
-            self.ssd.delete(&format!("ilc_{key}"));
+            self.ssd.get_f32(&skey, &mut data)?;
+            self.ssd.delete(&skey);
             let t = HostTensor::from_vec(&shape, data)?;
-            self.ssd_bytes.fetch_add(t.bytes(), Relaxed);
+            self.ssd_bytes.fetch_add(stored.unwrap_or(t.bytes()), Relaxed);
             Ok(t)
         } else {
             self.cpu
@@ -153,6 +162,30 @@ mod tests {
         let back = c.take("k").unwrap();
         assert_eq!(back, t);
         assert!(c.ssd_bytes.load(std::sync::atomic::Ordering::Relaxed) >= 2 * t.bytes());
+    }
+
+    /// Under the mixed codec layer the ILC accounts encoded bytes: a full
+    /// put+take round trip of an n-element checkpoint counts 2·2n bytes,
+    /// half the f32 path's 2·4n.
+    #[test]
+    fn ssd_bytes_count_encoded_bytes_under_mixed_precision() {
+        use crate::memory::codec::{CodecStore, Precision};
+        let inner: Arc<dyn TensorStore> = Arc::new(
+            crate::memory::SsdStorage::create_unthrottled(
+                std::env::temp_dir().join(format!("gs_ckpt_enc_test_{}", std::process::id())),
+            )
+            .unwrap(),
+        );
+        let store: Arc<dyn TensorStore> =
+            Arc::new(CodecStore::new(inner, Precision::MixedF16.policy()));
+        let c = InterLayerCoordinator::new(store, true);
+        let t = HostTensor::from_vec(&[2, 3, 4], (0..24).map(|i| i as f32).collect()).unwrap();
+        c.put("k", t.clone()).unwrap();
+        let back = c.take("k").unwrap();
+        // 0..24 are small integers: exactly representable in f16
+        assert_eq!(back, t);
+        let counted = c.ssd_bytes.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(counted, t.bytes(), "put+take at 2 B/elem == one f32 pass");
     }
 
     #[test]

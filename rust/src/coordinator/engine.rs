@@ -170,8 +170,13 @@ impl<'a> StepEngine<'a> {
         self.io.stats()
     }
 
+    /// Bytes one layer's parameter stream moves per load, at the precision
+    /// policy's parameter width — half under `--precision mixed:*` (the
+    /// low-precision parameter copy is what streams), 4 B/elem at strict
+    /// f32.
     fn layer_param_bytes(&self) -> u64 {
-        (self.state.manifest.layer_numel() * 4) as u64
+        let bpe = self.state.cfg.precision.policy().parameters.bytes_per_elem();
+        self.state.manifest.layer_numel() as u64 * bpe
     }
 
     /// Ensure `cache` holds layer `l`'s parameter literals. A prefetched

@@ -25,7 +25,9 @@
 //! [`InterLayerCoordinator`], which itself writes whatever
 //! [`TensorStore`](crate::memory::store::TensorStore) backend the run
 //! configured — a single SSD, a striped multi-SSD set, or the DRAM-cached
-//! tier — so lookahead depth and backend compose freely.
+//! tier, any of them under the mixed-precision codec layer
+//! (`--precision`), which halves the checkpoint bytes each lane op moves —
+//! so lookahead depth, backend, and storage precision compose freely.
 //!
 //! Lane-op failures (I/O errors *and* panics) surface as `anyhow` errors at
 //! this boundary — a panicked op poisons the executor

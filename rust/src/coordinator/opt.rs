@@ -27,12 +27,25 @@
 //! fused Adam expression is partition-invariant (§6.5; property-tested in
 //! `optimizer::tests`), the sharded update is element-for-element
 //! bit-identical to the unsharded one.
+//!
+//! ## Delayed gradient conversion (`--precision mixed:*`)
+//!
+//! Under a mixed [`TrainerConfig::precision`] policy, gradients arrive as
+//! f32 and are requantized through the half-precision gradient codec
+//! *delayed in-place*, MLP-Offload style: each (rank, part) visit rounds
+//! exactly the shard range it is about to consume, inside the update,
+//! instead of a separate whole-tensor conversion pass. The clip monitor
+//! still accumulates the f32 norms on arrival (bookkeeping is not part of
+//! the storage precision). The embedding/head group is master-weight
+//! territory and always updates in f32. At `--precision f32` the gradient
+//! codec is the identity and this path is bit-for-bit the historical one.
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::exec::pool::{TaskHandle, ThreadPool};
+use crate::memory::codec::Codec;
 use crate::memory::store::TensorStore;
 use crate::optimizer::{adam_step_hlo, adam_step_rust, delay_split, AdamParams, AdamState, ClipMonitor};
 use crate::runtime::tensor::HostTensor;
@@ -390,14 +403,29 @@ fn apply_update_rust(
 ) -> Result<()> {
     let hp: AdamParams = cfg.adam;
     let shards = shards.max(1);
+    let gcodec = cfg.precision.policy().gradients;
     let mut pguard = params.lock().unwrap();
     for (t, g) in grads.iter().enumerate() {
         let n = g.numel();
+        // Delayed in-place gradient conversion: the f32 gradient stays
+        // untouched until a (rank, part) visit requantizes exactly the
+        // shard range it consumes (no separate conversion pass). The
+        // staging copy exists only under a half-precision gradient codec.
+        let mut gq: Vec<f32> = Vec::new();
         for rank in 0..shards {
             let (lo, hi) = shard_part_range(n, cfg.alpha, rank, shards, part);
             if lo == hi {
                 continue;
             }
+            let gdata: &[f32] = if gcodec == Codec::F32 {
+                &g.data
+            } else {
+                if gq.is_empty() {
+                    gq.extend_from_slice(&g.data);
+                }
+                gcodec.requantize(&mut gq[lo..hi]);
+                &gq
+            };
             if cfg.opt_on_ssd {
                 // round-trip exactly this part's bytes through the throttled
                 // SSD (~1/W of the tensor per rank in sharded mode)
@@ -411,7 +439,7 @@ fn apply_update_rust(
                 adam_step_rust(
                     &mut pguard[t].data[lo..hi],
                     &mut st,
-                    &g.data[lo..hi],
+                    &gdata[lo..hi],
                     &hp,
                     step,
                     scale,
@@ -425,7 +453,7 @@ fn apply_update_rust(
                 adam_step_rust(
                     &mut pguard[t].data,
                     &mut oguard[t],
-                    &g.data,
+                    gdata,
                     &hp,
                     step,
                     scale,
@@ -454,14 +482,26 @@ fn apply_update_hlo(
 ) -> Result<()> {
     let chunk = state.manifest.config.adam_chunk;
     let shards = shards.max(1);
+    let gcodec = cfg.precision.policy().gradients;
     let mut pguard = state.layers[l].lock().unwrap();
     for (t, g) in grads.iter().enumerate() {
         let n = g.numel();
+        // same delayed in-place conversion as the Rust path
+        let mut gq: Vec<f32> = Vec::new();
         for rank in 0..shards {
             let (lo, hi) = shard_part_range(n, cfg.alpha, rank, shards, part);
             if lo == hi {
                 continue;
             }
+            let gdata: &[f32] = if gcodec == Codec::F32 {
+                &g.data
+            } else {
+                if gq.is_empty() {
+                    gq.extend_from_slice(&g.data);
+                }
+                gcodec.requantize(&mut gq[lo..hi]);
+                &gq
+            };
             if cfg.opt_on_ssd {
                 let key_m = moment_key(l, t, 'm', rank, shards, part);
                 let key_v = moment_key(l, t, 'v', rank, shards, part);
@@ -476,7 +516,7 @@ fn apply_update_hlo(
                     chunk,
                     &mut pguard[t].data[lo..hi],
                     &mut st,
-                    &g.data[lo..hi],
+                    &gdata[lo..hi],
                     &cfg.adam,
                     step,
                     scale,
@@ -492,7 +532,7 @@ fn apply_update_hlo(
                     chunk,
                     &mut pguard[t].data,
                     &mut oguard[t],
-                    &g.data,
+                    gdata,
                     &cfg.adam,
                     step,
                     scale,

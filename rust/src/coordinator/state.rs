@@ -4,6 +4,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::memory::codec::{CodecStore, Precision};
 use crate::memory::store::{CachedStore, StripedStore, TensorStore};
 use crate::memory::SsdStorage;
 use crate::optimizer::{AdamParams, AdamState};
@@ -76,6 +77,17 @@ pub struct TrainerConfig {
     /// ([`crate::memory::Tier`]-accounted) runs out. Bit-identical to the
     /// uncached path.
     pub cpu_cache_mb: usize,
+    /// Storage precision (`--precision {f32,mixed:f16,mixed:bf16}`).
+    /// `f32` (default) keeps every stored object raw f32 — the bit-identity
+    /// baseline. The mixed policies interpose a
+    /// [`crate::memory::codec::CodecStore`] over the whole backend stack:
+    /// activation checkpoints (`ilc_*`) are encoded in half precision and
+    /// gradients are requantized delayed in-place during the per-shard
+    /// optimizer update, while master weights and both Adam moments
+    /// (`opt_*`) stay f32. Mixed runs are pinned to the f32 baseline by the
+    /// tolerance-equivalence suite (see `memory::store`'s two-tier
+    /// contract), not by bit identity.
+    pub precision: Precision,
     /// Seed for parameter init and the synthetic corpus.
     pub seed: u64,
 }
@@ -99,6 +111,7 @@ impl Default for TrainerConfig {
             ssd_write_bps: f64::INFINITY,
             ssds: 1,
             cpu_cache_mb: 0,
+            precision: Precision::F32,
             seed: 42,
         }
     }
@@ -147,14 +160,22 @@ pub struct ModelState {
     pub embed_opt: Arc<Mutex<Vec<AdamState>>>,
     /// The pluggable storage tier holding offloaded optimizer state and
     /// spilled checkpoints — single SSD, striped multi-SSD, or DRAM-cached
-    /// per [`TrainerConfig::ssds`] / [`TrainerConfig::cpu_cache_mb`]. Every
-    /// backend is bit-identical (see `memory::store`); only byte placement
-    /// and wall time differ.
+    /// per [`TrainerConfig::ssds`] / [`TrainerConfig::cpu_cache_mb`],
+    /// optionally under a mixed-precision codec layer per
+    /// [`TrainerConfig::precision`]. At `--precision f32` every backend is
+    /// bit-identical (see `memory::store`); the mixed policies store
+    /// checkpoints encoded in half precision and are tolerance-pinned
+    /// instead. Only byte placement, byte width, and wall time differ.
     pub store: Arc<dyn TensorStore>,
     pub cfg: TrainerConfig,
 }
 
-/// Build the configured [`TensorStore`] backend stack for `cfg`.
+/// Build the configured [`TensorStore`] backend stack for `cfg`:
+/// `CodecStore?` → `CachedStore?` → `StripedStore | SsdStorage`. The codec
+/// sits on TOP so every layer below it — including the cache's `Tier`
+/// capacity accounting and the SSD byte counters — sees encoded bytes; at
+/// strict f32 the wrapper is omitted entirely (bit-identity by
+/// construction).
 fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
     let base: Arc<dyn TensorStore> = if cfg.ssds > 1 {
         Arc::new(StripedStore::create(
@@ -170,10 +191,16 @@ fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
             cfg.ssd_write_bps,
         )?)
     };
-    let store: Arc<dyn TensorStore> = if cfg.cpu_cache_mb > 0 {
+    let cached: Arc<dyn TensorStore> = if cfg.cpu_cache_mb > 0 {
         Arc::new(CachedStore::new(base, (cfg.cpu_cache_mb as u64) << 20))
     } else {
         base
+    };
+    let policy = cfg.precision.policy();
+    let store: Arc<dyn TensorStore> = if policy.is_strict_f32() {
+        cached
+    } else {
+        Arc::new(CodecStore::new(cached, policy))
     };
     Ok(store)
 }
@@ -357,6 +384,32 @@ mod tests {
             assert_eq!(out, xs, "ssds={} cache={}", cfg.ssds, cfg.cpu_cache_mb);
             assert!(store.contains("opt_m_l0_t0_e"));
             assert_eq!(store.len_of("opt_m_l0_t0_e"), Some(513 * 4));
+        }
+    }
+
+    /// Mixed precision wraps the same backend stack in a `CodecStore`:
+    /// checkpoints land encoded (half the bytes), moments stay f32, and
+    /// the decoded values obey the codec's rounding — while strict f32
+    /// builds the identical stack as before (no wrapper at all).
+    #[test]
+    fn store_backend_selection_applies_precision_policy() {
+        for (prec, name) in
+            [(Precision::MixedF16, "prec_f16"), (Precision::MixedBf16, "prec_bf16")]
+        {
+            let cfg = TrainerConfig { precision: prec, ..TrainerConfig::for_test(name) };
+            let store = super::build_store(&cfg).unwrap();
+            // (i % 128) * 0.5 needs at most 7 significand bits — exactly
+            // representable in f16 AND bf16, so the roundtrip is lossless
+            let xs: Vec<f32> = (0..513).map(|i| (i % 128) as f32 * 0.5).collect();
+            store.put_f32("ilc_ckpt_l0", &xs).unwrap();
+            store.put_f32("opt_m_l0_t0_e", &xs).unwrap();
+            assert_eq!(store.len_of("ilc_ckpt_l0"), Some(513 * 2), "{prec}");
+            assert_eq!(store.len_of("opt_m_l0_t0_e"), Some(513 * 4), "{prec}");
+            let mut out = Vec::new();
+            store.get_f32("ilc_ckpt_l0", &mut out).unwrap();
+            assert_eq!(out, xs, "{prec}");
+            store.get_f32("opt_m_l0_t0_e", &mut out).unwrap();
+            assert_eq!(out, xs, "{prec}");
         }
     }
 

@@ -13,11 +13,12 @@ use anyhow::{bail, Result};
 use greedysnake::coordinator::TrainerConfig;
 use greedysnake::lp;
 use greedysnake::machine::{MACHINE1_A5000, MACHINE2_A100};
+use greedysnake::memory::Precision;
 use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
-use greedysnake::perfmodel::SystemParams;
+use greedysnake::perfmodel::{ByteMults, SystemParams};
 use greedysnake::roofline::Roofline;
 use greedysnake::runtime::Manifest;
-use greedysnake::sim::{simulate_dist, simulate_store, DistConfig, Schedule};
+use greedysnake::sim::{simulate_dist, simulate_store_prec, DistConfig, Schedule};
 use greedysnake::trainer::{train, ScheduleKind};
 use greedysnake::util::cli::Cli;
 use greedysnake::util::table::Table;
@@ -114,6 +115,14 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
              chunked ring all-reduce (bit-identical to --workers 1 for every W)",
             Some("1"),
         )
+        .opt(
+            "precision",
+            "storage precision policy: f32 (strict, bit-identical baseline) or \
+             mixed:f16|mixed:bf16 (checkpoints + parameter accounting in half \
+             precision, gradients requantized in place during the optimizer \
+             update; master weights and Adam moments stay f32)",
+            Some("f32"),
+        )
         .opt("log-every", "print every k steps", Some("1"))
         .flag(
             "shard-optimizer",
@@ -150,6 +159,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         ssd_write_bps: if w > 0.0 { w * 1e9 } else { f64::INFINITY },
         ssds: cli.get_parsed::<usize>("ssds")?.max(1),
         cpu_cache_mb: cli.get_parsed("cpu-cache-mb")?,
+        precision: Precision::parse(&cli.get("precision").unwrap())?,
         seed: cli.get_parsed("seed")?,
         ..Default::default()
     };
@@ -158,7 +168,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{} ssds={} cpu-cache={}MiB",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{} ssds={} cpu-cache={}MiB precision={}",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
@@ -167,6 +177,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         if cfg.shard_optimizer { " shard-optimizer" } else { "" },
         cfg.ssds,
         cfg.cpu_cache_mb,
+        cfg.precision,
     );
     let workers = cfg.workers;
     let sharded = cfg.shard_optimizer && workers > 1;
@@ -255,6 +266,14 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
              --cpu-cache-mb mirror; fit-or-nothing LRU law, see traffic::Workload)",
             Some("0"),
         )
+        .opt(
+            "precision",
+            "model the runtime storage precision: f32 (strict, 2x the paper's \
+             half-precision wire widths for params/ckpts) or mixed:f16|mixed:bf16 \
+             (paper widths + requantized gradient stream). Omit to model the \
+             paper's analytic wire widths unchanged",
+            None,
+        )
         .flag(
             "shard-optimizer",
             "ZeRO-style sharded optimizer in the dist sim: reduce-scatter legs on the \
@@ -293,6 +312,12 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
     let ssds: usize = cli.get_parsed("ssds")?;
     let cache_bytes = (cli.get_parsed::<u64>("cpu-cache-mb")?) << 20;
     let shard_optimizer = cli.has_flag("shard-optimizer");
+    // only an explicit --precision changes the modeled byte widths; the
+    // default keeps the sim's historical paper-width outputs bit-identical
+    let byte_mults = match cli.get("precision") {
+        Some(s) => ByteMults::for_precision(Precision::parse(&s)?),
+        None => ByteMults::ONE,
+    };
     let r = if workers > 1 || ssds > 1 || shard_optimizer {
         // the dist sim models each GPU as an explicit worker with its own
         // resources (tokens are global-M, SSD bandwidth per modeled device);
@@ -310,10 +335,11 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
             io_depth,
             shard_optimizer,
             cache_bytes,
+            byte_mults,
         };
         simulate_dist(&sp, m, schedule, cfg)
     } else {
-        simulate_store(&sp, m, schedule, io_depth, 1, cache_bytes)
+        simulate_store_prec(&sp, m, schedule, io_depth, 1, cache_bytes, byte_mults)
     };
     println!(
         "{} {} x{} M={m} W={}: {:.1}s/iter, {:.0} tokens/s, {:.1} TFLOPs/GPU, GPU util {:.0}%",

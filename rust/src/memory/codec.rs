@@ -1,0 +1,596 @@
+//! Mixed-precision storage codecs under [`TensorStore`] — the encode/decode
+//! layer that halves the SSD byte volume.
+//!
+//! Every object the coordinator persists used to hit the store as raw f32.
+//! [`Codec`] adds the two half-precision wire formats (IEEE binary16 and
+//! bfloat16, both round-to-nearest-even), and [`PrecisionPolicy`] maps each
+//! data [`Category`] — derived from the structured key prefixes
+//! (`opt_*`/`ilc_*`, see [`category_of`]) — to the codec it is stored with.
+//! The default mixed policy follows MLP-Offload / SSDTrain: parameters and
+//! activation checkpoints travel in half precision while master weights and
+//! both Adam moments stay f32, and gradients are converted *delayed
+//! in-place* during the per-shard optimizer update (see `coordinator::opt`)
+//! rather than in a separate pass.
+//!
+//! [`CodecStore`] applies a policy transparently on top of ANY inner
+//! [`TensorStore`] (single SSD, striped, DRAM-cached): the typed
+//! `put_f32`/`get_f32` helpers encode/decode at the boundary, while the raw
+//! byte API and every counter (`bytes_read`/`bytes_written`, footprint,
+//! cache stats, `len_of`) speak *encoded* bytes — the traffic and capacity
+//! that actually exist below the codec. Under the strict-f32 policy the
+//! wrapper short-circuits to the inner typed helpers, byte-identical to not
+//! wrapping at all (the bit-identity tier of the equivalence contract in
+//! [`crate::memory::store`]).
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::store::{category_of, CacheStats, TensorStore};
+use super::tier::Category;
+use crate::util::{bf16, f16};
+
+// ---------------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------------
+
+/// Storage wire format for one f32 tensor object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Codec {
+    /// Raw little-endian f32 — the historical format, bit-exact.
+    F32,
+    /// IEEE 754 binary16: 10 significand bits, narrow range (max 65504),
+    /// gradual underflow. Relative roundtrip error ≤ 2⁻¹¹ for in-range
+    /// normals.
+    F16,
+    /// bfloat16: 7 explicit significand bits, full f32 exponent range.
+    /// Relative roundtrip error ≤ 2⁻⁸; never overflows where f32 doesn't.
+    BF16,
+}
+
+impl Codec {
+    /// Stored bytes per f32 element.
+    pub fn bytes_per_elem(self) -> u64 {
+        match self {
+            Codec::F32 => 4,
+            Codec::F16 | Codec::BF16 => 2,
+        }
+    }
+
+    /// Encoded byte length of an `n`-element f32 tensor (the length law:
+    /// `encoded_len(n) = n * bytes_per_elem()`).
+    pub fn encoded_len(self, n: usize) -> usize {
+        n * self.bytes_per_elem() as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::BF16 => "bf16",
+        }
+    }
+
+    /// Encode `src` into `out` (cleared first) as this codec's wire format.
+    pub fn encode_into(self, src: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.encoded_len(src.len()));
+        match self {
+            Codec::F32 => {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * 4)
+                };
+                out.extend_from_slice(bytes);
+            }
+            Codec::F16 => {
+                for &x in src {
+                    out.extend_from_slice(&f16::f32_to_f16(x).to_le_bytes());
+                }
+            }
+            Codec::BF16 => {
+                for &x in src {
+                    out.extend_from_slice(&bf16::f32_to_bf16(x).to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode an encoded byte object back to f32s. Errors (instead of
+    /// truncating) when the byte length is not a whole number of encoded
+    /// elements — a corrupt or policy-mismatched object.
+    pub fn decode_into(self, key: &str, src: &[u8], out: &mut Vec<f32>) -> Result<()> {
+        let w = self.bytes_per_elem() as usize;
+        ensure!(
+            src.len() % w == 0,
+            "object '{key}' not {}-aligned ({} bytes)",
+            self.name(),
+            src.len()
+        );
+        out.clear();
+        out.reserve(src.len() / w);
+        match self {
+            Codec::F32 => {
+                out.resize(src.len() / 4, 0.0);
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr(),
+                        out.as_mut_ptr() as *mut u8,
+                        src.len(),
+                    );
+                }
+            }
+            Codec::F16 => {
+                out.extend(src.chunks_exact(2).map(|c| {
+                    f16::f16_to_f32(u16::from_le_bytes([c[0], c[1]]))
+                }));
+            }
+            Codec::BF16 => {
+                out.extend(src.chunks_exact(2).map(|c| {
+                    bf16::bf16_to_f32(u16::from_le_bytes([c[0], c[1]]))
+                }));
+            }
+        }
+        Ok(())
+    }
+
+    /// Round every element through this codec in place — the delayed
+    /// in-place conversion the optimizer applies to the gradient shard it is
+    /// about to consume. A no-op at [`Codec::F32`].
+    pub fn requantize(self, xs: &mut [f32]) {
+        match self {
+            Codec::F32 => {}
+            Codec::F16 => {
+                for x in xs {
+                    *x = f16::f16_to_f32(f16::f32_to_f16(*x));
+                }
+            }
+            Codec::BF16 => {
+                for x in xs {
+                    *x = bf16::bf16_to_f32(bf16::f32_to_bf16(*x));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PrecisionPolicy / Precision
+// ---------------------------------------------------------------------------
+
+/// Which codec each class of trainer data is stored (or requantized) with.
+///
+/// The store-visible classes map through [`category_of`]: `opt_*` moment
+/// objects use `optimizer`, `ilc_*` checkpoints use `checkpoints`, anything
+/// else uses `working`. `parameters` governs the low-precision parameter
+/// stream the engine accounts per layer load, and `gradients` governs the
+/// delayed in-place conversion inside the per-shard optimizer update —
+/// neither touches the store directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrecisionPolicy {
+    pub parameters: Codec,
+    pub gradients: Codec,
+    pub optimizer: Codec,
+    pub checkpoints: Codec,
+    pub working: Codec,
+}
+
+impl PrecisionPolicy {
+    /// Everything raw f32 — the bit-identity baseline.
+    pub const STRICT_F32: PrecisionPolicy = PrecisionPolicy {
+        parameters: Codec::F32,
+        gradients: Codec::F32,
+        optimizer: Codec::F32,
+        checkpoints: Codec::F32,
+        working: Codec::F32,
+    };
+
+    /// The default mixed policy: parameters, gradients, and activation
+    /// checkpoints in `half`; master weights and both Adam moments f32.
+    pub fn mixed(half: Codec) -> PrecisionPolicy {
+        PrecisionPolicy {
+            parameters: half,
+            gradients: half,
+            optimizer: Codec::F32,
+            checkpoints: half,
+            working: Codec::F32,
+        }
+    }
+
+    /// The codec storing objects of `cat`.
+    pub fn codec_for(&self, cat: Category) -> Codec {
+        match cat {
+            Category::OptimizerStates => self.optimizer,
+            Category::Checkpoints => self.checkpoints,
+            _ => self.working,
+        }
+    }
+
+    /// The codec storing the object at `key` (via its key-prefix category).
+    pub fn codec_for_key(&self, key: &str) -> Codec {
+        self.codec_for(category_of(key))
+    }
+
+    /// True iff every class is [`Codec::F32`] — the policy under which the
+    /// codec layer is a byte-for-byte identity.
+    pub fn is_strict_f32(&self) -> bool {
+        *self == Self::STRICT_F32
+    }
+}
+
+/// The `--precision` CLI axis: strict f32 or one of the two mixed policies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    #[default]
+    F32,
+    MixedF16,
+    MixedBf16,
+}
+
+impl Precision {
+    /// Parse a `--precision` / `GS_TEST_PRECISION` spelling. Accepts the
+    /// full `mixed:` forms and the bare half names used by the CI matrix.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "mixed:f16" | "f16" => Ok(Precision::MixedF16),
+            "mixed:bf16" | "bf16" => Ok(Precision::MixedBf16),
+            other => bail!("unknown precision '{other}' (expected f32 | mixed:f16 | mixed:bf16)"),
+        }
+    }
+
+    pub fn policy(self) -> PrecisionPolicy {
+        match self {
+            Precision::F32 => PrecisionPolicy::STRICT_F32,
+            Precision::MixedF16 => PrecisionPolicy::mixed(Codec::F16),
+            Precision::MixedBf16 => PrecisionPolicy::mixed(Codec::BF16),
+        }
+    }
+
+    /// The half-precision storage codec, if any.
+    pub fn half_codec(self) -> Option<Codec> {
+        match self {
+            Precision::F32 => None,
+            Precision::MixedF16 => Some(Codec::F16),
+            Precision::MixedBf16 => Some(Codec::BF16),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::MixedF16 => "mixed:f16",
+            Precision::MixedBf16 => "mixed:bf16",
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CodecStore
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Reusable encode/decode staging buffer (one per thread, like the
+    /// `get_f32` scratch in `store.rs`): the codec boundary is on the
+    /// prefetch hot path, so it must not allocate per call.
+    static CODEC_SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A [`TensorStore`] adapter that applies a [`PrecisionPolicy`] at the typed
+/// f32 boundary and passes everything else — raw byte API, counters,
+/// capacity — through to the inner store in *encoded* bytes.
+pub struct CodecStore {
+    inner: Arc<dyn TensorStore>,
+    policy: PrecisionPolicy,
+}
+
+impl CodecStore {
+    pub fn new(inner: Arc<dyn TensorStore>, policy: PrecisionPolicy) -> Self {
+        CodecStore { inner, policy }
+    }
+
+    pub fn policy(&self) -> &PrecisionPolicy {
+        &self.policy
+    }
+}
+
+impl TensorStore for CodecStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()> {
+        self.inner.get(key, out)
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        self.inner.delete(key)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn len_of(&self, key: &str) -> Option<u64> {
+        self.inner.len_of(key)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.inner.bytes_read()
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.inner.footprint()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
+    }
+
+    fn put_f32(&self, key: &str, data: &[f32]) -> Result<()> {
+        let codec = self.policy.codec_for_key(key);
+        if codec == Codec::F32 {
+            return self.inner.put_f32(key, data);
+        }
+        let mut buf = CODEC_SCRATCH.with(|c| std::mem::take(&mut *c.borrow_mut()));
+        codec.encode_into(data, &mut buf);
+        let res = self.inner.put(key, &buf);
+        CODEC_SCRATCH.with(|c| *c.borrow_mut() = buf);
+        res
+    }
+
+    fn get_f32(&self, key: &str, out: &mut Vec<f32>) -> Result<()> {
+        let codec = self.policy.codec_for_key(key);
+        if codec == Codec::F32 {
+            return self.inner.get_f32(key, out);
+        }
+        let mut buf = CODEC_SCRATCH.with(|c| std::mem::take(&mut *c.borrow_mut()));
+        let res = self
+            .inner
+            .get(key, &mut buf)
+            .and_then(|()| codec.decode_into(key, &buf, out));
+        CODEC_SCRATCH.with(|c| *c.borrow_mut() = buf);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::store::{CachedStore, StripedStore};
+    use crate::memory::SsdStorage;
+    use crate::util::prng::Prng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gs_codec_test_{name}_{}", std::process::id()))
+    }
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..n).map(|_| (p.next_f64() as f32 - 0.5) * 8.0).collect()
+    }
+
+    #[test]
+    fn encoded_length_laws() {
+        let xs = sample(1000, 1);
+        let mut buf = Vec::new();
+        for codec in [Codec::F32, Codec::F16, Codec::BF16] {
+            codec.encode_into(&xs, &mut buf);
+            assert_eq!(buf.len(), codec.encoded_len(xs.len()));
+            assert_eq!(buf.len() as u64, xs.len() as u64 * codec.bytes_per_elem());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_misaligned_lengths() {
+        let mut out = Vec::new();
+        for codec in [Codec::F16, Codec::BF16] {
+            let err = codec.decode_into("k", &[1u8, 2, 3], &mut out).unwrap_err();
+            assert!(err.to_string().contains("aligned"), "{err}");
+        }
+        let err = Codec::F32.decode_into("k", &[1u8, 2, 3], &mut out).unwrap_err();
+        assert!(err.to_string().contains("aligned"), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_matches_requantize() {
+        // decode(encode(x)) must equal the in-place requantize of x — the
+        // optimizer's delayed conversion sees the same values the store
+        // would have handed back.
+        let xs = sample(4096, 2);
+        let mut buf = Vec::new();
+        let mut back = Vec::new();
+        for codec in [Codec::F32, Codec::F16, Codec::BF16] {
+            codec.encode_into(&xs, &mut buf);
+            codec.decode_into("k", &buf, &mut back).unwrap();
+            let mut req = xs.clone();
+            codec.requantize(&mut req);
+            for (a, b) in back.iter().zip(&req) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn policy_maps_categories_and_prefixes() {
+        let p = PrecisionPolicy::mixed(Codec::F16);
+        assert_eq!(p.codec_for(Category::OptimizerStates), Codec::F32);
+        assert_eq!(p.codec_for(Category::Checkpoints), Codec::F16);
+        assert_eq!(p.codec_for_key("opt_m_l0_t0_e"), Codec::F32);
+        assert_eq!(p.codec_for_key("ilc_ckpt_l0_mb2"), Codec::F16);
+        assert_eq!(p.codec_for_key("misc"), Codec::F32);
+        assert!(!p.is_strict_f32());
+        assert!(PrecisionPolicy::STRICT_F32.is_strict_f32());
+        assert!(Precision::F32.policy().is_strict_f32());
+    }
+
+    #[test]
+    fn precision_parse_and_display() {
+        for (s, p) in [
+            ("f32", Precision::F32),
+            ("mixed:f16", Precision::MixedF16),
+            ("f16", Precision::MixedF16),
+            ("mixed:bf16", Precision::MixedBf16),
+            ("bf16", Precision::MixedBf16),
+        ] {
+            assert_eq!(Precision::parse(s).unwrap(), p, "{s}");
+        }
+        assert!(Precision::parse("fp8").is_err());
+        assert_eq!(Precision::MixedF16.to_string(), "mixed:f16");
+        assert_eq!(Precision::parse(&Precision::MixedBf16.to_string()).unwrap(),
+            Precision::MixedBf16);
+    }
+
+    #[test]
+    fn strict_f32_codec_store_is_byte_identical_to_bare_store() {
+        let bare = SsdStorage::create_unthrottled(tmp("id_bare")).unwrap();
+        let wrapped = CodecStore::new(
+            Arc::new(SsdStorage::create_unthrottled(tmp("id_wrap")).unwrap()),
+            PrecisionPolicy::STRICT_F32,
+        );
+        let xs = sample(777, 3);
+        bare.put_f32("ilc_x", &xs).unwrap();
+        wrapped.put_f32("ilc_x", &xs).unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        TensorStore::get(&bare, "ilc_x", &mut a).unwrap();
+        wrapped.get("ilc_x", &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(wrapped.bytes_written(), bare.bytes_written());
+        let mut back = Vec::new();
+        wrapped.get_f32("ilc_x", &mut back).unwrap();
+        for (x, y) in xs.iter().zip(&back) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// The headline byte halving, measured at the store counters: an f16
+    /// checkpoint working set moves exactly 0.5× the bytes of its f32 twin
+    /// (param + checkpoint traffic ≤ 0.55× is the PR's acceptance bound).
+    #[test]
+    fn mixed_f16_halves_checkpoint_store_traffic() {
+        let strict = CodecStore::new(
+            Arc::new(SsdStorage::create_unthrottled(tmp("ratio_f32")).unwrap()),
+            Precision::F32.policy(),
+        );
+        let mixed = CodecStore::new(
+            Arc::new(SsdStorage::create_unthrottled(tmp("ratio_f16")).unwrap()),
+            Precision::MixedF16.policy(),
+        );
+        let xs = sample(8192, 4);
+        let mut out = Vec::new();
+        for store in [&strict, &mixed] {
+            for i in 0..8 {
+                store.put_f32(&format!("ilc_ckpt_l{i}"), &xs).unwrap();
+                store.get_f32(&format!("ilc_ckpt_l{i}"), &mut out).unwrap();
+            }
+        }
+        let strict_traffic = strict.bytes_read() + strict.bytes_written();
+        let mixed_traffic = mixed.bytes_read() + mixed.bytes_written();
+        assert_eq!(mixed_traffic * 2, strict_traffic);
+        assert_eq!(mixed.len_of("ilc_ckpt_l0"), Some(8192 * 2));
+        // moments stay f32 under the mixed policy
+        mixed.put_f32("opt_m_l0_t0_e", &xs).unwrap();
+        assert_eq!(mixed.len_of("opt_m_l0_t0_e"), Some(8192 * 4));
+    }
+
+    /// Satellite: a half-precision working set fits in a cache its f32 twin
+    /// overflows — the `Tier` reserve/release accounting runs on encoded
+    /// bytes because the codec sits ABOVE the cache.
+    #[test]
+    fn cached_store_accounts_encoded_bytes() {
+        let n = 1024usize; // 4 KiB raw, 2 KiB encoded per object
+        let objs = 8usize;
+        let capacity = (objs * n * 2) as u64; // fits encoded, not raw
+        let build = |name: &str, prec: Precision| {
+            let inner: Arc<dyn TensorStore> =
+                Arc::new(SsdStorage::create_unthrottled(tmp(name)).unwrap());
+            let cached: Arc<dyn TensorStore> = Arc::new(CachedStore::new(inner, capacity));
+            CodecStore::new(cached, prec.policy())
+        };
+        let xs = sample(n, 5);
+        let mut out = Vec::new();
+        for (prec, name) in [(Precision::MixedF16, "enc_f16"), (Precision::F32, "enc_f32")] {
+            let store = build(name, prec);
+            for round in 0..3 {
+                for i in 0..objs {
+                    let key = format!("ilc_ws_{i}");
+                    if round == 0 {
+                        store.put_f32(&key, &xs).unwrap();
+                    }
+                    store.get_f32(&key, &mut out).unwrap();
+                }
+            }
+            let stats = store.cache_stats();
+            match prec {
+                Precision::MixedF16 => {
+                    assert_eq!(stats.total.evictions, 0, "f16 working set must fit");
+                    assert_eq!(stats.total.misses, 0);
+                    assert_eq!(store.bytes_read() + store.bytes_written(), 0);
+                }
+                _ => {
+                    assert!(stats.total.evictions > 0, "f32 twin must overflow: {stats:?}");
+                    assert!(store.bytes_written() > 0);
+                }
+            }
+        }
+    }
+
+    /// Satellite: `ssd` ≡ `striped` ≡ `cached` byte-for-byte under every
+    /// codec — backends still only change where encoded bytes live.
+    #[test]
+    fn backends_byte_identical_under_every_codec() {
+        let xs = sample(5000, 6);
+        for (ci, codec) in [Codec::F32, Codec::F16, Codec::BF16].iter().enumerate() {
+            let policy = PrecisionPolicy {
+                parameters: *codec,
+                gradients: *codec,
+                optimizer: *codec,
+                checkpoints: *codec,
+                working: *codec,
+            };
+            let ssd: Arc<dyn TensorStore> = Arc::new(
+                SsdStorage::create_unthrottled(tmp(&format!("xb_ssd{ci}"))).unwrap(),
+            );
+            let striped: Arc<dyn TensorStore> = Arc::new(
+                StripedStore::create(tmp(&format!("xb_str{ci}")), 3, f64::INFINITY, f64::INFINITY)
+                    .unwrap(),
+            );
+            let cached: Arc<dyn TensorStore> = Arc::new(CachedStore::new(
+                Arc::new(SsdStorage::create_unthrottled(tmp(&format!("xb_cin{ci}"))).unwrap()),
+                4096, // small: forces eviction churn through the backing store
+            ));
+            let stores: Vec<CodecStore> = [ssd, striped, cached]
+                .into_iter()
+                .map(|inner| CodecStore::new(inner, policy))
+                .collect();
+            for (k, key) in ["opt_m_l0_t0_e", "ilc_ckpt_l1_mb0", "scratch"].iter().enumerate() {
+                let data = &xs[k * 1000..k * 1000 + 1000];
+                let mut raw: Vec<Vec<u8>> = Vec::new();
+                let mut dec: Vec<Vec<f32>> = Vec::new();
+                for s in &stores {
+                    s.put_f32(key, data).unwrap();
+                    let mut bytes = Vec::new();
+                    s.get(key, &mut bytes).unwrap();
+                    let mut vals = Vec::new();
+                    s.get_f32(key, &mut vals).unwrap();
+                    assert_eq!(bytes.len(), codec.encoded_len(data.len()), "{key}");
+                    raw.push(bytes);
+                    dec.push(vals);
+                }
+                assert_eq!(raw[0], raw[1], "{codec:?}/{key}: ssd vs striped");
+                assert_eq!(raw[0], raw[2], "{codec:?}/{key}: ssd vs cached");
+                for d in &dec[1..] {
+                    for (a, b) in dec[0].iter().zip(d) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+            }
+        }
+    }
+}

@@ -2,15 +2,20 @@
 //! tiers, a bandwidth-throttled file-backed SSD (the NVMe stand-in — see
 //! DESIGN.md §Substitutions), the pluggable [`store::TensorStore`] object
 //! tier the coordinators do all their I/O through (single SSD, striped
-//! multi-SSD, or DRAM-cached — backend-bit-identical by contract), and the
-//! §5 pinned-buffer pool with the dynamic-programming power-of-two packing.
+//! multi-SSD, or DRAM-cached — backend-bit-identical by contract), the
+//! [`codec`] mixed-precision storage layer that encodes objects per
+//! [`tier::Category`] (two-tier equivalence: bit-identity at f32,
+//! tolerance-pinned at f16/bf16 — see `store.rs`), and the §5 pinned-buffer
+//! pool with the dynamic-programming power-of-two packing.
 
+pub mod codec;
 pub mod pinned;
 pub mod ssd;
 pub mod store;
 pub mod throttle;
 pub mod tier;
 
+pub use codec::{Codec, CodecStore, Precision, PrecisionPolicy};
 pub use pinned::PinnedPool;
 pub use ssd::SsdStorage;
 pub use store::{CacheCounters, CacheStats, CachedStore, SsdBackend, StripedStore, TensorStore};

@@ -282,15 +282,11 @@ impl SsdStorage {
         self.put(key, bytes)
     }
 
+    /// Delegates to the [`super::store::TensorStore`] default, which stages
+    /// the raw bytes in a reusable per-thread scratch buffer instead of
+    /// allocating a fresh `Vec` per call (the prefetch hot path).
     pub fn get_f32(&self, key: &str, out: &mut Vec<f32>) -> Result<()> {
-        let mut raw = Vec::new();
-        self.get(key, &mut raw)?;
-        anyhow::ensure!(raw.len() % 4 == 0, "object '{key}' not f32-aligned");
-        out.resize(raw.len() / 4, 0.0);
-        unsafe {
-            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, raw.len());
-        }
-        Ok(())
+        super::store::TensorStore::get_f32(self, key, out)
     }
 }
 

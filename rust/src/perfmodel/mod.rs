@@ -59,6 +59,44 @@ pub enum Bound {
     CpuAdam,
 }
 
+/// Per-category storage byte multipliers, applied on top of the paper's
+/// wire widths the closed forms assume (params/checkpoints 2 B lp,
+/// gradients/optimizer state 4 B fp). [`ByteMults::ONE`] — the default on
+/// every existing path — reproduces the historical model unchanged; the
+/// `--precision` sweeps use [`ByteMults::for_precision`] to model the
+/// runtime's actual storage widths instead.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ByteMults {
+    /// Low-precision parameter stream (`p_lp`).
+    pub param: f64,
+    /// Activation-checkpoint traffic (`c_bytes`).
+    pub ckpt: f64,
+    /// Gradient spill traffic (`g_fp`).
+    pub grad: f64,
+    /// Optimizer-state round trips (`o_bytes`).
+    pub opt: f64,
+}
+
+impl ByteMults {
+    /// The identity: the paper's wire widths, i.e. the historical model.
+    pub const ONE: ByteMults = ByteMults { param: 1.0, ckpt: 1.0, grad: 1.0, opt: 1.0 };
+
+    /// Multipliers modeling the RUNTIME's storage widths for a
+    /// `--precision` choice, relative to the paper widths: strict f32
+    /// stores parameters and checkpoints at 4 B/elem (2× the lp
+    /// assumption), the mixed policies store them at 2 B (1×) and
+    /// requantize gradients to half (0.5×); Adam moments are f32
+    /// everywhere (1×).
+    pub fn for_precision(p: crate::memory::codec::Precision) -> ByteMults {
+        match p {
+            crate::memory::codec::Precision::F32 => {
+                ByteMults { param: 2.0, ckpt: 2.0, grad: 1.0, opt: 1.0 }
+            }
+            _ => ByteMults { param: 1.0, ckpt: 1.0, grad: 0.5, opt: 1.0 },
+        }
+    }
+}
+
 /// One (machine, model, micro-batch, seq) operating point.
 #[derive(Clone, Copy, Debug)]
 pub struct SystemParams {
@@ -66,6 +104,10 @@ pub struct SystemParams {
     pub model: ModelCfg,
     pub micro_batch: u64,
     pub seq_len: u64,
+    /// Storage byte multipliers (see [`ByteMults`]); [`ByteMults::ONE`]
+    /// unless a precision sweep overrides them via
+    /// [`SystemParams::with_byte_mults`].
+    pub byte_mults: ByteMults,
 }
 
 /// Iteration-time estimate.
@@ -104,7 +146,14 @@ fn argmax4(compute: f64, pcie: f64, ssd: f64, cpu: f64) -> (f64, Bound) {
 
 impl SystemParams {
     pub fn new(node: NodeSpec, model: ModelCfg, micro_batch: u64, seq_len: u64) -> Self {
-        SystemParams { node, model, micro_batch, seq_len }
+        SystemParams { node, model, micro_batch, seq_len, byte_mults: ByteMults::ONE }
+    }
+
+    /// The same operating point with `mults` applied to every storage byte
+    /// primitive (`p_lp`, `g_fp`, `o_bytes`, `c_bytes`).
+    pub fn with_byte_mults(mut self, mults: ByteMults) -> Self {
+        self.byte_mults = mults;
+        self
     }
 
     // ---- per-GPU per-layer primitives -----------------------------------
@@ -115,22 +164,22 @@ impl SystemParams {
 
     /// Low-precision parameter bytes of one layer, per shard.
     pub fn p_lp(&self) -> f64 {
-        (self.model.params_per_layer() * BYTES_LP) as f64 / self.shards()
+        (self.model.params_per_layer() * BYTES_LP) as f64 / self.shards() * self.byte_mults.param
     }
 
     /// FP32 gradient bytes of one layer, per shard.
     pub fn g_fp(&self) -> f64 {
-        (self.model.params_per_layer() * BYTES_FP) as f64 / self.shards()
+        (self.model.params_per_layer() * BYTES_FP) as f64 / self.shards() * self.byte_mults.grad
     }
 
     /// Optimizer-state bytes (master+m+v, FP32) of one layer, per shard.
     pub fn o_bytes(&self) -> f64 {
-        (self.model.layer_opt_state_bytes()) as f64 / self.shards()
+        (self.model.layer_opt_state_bytes()) as f64 / self.shards() * self.byte_mults.opt
     }
 
     /// One micro-batch's per-layer checkpoint bytes (per GPU; data parallel).
     pub fn c_bytes(&self) -> f64 {
-        self.model.ckpt_bytes_lp(self.micro_batch, self.seq_len) as f64
+        self.model.ckpt_bytes_lp(self.micro_batch, self.seq_len) as f64 * self.byte_mults.ckpt
     }
 
     /// One micro-batch forward compute time for one layer.

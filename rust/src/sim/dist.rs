@@ -39,7 +39,7 @@ use crate::coordinator::dist::{partition, ring_leg_frac};
 use crate::coordinator::schedule::{
     ChunkedVerticalSchedule, HorizontalSchedule, Schedule as Traversal, VerticalSchedule,
 };
-use crate::perfmodel::{StorageRatios, SystemParams};
+use crate::perfmodel::{ByteMults, StorageRatios, SystemParams};
 
 use super::engine::{DiscreteSim, Resource};
 use super::schedules::{IoGate, Schedule, SimResult};
@@ -62,6 +62,11 @@ pub struct DistConfig {
     /// traffic is served from DRAM — the same fit-or-nothing law
     /// `sim::schedules::simulate_store` applies. 0 = off.
     pub cache_bytes: u64,
+    /// Per-category storage byte multipliers (the `--precision` mirror —
+    /// see [`ByteMults::for_precision`]). Applied to `sp` at simulation
+    /// entry, replacing whatever multipliers `sp` already carries;
+    /// [`ByteMults::ONE`] (the default) models the paper's wire widths.
+    pub byte_mults: ByteMults,
 }
 
 impl Default for DistConfig {
@@ -72,6 +77,7 @@ impl Default for DistConfig {
             io_depth: usize::MAX,
             shard_optimizer: false,
             cache_bytes: 0,
+            byte_mults: ByteMults::ONE,
         }
     }
 }
@@ -80,6 +86,7 @@ impl Default for DistConfig {
 /// across `cfg.workers` data-parallel workers sharing `cfg.ssds` SSDs.
 /// `workers == 1, ssds == 1` is the degenerate single-worker pipeline.
 pub fn simulate_dist(sp: &SystemParams, m: u64, schedule: Schedule, cfg: DistConfig) -> SimResult {
+    let sp = &sp.with_byte_mults(cfg.byte_mults);
     let iters = 3;
     let (mk_all, busy_all) = build_and_run(sp, m, schedule, iters, cfg);
     let (mk_warm, _) = build_and_run(sp, m, schedule, iters - 1, cfg);
@@ -614,6 +621,43 @@ mod tests {
             huge < 0.99 * none,
             "fitting cache {huge} must beat the SSD-bound dist run {none}"
         );
+    }
+
+    /// The `--precision` mirror on the dist sim: `ByteMults::ONE` is the
+    /// default (identity), and the mixed-precision multipliers strictly
+    /// beat strict f32's 2× wire widths on a shared contended SSD.
+    #[test]
+    fn byte_mults_scale_dist_sim() {
+        use crate::memory::codec::Precision;
+        let sp = sp();
+        let sched = gs(StorageRatios::ALL_SSD);
+        let default_ = simulate_dist(&sp, 16, sched, cfg(2, 1)).t_iter;
+        let one = simulate_dist(
+            &sp,
+            16,
+            sched,
+            DistConfig { byte_mults: ByteMults::ONE, ..cfg(2, 1) },
+        )
+        .t_iter;
+        assert_eq!(one, default_, "ByteMults::ONE is the default identity");
+        let strict = simulate_dist(
+            &sp,
+            16,
+            sched,
+            DistConfig { byte_mults: ByteMults::for_precision(Precision::F32), ..cfg(2, 1) },
+        )
+        .t_iter;
+        let mixed = simulate_dist(
+            &sp,
+            16,
+            sched,
+            DistConfig {
+                byte_mults: ByteMults::for_precision(Precision::MixedF16),
+                ..cfg(2, 1)
+            },
+        )
+        .t_iter;
+        assert!(mixed < strict, "mixed {mixed} must beat strict f32 {strict}");
     }
 
     /// The interconnect is a first-class resource: starving it slows the

@@ -13,7 +13,11 @@
 //! bandwidth (N independent throttles moving one object's shares in
 //! parallel) and `--cpu-cache-mb` applies the fit-or-nothing DRAM-cache
 //! absorption law shared with `traffic::Workload` and the runtime
-//! `CachedStore`.
+//! `CachedStore`. [`schedules::simulate_store_prec`] adds the `--precision`
+//! mirror: per-category storage byte multipliers
+//! ([`crate::perfmodel::ByteMults`]) scale every modeled transfer and the
+//! cache fit test, so half-precision storage both halves SSD time and fits
+//! in caches its f32 twin overflows.
 //!
 //! The data-parallel dimension lives in [`dist`]: W workers with their own
 //! compute resources (incl. a first-class inter-GPU interconnect for the
@@ -31,4 +35,6 @@ pub mod schedules;
 
 pub use dist::{simulate_dist, DistConfig};
 pub use engine::{DiscreteSim, Resource, SimOp};
-pub use schedules::{simulate, simulate_io, simulate_store, Schedule, SimResult};
+pub use schedules::{
+    simulate, simulate_io, simulate_store, simulate_store_prec, Schedule, SimResult,
+};

@@ -7,7 +7,7 @@
 //! per-iteration time is the *steady-state* increment between the last two
 //! iterations (warm-up excluded) — the same quantity the paper measures.
 
-use crate::perfmodel::{HPlacement, StorageRatios, SystemParams};
+use crate::perfmodel::{ByteMults, HPlacement, StorageRatios, SystemParams};
 
 use super::engine::{DiscreteSim, Resource};
 
@@ -101,6 +101,25 @@ pub fn simulate_store(
     simulate_io(&sp2, m, schedule2, io_depth)
 }
 
+/// [`simulate_store`] with explicit per-category storage byte multipliers
+/// (the `--precision` knob of the runtime mirrored onto the event sim): the
+/// multipliers scale every parameter / checkpoint / gradient / optimizer
+/// transfer AND the DRAM-cache working-set fit test, so a half-precision
+/// store both moves fewer bytes and fits in a cache its f32 twin overflows.
+/// `ByteMults::ONE` is the identity — exactly [`simulate_store`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_store_prec(
+    sp: &SystemParams,
+    m: u64,
+    schedule: Schedule,
+    io_depth: usize,
+    ssds: usize,
+    cache_bytes: u64,
+    mults: ByteMults,
+) -> SimResult {
+    simulate_store(&sp.with_byte_mults(mults), m, schedule, io_depth, ssds, cache_bytes)
+}
+
 /// N striped devices = N× aggregate SSD bandwidth (each device keeps its
 /// own full-rate throttle; shares move in parallel).
 pub(crate) fn scale_ssd_bandwidth(sp: &SystemParams, ssds: usize) -> SystemParams {
@@ -131,8 +150,16 @@ pub(crate) fn cache_adjusted(
         m,
         shards: sp.node.n_gpus,
     };
+    // the working-set fit test scales with the storage byte multipliers:
+    // a mixed-precision store's SSD-resident state is smaller, so it can
+    // fit in a cache the strict-f32 twin overflows (at `ByteMults::ONE`
+    // this is term-for-term `Workload::ssd_working_set_bytes`)
+    let bm = sp.byte_mults;
     let absorb = |x: StorageRatios| -> StorageRatios {
-        let ws = wl.ssd_working_set_bytes(x.param_cpu, x.ckpt_cpu, x.opt_cpu);
+        let param = bm.param * (1.0 - x.param_cpu) * wl.ms_lp() as f64;
+        let ckpt = bm.ckpt * (1.0 - x.ckpt_cpu) * (wl.m * wl.cs()) as f64;
+        let opt = bm.opt * (1.0 - x.opt_cpu) * wl.opt_state_bytes() as f64;
+        let ws = (param + ckpt + opt).ceil() as u64;
         if wl.cache_absorbs(ws, cache_bytes) {
             StorageRatios::ALL_CPU
         } else {
@@ -938,6 +965,77 @@ mod tests {
         let v = simulate(&sp, 48, gs(0.3));
         assert!(rr.tokens_per_s > 0.0);
         assert!(rr.tokens_per_s < v.tokens_per_s);
+    }
+
+    /// The precision knob on the event sim: `ByteMults::ONE` is the exact
+    /// identity, and a mixed-precision store (half-width params/ckpts,
+    /// requantized grads) strictly beats the strict-f32 store (2× paper
+    /// wire widths) on an SSD-bound schedule.
+    #[test]
+    fn precision_byte_mults_scale_simulated_ssd_time() {
+        use crate::memory::codec::Precision;
+        let sp = sp();
+        let sched = Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_SSD };
+        let base = simulate_store(&sp, 8, sched, usize::MAX, 1, 0);
+        let one = simulate_store_prec(&sp, 8, sched, usize::MAX, 1, 0, ByteMults::ONE);
+        assert_eq!(one.t_iter, base.t_iter, "ByteMults::ONE is the identity");
+        let strict = simulate_store_prec(
+            &sp,
+            8,
+            sched,
+            usize::MAX,
+            1,
+            0,
+            ByteMults::for_precision(Precision::F32),
+        );
+        let mixed = simulate_store_prec(
+            &sp,
+            8,
+            sched,
+            usize::MAX,
+            1,
+            0,
+            ByteMults::for_precision(Precision::MixedF16),
+        );
+        assert!(
+            mixed.t_iter < strict.t_iter,
+            "mixed {} must beat strict f32 {}",
+            mixed.t_iter,
+            strict.t_iter
+        );
+    }
+
+    /// The cache fit test scales with the byte multipliers: a cache sized
+    /// to the mixed-precision working set absorbs under `mixed:f16` but
+    /// not under strict f32, whose stored bytes are 2× larger.
+    #[test]
+    fn cache_fit_respects_byte_mults() {
+        use crate::memory::codec::Precision;
+        let sp = sp();
+        let sched = Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_SSD };
+        let wl = crate::traffic::Workload {
+            model: sp.model,
+            micro_batch: sp.micro_batch,
+            seq_len: sp.seq_len,
+            m: 8,
+            shards: sp.node.n_gpus,
+        };
+        // mixed mults are 1/1/1 on the param/ckpt/opt terms, so the
+        // mixed-precision working set IS the paper-width closed form
+        let ws_mixed = wl.ssd_working_set_bytes(0.0, 0.0, 0.0);
+        let strict = ByteMults::for_precision(Precision::F32);
+        let mixed = ByteMults::for_precision(Precision::MixedF16);
+        let m_un = simulate_store_prec(&sp, 8, sched, usize::MAX, 1, 0, mixed);
+        let m_c = simulate_store_prec(&sp, 8, sched, usize::MAX, 1, ws_mixed, mixed);
+        assert!(
+            m_c.t_iter < 0.99 * m_un.t_iter,
+            "mixed working set fits: {} vs {}",
+            m_c.t_iter,
+            m_un.t_iter
+        );
+        let s_un = simulate_store_prec(&sp, 8, sched, usize::MAX, 1, 0, strict);
+        let s_c = simulate_store_prec(&sp, 8, sched, usize::MAX, 1, ws_mixed, strict);
+        assert_eq!(s_c.t_iter, s_un.t_iter, "the f32 working set is 2x and overflows");
     }
 
     #[test]

@@ -27,6 +27,15 @@
 //! give the fit-or-nothing LRU law the event sim applies, and the
 //! `store_*`/`cached_store_*` family mirrors the runtime `TensorStore`
 //! byte counters exactly (what the fig14_store bench cross-checks).
+//!
+//! Two unit systems coexist. The schedule forms above and the legacy
+//! `store_*` family count checkpoints in the PAPER's low-precision wire
+//! width ([`BYTES_LP`] = 2 B/elem) — the analytic convention every figure
+//! uses. The `*_enc` family instead counts the bytes the runtime store
+//! actually moves under a [`PrecisionPolicy`](crate::memory::codec): each
+//! object category at its codec's width (f32 moments at 4 B/elem;
+//! checkpoints at 4 B strict / 2 B under `--precision mixed:*`), matching
+//! the runtime `bytes_read`/`bytes_written` counters byte-for-byte.
 
 use crate::coordinator::dist::{
     ring_allgather_bytes, ring_reduce_scatter_bytes, ring_traffic_bytes,
@@ -397,6 +406,87 @@ impl Workload {
         }
     }
 
+    // ---- encoded-byte closed forms (the runtime's `--precision` mirror) --
+
+    /// Elements in one (layer, micro-batch) checkpoint object (B·T·D) —
+    /// the runtime stores f32 element streams; the codec layer then
+    /// encodes them at the policy's checkpoint width.
+    fn ckpt_elems(&self) -> u64 {
+        self.model.ckpt_elems(self.micro_batch, self.seq_len)
+    }
+
+    /// The m+v moment bytes the runtime store holds per shard under a
+    /// precision policy — [`Workload::runtime_moment_bytes`] generalized to
+    /// the policy's optimizer codec width (4 B/elem under every shipped
+    /// policy: Adam moments stay f32).
+    pub fn runtime_moment_bytes_enc(&self, policy: &crate::memory::codec::PrecisionPolicy) -> u64 {
+        2 * self.model.n_layers * self.model.params_per_layer()
+            * policy.optimizer.bytes_per_elem()
+            / self.shards
+    }
+
+    /// ENCODED bytes the runtime's `TensorStore` reads per steady-state
+    /// iteration under `policy` — the exact `StepStats::ssd_bytes_read` /
+    /// store `bytes_read` mirror: moments round-trip at the optimizer
+    /// codec's width, checkpoints read back once at the checkpoint codec's
+    /// width. At [`PrecisionPolicy::STRICT_F32`](crate::memory::codec) the
+    /// checkpoint term is 2× the legacy (paper-width) `m·cs` form; under
+    /// `mixed:*` it equals it exactly — the end-to-end byte halving.
+    pub fn store_read_bytes_enc(
+        &self,
+        opt_on_ssd: bool,
+        ckpt_on_ssd: bool,
+        policy: &crate::memory::codec::PrecisionPolicy,
+    ) -> u64 {
+        self.store_working_set_bytes_enc(opt_on_ssd, ckpt_on_ssd, policy)
+    }
+
+    /// ENCODED bytes written per steady-state iteration (same symmetry as
+    /// the legacy form: moments written back, checkpoints stored once).
+    pub fn store_write_bytes_enc(
+        &self,
+        opt_on_ssd: bool,
+        ckpt_on_ssd: bool,
+        policy: &crate::memory::codec::PrecisionPolicy,
+    ) -> u64 {
+        self.store_read_bytes_enc(opt_on_ssd, ckpt_on_ssd, policy)
+    }
+
+    /// The runtime store's ENCODED working set under `policy`: all live
+    /// moment objects plus the peak live checkpoint set, each at its
+    /// codec's width — what a DRAM cache (whose capacity accounting is
+    /// also in encoded bytes) must hold to absorb the repeat traffic.
+    pub fn store_working_set_bytes_enc(
+        &self,
+        opt_on_ssd: bool,
+        ckpt_on_ssd: bool,
+        policy: &crate::memory::codec::PrecisionPolicy,
+    ) -> u64 {
+        let ckpt = self.m * self.model.n_layers * self.ckpt_elems()
+            * policy.checkpoints.bytes_per_elem();
+        (if opt_on_ssd { self.runtime_moment_bytes_enc(policy) } else { 0 })
+            + (if ckpt_on_ssd { ckpt } else { 0 })
+    }
+
+    /// Residual ENCODED SSD reads under a DRAM cache — the same
+    /// fit-or-nothing law as [`Workload::cached_store_read_bytes`], on the
+    /// encoded working set: a half-precision store can fit (and read 0
+    /// SSD bytes) in a cache its strict-f32 twin overflows.
+    pub fn cached_store_read_bytes_enc(
+        &self,
+        opt_on_ssd: bool,
+        ckpt_on_ssd: bool,
+        policy: &crate::memory::codec::PrecisionPolicy,
+        cache_bytes: u64,
+    ) -> u64 {
+        let ws = self.store_working_set_bytes_enc(opt_on_ssd, ckpt_on_ssd, policy);
+        if self.cache_absorbs(ws, cache_bytes) {
+            0
+        } else {
+            self.store_read_bytes_enc(opt_on_ssd, ckpt_on_ssd, policy)
+        }
+    }
+
     /// §3.2 — single forward-backward pass (Ratel-style) at batch size
     /// `batch = B·M` with `extra_ckpt` doubling checkpoint frequency
     /// (attention/FFN boundary checkpoints).
@@ -669,6 +759,66 @@ mod tests {
             w.cached_store_read_bytes(true, true, ws - 1),
             w.store_read_bytes(true, true),
             "a cache one byte short absorbs nothing (LRU cyclic sweep)"
+        );
+    }
+
+    /// The encoded-byte family: strict f32 stores checkpoints at 4 B/elem
+    /// (2× the paper's lp units), `mixed:f16` halves that back to the
+    /// paper width exactly, moments stay f32 under every shipped policy,
+    /// and read/write symmetry carries over.
+    #[test]
+    fn encoded_forms_follow_the_precision_policy() {
+        use crate::memory::codec::{Precision, PrecisionPolicy};
+        let w = wl(4);
+        let strict = PrecisionPolicy::STRICT_F32;
+        let f16 = Precision::MixedF16.policy();
+        let bf16 = Precision::MixedBf16.policy();
+        for p in [&strict, &f16, &bf16] {
+            assert_eq!(w.runtime_moment_bytes_enc(p), w.runtime_moment_bytes());
+            assert_eq!(
+                w.store_read_bytes_enc(true, true, p),
+                w.store_write_bytes_enc(true, true, p),
+                "encoded store traffic stays read/write symmetric"
+            );
+            assert_eq!(w.store_read_bytes_enc(false, false, p), 0);
+        }
+        // strict f32: moments match the legacy form, checkpoints are 2×
+        // the legacy lp-unit term (4 B/elem vs BYTES_LP = 2)
+        assert_eq!(
+            w.store_read_bytes_enc(true, false, &strict),
+            w.store_read_bytes(true, false)
+        );
+        assert_eq!(w.store_read_bytes_enc(false, true, &strict), 2 * 4 * w.cs());
+        // mixed halves the checkpoint stream end-to-end: exactly the paper
+        // width, i.e. exactly 0.5× the strict-f32 encoded bytes
+        for p in [&f16, &bf16] {
+            assert_eq!(w.store_read_bytes_enc(false, true, p), 4 * w.cs());
+            assert_eq!(
+                2 * w.store_read_bytes_enc(false, true, p),
+                w.store_read_bytes_enc(false, true, &strict)
+            );
+        }
+        // working set == per-iteration reads (every live byte read once)
+        assert_eq!(
+            w.store_working_set_bytes_enc(true, true, &f16),
+            w.store_read_bytes_enc(true, true, &f16)
+        );
+    }
+
+    /// The encoded cache law: a cache sized to the mixed working set
+    /// absorbs everything under `mixed:f16` and nothing under strict f32.
+    #[test]
+    fn encoded_cache_fit_is_per_policy() {
+        use crate::memory::codec::{Precision, PrecisionPolicy};
+        let w = wl(4);
+        let strict = PrecisionPolicy::STRICT_F32;
+        let f16 = Precision::MixedF16.policy();
+        let ws_mixed = w.store_working_set_bytes_enc(true, true, &f16);
+        assert_eq!(w.cached_store_read_bytes_enc(true, true, &f16, ws_mixed), 0);
+        assert_eq!(
+            w.cached_store_read_bytes_enc(true, true, &strict, ws_mixed),
+            w.store_read_bytes_enc(true, true, &strict),
+            "the f32 twin overflows the same cache and absorbs nothing"
         );
     }
 

@@ -1,0 +1,169 @@
+//! IEEE 754 binary16 (half) <-> f32 conversion for the storage codec layer.
+//!
+//! Unlike bf16 (a truncated f32, see [`crate::util::bf16`]), f16 keeps 10
+//! significand bits but only 5 exponent bits, so conversion must handle
+//! exponent rebiasing, gradual underflow into f16 subnormals, and overflow
+//! to infinity. All roundings are round-to-nearest-even (matches hardware
+//! and numpy's `astype(float16)`).
+
+/// f32 -> f16 with round-to-nearest-even, gradual underflow and overflow
+/// to infinity.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // NaN (quiet, preserving sign) or infinity.
+        return if abs > 0x7F80_0000 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let e16 = (abs >> 23) as i32 - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e16 <= 0 {
+        // Subnormal (or zero) in f16: shift the 24-bit significand right by
+        // 14 - e16 places with round+sticky.
+        if e16 < -10 {
+            return sign; // too small even for the largest shift -> signed zero
+        }
+        let man = (abs & 0x007F_FFFF) | 0x0080_0000;
+        let s = (14 - e16) as u32;
+        let res = man >> s;
+        let round = (man >> (s - 1)) & 1;
+        let sticky = u32::from(man & ((1 << (s - 1)) - 1) != 0);
+        // A carry out of the subnormal significand lands in exponent 1 —
+        // exactly the smallest normal, so plain addition is correct.
+        return sign | (res + (round & (sticky | (res & 1)))) as u16;
+    }
+    let v = ((e16 as u32) << 10) | ((abs >> 13) & 0x3FF);
+    let round = (abs >> 12) & 1;
+    let sticky = u32::from(abs & 0xFFF != 0);
+    // Mantissa carry propagates into the exponent; 65520 ties up to inf,
+    // which is the correct RNE result.
+    sign | (v + (round & (sticky | (v & 1)))) as u16
+}
+
+/// f16 -> f32 (exact: every f16 value is representable in f32).
+#[inline]
+pub fn f16_to_f32(x: u16) -> f32 {
+    let sign = ((x as u32) & 0x8000) << 16;
+    let exp = (x >> 10) & 0x1F;
+    let man = (x & 0x3FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // Subnormal: normalize into an f32 normal.
+        let mut e = 113u32;
+        let mut m = man;
+        while m & 0x0400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        return f32::from_bits(sign | (e << 23) | ((m & 0x3FF) << 13));
+    }
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13)); // inf / NaN
+    }
+    f32::from_bits(sign | ((exp as u32 + 112) << 23) | (man << 13))
+}
+
+/// Convert a slice, appending into `out`.
+pub fn f32_slice_to_f16(src: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.extend(src.iter().map(|&x| f32_to_f16(x)));
+}
+
+/// Convert an f16 word slice to f32s.
+pub fn f16_slice_to_f32(src: &[u16], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(src.iter().map(|&x| f16_to_f32(x)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, -3.0, 1024.0, 65504.0] {
+            let y = f16_to_f32(f32_to_f16(x));
+            assert_eq!(y.to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        // f16 has 10 significand bits -> relative error <= 2^-11 for normals.
+        let mut p = crate::util::prng::Prng::new(0);
+        for _ in 0..10_000 {
+            let x = (p.next_f64() as f32 - 0.5) * 100.0;
+            let y = f16_to_f32(f32_to_f16(x));
+            // the relative bound only holds for f16 normals (|x| >= 2^-14);
+            // a draw landing below that is in gradual-underflow territory
+            if x.abs() >= 6.2e-5 {
+                assert!(((y - x) / x).abs() <= 1.0 / 2048.0, "{x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(-f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        // Anything above the f16 max (65504) rounds to +/-inf.
+        assert_eq!(f16_to_f32(f32_to_f16(65520.0)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e30)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e30)), f32::NEG_INFINITY);
+        // ... but the max itself is exact.
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0);
+        // 65519.996... is below the halfway point and stays finite.
+        assert_eq!(f16_to_f32(f32_to_f16(65519.0)), 65504.0);
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        // Smallest positive f16 subnormal is 2^-24; all f16 subnormals are
+        // exact in f32, so decode(encode(x)) == x when x is one of them.
+        for k in 1u16..=0x3FF {
+            let x = f16_to_f32(k); // k is a subnormal bit pattern (exp = 0)
+            assert_eq!(f32_to_f16(x), k, "subnormal {k:#x}");
+            assert!(x > 0.0 && x < 6.11e-5, "{x}");
+        }
+        // Values below half the smallest subnormal flush to signed zero.
+        assert_eq!(f32_to_f16(1e-9), 0x0000);
+        assert_eq!(f32_to_f16(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between f16(1.0) and the next
+        // value; RNE keeps the even significand (1.0).
+        let x = f32::from_bits(0x3F80_1000);
+        let y = f32_to_f16(x);
+        assert_eq!(y, 0x3C00, "halfway case must round to even, got {y:#x}");
+        // 1.0 + 3*2^-11 is halfway between f16 codes 1 and 2 above 1.0;
+        // RNE picks 2 (even).
+        let x2 = f32::from_bits(0x3F80_3000);
+        assert_eq!(f32_to_f16(x2), 0x3C02);
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32 * 0.25).collect();
+        let mut h = Vec::new();
+        f32_slice_to_f16(&xs, &mut h);
+        let mut back = Vec::new();
+        f16_slice_to_f32(&h, &mut back);
+        for (a, c) in xs.iter().zip(&back) {
+            assert_eq!(a, c); // all representable exactly (small integers/0.25 steps)
+        }
+    }
+}

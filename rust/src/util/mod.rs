@@ -1,5 +1,5 @@
 //! Utility substrates built in-tree because the build is fully offline:
-//! a PRNG, summary statistics, bf16 conversion, a JSON parser (for the AOT
+//! a PRNG, summary statistics, bf16/f16 conversion, a JSON parser (for the AOT
 //! manifest), TSV report tables, a CLI argument parser, a micro-benchmark
 //! harness (the criterion stand-in driving `cargo bench`), and a property
 //! testing harness (the proptest stand-in).
@@ -7,6 +7,7 @@
 pub mod bench;
 pub mod bf16;
 pub mod cli;
+pub mod f16;
 pub mod json;
 pub mod prng;
 pub mod prop;

@@ -9,6 +9,7 @@
 use greedysnake::coordinator::TrainerConfig;
 use greedysnake::lp;
 use greedysnake::machine::MACHINE2_A100;
+use greedysnake::memory::Precision;
 use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::SystemParams;
 use greedysnake::runtime::test_artifacts;
@@ -751,4 +752,124 @@ fn cached_store_absorbs_all_ssd_traffic() {
         "per-category counters must attribute moment hits: {:?}",
         cached.cache_by_cat
     );
+}
+
+/// The precision legs the equivalence suite runs against the strict-f32
+/// baseline. CI's precision matrix narrows it via `GS_TEST_PRECISION`
+/// (comma-separated ∈ {f32, f16, bf16}) so each job pins one codec; "f32"
+/// re-asserts that the explicit strict policy is bit-identical to the
+/// default (no codec layer at all).
+fn test_precision_set() -> Vec<String> {
+    std::env::var("GS_TEST_PRECISION")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect::<Vec<String>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec!["f16".to_string(), "bf16".to_string()])
+}
+
+fn apply_precision(c: &mut TrainerConfig, prec: &str) {
+    c.precision = match prec {
+        "f32" => Precision::F32,
+        "f16" => Precision::MixedF16,
+        "bf16" => Precision::MixedBf16,
+        other => panic!("unknown GS_TEST_PRECISION leg '{other}' (f32|f16|bf16)"),
+    };
+}
+
+/// The mixed-precision acceptance property (tentpole): with moments AND
+/// checkpoints offloaded, every precision leg trains within tolerance of
+/// the strict-f32 baseline across schedules × io-depth {0, 2} × workers
+/// {1, 2}, and the half-precision checkpoint stream strictly REDUCES the
+/// measured SSD byte counters (moments stay f32 under the mixed policies,
+/// so the reduction is checkpoint-width only). The explicit `f32` leg is
+/// BIT-identical to the default config — the codec layer at strict f32 is
+/// the identity by construction.
+#[test]
+fn mixed_precision_tolerance_equivalence_to_f32() {
+    let kinds = [
+        ScheduleKind::Vertical,
+        ScheduleKind::ChunkedVertical(2),
+        ScheduleKind::Horizontal,
+    ];
+    for kind in kinds {
+        for depth in [0usize, 2] {
+            for w in [1usize, 2] {
+                let mk = |prec: &str| {
+                    let tag = format!("pr_{prec}_w{w}_d{depth}_{kind}").replace(':', "_");
+                    let mut c = cfg(&tag);
+                    c.io_depth = depth;
+                    c.workers = w;
+                    c.opt_on_ssd = true;
+                    c.ckpt_on_ssd = true;
+                    apply_precision(&mut c, prec);
+                    c
+                };
+                let mut base_cfg = mk("f32");
+                base_cfg.precision = Precision::F32; // the default — no codec
+                let Some(base) = run("pr_base", kind, base_cfg, 3, 4) else { return };
+                assert!(base.ssd_read > 0, "{kind:?}: offloaded run must touch the SSD");
+                for prec in test_precision_set() {
+                    let log = run("pr_leg", kind, mk(&prec), 3, 4).unwrap();
+                    if prec == "f32" {
+                        // strict f32 is bit-identical to the bare stack
+                        assert_eq!(
+                            base.losses, log.losses,
+                            "{kind:?} d{depth} W={w}: strict f32 losses diverged"
+                        );
+                        assert_eq!(
+                            base.param_sq_norm.to_bits(),
+                            log.param_sq_norm.to_bits(),
+                            "{kind:?} d{depth} W={w}: strict f32 parameters diverged"
+                        );
+                        assert_eq!(
+                            base.moment_sq_norm.to_bits(),
+                            log.moment_sq_norm.to_bits(),
+                            "{kind:?} d{depth} W={w}: strict f32 moments diverged"
+                        );
+                        assert_eq!(base.ssd_read, log.ssd_read);
+                        assert_eq!(base.ssd_written, log.ssd_written);
+                        continue;
+                    }
+                    // mixed legs: tolerance-pinned trajectory …
+                    for (i, (a, b)) in base.losses.iter().zip(&log.losses).enumerate() {
+                        assert!(
+                            (a - b).abs() < 0.1,
+                            "{kind:?} d{depth} W={w} {prec} step {i}: {a} vs {b}"
+                        );
+                    }
+                    // … and strictly fewer stored bytes (2 B checkpoints).
+                    assert!(
+                        log.ssd_read < base.ssd_read,
+                        "{kind:?} d{depth} W={w} {prec}: half-precision checkpoints \
+                         must shrink SSD reads ({} vs {})",
+                        log.ssd_read,
+                        base.ssd_read
+                    );
+                    assert!(
+                        log.ssd_written < base.ssd_written,
+                        "{kind:?} d{depth} W={w} {prec}: half-precision checkpoints \
+                         must shrink SSD writes ({} vs {})",
+                        log.ssd_written,
+                        base.ssd_written
+                    );
+                    // mixed runs are themselves deterministic (spot-check on
+                    // the cheapest cell to bound suite cost)
+                    if kind == ScheduleKind::Vertical && depth == 0 && w == 1 {
+                        let again = run("pr_det", kind, mk(&prec), 3, 4).unwrap();
+                        assert_eq!(log.losses, again.losses, "{prec}: nondeterministic");
+                        assert_eq!(
+                            log.param_sq_norm.to_bits(),
+                            again.param_sq_norm.to_bits(),
+                            "{prec}: nondeterministic parameters"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

@@ -624,3 +624,147 @@ fn prop_cache_residual_is_all_or_nothing() {
         Ok(())
     });
 }
+
+/// Codec length laws: `encoded_len(n) = n · bytes_per_elem` for every
+/// codec, `encode_into` produces exactly that many bytes, decode inverts
+/// the length, and a misaligned byte object is REJECTED (not truncated).
+#[test]
+fn prop_codec_length_laws() {
+    use greedysnake::memory::Codec;
+    check("codec-length-laws", 100, |rng| {
+        let n = gen::usize_in(rng, 0, 4096);
+        for codec in [Codec::F32, Codec::F16, Codec::BF16] {
+            let w = codec.bytes_per_elem() as usize;
+            if codec.encoded_len(n) != n * w {
+                return Err(format!("{}: encoded_len({n}) != {n}*{w}", codec.name()));
+            }
+            let src = gen::vec_f32(rng, n, 4.0);
+            let mut enc = Vec::new();
+            codec.encode_into(&src, &mut enc);
+            if enc.len() != n * w {
+                return Err(format!("{}: encoded {} bytes, want {}", codec.name(), enc.len(), n * w));
+            }
+            let mut dec = Vec::new();
+            codec.decode_into("k", &enc, &mut dec).map_err(|e| e.to_string())?;
+            if dec.len() != n {
+                return Err(format!("{}: decoded {} elems, want {n}", codec.name(), dec.len()));
+            }
+            // misaligned object: one stray byte must error, never truncate
+            enc.push(0xAB);
+            if codec.decode_into("k", &enc, &mut dec).is_ok() {
+                return Err(format!("{}: accepted a misaligned object", codec.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// decode ∘ encode ≡ requantize, bit for bit — the contract that makes the
+/// optimizer's delayed in-place gradient conversion equivalent to an SSD
+/// round trip through the codec.
+#[test]
+fn prop_codec_roundtrip_equals_requantize() {
+    use greedysnake::memory::Codec;
+    check("codec-roundtrip", 100, |rng| {
+        let n = gen::usize_in(rng, 1, 2048);
+        // mix magnitudes across the whole dynamic range, incl. overflow
+        // territory for f16 (|x| > 65504) and tiny values
+        let scale = 10f32.powi(gen::usize_in(rng, 0, 10) as i32 - 5);
+        let src = gen::vec_f32(rng, n, scale);
+        for codec in [Codec::F32, Codec::F16, Codec::BF16] {
+            let mut enc = Vec::new();
+            codec.encode_into(&src, &mut enc);
+            let mut dec = Vec::new();
+            codec.decode_into("k", &enc, &mut dec).map_err(|e| e.to_string())?;
+            let mut req = src.clone();
+            codec.requantize(&mut req);
+            for (i, (d, q)) in dec.iter().zip(&req).enumerate() {
+                if d.to_bits() != q.to_bits() {
+                    return Err(format!(
+                        "{} elem {i}: decode {d:e} ({:#010x}) != requantize {q:e} ({:#010x})",
+                        codec.name(),
+                        d.to_bits(),
+                        q.to_bits()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ULP error bounds on the half codecs: for in-range normal inputs the
+/// relative roundtrip error is ≤ 2⁻¹¹ (f16, 10 significand bits) and
+/// ≤ 2⁻⁸ (bf16, 7 explicit bits) — round-to-nearest-even half-ULP bounds.
+#[test]
+fn prop_codec_ulp_error_bounds() {
+    use greedysnake::memory::Codec;
+    check("codec-ulp-bounds", 200, |rng| {
+        let n = gen::usize_in(rng, 1, 512);
+        let scale = 10f32.powi(gen::usize_in(rng, 0, 8) as i32 - 4);
+        let src = gen::vec_f32(rng, n, scale);
+        for (codec, bound, lo, hi) in [
+            (Codec::F16, 2f64.powi(-11), 6.2e-5f32, 65504.0f32),
+            (Codec::BF16, 2f64.powi(-8), f32::MIN_POSITIVE, f32::MAX / 2.0),
+        ] {
+            let mut dec = src.clone();
+            codec.requantize(&mut dec);
+            for (i, (&x, &y)) in src.iter().zip(&dec).enumerate() {
+                if x.abs() < lo || x.abs() > hi {
+                    continue; // subnormal/overflow territory: no normal bound
+                }
+                let rel = ((y as f64 - x as f64) / x as f64).abs();
+                if rel > bound {
+                    return Err(format!(
+                        "{} elem {i}: x={x:e} -> {y:e}, rel err {rel:e} > {bound:e}",
+                        codec.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Specials survive the half codecs: NaN stays NaN, ±Inf stays ±Inf with
+/// its sign, ±0 keeps its sign bit, f16 saturates overflow to ±Inf, and
+/// f32 subnormals map to a same-signed value no larger than f32's smallest
+/// normal (gradual or total underflow — never a sign flip or a blow-up).
+#[test]
+fn prop_codec_specials_preserved() {
+    use greedysnake::memory::Codec;
+    check("codec-specials", 50, |rng| {
+        let sub = f32::from_bits(1 + rng.next_below(0x007F_FFFF) as u32); // subnormal
+        for codec in [Codec::F16, Codec::BF16] {
+            let name = codec.name();
+            let q = |x: f32| {
+                let mut v = [x];
+                codec.requantize(&mut v);
+                v[0]
+            };
+            if !q(f32::NAN).is_nan() {
+                return Err(format!("{name}: NaN lost"));
+            }
+            if q(f32::INFINITY) != f32::INFINITY || q(f32::NEG_INFINITY) != f32::NEG_INFINITY {
+                return Err(format!("{name}: Inf lost"));
+            }
+            if q(0.0).to_bits() != 0.0f32.to_bits() || q(-0.0).to_bits() != (-0.0f32).to_bits() {
+                return Err(format!("{name}: signed zero lost"));
+            }
+            for s in [sub, -sub] {
+                let y = q(s);
+                if y.abs() > f32::MIN_POSITIVE || (y != 0.0 && y.signum() != s.signum()) {
+                    return Err(format!("{name}: subnormal {s:e} -> {y:e}"));
+                }
+            }
+        }
+        // f16-only: overflow saturates to ±Inf (bf16 never overflows first)
+        let big = 70000.0f32 * (1.0 + rng.next_f32());
+        let mut v = [big, -big];
+        Codec::F16.requantize(&mut v);
+        if v[0] != f32::INFINITY || v[1] != f32::NEG_INFINITY {
+            return Err(format!("f16: {big:e} must saturate to ±Inf, got {v:?}"));
+        }
+        Ok(())
+    });
+}
