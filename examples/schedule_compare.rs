@@ -7,9 +7,11 @@
 //! prefetch hits), and finally the data-parallel `--workers` dimension:
 //! W ∈ {1, 2, 4} must be bit-identical end to end — the deterministic ring
 //! all-reduce's contract — while the all-reduce traffic scales as 2(W−1).
-//! A final `--precision` sweep pins the storage-codec contract: strict f32
+//! A `--precision` sweep pins the storage-codec contract: strict f32
 //! is the baseline, the mixed codecs halve checkpoint + parameter bytes
-//! exactly while training within tolerance, deterministically.
+//! exactly while training within tolerance, deterministically. A final
+//! planned-store run (DRAM + 2×NVMe + remote transfer plans) pins the
+//! multi-path planner's bit-identity and counter-equality contract.
 //!
 //!     cargo run --release --example schedule_compare
 
@@ -36,6 +38,7 @@ fn main() -> anyhow::Result<()> {
     let kinds = [
         ("vertical", ScheduleKind::Vertical, 0.25),
         ("chunked:2", ScheduleKind::ChunkedVertical(2), 0.25),
+        ("cachesweep:2", ScheduleKind::CacheSweep(2), 0.25),
         ("horizontal", ScheduleKind::Horizontal, 0.0),
     ];
     let mut logs: Vec<(&str, RunLog)> = Vec::new();
@@ -46,7 +49,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(
         "schedule comparison — real stack, shared StepEngine",
-        &["metric", "vertical", "chunked:2", "horizontal"],
+        &["metric", "vertical", "chunked:2", "cachesweep:2", "horizontal"],
     );
     let row = |name: &str, f: &dyn Fn(&RunLog) -> String| -> Vec<String> {
         let mut cells = vec![name.to_string()];
@@ -74,10 +77,14 @@ fn main() -> anyhow::Result<()> {
     println!("max per-step loss deviation vs vertical: {max_dev:.5}");
     assert!(max_dev < 0.05, "schedules must train equivalently");
 
-    // §3.3/§3.4: parameter traffic orders vertical < chunked < horizontal.
-    let (v, c, h) = (logs[0].1.param_bytes, logs[1].1.param_bytes, logs[2].1.param_bytes);
+    // §3.3/§3.4: parameter traffic orders vertical < chunked < horizontal,
+    // and cachesweep:2 moves EXACTLY chunked:2's bytes (it only reorders
+    // the backward chunk visits for DRAM-tier reuse).
+    let (v, c, h) = (logs[0].1.param_bytes, logs[1].1.param_bytes, logs[3].1.param_bytes);
     println!("param bytes: vertical {v} < chunked:2 {c} < horizontal {h}");
     assert!(v < c && c < h, "schedule traffic ordering violated");
+    assert_eq!(logs[2].1.param_bytes, c, "cachesweep must match chunked param traffic");
+    assert_eq!(logs[2].1.ssd_read, logs[1].1.ssd_read, "cachesweep must match chunked reads");
 
     // --- async pipeline sweep: --io-depth ∈ {0, 1, 4} on vertical ---------
     // K = 0 is the synchronous engine; every depth must produce identical
@@ -312,6 +319,40 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(first.losses, repeat.losses, "mixed:f16 must be self-deterministic");
     assert_eq!(first.param_sq_norm.to_bits(), repeat.param_sq_norm.to_bits());
     assert_eq!(first.moment_sq_norm.to_bits(), repeat.moment_sq_norm.to_bits());
+
+    // --- planned multi-path store: DRAM + 2×NVMe + remote ----------------
+    // The planner's equivalence contract: a transfer plan only changes
+    // WHICH path carries each extent, never the bytes — so the planned run
+    // is bit-identical to the single-SSD baseline and its whole-object
+    // trait counters match byte-for-byte.
+    let mut c = cfg("planned", 0.25);
+    c.planned = true;
+    c.ssds = 2;
+    c.cpu_cache_mb = 16;
+    c.remote_mbps = 200.0;
+    let planned =
+        train(Manifest::load("artifacts/tiny")?, c, ScheduleKind::Vertical, steps, m, 0)?;
+    let base = &b_logs[0].1;
+    assert_eq!(base.losses, planned.losses, "planned store changed the losses");
+    assert_eq!(base.grad_norms, planned.grad_norms, "planned store changed grad norms");
+    assert_eq!(
+        base.param_sq_norm.to_bits(),
+        planned.param_sq_norm.to_bits(),
+        "planned store changed the parameters"
+    );
+    assert_eq!(
+        base.moment_sq_norm.to_bits(),
+        planned.moment_sq_norm.to_bits(),
+        "planned store changed the optimizer moments"
+    );
+    assert_eq!(base.ssd_read, planned.ssd_read, "planned counters must match the baseline");
+    assert_eq!(base.ssd_written, planned.ssd_written);
+    println!(
+        "planned store (dram+2xnvme+remote): final loss {:.4}, ssd r/w {}/{} — bit-identical",
+        planned.final_loss(),
+        greedysnake::util::stats::fmt_bytes(planned.ssd_read as f64),
+        greedysnake::util::stats::fmt_bytes(planned.ssd_written as f64),
+    );
 
     println!("schedule_compare OK");
     Ok(())

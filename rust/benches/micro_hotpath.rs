@@ -1,10 +1,11 @@
 //! Micro-benchmarks of the Layer-3 hot paths (the §Perf targets): fused
 //! Rust Adam, the AOT Pallas Adam kernel, PJRT stage dispatch, the
-//! SSD tier, the lane executor, and the LP solve. Drives the EXPERIMENTS.md
-//! §Perf before/after log.
+//! SSD tier, the multi-path transfer planner (plan construction +
+//! extent-split dispatch), the lane executor, and the LP solve. Drives the
+//! EXPERIMENTS.md §Perf before/after log.
 
 use greedysnake::machine::MACHINE2_A100;
-use greedysnake::memory::SsdStorage;
+use greedysnake::memory::{plan_shares, PlannedConfig, PlannedStore, SsdStorage};
 use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
 use greedysnake::optimizer::{adam_step_hlo, adam_step_rust, AdamParams, AdamState};
 use greedysnake::perfmodel::SystemParams;
@@ -15,6 +16,39 @@ use greedysnake::util::bench::{black_box, Bench};
 use greedysnake::util::prng::Prng;
 
 fn main() -> anyhow::Result<()> {
+    // --- multi-path transfer planner (no artifacts needed) ------------------
+    // plan construction alone (the per-object share split), then the full
+    // split→parallel-dispatch→reassemble round trip on an unthrottled
+    // 4-path store vs the flat single-device baseline — the delta IS the
+    // planner's extent-split + thread-fanout overhead.
+    let mut b0 = Bench::new("planner").warmup(2).iters(10);
+    let weights = [8000u64, 3200, 3200, 200]; // DRAM + 2 NVMe + remote
+    b0.run("plan_shares_4path_8MB", || black_box(plan_shares(8 << 20, &weights)));
+    let planned = PlannedStore::create(
+        std::env::temp_dir().join(format!("gs_bench_plan_{}", std::process::id())),
+        &PlannedConfig {
+            nvme: vec![(f64::INFINITY, f64::INFINITY); 2],
+            dram_capacity: 64 << 20,
+            dram_bps: f64::INFINITY,
+            remote_bps: f64::INFINITY,
+        },
+    )?;
+    let flat = SsdStorage::create_unthrottled(
+        std::env::temp_dir().join(format!("gs_bench_flat_{}", std::process::id())),
+    )?;
+    let blob: Vec<u8> = vec![7u8; 4 << 20];
+    let mut raw = Vec::new();
+    b0.run("planned_put_get_4MB", || {
+        planned.put("pk", &blob).unwrap();
+        planned.get("pk", &mut raw).unwrap();
+        black_box(raw.len())
+    });
+    b0.run("flat_put_get_4MB", || {
+        flat.put("pk", &blob).unwrap();
+        flat.get("pk", &mut raw).unwrap();
+        black_box(raw.len())
+    });
+
     let manifest = Manifest::load("artifacts/tiny")?;
     let rt = Runtime::load(&manifest)?;
     let mut rng = Prng::new(0);

@@ -209,6 +209,59 @@ impl Schedule for ChunkedVerticalSchedule {
     }
 }
 
+/// MLP-Offload's cache-friendly subgroup ordering (`cachesweep:G`): the
+/// forward pass sweeps micro-batch chunks exactly like
+/// [`ChunkedVerticalSchedule`], but the backward pass visits the chunks in
+/// REVERSE order — and the micro-batches within each chunk last-in
+/// first-out — so the chunk whose checkpoints were written most recently,
+/// the one still resident in the DRAM tier ([`CachedStore`] LRU /
+/// [`PlannedStore`] DRAM path), is consumed before anything evicts it.
+/// Parameter traffic is identical to `chunked:G` (the `traffic` closed
+/// forms are shared); only the visit order — and therefore the DRAM hit
+/// rate — differs.
+///
+/// [`CachedStore`]: crate::memory::store::CachedStore
+/// [`PlannedStore`]: crate::memory::store::PlannedStore
+#[derive(Clone, Copy, Debug)]
+pub struct CacheSweepSchedule {
+    /// Micro-batches per vertical chunk (≥ 1).
+    pub group: usize,
+}
+
+impl CacheSweepSchedule {
+    pub fn new(group: usize) -> Self {
+        CacheSweepSchedule { group: group.max(1) }
+    }
+
+    fn chunks(&self, m: usize) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        let g = self.group.max(1);
+        (0..m.div_ceil(g)).map(move |c| (c * g)..((c + 1) * g).min(m))
+    }
+}
+
+impl Schedule for CacheSweepSchedule {
+    fn name(&self) -> String {
+        format!("cachesweep:{}", self.group)
+    }
+
+    fn forward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        ChunkedVerticalSchedule::new(self.group).forward_order(n_layers, m)
+    }
+
+    fn backward_order(&self, n_layers: usize, m: usize) -> Vec<(usize, usize)> {
+        let mut order = Vec::with_capacity(n_layers * m);
+        let chunks: Vec<_> = self.chunks(m).collect();
+        for chunk in chunks.into_iter().rev() {
+            for l in (0..n_layers).rev() {
+                for j in chunk.clone().rev() {
+                    order.push((l, j));
+                }
+            }
+        }
+        order
+    }
+}
+
 /// Validate a visit order: a permutation of the grid whose per-micro-batch
 /// layer sequence is strictly ascending (forward) or descending (backward).
 pub fn validate_order(
@@ -289,6 +342,7 @@ mod tests {
                 all_valid(&HorizontalSchedule, nl, m);
                 for g in [1, 2, 3, 64] {
                     all_valid(&ChunkedVerticalSchedule::new(g), nl, m);
+                    all_valid(&CacheSweepSchedule::new(g), nl, m);
                 }
             }
         }
@@ -330,6 +384,53 @@ mod tests {
         assert_eq!(c4, nl * 2);
         assert_eq!(c2, nl * 4);
         assert!(v < c4 && c4 < c2 && c2 < h);
+    }
+
+    /// Replay forward checkpoint writes + backward reads through a tiny
+    /// LRU: cachesweep's reversed backward chunk order re-reads the
+    /// freshest chunk straight out of the cache and must strictly beat
+    /// chunked's ascending revisit on misses.
+    #[test]
+    fn cachesweep_backward_maximizes_dram_reuse() {
+        fn lru_misses(fwd: &[(usize, usize)], bwd: &[(usize, usize)], cap: usize) -> usize {
+            // Vec as LRU: back = most recently used
+            fn touch(cache: &mut Vec<(usize, usize)>, cell: (usize, usize), cap: usize) -> bool {
+                if let Some(pos) = cache.iter().position(|&c| c == cell) {
+                    cache.remove(pos);
+                    cache.push(cell);
+                    true
+                } else {
+                    if cache.len() == cap {
+                        cache.remove(0);
+                    }
+                    cache.push(cell);
+                    false
+                }
+            }
+            let mut cache = Vec::new();
+            for &cell in fwd {
+                touch(&mut cache, cell, cap);
+            }
+            bwd.iter().filter(|&&cell| !touch(&mut cache, cell, cap)).count()
+        }
+        let (nl, m, g, cap) = (4, 8, 2, 8);
+        let sweep = CacheSweepSchedule::new(g);
+        let chunk = ChunkedVerticalSchedule::new(g);
+        let sweep_misses =
+            lru_misses(&sweep.forward_order(nl, m), &sweep.backward_order(nl, m), cap);
+        let chunk_misses =
+            lru_misses(&chunk.forward_order(nl, m), &chunk.backward_order(nl, m), cap);
+        assert_eq!(sweep_misses, 24, "the freshest chunk is served from DRAM");
+        assert_eq!(chunk_misses, 32, "the ascending revisit misses every cell");
+        // identical parameter traffic — only the visit order differs
+        assert_eq!(
+            param_loads(&sweep.forward_order(nl, m)),
+            param_loads(&chunk.forward_order(nl, m))
+        );
+        assert_eq!(
+            param_loads(&sweep.backward_order(nl, m)),
+            param_loads(&chunk.backward_order(nl, m))
+        );
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::memory::codec::{CodecStore, Precision};
-use crate::memory::store::{CachedStore, StripedStore, TensorStore};
+use crate::memory::store::{CachedStore, PlannedConfig, PlannedStore, StripedStore, TensorStore};
 use crate::memory::SsdStorage;
 use crate::optimizer::{AdamParams, AdamState};
 use crate::runtime::manifest::Manifest;
@@ -77,6 +77,18 @@ pub struct TrainerConfig {
     /// ([`crate::memory::Tier`]-accounted) runs out. Bit-identical to the
     /// uncached path.
     pub cpu_cache_mb: usize,
+    /// Use the multi-path [`PlannedStore`] planner (`--planned`) instead of
+    /// the static cache-then-stripe nesting: every object gets a transfer
+    /// plan splitting its bytes into extents served concurrently from the
+    /// DRAM tier (`cpu_cache_mb` capacity), each of the `ssds` NVMe devices
+    /// (per-device throttles at `ssd_read_bps`/`ssd_write_bps`), and the
+    /// optional remote path (`remote_mbps`). Bit-identical to every other
+    /// backend at strict f32 (the plan-equivalence contract in
+    /// `memory::store`).
+    pub planned: bool,
+    /// Simulated remote/object-store path bandwidth in MB/s for the
+    /// planned store (`--remote-mbps`; 0 = no remote path).
+    pub remote_mbps: f64,
     /// Storage precision (`--precision {f32,mixed:f16,mixed:bf16}`).
     /// `f32` (default) keeps every stored object raw f32 — the bit-identity
     /// baseline. The mixed policies interpose a
@@ -111,6 +123,8 @@ impl Default for TrainerConfig {
             ssd_write_bps: f64::INFINITY,
             ssds: 1,
             cpu_cache_mb: 0,
+            planned: false,
+            remote_mbps: 0.0,
             precision: Precision::F32,
             seed: 42,
         }
@@ -159,8 +173,9 @@ pub struct ModelState {
     pub layer_opt: Vec<Arc<Mutex<Vec<AdamState>>>>,
     pub embed_opt: Arc<Mutex<Vec<AdamState>>>,
     /// The pluggable storage tier holding offloaded optimizer state and
-    /// spilled checkpoints — single SSD, striped multi-SSD, or DRAM-cached
-    /// per [`TrainerConfig::ssds`] / [`TrainerConfig::cpu_cache_mb`],
+    /// spilled checkpoints — single SSD, striped multi-SSD, DRAM-cached,
+    /// or the multi-path planner per [`TrainerConfig::ssds`] /
+    /// [`TrainerConfig::cpu_cache_mb`] / [`TrainerConfig::planned`],
     /// optionally under a mixed-precision codec layer per
     /// [`TrainerConfig::precision`]. At `--precision f32` every backend is
     /// bit-identical (see `memory::store`); the mixed policies store
@@ -171,12 +186,30 @@ pub struct ModelState {
 }
 
 /// Build the configured [`TensorStore`] backend stack for `cfg`:
-/// `CodecStore?` → `CachedStore?` → `StripedStore | SsdStorage`. The codec
-/// sits on TOP so every layer below it — including the cache's `Tier`
-/// capacity accounting and the SSD byte counters — sees encoded bytes; at
-/// strict f32 the wrapper is omitted entirely (bit-identity by
-/// construction).
+/// `CodecStore?` → `CachedStore?` → `StripedStore | SsdStorage`, or with
+/// `cfg.planned` the flat multi-path stack `CodecStore?` → `PlannedStore`
+/// (DRAM + N NVMe + remote as concurrent paths — the planner replaces the
+/// cache-then-stripe nesting, so `cpu_cache_mb` becomes the DRAM *path*
+/// capacity and `remote_mbps` enables the remote path). The codec sits on
+/// TOP so every layer below it — including the cache's `Tier` capacity
+/// accounting and the SSD byte counters — sees encoded bytes; at strict
+/// f32 the wrapper is omitted entirely (bit-identity by construction).
 fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
+    if cfg.planned {
+        let pc = PlannedConfig {
+            nvme: vec![(cfg.ssd_read_bps, cfg.ssd_write_bps); cfg.ssds.max(1)],
+            dram_capacity: (cfg.cpu_cache_mb as u64) << 20,
+            dram_bps: 0.0, // PlannedStore::DRAM_BPS
+            remote_bps: cfg.remote_mbps * 1e6,
+        };
+        let base: Arc<dyn TensorStore> = Arc::new(PlannedStore::create(&cfg.ssd_path, &pc)?);
+        let policy = cfg.precision.policy();
+        return Ok(if policy.is_strict_f32() {
+            base
+        } else {
+            Arc::new(CodecStore::new(base, policy))
+        });
+    }
     let base: Arc<dyn TensorStore> = if cfg.ssds > 1 {
         Arc::new(StripedStore::create(
             &cfg.ssd_path,
@@ -373,6 +406,13 @@ mod tests {
                 ssds: 3,
                 cpu_cache_mb: 4,
                 ..TrainerConfig::for_test("store_both")
+            },
+            TrainerConfig {
+                planned: true,
+                ssds: 2,
+                cpu_cache_mb: 4,
+                remote_mbps: 100.0,
+                ..TrainerConfig::for_test("store_planned")
             },
         ];
         for cfg in configs {

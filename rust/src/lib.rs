@@ -8,7 +8,7 @@
 //!   AOT-lowered to HLO-text artifacts by `python/compile/aot.py`.
 //! * **Layer 3 (this crate)** — the paper's system contribution: the
 //!   schedule-agnostic step engine with pluggable traversal schedules
-//!   (vertical / horizontal / chunked-vertical), the three offload
+//!   (vertical / horizontal / chunked-vertical / cache-sweep), the three offload
 //!   coordinators, the delayed optimizer step (delay ratio α), and the
 //!   LP-based configuration search, all driving the AOT artifacts through
 //!   the PJRT C API.
@@ -21,17 +21,17 @@
 //! |---|---|
 //! | [`util`] | PRNG, stats, f16/bf16 conversion, TSV tables, CLI parsing, bench + property-test harnesses |
 //! | [`exec`] | thread pool and dependency-aware lane executor (the asyncio-pipeline substrate; lane panics surface as errors, not deadlocks) |
-//! | [`memory`] | GPU/CPU tier accounting, file-backed throttled SSD (positioned I/O, concurrent read/write lanes, atomic layout transitions, shrinking high-water mark), the pluggable [`memory::store::TensorStore`] object tier (single SSD / striped multi-SSD `--ssds N` / DRAM-cached `--cpu-cache-mb`) under the mixed-precision codec layer ([`memory::codec::CodecStore`]: per-category `--precision` policies, f16/bf16 wire formats; two-tier equivalence contract — backends are byte-identical under any fixed codec, strict f32 is bit-identical to the bare stack, mixed policies are tolerance-pinned), pinned-buffer pool |
+//! | [`memory`] | GPU/CPU tier accounting, file-backed throttled SSD (positioned I/O, concurrent read/write lanes, atomic layout transitions, shrinking high-water mark), the pluggable [`memory::store::TensorStore`] object tier (single SSD / striped multi-SSD `--ssds N` / DRAM-cached `--cpu-cache-mb` / the multi-path [`memory::store::PlannedStore`] planner `--planned`: every object splits into per-path extents served concurrently from the DRAM tier + each NVMe device + the simulated `--remote-mbps` tier, bandwidth-proportional shares, per-path depth gates, [`memory::store::PathStats`] byte attribution) under the mixed-precision codec layer ([`memory::codec::CodecStore`]: per-category `--precision` policies, f16/bf16 wire formats; two-tier equivalence contract — backends are byte-identical under any fixed codec, strict f32 is bit-identical to the bare stack, mixed policies are tolerance-pinned), pinned-buffer pool |
 //! | [`modelcfg`] | Table 2 model zoo and per-layer size/FLOP arithmetic |
 //! | [`machine`] | Table 1 machine specs (bandwidths, capacities, compute rates) |
-//! | [`traffic`] | analytic data-movement model: horizontal vs vertical vs single-pass, per-worker data-parallel forms (`*_dp`), the sharded-optimizer closed forms (reduce-scatter / all-gather ring bytes, per-rank ~1/W optimizer SSD round trips), the DRAM-cache absorption forms (fit-or-nothing working-set law + runtime store byte mirrors), and the encoded-byte `*_enc` family (per-[`memory::codec::PrecisionPolicy`] store bytes matching the runtime counters exactly) |
+//! | [`traffic`] | analytic data-movement model: horizontal vs vertical vs single-pass, per-worker data-parallel forms (`*_dp`), the sharded-optimizer closed forms (reduce-scatter / all-gather ring bytes, per-rank ~1/W optimizer SSD round trips), the DRAM-cache absorption forms (fit-or-nothing working-set law + runtime store byte mirrors), the encoded-byte `*_enc` family (per-[`memory::codec::PrecisionPolicy`] store bytes matching the runtime counters exactly), and the multi-path `planned_*` forms (per-path byte splits under the planner's weights, conserving the aggregate exactly) |
 //! | [`roofline`] | the §3.1 I/O + compute roofline |
-//! | [`lp`] | dense simplex solver + Algorithm 1 configuration search |
+//! | [`lp`] | dense simplex solver + Algorithm 1 configuration search, incl. the cache-aware solve ([`lp::solve_config_cached`] + [`lp::ssd_working_set`]: DRAM-cache fit-or-nothing absorption folded into the placement objective) |
 //! | [`perfmodel`] | per-layer time prediction and iteration-time composition |
-//! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake / chunked), incl. the multi-worker shared-SSD builder ([`sim::simulate_dist`]: first-class inter-GPU link resource for the ring legs, delayed-α modeling, rank-0 or ZeRO-style sharded optimizer) and the storage-tier mirror ([`sim::simulate_store`]: `--ssds` striping bandwidth, DRAM-cache absorption; [`sim::simulate_store_prec`]: per-category `--precision` byte multipliers) |
+//! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake / chunked), incl. the multi-worker shared-SSD builder ([`sim::simulate_dist`]: first-class inter-GPU link resource for the ring legs, delayed-α modeling, rank-0 or ZeRO-style sharded optimizer) and the storage-tier mirror ([`sim::simulate_store`]: `--ssds` striping bandwidth, DRAM-cache absorption; [`sim::simulate_store_prec`]: per-category `--precision` byte multipliers; [`sim::simulate_planned`] + [`sim::planned_bandwidth`]: the multi-path planner's aggregate-bandwidth law) |
 //! | [`runtime`] | PJRT client wrapper, artifact manifests, executable cache |
 //! | [`optimizer`] | mixed-precision Adam, gradient accumulation, delay-α split, clipping |
-//! | [`coordinator`] | the three coordinators + the schedule-agnostic [`coordinator::StepEngine`], pluggable [`coordinator::Schedule`] policies (vertical, horizontal, `chunked:G`), the async [`coordinator::io::IoPipeline`] (`--io-depth K` lookahead prefetch + write-behind; K=0 ≡ synchronous), and the data-parallel [`coordinator::dist::DataParallelEngine`] (`--workers W`, deterministic chunked ring all-reduce — or, with `--shard-optimizer`, ZeRO-style reduce-scatter + per-rank shard updates + parameter all-gather; every W bit-identical to W=1 either way) |
+//! | [`coordinator`] | the three coordinators + the schedule-agnostic [`coordinator::StepEngine`], pluggable [`coordinator::Schedule`] policies (vertical, horizontal, `chunked:G`, the cache-friendly `cachesweep:G` subgroup sweep), the async [`coordinator::io::IoPipeline`] (`--io-depth K` lookahead prefetch + write-behind; K=0 ≡ synchronous), and the data-parallel [`coordinator::dist::DataParallelEngine`] (`--workers W`, deterministic chunked ring all-reduce — or, with `--shard-optimizer`, ZeRO-style reduce-scatter + per-rank shard updates + parameter all-gather; every W bit-identical to W=1 either way) |
 //! | [`trainer`] | end-to-end training loop; [`trainer::ScheduleKind`] names schedules uniformly across runtime, simulator, and traffic model |
 
 pub mod coordinator;

@@ -7,6 +7,12 @@
 //! constraint. `find_optimal_config(ℳ)` wraps it in the paper's outer loop:
 //! increase the micro-batch count n (argmax over the delay-ratio grid
 //! A = {0.01 … 0.50} at each n) until throughput stops improving by ≥ 1 %.
+//!
+//! `solve_config_cached` is the cache-*aware* variant: when a DRAM cache
+//! (`--cpu-cache-mb`) or the planned store's DRAM path covers the
+//! placement-implied SSD working set, the SSD channels stop bounding the
+//! per-layer times and the placement re-optimizes under the fit-or-nothing
+//! absorption law (closing PR 5's stale-ratio note).
 
 use crate::perfmodel::{StorageRatios, SystemParams};
 
@@ -116,6 +122,131 @@ pub fn solve_config(sp: &SystemParams, m: u64, alpha: f64) -> Option<ConfigResul
             let t_iter = n_layers * (t_f + t_b) + 1.5 * (t_f + t_b);
             let tokens =
                 (sp.node.n_gpus * m * sp.micro_batch * sp.seq_len) as f64;
+            Some(ConfigResult {
+                m,
+                alpha,
+                ratios,
+                t_f,
+                t_b,
+                t_iter,
+                tokens_per_s: tokens / t_iter,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Placement-implied SSD working set, bytes: what the store tier holds
+/// under ratios `x` — the quantity a DRAM cache must cover to absorb the
+/// steady-state SSD traffic (the runtime twin is
+/// `traffic::Workload::ssd_working_set_bytes`).
+pub fn ssd_working_set(sp: &SystemParams, m: u64, x: StorageRatios) -> f64 {
+    let n = sp.model.n_layers as f64;
+    let mf = m as f64;
+    n * ((1.0 - x.param_cpu) * sp.p_lp()
+        + (1.0 - x.opt_cpu) * sp.o_bytes()
+        + (1.0 - x.ckpt_cpu) * mf * sp.c_bytes())
+}
+
+/// Cache-aware variant of [`solve_config`] — the PR 5 stale-ratio fix.
+///
+/// [`solve_config`] prices SSD channel time as if every SSD-placed byte
+/// paid the SSD rate, even when a DRAM cache (`--cpu-cache-mb`, or the
+/// planned store's DRAM path) absorbs the whole working set. This solve
+/// applies the fit-or-nothing absorption law as a two-pass fixed point:
+///
+/// 1. solve uncached and measure the placement-implied working set;
+/// 2. if `cache_bytes` covers it, re-solve with the SSD channel rows
+///    removed (per-layer times fall to the compute/PCIe/CPU floors, the
+///    traffic regularizer alone steers x toward maximal absorbed
+///    placement) and keep that solution only if its shifted working set
+///    still fits the cache.
+///
+/// With `cache_bytes == 0` this IS [`solve_config`] exactly.
+pub fn solve_config_cached(
+    sp: &SystemParams,
+    m: u64,
+    alpha: f64,
+    cache_bytes: u64,
+) -> Option<ConfigResult> {
+    let uncached = solve_config(sp, m, alpha)?;
+    if cache_bytes == 0 {
+        return Some(uncached);
+    }
+    let cache = cache_bytes as f64;
+    if ssd_working_set(sp, m, uncached.ratios) > cache {
+        return Some(uncached); // absorption is fit-or-nothing
+    }
+    let absorbed = solve_config_absorbed(sp, m, alpha)?;
+    if ssd_working_set(sp, m, absorbed.ratios) <= cache {
+        Some(absorbed)
+    } else {
+        Some(uncached)
+    }
+}
+
+/// The inner LP with the SSD channel rows removed: per-layer times are
+/// bounded only by the compute/PCIe/CPU floors, and the (ε-weighted) SSD
+/// traffic regularizer is the only pressure on x — the solve maximizes
+/// the absorbed placement within the memory budget.
+fn solve_config_absorbed(sp: &SystemParams, m: u64, alpha: f64) -> Option<ConfigResult> {
+    let mf = m as f64;
+    let n_layers = sp.model.n_layers as f64;
+    let (p, g, o, c) = (sp.p_lp(), sp.g_fp(), sp.o_bytes(), sp.c_bytes());
+    let (r, w) = (ssd_r(sp), ssd_w(sp));
+
+    let compute_f = mf * sp.t_fwd_mb();
+    let pcie_f = (p + (mf - 1.0) * c).max(mf * c) / pcie(sp);
+    let cpu_f = alpha * sp.t_adam_layer();
+    let cf = compute_f.max(pcie_f).max(cpu_f);
+
+    let compute_b = mf * sp.t_bwd_mb();
+    let pcie_b = (p + (2.0 * mf - 1.0) * c).max((mf - 1.0) * c + g) / pcie(sp);
+    let cpu_b = (1.0 - alpha) * sp.t_adam_layer();
+    let cb = compute_b.max(pcie_b).max(cpu_b);
+
+    // same regularizer coefficients as solve_config (traffic seconds per
+    // unit of x) — with the channel rows gone they are the whole objective
+    // on x
+    let rp_f = -p / r;
+    let ro_f = -alpha * o / r;
+    let wc_f = -mf * c / w;
+    let wp_f = -alpha * p / w;
+    let wo_f = -alpha * o / w;
+    let rc_b = -mf * c / r;
+    let rp_b = -p / r;
+    let ro_b = -(1.0 - alpha) * o / r;
+    let wp_b = -(1.0 - alpha) * p / w;
+    let wo_b = -(1.0 - alpha) * o / w;
+    let ac_reg = wc_f + rc_b;
+    let ap_reg = rp_f + wp_f + rp_b + wp_b;
+    let ao_reg = ro_f + wo_f + ro_b + wo_b;
+
+    let dram_avail = sp.dram_share() * 0.96 - 3.0 * g - 6.0 * p - 4.0 * mf * c;
+    if dram_avail < 0.0 {
+        return None;
+    }
+
+    let mut lp = LinProg::new(5);
+    lp.maximize(&[-SSD_REG * ac_reg, -SSD_REG * ap_reg, -SSD_REG * ao_reg, -1.0, -1.0]);
+    lp.leq(&[1.0, 0.0, 0.0, 0.0, 0.0], 1.0);
+    lp.leq(&[0.0, 1.0, 0.0, 0.0, 0.0], 1.0);
+    lp.leq(&[0.0, 0.0, 1.0, 0.0, 0.0], 1.0);
+    lp.geq(&[0.0, 0.0, 0.0, 1.0, 0.0], cf);
+    lp.geq(&[0.0, 0.0, 0.0, 0.0, 1.0], cb);
+    lp.leq(&[n_layers * mf * c, n_layers * p, n_layers * o, 0.0, 0.0], dram_avail);
+    lp.geq(&[mf * c, p, 0.0, 0.0, 0.0], alpha * g);
+
+    match lp.solve() {
+        LpOutcome::Optimal(x, _) => {
+            let ratios = StorageRatios {
+                ckpt_cpu: x[0].clamp(0.0, 1.0),
+                param_cpu: x[1].clamp(0.0, 1.0),
+                opt_cpu: x[2].clamp(0.0, 1.0),
+            };
+            let (t_f, t_b) = (x[3], x[4]);
+            let t_iter = n_layers * (t_f + t_b) + 1.5 * (t_f + t_b);
+            let tokens = (sp.node.n_gpus * m * sp.micro_batch * sp.seq_len) as f64;
             Some(ConfigResult {
                 m,
                 alpha,
@@ -241,6 +372,42 @@ mod tests {
         let res = solve_config(&sp, 4, 0.2).expect("175B/1GPU must be feasible");
         // capacity forces most optimizer state onto SSD
         assert!(res.ratios.opt_cpu < 0.6, "{:?}", res.ratios);
+    }
+
+    #[test]
+    fn cache_aware_solve_is_identity_at_zero_cache() {
+        let sp = sp();
+        let a = solve_config(&sp, 8, 0.25).expect("feasible");
+        let b = solve_config_cached(&sp, 8, 0.25, 0).expect("feasible");
+        assert_eq!(a.t_iter.to_bits(), b.t_iter.to_bits());
+        assert_eq!(a.ratios.ckpt_cpu.to_bits(), b.ratios.ckpt_cpu.to_bits());
+        assert_eq!(a.ratios.param_cpu.to_bits(), b.ratios.param_cpu.to_bits());
+        assert_eq!(a.ratios.opt_cpu.to_bits(), b.ratios.opt_cpu.to_bits());
+    }
+
+    /// PR 5 regression: the uncached LP prices SSD channel time even when
+    /// the DRAM cache absorbs the whole working set. A covering cache must
+    /// shift the solution; a non-covering one must change nothing
+    /// (fit-or-nothing).
+    #[test]
+    fn cache_aware_lp_shifts_when_cache_covers_working_set() {
+        let sp = sp();
+        let un = solve_config(&sp, 4, 0.25).expect("feasible");
+        let ws = ssd_working_set(&sp, 4, un.ratios);
+        assert!(ws > 0.0, "uncached placement must leave something on SSD");
+        // below the working set: identical to the uncached solve
+        let small = solve_config_cached(&sp, 4, 0.25, (ws * 0.5) as u64).unwrap();
+        assert_eq!(small.t_iter.to_bits(), un.t_iter.to_bits());
+        assert_eq!(small.ratios.opt_cpu.to_bits(), un.ratios.opt_cpu.to_bits());
+        // covering the working set: the SSD bound vanishes, iteration time
+        // falls to the compute/PCIe floor and the placement stays absorbable
+        let cache = (ws * 4.0) as u64;
+        let big = solve_config_cached(&sp, 4, 0.25, cache).unwrap();
+        assert!(big.t_iter < un.t_iter, "{} !< {}", big.t_iter, un.t_iter);
+        assert!(
+            ssd_working_set(&sp, 4, big.ratios) <= cache as f64,
+            "shifted placement must stay absorbable"
+        );
     }
 
     #[test]

@@ -70,14 +70,18 @@ fn main() -> Result<()> {
 fn cmd_train(args: Vec<String>) -> Result<()> {
     // --schedule grammar (shared with `simulate --system` and the analytic
     // models): `vertical` (GreedySnake §3.4, alias `greedysnake`),
-    // `horizontal` (ZeRO-Infinity §3.3, alias `zero-infinity`), or
+    // `horizontal` (ZeRO-Infinity §3.3, alias `zero-infinity`),
     // `chunked:G` — vertical sweeps over chunks of G micro-batches
-    // (G=1 ≡ horizontal parameter reloads, G≥M ≡ fully vertical).
+    // (G=1 ≡ horizontal parameter reloads, G≥M ≡ fully vertical) — or
+    // `cachesweep:G`, chunked:G with the backward chunk order reversed
+    // (MLP-Offload's cache-friendly subgroup ordering: same bytes, better
+    // DRAM-tier reuse).
     let cli = Cli::new("greedysnake train", "train through the AOT artifacts")
         .opt("artifacts", "artifact directory", Some("artifacts/tiny"))
         .opt(
             "schedule",
-            "vertical|horizontal|chunked:G (G = micro-batches per vertical chunk)",
+            "vertical|horizontal|chunked:G|cachesweep:G (G = micro-batches per \
+             vertical chunk)",
             Some("vertical"),
         )
         .opt("steps", "training iterations", Some("20"))
@@ -116,6 +120,13 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
             Some("1"),
         )
         .opt(
+            "remote-mbps",
+            "simulated remote/object-store tier bandwidth (MB/s; 0 = no remote path). \
+             Only meaningful with --planned: the planner adds a remote path weighted \
+             by this bandwidth to every object's transfer plan",
+            Some("0"),
+        )
+        .opt(
             "precision",
             "storage precision policy: f32 (strict, bit-identical baseline) or \
              mixed:f16|mixed:bf16 (checkpoints + parameter accounting in half \
@@ -130,6 +141,13 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
              updates its contiguous parameter shard (α-split per shard, ~1/W of the \
              optimizer SSD round trip per rank), parameter all-gather before the next \
              iteration's prefetch — still bit-identical to --workers 1",
+        )
+        .flag(
+            "planned",
+            "multi-path planned store: serve each object concurrently from the DRAM \
+             cache tier (--cpu-cache-mb), all N NVMe devices (--ssds), and the \
+             optional remote tier (--remote-mbps) via a per-object transfer plan — \
+             bit-identical to the stacked backends at --precision f32",
         )
         .flag("opt-on-cpu", "keep optimizer states CPU-resident (default: SSD)")
         .flag("ckpt-on-ssd", "spill activation checkpoints to SSD")
@@ -159,6 +177,8 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         ssd_write_bps: if w > 0.0 { w * 1e9 } else { f64::INFINITY },
         ssds: cli.get_parsed::<usize>("ssds")?.max(1),
         cpu_cache_mb: cli.get_parsed("cpu-cache-mb")?,
+        planned: cli.has_flag("planned"),
+        remote_mbps: cli.get_parsed("remote-mbps")?,
         precision: Precision::parse(&cli.get("precision").unwrap())?,
         seed: cli.get_parsed("seed")?,
         ..Default::default()
@@ -168,7 +188,7 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{} ssds={} cpu-cache={}MiB precision={}",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{} ssds={} cpu-cache={}MiB{} precision={}",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
@@ -177,6 +197,11 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         if cfg.shard_optimizer { " shard-optimizer" } else { "" },
         cfg.ssds,
         cfg.cpu_cache_mb,
+        if cfg.planned {
+            format!(" planned(remote={}MB/s)", cfg.remote_mbps)
+        } else {
+            String::new()
+        },
         cfg.precision,
     );
     let workers = cfg.workers;
@@ -240,7 +265,7 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
         .opt("m", "micro-batch count M", Some("16"))
         .opt(
             "system",
-            "greedysnake|zero-infinity|teraio|ratel|chunked:G",
+            "greedysnake|zero-infinity|teraio|ratel|chunked:G|cachesweep:G",
             Some("greedysnake"),
         )
         .opt("alpha", "delay ratio (greedysnake)", Some("0.3"))
@@ -292,8 +317,9 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
         "teraio" => Schedule::TeraIo,
         "ratel" => Schedule::Ratel,
         // everything else goes through the runtime schedule grammar
-        // (vertical|greedysnake | horizontal|zero-infinity | chunked:G), so
-        // every alias of the same schedule takes the same path
+        // (vertical|greedysnake | horizontal|zero-infinity | chunked:G |
+        // cachesweep:G), so every alias of the same schedule takes the
+        // same path
         other => {
             let kind: ScheduleKind = other
                 .parse()

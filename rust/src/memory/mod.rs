@@ -2,7 +2,8 @@
 //! tiers, a bandwidth-throttled file-backed SSD (the NVMe stand-in — see
 //! DESIGN.md §Substitutions), the pluggable [`store::TensorStore`] object
 //! tier the coordinators do all their I/O through (single SSD, striped
-//! multi-SSD, or DRAM-cached — backend-bit-identical by contract), the
+//! multi-SSD, DRAM-cached, or the multi-path [`store::PlannedStore`]
+//! planner — backend-bit-identical by contract), the
 //! [`codec`] mixed-precision storage layer that encodes objects per
 //! [`tier::Category`] (two-tier equivalence: bit-identity at f32,
 //! tolerance-pinned at f16/bf16 — see `store.rs`), and the §5 pinned-buffer
@@ -18,6 +19,9 @@ pub mod tier;
 pub use codec::{Codec, CodecStore, Precision, PrecisionPolicy};
 pub use pinned::PinnedPool;
 pub use ssd::SsdStorage;
-pub use store::{CacheCounters, CacheStats, CachedStore, SsdBackend, StripedStore, TensorStore};
+pub use store::{
+    path_weight, plan_shares, CacheCounters, CacheStats, CachedStore, PathId, PathStats,
+    PlannedConfig, PlannedStore, SsdBackend, StripedStore, TensorStore, TransferPlan,
+};
 pub use throttle::Throttle;
 pub use tier::Tier;

@@ -17,7 +17,10 @@
 //! mirror: per-category storage byte multipliers
 //! ([`crate::perfmodel::ByteMults`]) scale every modeled transfer and the
 //! cache fit test, so half-precision storage both halves SSD time and fits
-//! in caches its f32 twin overflows.
+//! in caches its f32 twin overflows. [`schedules::simulate_planned`] mirrors
+//! the multi-path `PlannedStore`: the SSD tier runs at the aggregate
+//! bandwidth of the plan's concurrent DRAM/NVMe/remote paths
+//! ([`schedules::planned_bandwidth`] — Σ path rates until a path saturates).
 //!
 //! The data-parallel dimension lives in [`dist`]: W workers with their own
 //! compute resources (incl. a first-class inter-GPU interconnect for the
@@ -36,5 +39,6 @@ pub mod schedules;
 pub use dist::{simulate_dist, DistConfig};
 pub use engine::{DiscreteSim, Resource, SimOp};
 pub use schedules::{
-    simulate, simulate_io, simulate_store, simulate_store_prec, Schedule, SimResult,
+    planned_bandwidth, simulate, simulate_io, simulate_planned, simulate_store,
+    simulate_store_prec, Schedule, SimResult,
 };

@@ -34,6 +34,12 @@ pub enum Schedule {
     /// `group` micro-batches, parameters reloading once per chunk —
     /// the runtime's `ChunkedVerticalSchedule` on the event simulator.
     ChunkedVertical { group: u64, x: StorageRatios },
+    /// Cache-sweep (`cachesweep:G`): `chunked:G` with the backward chunk
+    /// order reversed (MLP-Offload's cache-friendly subgroup ordering).
+    /// Per-iteration transfers are byte-identical to `chunked:G` — only the
+    /// DRAM-tier reuse pattern differs — so the event model shares
+    /// `build_chunked` and the same fit-or-nothing absorption law.
+    CacheSweep { group: u64, x: StorageRatios },
 }
 
 impl Schedule {
@@ -47,6 +53,7 @@ impl Schedule {
             Schedule::ZeroInfinity | Schedule::TeraIo => "horizontal".to_string(),
             Schedule::Ratel => "single-pass".to_string(),
             Schedule::ChunkedVertical { group, .. } => format!("chunked:{group}"),
+            Schedule::CacheSweep { group, .. } => format!("cachesweep:{group}"),
         }
     }
 }
@@ -120,6 +127,56 @@ pub fn simulate_store_prec(
     simulate_store(&sp.with_byte_mults(mults), m, schedule, io_depth, ssds, cache_bytes)
 }
 
+/// The multi-path aggregate-bandwidth law of the runtime's
+/// [`PlannedStore`](crate::memory::PlannedStore): an object split into
+/// per-path `shares` (bytes) moving concurrently over paths with the given
+/// `rates` (bytes/s) completes when its *slowest* path finishes, so the
+/// effective bandwidth is `Σ shares / max_i(share_i / rate_i)`. With shares
+/// proportional to rates (the planner's weighting) this is exactly
+/// `Σ rates` — throughput adds across paths until one saturates; a skewed
+/// split degrades toward the bottleneck path's rate. Paths with a zero
+/// share contribute nothing; an all-zero split is 0.
+pub fn planned_bandwidth(shares: &[u64], rates: &[f64]) -> f64 {
+    assert_eq!(shares.len(), rates.len(), "one rate per path");
+    let total: u64 = shares.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut slowest = 0.0_f64;
+    for (&s, &r) in shares.iter().zip(rates) {
+        if s == 0 {
+            continue;
+        }
+        assert!(r > 0.0, "a path with a non-zero share needs a positive rate");
+        slowest = slowest.max(s as f64 / r);
+    }
+    total as f64 / slowest
+}
+
+/// Simulate with the SSD tier replaced by a multi-path planned store whose
+/// aggregate read/write bandwidths are `read_bw` / `write_bw` — compute
+/// them with [`planned_bandwidth`] from the plan's shares and per-path
+/// rates. The DRAM-cache fit-or-nothing law still applies on top (the
+/// planned store's DRAM path caches hot objects exactly like
+/// `CachedStore`). With `read_bw`/`write_bw` equal to `sp`'s own SSD
+/// bandwidths and `cache_bytes = 0` this is exactly [`simulate_io`].
+pub fn simulate_planned(
+    sp: &SystemParams,
+    m: u64,
+    schedule: Schedule,
+    io_depth: usize,
+    read_bw: f64,
+    write_bw: f64,
+    cache_bytes: u64,
+) -> SimResult {
+    assert!(read_bw > 0.0 && write_bw > 0.0, "planned aggregate bandwidths must be positive");
+    let mut sp2 = *sp;
+    sp2.node.machine.ssd_read_bw = read_bw;
+    sp2.node.machine.ssd_write_bw = write_bw;
+    let schedule2 = cache_adjusted(&sp2, m, schedule, cache_bytes);
+    simulate_io(&sp2, m, schedule2, io_depth)
+}
+
 /// N striped devices = N× aggregate SSD bandwidth (each device keeps its
 /// own full-rate throttle; shares move in parallel).
 pub(crate) fn scale_ssd_bandwidth(sp: &SystemParams, ssds: usize) -> SystemParams {
@@ -171,6 +228,7 @@ pub(crate) fn cache_adjusted(
         Schedule::ChunkedVertical { group, x } => {
             Schedule::ChunkedVertical { group, x: absorb(x) }
         }
+        Schedule::CacheSweep { group, x } => Schedule::CacheSweep { group, x: absorb(x) },
         other => other,
     }
 }
@@ -231,6 +289,11 @@ fn build_and_run(
             build_ratel(&mut sim, sp, pl, iters, &mut gate)
         }
         Schedule::ChunkedVertical { group, x } => {
+            build_chunked(&mut sim, sp, m, group, x, iters, &mut gate)
+        }
+        // byte-identical transfers to chunked:G — only the DRAM-tier visit
+        // order differs, which the event model's resources don't see
+        Schedule::CacheSweep { group, x } => {
             build_chunked(&mut sim, sp, m, group, x, iters, &mut gate)
         }
     }
@@ -956,6 +1019,63 @@ mod tests {
         assert_eq!(Schedule::TeraIo.kind_name(), "horizontal");
         assert_eq!(Schedule::Ratel.kind_name(), "single-pass");
         assert_eq!(Schedule::ChunkedVertical { group: 4, x }.kind_name(), "chunked:4");
+        assert_eq!(Schedule::CacheSweep { group: 4, x }.kind_name(), "cachesweep:4");
+    }
+
+    /// Cachesweep's per-iteration transfers are byte-identical to chunked:G
+    /// (only the DRAM visit order differs), so the event model must agree
+    /// exactly.
+    #[test]
+    fn cachesweep_event_model_matches_chunked() {
+        let sp = sp();
+        let x = StorageRatios { ckpt_cpu: 1.0, param_cpu: 0.5, opt_cpu: 0.2 };
+        let ch = simulate(&sp, 16, Schedule::ChunkedVertical { group: 4, x });
+        let cs = simulate(&sp, 16, Schedule::CacheSweep { group: 4, x });
+        assert_eq!(cs.t_iter, ch.t_iter);
+        assert_eq!(cs.tokens_per_s, ch.tokens_per_s);
+    }
+
+    /// The multi-path aggregate law: proportional shares add rates exactly;
+    /// a skewed split is bottlenecked by its slowest path; degenerate
+    /// splits are well-defined.
+    #[test]
+    fn planned_bandwidth_follows_aggregate_law() {
+        // shares proportional to rates: 30 + 10 + 10 MB/s = 50 MB/s
+        let bw = planned_bandwidth(&[30, 10, 10], &[30e6, 10e6, 10e6]);
+        assert!((bw - 50e6).abs() < 1.0, "{bw}");
+        // everything on the slow path: the aggregate IS that path
+        let bw = planned_bandwidth(&[0, 100, 0], &[30e6, 10e6, 10e6]);
+        assert!((bw - 10e6).abs() < 1.0, "{bw}");
+        // skewed split: 50/50 over a 30/10 pair finishes with the slow
+        // path — 100 bytes in max(50/30e6, 50/10e6) s = 20 MB/s
+        let bw = planned_bandwidth(&[50, 50], &[30e6, 10e6]);
+        assert!((bw - 20e6).abs() < 1.0, "{bw}");
+        assert_eq!(planned_bandwidth(&[0, 0], &[30e6, 10e6]), 0.0);
+    }
+
+    /// `simulate_planned` pinned to its two endpoints: at the machine's own
+    /// SSD bandwidths it is exactly `simulate_io`, and the planned
+    /// multi-path aggregate strictly beats the best single path on an
+    /// SSD-bound schedule.
+    #[test]
+    fn simulate_planned_aggregates_paths() {
+        let sp = sp();
+        let sched = Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_SSD };
+        let (r, w) = (sp.node.machine.ssd_read_bw, sp.node.machine.ssd_write_bw);
+        let same = simulate_planned(&sp, 8, sched, usize::MAX, r, w, 0);
+        let plain = simulate_io(&sp, 8, sched, usize::MAX);
+        assert_eq!(same.t_iter, plain.t_iter, "identity pin");
+        // two extra equal-rate paths triple the aggregate
+        let shares = [1_u64, 1, 1];
+        let agg_r = planned_bandwidth(&shares, &[r, r, r]);
+        let agg_w = planned_bandwidth(&shares, &[w, w, w]);
+        let multi = simulate_planned(&sp, 8, sched, usize::MAX, agg_r, agg_w, 0);
+        assert!(
+            multi.t_iter < 0.99 * plain.t_iter,
+            "multi-path {} must beat single-path {}",
+            multi.t_iter,
+            plain.t_iter
+        );
     }
 
     #[test]

@@ -28,6 +28,15 @@
 //! `store_*`/`cached_store_*` family mirrors the runtime `TensorStore`
 //! byte counters exactly (what the fig14_store bench cross-checks).
 //!
+//! The multi-path planner (`--planned`) has its per-tier closed forms in
+//! the `planned_*` family: [`Workload::planned_read_bytes`] applies the
+//! runtime planner's exact per-object extent split
+//! ([`crate::memory::plan_shares`]) to every live store object, yielding
+//! one byte count per path (DRAM / each NVMe / remote) that sums back to
+//! [`Workload::store_read_bytes`] exactly — the per-path mirror of the
+//! runtime `PlannedStore::path_stats` counters the fig16_mlp bench
+//! cross-checks.
+//!
 //! Two unit systems coexist. The schedule forms above and the legacy
 //! `store_*` family count checkpoints in the PAPER's low-precision wire
 //! width ([`BYTES_LP`] = 2 B/elem) — the analytic convention every figure
@@ -404,6 +413,64 @@ impl Workload {
         } else {
             self.store_read_bytes(opt_on_ssd, ckpt_on_ssd)
         }
+    }
+
+    // ---- multi-path planner closed forms (`--planned` mirror) ------------
+
+    /// The live store objects of one steady-state iteration, as
+    /// `(count, bytes_each)` groups — the granularity the runtime planner
+    /// splits at: two fp32 moment streams per layer (`opt_on_ssd`) and one
+    /// checkpoint object per (layer, micro-batch) (`ckpt_on_ssd`,
+    /// paper-width units like the legacy `store_*` family).
+    fn store_objects(&self, opt_on_ssd: bool, ckpt_on_ssd: bool) -> Vec<(u64, u64)> {
+        let mut groups = Vec::new();
+        if opt_on_ssd {
+            let moment = self.model.params_per_layer() * BYTES_FP / self.shards;
+            groups.push((2 * self.model.n_layers, moment));
+        }
+        if ckpt_on_ssd {
+            groups.push((self.m * self.model.n_layers, self.ckpt_layer()));
+        }
+        groups
+    }
+
+    /// Per-PATH bytes the planned store reads per steady-state iteration:
+    /// each live object is read once, split over the paths by the runtime
+    /// planner's exact extent arithmetic ([`crate::memory::plan_shares`]
+    /// under the same `weights` — [`crate::memory::path_weight`] of each
+    /// path's bandwidth). One entry per path, in the planner's path order
+    /// (DRAM first if weighted, then each NVMe, then remote). Conservation
+    /// is exact: the entries sum to [`Workload::store_read_bytes`]
+    /// object-for-object (no rounding slack), which is how these forms
+    /// mirror the runtime `path_stats` counters byte-for-byte (assuming no
+    /// DRAM-capacity spill — a full DRAM tier shifts its share onto the
+    /// other paths at plan time).
+    pub fn planned_read_bytes(
+        &self,
+        opt_on_ssd: bool,
+        ckpt_on_ssd: bool,
+        weights: &[u64],
+    ) -> Vec<u64> {
+        let mut per_path = vec![0u64; weights.len()];
+        for (count, bytes) in self.store_objects(opt_on_ssd, ckpt_on_ssd) {
+            let shares = crate::memory::plan_shares(bytes, weights);
+            for (acc, s) in per_path.iter_mut().zip(shares) {
+                *acc += count * s;
+            }
+        }
+        per_path
+    }
+
+    /// Per-path bytes WRITTEN per steady-state iteration — the same
+    /// symmetry as the aggregate forms (moments written back, checkpoints
+    /// stored once, identical per-object splits).
+    pub fn planned_write_bytes(
+        &self,
+        opt_on_ssd: bool,
+        ckpt_on_ssd: bool,
+        weights: &[u64],
+    ) -> Vec<u64> {
+        self.planned_read_bytes(opt_on_ssd, ckpt_on_ssd, weights)
     }
 
     // ---- encoded-byte closed forms (the runtime's `--precision` mirror) --
@@ -820,6 +887,55 @@ mod tests {
             w.store_read_bytes_enc(true, true, &strict),
             "the f32 twin overflows the same cache and absorbs nothing"
         );
+    }
+
+    /// The multi-path planner closed forms: per-path entries conserve the
+    /// aggregate store traffic object-for-object, split proportionally to
+    /// the path weights, and degenerate to the aggregate on one path.
+    #[test]
+    fn planned_forms_conserve_and_split_by_weight() {
+        let w = wl(4);
+        // one path gets everything — exactly the aggregate closed form
+        assert_eq!(
+            w.planned_read_bytes(true, true, &[7]),
+            vec![w.store_read_bytes(true, true)]
+        );
+        // three weighted paths: conservation is exact (no rounding slack)
+        for (opt, ckpt) in [(true, true), (true, false), (false, true), (false, false)] {
+            let per = w.planned_read_bytes(opt, ckpt, &[30, 10, 10]);
+            assert_eq!(per.len(), 3);
+            assert_eq!(per.iter().sum::<u64>(), w.store_read_bytes(opt, ckpt));
+            assert_eq!(per, w.planned_write_bytes(opt, ckpt, &[30, 10, 10]));
+        }
+        // proportionality: a 3:1:1 weighting puts ~3/5 on the fast path
+        let per = w.planned_read_bytes(true, true, &[30, 10, 10]);
+        let total = w.store_read_bytes(true, true) as f64;
+        let frac = per[0] as f64 / total;
+        assert!((frac - 0.6).abs() < 0.01, "fast-path share {frac}");
+        // a zero-weight path moves nothing
+        let per = w.planned_read_bytes(true, true, &[0, 1, 1]);
+        assert_eq!(per[0], 0);
+        assert_eq!(per[1] + per[2], w.store_read_bytes(true, true));
+    }
+
+    /// The closed form applies the RUNTIME's extent arithmetic, not its own
+    /// rounding: summing `plan_shares` over the object list reproduces the
+    /// per-path entries exactly.
+    #[test]
+    fn planned_forms_match_plan_shares_per_object() {
+        use crate::memory::plan_shares;
+        let w = wl(3);
+        let weights = [13u64, 5, 3];
+        let mut expect = vec![0u64; 3];
+        let moment = GPT_65B.params_per_layer() * BYTES_FP;
+        for (count, bytes) in
+            [(2 * GPT_65B.n_layers, moment), (3 * GPT_65B.n_layers, w.ckpt_layer())]
+        {
+            for (acc, s) in expect.iter_mut().zip(plan_shares(bytes, &weights)) {
+                *acc += count * s;
+            }
+        }
+        assert_eq!(w.planned_read_bytes(true, true, &weights), expect);
     }
 
     #[test]

@@ -5,13 +5,14 @@
 //! [`ScheduleKind`] is the user-facing schedule name shared by the real
 //! runtime, the discrete-event simulator ([`ScheduleKind::sim_schedule`]),
 //! and the analytic traffic model ([`ScheduleKind::traffic`]): `vertical`
-//! (GreedySnake), `horizontal` (ZeRO-Infinity), and `chunked:G` (vertical
-//! sweeps over chunks of G micro-batches).
+//! (GreedySnake), `horizontal` (ZeRO-Infinity), `chunked:G` (vertical
+//! sweeps over chunks of G micro-batches), and `cachesweep:G` (chunked
+//! with the backward chunk order reversed for DRAM-tier reuse).
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::schedule::{
-    ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,
+    CacheSweepSchedule, ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,
 };
 use crate::coordinator::{DataParallelEngine, ModelState, StepEngine, StepStats, TrainerConfig};
 use crate::perfmodel::StorageRatios;
@@ -73,13 +74,18 @@ impl SyntheticCorpus {
 ///
 /// Grammar (CLI `--schedule`, also accepted by `simulate --system`):
 /// `vertical` | `greedysnake` | `horizontal` | `zero-infinity` |
-/// `chunked:G` with G ≥ 1 micro-batches per vertical chunk.
+/// `chunked:G` | `cachesweep:G` with G ≥ 1 micro-batches per vertical
+/// chunk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScheduleKind {
     Vertical,
     Horizontal,
     /// Vertical sweeps over chunks of G micro-batches (`chunked:G`).
     ChunkedVertical(usize),
+    /// `chunked:G` traffic with the backward chunk order reversed so the
+    /// freshest chunk's checkpoints are consumed while still DRAM-resident
+    /// (`cachesweep:G`, MLP-Offload's cache-friendly subgroup ordering).
+    CacheSweep(usize),
 }
 
 impl std::str::FromStr for ScheduleKind {
@@ -98,7 +104,16 @@ impl std::str::FromStr for ScheduleKind {
                     }
                     return Ok(ScheduleKind::ChunkedVertical(group));
                 }
-                bail!("unknown schedule '{other}' (vertical|horizontal|chunked:G)")
+                if let Some(g) = other.strip_prefix("cachesweep:") {
+                    let group: usize = g
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad chunk group '{g}' in '{other}': {e}"))?;
+                    if group == 0 {
+                        bail!("chunk group must be >= 1 in '{other}'");
+                    }
+                    return Ok(ScheduleKind::CacheSweep(group));
+                }
+                bail!("unknown schedule '{other}' (vertical|horizontal|chunked:G|cachesweep:G)")
             }
         }
     }
@@ -110,6 +125,7 @@ impl std::fmt::Display for ScheduleKind {
             ScheduleKind::Vertical => write!(f, "vertical"),
             ScheduleKind::Horizontal => write!(f, "horizontal"),
             ScheduleKind::ChunkedVertical(g) => write!(f, "chunked:{g}"),
+            ScheduleKind::CacheSweep(g) => write!(f, "cachesweep:{g}"),
         }
     }
 }
@@ -121,6 +137,7 @@ impl ScheduleKind {
             ScheduleKind::Vertical => Box::new(VerticalSchedule),
             ScheduleKind::Horizontal => Box::new(HorizontalSchedule),
             ScheduleKind::ChunkedVertical(g) => Box::new(ChunkedVerticalSchedule::new(*g)),
+            ScheduleKind::CacheSweep(g) => Box::new(CacheSweepSchedule::new(*g)),
         }
     }
 
@@ -138,6 +155,7 @@ impl ScheduleKind {
             ScheduleKind::ChunkedVertical(g) => {
                 sim::Schedule::ChunkedVertical { group: *g as u64, x }
             }
+            ScheduleKind::CacheSweep(g) => sim::Schedule::CacheSweep { group: *g as u64, x },
         }
     }
 
@@ -147,6 +165,9 @@ impl ScheduleKind {
             ScheduleKind::Vertical => w.vertical(),
             ScheduleKind::Horizontal => w.horizontal(),
             ScheduleKind::ChunkedVertical(g) => w.chunked_vertical(*g as u64),
+            // Same per-iteration bytes as chunked:G — cachesweep only
+            // reorders the backward visit sequence for DRAM-tier reuse.
+            ScheduleKind::CacheSweep(g) => w.chunked_vertical(*g as u64),
         }
     }
 }
@@ -394,10 +415,16 @@ mod tests {
             "chunked:4".parse::<ScheduleKind>().unwrap(),
             ScheduleKind::ChunkedVertical(4)
         );
+        assert_eq!(
+            "cachesweep:4".parse::<ScheduleKind>().unwrap(),
+            ScheduleKind::CacheSweep(4)
+        );
         assert!("diagonal".parse::<ScheduleKind>().is_err());
         assert!("chunked:0".parse::<ScheduleKind>().is_err());
         assert!("chunked:x".parse::<ScheduleKind>().is_err());
         assert!("chunked:".parse::<ScheduleKind>().is_err());
+        assert!("cachesweep:0".parse::<ScheduleKind>().is_err());
+        assert!("cachesweep:x".parse::<ScheduleKind>().is_err());
     }
 
     #[test]
@@ -406,6 +433,7 @@ mod tests {
             ScheduleKind::Vertical,
             ScheduleKind::Horizontal,
             ScheduleKind::ChunkedVertical(3),
+            ScheduleKind::CacheSweep(3),
         ] {
             assert_eq!(kind.to_string().parse::<ScheduleKind>().unwrap(), kind);
             assert_eq!(kind.policy().name(), kind.to_string());

@@ -571,8 +571,8 @@ fn seeds_vary_but_converge() {
 
 /// The store backends the equivalence suite compares against the
 /// single-SSD baseline. CI's store matrix narrows it via `GS_TEST_STORE`
-/// (comma-separated ∈ {ssd, striped, cached}) so each job pins one
-/// backend; "ssd" is the baseline itself and compares trivially.
+/// (comma-separated ∈ {ssd, striped, cached, planned}) so each job pins
+/// one backend; "ssd" is the baseline itself and compares trivially.
 fn test_store_set() -> Vec<String> {
     std::env::var("GS_TEST_STORE")
         .ok()
@@ -583,7 +583,9 @@ fn test_store_set() -> Vec<String> {
                 .collect::<Vec<String>>()
         })
         .filter(|v| !v.is_empty())
-        .unwrap_or_else(|| vec!["striped".to_string(), "cached".to_string()])
+        .unwrap_or_else(|| {
+            vec!["striped".to_string(), "cached".to_string(), "planned".to_string()]
+        })
 }
 
 fn apply_store_backend(c: &mut TrainerConfig, backend: &str) {
@@ -591,25 +593,37 @@ fn apply_store_backend(c: &mut TrainerConfig, backend: &str) {
         "ssd" => {}
         "striped" => c.ssds = 2,
         "cached" => c.cpu_cache_mb = 64,
-        other => panic!("unknown GS_TEST_STORE backend '{other}' (ssd|striped|cached)"),
+        "planned" => {
+            // the full multi-path split: DRAM + 2 NVMe + remote
+            c.planned = true;
+            c.ssds = 2;
+            c.cpu_cache_mb = 16;
+            c.remote_mbps = 200.0;
+        }
+        other => {
+            panic!("unknown GS_TEST_STORE backend '{other}' (ssd|striped|cached|planned)")
+        }
     }
 }
 
 /// The store-backend acceptance property (tentpole): every backend —
-/// single SSD, striped 2-device, DRAM-cached — trains BIT-identically
-/// across schedules × io-depth {0, 2} × workers {1, 2}: same losses,
-/// gradient norms, and Σx² parameter/moment digests. Backends only change
-/// where bytes live. The striped backend must additionally account the
-/// exact same SSD byte totals (its per-device shares sum to the object
-/// sizes); the cached backend must strictly REDUCE `ssd_read` — with a
-/// 64 MiB cache the tiny model's working set fits, so per the fit-or-
-/// nothing closed form (`traffic::Workload::cached_store_read_bytes`) the
-/// residual SSD traffic is exactly zero.
+/// single SSD, striped 2-device, DRAM-cached, multi-path planned — trains
+/// BIT-identically across schedules × io-depth {0, 2} × workers {1, 2}:
+/// same losses, gradient norms, and Σx² parameter/moment digests. Backends
+/// only change where bytes live. The striped backend must additionally
+/// account the exact same SSD byte totals (its per-device shares sum to
+/// the object sizes); the cached backend must strictly REDUCE `ssd_read` —
+/// with a 64 MiB cache the tiny model's working set fits, so per the fit-
+/// or-nothing closed form (`traffic::Workload::cached_store_read_bytes`)
+/// the residual SSD traffic is exactly zero; the planned backend's whole-
+/// object trait counters must equal the baseline's exactly (a transfer
+/// plan only changes which path carries each extent, never the bytes).
 #[test]
 fn store_backends_bit_identical_to_seed() {
     let kinds = [
         ScheduleKind::Vertical,
         ScheduleKind::ChunkedVertical(2),
+        ScheduleKind::CacheSweep(2),
         ScheduleKind::Horizontal,
     ];
     for kind in kinds {
@@ -675,6 +689,16 @@ fn store_backends_bit_identical_to_seed() {
                             assert!(
                                 log.cache_hits > 0,
                                 "{kind:?} d{depth} W={w}: the cache never hit"
+                            );
+                        }
+                        "planned" => {
+                            assert_eq!(
+                                base.ssd_read, log.ssd_read,
+                                "{kind:?} d{depth} W={w}: planned read totals diverged"
+                            );
+                            assert_eq!(
+                                base.ssd_written, log.ssd_written,
+                                "{kind:?} d{depth} W={w}: planned write totals diverged"
                             );
                         }
                         _ => {}

@@ -586,6 +586,119 @@ fn prop_striped_store_matches_ssd_backend() {
     });
 }
 
+/// Multi-path planner equivalence: a [`PlannedStore`] over ANY path split —
+/// 1..4 NVMe devices × DRAM path on/off (incl. capacities small enough to
+/// force spill) × remote path on/off — is content/len/presence-identical
+/// and trait-counter-identical to the flat `SsdBackend` across arbitrary
+/// op sequences, and after every op the per-path attribution conserves the
+/// object bytes exactly: Σ path bytes == trait counter bytes.
+#[test]
+fn prop_planned_store_matches_ssd_backend() {
+    use greedysnake::memory::{PlannedConfig, PlannedStore, SsdStorage, TensorStore};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    check("planned-store-equiv", 25, |rng| {
+        let uniq = UNIQ.fetch_add(1, Ordering::Relaxed);
+        let base = std::env::temp_dir().join(format!(
+            "gs_prop_planned_{}_{uniq}",
+            std::process::id()
+        ));
+        let flat = std::env::temp_dir().join(format!(
+            "gs_prop_planned_flat_{}_{uniq}",
+            std::process::id()
+        ));
+        let ssd = SsdStorage::create_unthrottled(flat).map_err(|e| e.to_string())?;
+        let pc = PlannedConfig {
+            nvme: vec![(f64::INFINITY, f64::INFINITY); gen::usize_in(rng, 1, 4)],
+            // off / spill-forcing tiny / comfortably large
+            dram_capacity: [0u64, 2048, 1 << 20][gen::usize_in(rng, 0, 2)],
+            dram_bps: 0.0,
+            remote_bps: if gen::usize_in(rng, 0, 1) == 1 { 200e6 } else { 0.0 },
+        };
+        let planned = PlannedStore::create(&base, &pc).map_err(|e| e.to_string())?;
+        let keys = ["a", "b", "c", "d", "e"];
+        for op in 0..40 {
+            let key = keys[gen::usize_in(rng, 0, keys.len() - 1)];
+            match gen::usize_in(rng, 0, 3) {
+                0 | 1 => {
+                    let len = gen::usize_in(rng, 0, 5000);
+                    let fill = gen::usize_in(rng, 0, 255) as u8;
+                    let data: Vec<u8> =
+                        (0..len).map(|i| fill.wrapping_add(i as u8)).collect();
+                    ssd.put(key, &data).map_err(|e| e.to_string())?;
+                    planned.put(key, &data).map_err(|e| e.to_string())?;
+                }
+                2 => {
+                    let a = ssd.delete(key);
+                    let b = planned.delete(key);
+                    if a != b {
+                        return Err(format!("op {op}: delete('{key}') {a} vs {b}"));
+                    }
+                }
+                _ => {
+                    let mut x = Vec::new();
+                    let mut y = Vec::new();
+                    let ra = ssd.get(key, &mut x);
+                    let rb = planned.get(key, &mut y);
+                    if ra.is_ok() != rb.is_ok() {
+                        return Err(format!(
+                            "op {op}: get('{key}') presence {} vs {}",
+                            ra.is_ok(),
+                            rb.is_ok()
+                        ));
+                    }
+                    if ra.is_ok() && x != y {
+                        return Err(format!(
+                            "op {op}: get('{key}') content mismatch ({} vs {} bytes)",
+                            x.len(),
+                            y.len()
+                        ));
+                    }
+                }
+            }
+            if ssd.contains(key) != planned.contains(key) {
+                return Err(format!("op {op}: contains('{key}') diverged"));
+            }
+            if ssd.len_of(key) != planned.len_of(key) {
+                return Err(format!(
+                    "op {op}: len_of('{key}') {:?} vs {:?}",
+                    ssd.len_of(key),
+                    planned.len_of(key)
+                ));
+            }
+            if ssd.bytes_read() != planned.bytes_read()
+                || ssd.bytes_written() != planned.bytes_written()
+            {
+                return Err(format!(
+                    "op {op}: accounting r/w {}/{} vs {}/{}",
+                    ssd.bytes_read(),
+                    ssd.bytes_written(),
+                    planned.bytes_read(),
+                    planned.bytes_written()
+                ));
+            }
+            // per-path byte conservation: the plan-level attribution always
+            // sums back to the whole-object trait counters
+            let ps = planned.path_stats();
+            if ps.total_read() != planned.bytes_read() {
+                return Err(format!(
+                    "op {op}: path reads {} != counter {}",
+                    ps.total_read(),
+                    planned.bytes_read()
+                ));
+            }
+            if ps.total_written() != planned.bytes_written() {
+                return Err(format!(
+                    "op {op}: path writes {} != counter {}",
+                    ps.total_written(),
+                    planned.bytes_written()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// The DRAM-cache residual closed form composes with the schedule traffic
 /// forms: for any M and capacity, the residual is either 0 (fits) or the
 /// full store traffic (doesn't) — never anything in between — and the
