@@ -67,16 +67,50 @@
 //! ([`RingReduce`] chunking is element-local), and the fused Adam update is
 //! partition-invariant, so `--shard-optimizer --workers W` stays
 //! bit-identical to `--workers 1` — including the `Σx²` parameter/moment
-//! digests — for every schedule, io-depth, and α. (The one caveat: with a
-//! *finite* `clip_norm`, a violation landing between a step's eager
-//! submission and its delayed dispatch changes which elements see the
-//! corrective scale; since sharding moves the eager/delayed boundary, exact
-//! bit-identity under sharding assumes the speculative scale is stable —
-//! `clip_norm = ∞`, the default, always is.) Sharding partitions optimizer
-//! state across ALL configured ranks (the process group), not just the
-//! ranks that own micro-batches, so the reduce-scatter/all-gather byte
-//! accounting uses the group size W while the unsharded all-reduce counts
-//! active workers.
+//! digests — for every schedule, io-depth, and α. The clip scale is a
+//! **per-step barrier value**: each step freezes the speculative scale it
+//! saw at eager submission and its delayed-α tail re-uses that frozen
+//! value at dispatch time (`LayerPending::held_scale` in
+//! [`super::opt`]), so a violation landing between a step's eager
+//! submission and its delayed dispatch cannot change which elements see
+//! the corrective scale — bit-identity holds for *finite* `clip_norm`
+//! too, not just the `∞` default (pinned by
+//! `clip_scale_is_a_per_step_barrier` in `opt.rs`). Sharding partitions
+//! optimizer state across ALL configured ranks (the process group), not
+//! just the ranks that own micro-batches, so the reduce-scatter/all-gather
+//! byte accounting uses the group size W while the unsharded all-reduce
+//! counts active workers.
+//!
+//! ## Persistence-sharded parameters (`--param-persist`)
+//!
+//! With [`TrainerConfig::param_persist`](super::state::TrainerConfig) (+
+//! `--opt-on-ssd`), the *parameter persistence* shards too: each rank owns
+//! per-rank parameter shard objects (`param_l{l}_t{t}_r{r}_{e|d}`, and
+//! `param_emb_t{t}_r{r}` for the embedding/head group) and the per-shard
+//! update round-trips ONLY that rank's ~1/W of the parameter bytes through
+//! the store — read shard, Adam, write shard — instead of every rank
+//! re-materializing the full parameter set. The embedding/head group's
+//! update fans out over the same rank partition. Per-rank SSD parameter
+//! bytes are counted by `ParamShardCounters` (surfaced in `RunLog`), and
+//! the ~1/W closed forms live in [`crate::traffic::Workload`] /
+//! [`crate::sim::simulate_dist`]. Updates stay bit-identical: Adam is
+//! elementwise, so the store round trip at f32 cannot change a bit.
+//!
+//! ## Elastic re-shard + crash recovery
+//!
+//! `reshard_store(W→W′)` ([`super::opt::reshard_store`]) deterministically
+//! repartitions every persisted shard object (moments, parameter shards,
+//! embed shards) from a W-rank layout to a W′-rank layout at a **drained
+//! boundary** ([`OptimizerStepCoordinator::drain_delayed`] — no α-tail
+//! outstanding). Because the update is partition-invariant, a run resumed
+//! at W′ is *bit-identical* to a fresh run at W′ from the same state —
+//! the Σx² digest suites in `opt.rs`/`tests/integration.rs` pin this.
+//! Crash consistency comes from the layer below: with `--journal` the
+//! store wraps in a [`crate::memory::store::JournalStore`] and the trainer
+//! commits an epoch per step (see `trainer`), so a worker killed mid-step
+//! (fault-injection sites `engine:forward`, `dist:post-reduce`,
+//! `opt:delayed`, `lane:*`, `store:tear_put`) replays from the last
+//! committed boundary with an unchanged loss curve.
 //!
 //! ## What is modeled vs real
 //!
@@ -319,6 +353,21 @@ impl<'a> DataParallelEngine<'a> {
         self.workers.len()
     }
 
+    /// Iterations executed so far.
+    pub fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    /// Resume the iteration counter after a crash-recovery rebuild — see
+    /// [`StepEngine::set_steps_done`]: Adam's bias correction and the
+    /// delayed-dispatch step tags must continue from the committed count.
+    pub fn set_steps_done(&mut self, n: u64) {
+        self.step = n;
+        for w in &mut self.workers {
+            w.set_steps_done(n);
+        }
+    }
+
     /// One data-parallel training iteration over `m` micro-batches. The
     /// phase structure mirrors [`StepEngine::step`] exactly: delayed-α
     /// dispatch first (overlapping the forward), workers' compute, the
@@ -478,13 +527,25 @@ impl<'a> DataParallelEngine<'a> {
             let parts = pick(&emb, 1);
             HostTensor { shape: emb[0].1[1].shape.clone(), data: self.ring.reduce(&parts) }
         };
-        for t in [&dlnf_w, &dlnf_b, &dwte, &dwpe] {
-            // the embedding/head group stays unsharded (it updates like a
-            // single layer on the shared coordinator), so its gradients
-            // all-reduce among the active workers in both modes
-            allreduce_bytes += ring_traffic_bytes(active, t.bytes());
-        }
+        let embed_bytes: u64 = [&dlnf_w, &dlnf_b, &dwte, &dwpe].iter().map(|t| t.bytes()).sum();
+        // the embedding/head group's update fans out over the rank
+        // partition in shard mode (see `submit_embed`), so its gradients
+        // reduce-scatter across the group there; unsharded they all-reduce
+        // among the active workers
+        allreduce_bytes += grad_ring_bytes(embed_bytes);
         let allreduce_s = t_red.elapsed().as_secs_f64();
+
+        // Fault site: a worker dropping right after the reduce-scatter —
+        // gradients are combined but no optimizer state has advanced. The
+        // journaled trainer must replay the whole step.
+        if crate::util::fault::any_armed()
+            && crate::util::fault::should_fail(&crate::util::fault::scoped(
+                "dist:post-reduce",
+                &self.state.cfg.fault_scope,
+            ))
+        {
+            bail!("injected fault: worker lost after reduce-scatter (step {})", self.step);
+        }
 
         // ---------------- optimizer (rank-0 or per-rank sharded) -----------
         // Descending layer order — exactly the order the single engine's
@@ -509,11 +570,14 @@ impl<'a> DataParallelEngine<'a> {
         // rank holds the full updated model before the next iteration's
         // parameter prefetch (the IoPipeline's `param-upload` lane waits out
         // the pending shard updates through the shared coordinator, so the
-        // gather is ordered after them). Accounted to the step that produced
-        // the shards; params are f32 on this substrate.
+        // gather is ordered after them). The embedding/head group's shards
+        // gather the same way — its update fans out over the rank partition
+        // too. Accounted to the step that produced the shards; params are
+        // f32 on this substrate.
         let allgather_bytes = if shard {
             let layer_params = nl as u64 * (self.state.manifest.layer_numel() * 4) as u64;
-            ring_allgather_bytes(group, layer_params)
+            // embed/head param bytes == embed/head grad bytes (same tensors)
+            ring_allgather_bytes(group, layer_params + embed_bytes)
         } else {
             0
         };

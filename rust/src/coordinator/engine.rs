@@ -160,6 +160,14 @@ impl<'a> StepEngine<'a> {
         self.step
     }
 
+    /// Resume the iteration counter — crash recovery rebuilds the engine
+    /// after rolling the store back to the last committed epoch, and Adam's
+    /// bias correction (plus the delayed-dispatch step tags) must continue
+    /// from the committed step count, not restart at 0.
+    pub fn set_steps_done(&mut self, n: u64) {
+        self.step = n;
+    }
+
     /// Cumulative parameter bytes uploaded across all steps.
     pub fn param_bytes_loaded(&self) -> u64 {
         self.param_bytes_loaded
@@ -187,6 +195,15 @@ impl<'a> StepEngine<'a> {
     fn ensure_params(&mut self, cache: &mut ParamCache, l: usize, wait: bool) -> Result<()> {
         if cache.layer == Some(l) {
             return Ok(());
+        }
+        if wait
+            && crate::util::fault::any_armed()
+            && crate::util::fault::should_fail(&crate::util::fault::scoped(
+                "engine:forward",
+                &self.state.cfg.fault_scope,
+            ))
+        {
+            bail!("injected fault: forward parameter load (layer {l})");
         }
         match self.io.take_params(l)? {
             Some(snapshot) => {

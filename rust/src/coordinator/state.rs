@@ -5,7 +5,9 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::memory::codec::{CodecStore, Precision};
-use crate::memory::store::{CachedStore, PlannedConfig, PlannedStore, StripedStore, TensorStore};
+use crate::memory::store::{
+    CachedStore, JournalStore, PlannedConfig, PlannedStore, StripedStore, TensorStore,
+};
 use crate::memory::SsdStorage;
 use crate::optimizer::{AdamParams, AdamState};
 use crate::runtime::manifest::Manifest;
@@ -100,6 +102,35 @@ pub struct TrainerConfig {
     /// tolerance-equivalence suite (see `memory::store`'s two-tier
     /// contract), not by bit identity.
     pub precision: Precision,
+    /// Shard parameter *persistence* on the SSD tier (`--param-persist`):
+    /// master parameters also live on the store as per-(rank, part) shard
+    /// objects (`param_l{l}_t{t}[_r{r}]_{e|d}`, plus `param_emb_t{t}[_r{r}]`
+    /// for the embedding/head group), and every optimizer visit round-trips
+    /// its shard — read before the update, written back after — so each
+    /// rank moves ~1/W of the parameter bytes per iteration (the finished
+    /// ZeRO-Infinity picture; today's default re-reads nothing because
+    /// params stay host-resident only). Parameter shards are always stored
+    /// f32 (they are master weights), so this is bit-identical to the
+    /// host-resident path at every precision. Requires `opt_on_ssd`.
+    pub param_persist: bool,
+    /// Crash-consistent write-behind journal (`--journal`): wrap the store
+    /// in a [`crate::memory::store::JournalStore`] that undo-logs the first
+    /// write to each key per step and commits an epoch marker at every step
+    /// boundary, and make the trainer retry a failed step from the last
+    /// committed boundary (store rollback + host-state restore) with the
+    /// SAME batch — so a worker killed mid-step replays with a provably
+    /// unchanged loss curve. Recovery of host state requires
+    /// `param_persist` (+ `opt_on_ssd`), which make the store the single
+    /// source of truth for params and moments.
+    pub journal: bool,
+    /// Scope tag appended to the fault-injection site names this config's
+    /// runtime objects check (`site@scope`, see
+    /// [`crate::util::fault::scoped`]). The fault registry is
+    /// process-global, so parallel tests exercising the same production
+    /// code path would otherwise consume each other's armed sites; tests
+    /// arm scoped names instead. Empty (the production default) checks the
+    /// bare site names.
+    pub fault_scope: String,
     /// Seed for parameter init and the synthetic corpus.
     pub seed: u64,
 }
@@ -126,6 +157,9 @@ impl Default for TrainerConfig {
             planned: false,
             remote_mbps: 0.0,
             precision: Precision::F32,
+            param_persist: false,
+            journal: false,
+            fault_scope: String::new(),
             seed: 42,
         }
     }
@@ -151,6 +185,7 @@ impl TrainerConfig {
                 "gs_test_{tag}_{}_{uniq}",
                 std::process::id()
             )),
+            fault_scope: tag.to_string(),
             ..Default::default()
         }
     }
@@ -186,54 +221,59 @@ pub struct ModelState {
 }
 
 /// Build the configured [`TensorStore`] backend stack for `cfg`:
-/// `CodecStore?` → `CachedStore?` → `StripedStore | SsdStorage`, or with
-/// `cfg.planned` the flat multi-path stack `CodecStore?` → `PlannedStore`
+/// `CodecStore?` → `JournalStore?` → `CachedStore?` →
+/// `StripedStore | SsdStorage`, or with `cfg.planned` the flat multi-path
+/// stack `CodecStore?` → `JournalStore?` → `PlannedStore`
 /// (DRAM + N NVMe + remote as concurrent paths — the planner replaces the
 /// cache-then-stripe nesting, so `cpu_cache_mb` becomes the DRAM *path*
 /// capacity and `remote_mbps` enables the remote path). The codec sits on
 /// TOP so every layer below it — including the cache's `Tier` capacity
 /// accounting and the SSD byte counters — sees encoded bytes; at strict
 /// f32 the wrapper is omitted entirely (bit-identity by construction).
+/// The journal sits directly under the codec so its undo records hold the
+/// encoded at-rest bytes (rollback restores them verbatim, codec or not)
+/// and its epoch commit/recover calls reach it through the codec's
+/// pass-through delegation.
 fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
-    if cfg.planned {
+    let base: Arc<dyn TensorStore> = if cfg.planned {
         let pc = PlannedConfig {
             nvme: vec![(cfg.ssd_read_bps, cfg.ssd_write_bps); cfg.ssds.max(1)],
             dram_capacity: (cfg.cpu_cache_mb as u64) << 20,
             dram_bps: 0.0, // PlannedStore::DRAM_BPS
             remote_bps: cfg.remote_mbps * 1e6,
         };
-        let base: Arc<dyn TensorStore> = Arc::new(PlannedStore::create(&cfg.ssd_path, &pc)?);
-        let policy = cfg.precision.policy();
-        return Ok(if policy.is_strict_f32() {
-            base
-        } else {
-            Arc::new(CodecStore::new(base, policy))
-        });
-    }
-    let base: Arc<dyn TensorStore> = if cfg.ssds > 1 {
-        Arc::new(StripedStore::create(
-            &cfg.ssd_path,
-            cfg.ssds,
-            cfg.ssd_read_bps,
-            cfg.ssd_write_bps,
-        )?)
+        Arc::new(PlannedStore::create(&cfg.ssd_path, &pc)?.with_fault_scope(&cfg.fault_scope))
     } else {
-        Arc::new(SsdStorage::create(
-            &cfg.ssd_path,
-            cfg.ssd_read_bps,
-            cfg.ssd_write_bps,
-        )?)
+        let dev: Arc<dyn TensorStore> = if cfg.ssds > 1 {
+            Arc::new(StripedStore::create(
+                &cfg.ssd_path,
+                cfg.ssds,
+                cfg.ssd_read_bps,
+                cfg.ssd_write_bps,
+            )?)
+        } else {
+            Arc::new(SsdStorage::create(
+                &cfg.ssd_path,
+                cfg.ssd_read_bps,
+                cfg.ssd_write_bps,
+            )?)
+        };
+        if cfg.cpu_cache_mb > 0 {
+            Arc::new(CachedStore::new(dev, (cfg.cpu_cache_mb as u64) << 20))
+        } else {
+            dev
+        }
     };
-    let cached: Arc<dyn TensorStore> = if cfg.cpu_cache_mb > 0 {
-        Arc::new(CachedStore::new(base, (cfg.cpu_cache_mb as u64) << 20))
+    let journaled: Arc<dyn TensorStore> = if cfg.journal {
+        Arc::new(JournalStore::new(base)?.with_fault_scope(&cfg.fault_scope))
     } else {
         base
     };
     let policy = cfg.precision.policy();
     let store: Arc<dyn TensorStore> = if policy.is_strict_f32() {
-        cached
+        journaled
     } else {
-        Arc::new(CodecStore::new(cached, policy))
+        Arc::new(CodecStore::new(journaled, policy))
     };
     Ok(store)
 }
@@ -344,6 +384,67 @@ impl ModelState {
             s += sq(&st.m) + sq(&st.v);
         }
         Ok(s)
+    }
+
+    /// Re-synchronize the host parameter replicas from the
+    /// persistence-sharded store objects (an "all-gather from SSD") —
+    /// the host-state half of crash recovery: after
+    /// [`TensorStore::recover`] rolls the store back to the last committed
+    /// epoch boundary, the rolled-back `param_*` shard objects are the
+    /// source of truth and the host tensors are refreshed from them.
+    /// Requires `cfg.param_persist` (otherwise there are no shard objects
+    /// to gather; returns an error so callers can't silently resume from
+    /// torn host state).
+    pub fn load_params_from_shards(&self) -> Result<()> {
+        use super::opt::{embed_param_key, param_key, shard_part_range, Part};
+        anyhow::ensure!(
+            self.cfg.param_persist,
+            "load_params_from_shards requires cfg.param_persist"
+        );
+        let shards =
+            if self.cfg.shard_optimizer { self.cfg.workers.max(1) } else { 1 };
+        let mut buf = Vec::new();
+        for l in 0..self.manifest.config.n_layers {
+            let mut guard = self.layers[l].lock().unwrap();
+            for (t, spec) in self.manifest.layer_params.iter().enumerate() {
+                for r in 0..shards {
+                    for part in [Part::Eager, Part::Delayed] {
+                        let (lo, hi) =
+                            shard_part_range(spec.numel, self.cfg.alpha, r, shards, part);
+                        if lo == hi {
+                            continue;
+                        }
+                        self.store.get_f32(&param_key(l, t, r, shards, part), &mut buf)?;
+                        anyhow::ensure!(
+                            buf.len() == hi - lo,
+                            "param shard l{l} t{t} r{r} has {} elems, want {}",
+                            buf.len(),
+                            hi - lo
+                        );
+                        guard[t].data[lo..hi].copy_from_slice(&buf);
+                    }
+                }
+            }
+        }
+        let mut guard = self.embed.lock().unwrap();
+        for t in 0..guard.len() {
+            let n = guard[t].numel();
+            for r in 0..shards {
+                let (lo, hi) = shard_part_range(n, 0.0, r, shards, Part::Eager);
+                if lo == hi {
+                    continue;
+                }
+                self.store.get_f32(&embed_param_key(t, r, shards), &mut buf)?;
+                anyhow::ensure!(
+                    buf.len() == hi - lo,
+                    "embed param shard t{t} r{r} has {} elems, want {}",
+                    buf.len(),
+                    hi - lo
+                );
+                guard[t].data[lo..hi].copy_from_slice(&buf);
+            }
+        }
+        Ok(())
     }
 
     /// Loss-bearing scalar state summary (debug/observability).

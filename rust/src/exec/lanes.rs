@@ -88,6 +88,19 @@ impl LaneExecutor {
                     .name(format!("lane-{name}"))
                     .spawn(move || {
                         while let Ok((id, f)) = rx.recv() {
+                            // Fault injection (`lane:{name}` site): the op
+                            // "dies" before running — completed as a panic so
+                            // the sticky-poison path is exercised exactly as
+                            // a real mid-step lane failure would.
+                            if crate::util::fault::any_armed()
+                                && crate::util::fault::should_fail(&format!("lane:{name}"))
+                            {
+                                shared.complete(
+                                    id,
+                                    Some(format!("injected fault: lane '{name}' op")),
+                                );
+                                continue;
+                            }
                             let result = catch_unwind(AssertUnwindSafe(f));
                             shared.complete(id, result.err().map(|e| panic_msg(&e)));
                         }
@@ -431,6 +444,30 @@ mod tests {
         assert!(ex.try_wait(op).is_ok());
         assert!(ex.try_wait_all().is_ok());
         assert!(ex.panicked().is_none());
+    }
+
+    /// The `lane:{name}` fault site kills exactly the armed nth op on that
+    /// lane (one-shot), and the kill is indistinguishable from a panic:
+    /// sticky poison, error-returning waits, the closure never runs.
+    #[test]
+    fn injected_lane_fault_poisons_like_a_panic() {
+        crate::util::fault::arm("lane:faulty", 1);
+        let mut ex = LaneExecutor::new(&["faulty"]);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c0 = Arc::clone(&count);
+        let ok = ex.submit_on("faulty", &[], move || {
+            c0.fetch_add(1, Ordering::SeqCst);
+        });
+        ex.wait(ok); // hit 0: not the armed nth — runs normally
+        let c1 = Arc::clone(&count);
+        let bad = ex.submit_on("faulty", &[], move || {
+            c1.fetch_add(1, Ordering::SeqCst);
+        });
+        let err = ex.try_wait(bad).unwrap_err();
+        assert!(err.contains("injected fault"), "{err}");
+        assert_eq!(count.load(Ordering::SeqCst), 1, "faulted op must not run");
+        // one-shot: the site disarmed itself when it fired
+        assert!(!crate::util::fault::should_fail("lane:faulty"));
     }
 
     #[test]

@@ -149,6 +149,21 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
              optional remote tier (--remote-mbps) via a per-object transfer plan — \
              bit-identical to the stacked backends at --precision f32",
         )
+        .flag(
+            "param-persist",
+            "persistence-sharded master parameters: each rank round-trips its own \
+             param_* shard objects through the store every update (~1/W of the \
+             parameter bytes per rank), making the store the parameter home — \
+             bit-identical to the host-resident update; requires SSD-resident \
+             optimizer states (not --opt-on-cpu)",
+        )
+        .flag(
+            "journal",
+            "crash-consistent write-behind journal: undo-log the first write to each \
+             key per step, commit an epoch marker at every step boundary, and replay \
+             a failed step from the last committed boundary with the same batch \
+             (requires --param-persist)",
+        )
         .flag("opt-on-cpu", "keep optimizer states CPU-resident (default: SSD)")
         .flag("ckpt-on-ssd", "spill activation checkpoints to SSD")
         .flag("hlo-adam", "run Adam through the AOT Pallas kernel")
@@ -180,6 +195,8 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         planned: cli.has_flag("planned"),
         remote_mbps: cli.get_parsed("remote-mbps")?,
         precision: Precision::parse(&cli.get("precision").unwrap())?,
+        param_persist: cli.has_flag("param-persist"),
+        journal: cli.has_flag("journal"),
         seed: cli.get_parsed("seed")?,
         ..Default::default()
     };
@@ -188,13 +205,18 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let m: usize = cli.get_parsed("micro-batches")?;
     let steps: u64 = cli.get_parsed("steps")?;
     println!(
-        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{} ssds={} cpu-cache={}MiB{} precision={}",
+        "training {} ({} params) schedule={kind} M={m} alpha={} steps={steps} io-depth={} workers={}{}{} ssds={} cpu-cache={}MiB{} precision={}",
         manifest.preset,
         manifest.total_numel(),
         cfg.alpha,
         cfg.io_depth,
         cfg.workers,
         if cfg.shard_optimizer { " shard-optimizer" } else { "" },
+        match (cfg.param_persist, cfg.journal) {
+            (true, true) => " param-persist journal",
+            (true, false) => " param-persist",
+            _ => "",
+        },
         cfg.ssds,
         cfg.cpu_cache_mb,
         if cfg.planned {
@@ -253,6 +275,22 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
             println!("cpu-cache: {cat}: hit/miss/evict {h}/{mi}/{e}");
         }
     }
+    if !log.param_shard_reads.is_empty() {
+        let rd: u64 = log.param_shard_reads.iter().sum();
+        let wr: u64 = log.param_shard_writes.iter().sum();
+        println!(
+            "param-persist: shard r/w {}/{} over {} rank(s)",
+            greedysnake::util::stats::fmt_bytes(rd as f64),
+            greedysnake::util::stats::fmt_bytes(wr as f64),
+            log.param_shard_reads.len(),
+        );
+    }
+    if log.recoveries > 0 {
+        println!(
+            "journal: {} mid-step failure(s) replayed from the last epoch boundary",
+            log.recoveries
+        );
+    }
     Ok(())
 }
 
@@ -305,6 +343,13 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
              inter-GPU link, per-rank 1/W CPU update + optimizer SSD round trip, \
              parameter all-gather before the next forward",
         )
+        .flag(
+            "param-persist",
+            "model persistence-sharded master parameters: every update reads the full \
+             parameter bytes from SSD before Adam and writes them back after \
+             (split 1/W per rank under --shard-optimizer), mirroring the runtime's \
+             --param-persist store traffic",
+        )
         .parse_from(args)?;
     let sp = SystemParams::new(
         machine_by_name(&cli.get("machine").unwrap())?.with_gpus(cli.get_parsed("gpus")?),
@@ -338,13 +383,14 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
     let ssds: usize = cli.get_parsed("ssds")?;
     let cache_bytes = (cli.get_parsed::<u64>("cpu-cache-mb")?) << 20;
     let shard_optimizer = cli.has_flag("shard-optimizer");
+    let param_persist = cli.has_flag("param-persist");
     // only an explicit --precision changes the modeled byte widths; the
     // default keeps the sim's historical paper-width outputs bit-identical
     let byte_mults = match cli.get("precision") {
         Some(s) => ByteMults::for_precision(Precision::parse(&s)?),
         None => ByteMults::ONE,
     };
-    let r = if workers > 1 || ssds > 1 || shard_optimizer {
+    let r = if workers > 1 || ssds > 1 || shard_optimizer || param_persist {
         // the dist sim models each GPU as an explicit worker with its own
         // resources (tokens are global-M, SSD bandwidth per modeled device);
         // simulate_io instead folds n_gpus into its rates — mixing the two
@@ -360,6 +406,7 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
             ssds: ssds.max(1),
             io_depth,
             shard_optimizer,
+            param_persist,
             cache_bytes,
             byte_mults,
         };

@@ -333,6 +333,21 @@ impl TensorStore for CodecStore {
         self.inner.cache_stats()
     }
 
+    // epoch hooks forward to the (possibly journaling) layer below — the
+    // journal's undo records therefore hold encoded at-rest bytes, and
+    // rollback restores them byte-exactly under any policy
+    fn commit_epoch(&self) -> Result<()> {
+        self.inner.commit_epoch()
+    }
+
+    fn recover(&self) -> Result<()> {
+        self.inner.recover()
+    }
+
+    fn committed_epoch(&self) -> u64 {
+        self.inner.committed_epoch()
+    }
+
     fn put_f32(&self, key: &str, data: &[f32]) -> Result<()> {
         let codec = self.policy.codec_for_key(key);
         if codec == Codec::F32 {

@@ -4,6 +4,8 @@
 //! tier the coordinators do all their I/O through (single SSD, striped
 //! multi-SSD, DRAM-cached, or the multi-path [`store::PlannedStore`]
 //! planner — backend-bit-identical by contract), the
+//! [`store::JournalStore`] write-behind undo journal giving any backend
+//! epoch-grained crash consistency (`commit_epoch`/`recover`), the
 //! [`codec`] mixed-precision storage layer that encodes objects per
 //! [`tier::Category`] (two-tier equivalence: bit-identity at f32,
 //! tolerance-pinned at f16/bf16 — see `store.rs`), and the §5 pinned-buffer
@@ -20,8 +22,8 @@ pub use codec::{Codec, CodecStore, Precision, PrecisionPolicy};
 pub use pinned::PinnedPool;
 pub use ssd::SsdStorage;
 pub use store::{
-    path_weight, plan_shares, CacheCounters, CacheStats, CachedStore, PathId, PathStats,
-    PlannedConfig, PlannedStore, SsdBackend, StripedStore, TensorStore, TransferPlan,
+    path_weight, plan_shares, CacheCounters, CacheStats, CachedStore, JournalStore, PathId,
+    PathStats, PlannedConfig, PlannedStore, SsdBackend, StripedStore, TensorStore, TransferPlan,
 };
 pub use throttle::Throttle;
 pub use tier::Tier;

@@ -53,11 +53,17 @@
 //! (Σ path bytes == object bytes) — both pinned by
 //! `prop_planned_store_matches_ssd_backend` in `rust/tests/proptests.rs`.
 //!
-//! A fourth layer sits *above* the backends: [`super::codec::CodecStore`]
-//! applies a [`super::codec::PrecisionPolicy`] at the typed `put_f32` /
-//! `get_f32` boundary (`--precision {f32,mixed:f16,mixed:bf16}`), so every
-//! backend below it — including the cache's `Tier` capacity accounting —
-//! sees *encoded* bytes.
+//! Two layers sit *above* the backends. [`JournalStore`] (`--journal`)
+//! wraps any backend with epoch-grained crash consistency: an undo log
+//! (`gsj_undo_*` + `gsj_manifest`) captures each key's pre-image on its
+//! first write per epoch, `commit_epoch` seals the epoch behind a durable
+//! `gsj_epoch` marker, and `recover` rolls any in-flight epoch back to
+//! the last committed boundary — see its type docs for the exact object
+//! format and ordering protocol. [`super::codec::CodecStore`] applies a
+//! [`super::codec::PrecisionPolicy`] at the typed `put_f32` / `get_f32`
+//! boundary (`--precision {f32,mixed:f16,mixed:bf16}`), so every layer
+//! below it — the journal's undo records included — sees *encoded* bytes.
+//! Stack order is `CodecStore? → JournalStore? → CachedStore? → backend`.
 //!
 //! ## Two-tier equivalence contract
 //!
@@ -134,6 +140,30 @@ pub trait TensorStore: Send + Sync {
     /// Cache-tier counters; all-zero for backends without a cache.
     fn cache_stats(&self) -> CacheStats {
         CacheStats::default()
+    }
+
+    // Crash-consistency hooks (see [`JournalStore`]). -----------------------
+    //
+    // Plain backends are implicitly "always committed": every put is final,
+    // so the epoch is a constant 0 and commit/recover are no-ops. Only the
+    // journal layer (and wrappers above it, which must forward) override
+    // these.
+
+    /// Seal the current epoch: all writes since the previous commit become
+    /// the recovery point. No-op for non-journaling stores.
+    fn commit_epoch(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Roll the store back to the last committed epoch, undoing every
+    /// uncommitted write/delete. No-op for non-journaling stores.
+    fn recover(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Index of the last committed epoch (0 before any commit).
+    fn committed_epoch(&self) -> u64 {
+        0
     }
 
     // Typed helpers for the f32 tensors the trainer stores. ----------------
@@ -727,6 +757,285 @@ impl TensorStore for CachedStore {
 }
 
 // ---------------------------------------------------------------------------
+// JournalStore
+// ---------------------------------------------------------------------------
+
+/// What `recover` must do to roll one touched key back to the epoch
+/// boundary.
+enum Undo {
+    /// The key existed at epoch start; its prior bytes are saved under
+    /// `gsj_undo_{key}` — restore them.
+    Prior,
+    /// The key did not exist at epoch start — delete it.
+    Absent,
+}
+
+struct JournalState {
+    /// Last committed epoch (0 before any commit).
+    committed: u64,
+    /// Keys written or deleted in the in-flight epoch, with their undo
+    /// action. `BTreeMap` so the manifest serializes deterministically.
+    touched: BTreeMap<String, Undo>,
+}
+
+/// Write-behind undo journal: wraps any [`TensorStore`] with epoch-grained
+/// crash consistency (`--journal`).
+///
+/// ## Journal object format (all live in the inner store)
+///
+/// * `gsj_epoch` — 8 bytes, little-endian u64: the last **committed**
+///   epoch. Absent ⇒ epoch 0 (nothing committed yet).
+/// * `gsj_undo_{key}` — the byte image `{key}` had at the start of the
+///   in-flight epoch (written once, on the first touch of `{key}`).
+/// * `gsj_manifest` — UTF-8 text, first line `epoch {N}` naming the
+///   in-flight epoch, then one line per touched key in sorted order:
+///   `U {key}` (undo bytes saved — restore on rollback) or `N {key}`
+///   (new this epoch — delete on rollback). Rewritten on every first
+///   touch, deleted on commit.
+///
+/// ## Protocol
+///
+/// The first `put`/`delete` of each key per epoch saves the key's prior
+/// bytes (or records its absence) and re-serializes the manifest **before**
+/// the destructive write proceeds, so at any instant the inner store holds
+/// enough to reconstruct the last committed state. `commit_epoch` writes
+/// the bumped `gsj_epoch` marker FIRST and only then deletes the undo
+/// objects and manifest — a crash between the two leaves a stale manifest
+/// whose epoch is ≤ the marker, which `recover` recognizes as committed
+/// and merely cleans up. `recover` with a manifest *newer* than the marker
+/// rolls every touched key back (restore `Prior` bytes, delete `Absent`
+/// keys), leaving the store byte-identical to the last commit.
+///
+/// Keys with the `gsj_` prefix are the journal's own and bypass
+/// journaling; everything else is protected. The `store:tear_put` fault
+/// site simulates a crash mid-write by persisting only half the object
+/// and failing — exactly the corruption `recover` must undo.
+///
+/// Stacking: [`super::codec::CodecStore`] sits *above* this layer (it
+/// forwards the epoch methods), so undo records hold encoded at-rest
+/// bytes and rollback restores them byte-exactly regardless of precision
+/// policy. Cache layers sit *below*, so journal objects share the store's
+/// normal write-absorption path ("durable" here means "reached the store
+/// stack" — crashes are simulated by injected errors, not process death).
+pub struct JournalStore {
+    inner: Arc<dyn TensorStore>,
+    state: Mutex<JournalState>,
+    /// Scope qualifier for this store's fault-site names (test isolation;
+    /// see [`crate::util::fault::scoped`]). Empty in production.
+    fault_scope: String,
+}
+
+impl JournalStore {
+    const EPOCH_KEY: &'static str = "gsj_epoch";
+    const MANIFEST_KEY: &'static str = "gsj_manifest";
+
+    fn undo_key(key: &str) -> String {
+        format!("gsj_undo_{key}")
+    }
+
+    fn is_journal_key(key: &str) -> bool {
+        key.starts_with("gsj_")
+    }
+
+    /// Wrap `inner`, adopting any committed epoch marker already present
+    /// and rolling back any in-flight epoch left behind by a crash.
+    pub fn new(inner: Arc<dyn TensorStore>) -> Result<Self> {
+        let store = JournalStore {
+            inner,
+            state: Mutex::new(JournalState { committed: 0, touched: BTreeMap::new() }),
+            fault_scope: String::new(),
+        };
+        store.recover()?;
+        Ok(store)
+    }
+
+    /// Scope-qualify this store's fault-site names
+    /// ([`crate::util::fault::scoped`]): a test arming
+    /// `store:tear_put@{scope}` only tears puts through THIS store, not
+    /// through every journal a parallel test happens to be writing.
+    pub fn with_fault_scope(mut self, scope: &str) -> Self {
+        self.fault_scope = scope.to_string();
+        self
+    }
+
+    fn read_epoch(&self) -> Result<u64> {
+        if !self.inner.contains(Self::EPOCH_KEY) {
+            return Ok(0);
+        }
+        let mut raw = Vec::new();
+        self.inner.get(Self::EPOCH_KEY, &mut raw)?;
+        ensure!(
+            raw.len() == 8,
+            "journal: epoch marker is {} bytes, want 8",
+            raw.len()
+        );
+        let mut le = [0u8; 8];
+        le.copy_from_slice(&raw);
+        Ok(u64::from_le_bytes(le))
+    }
+
+    /// Save `key`'s pre-image (or record its absence) on its first touch
+    /// this epoch, and persist the updated manifest. Caller holds the
+    /// state lock; the destructive write must not proceed before this
+    /// returns.
+    fn record_undo(&self, st: &mut JournalState, key: &str) -> Result<()> {
+        if st.touched.contains_key(key) {
+            return Ok(());
+        }
+        let undo = if self.inner.contains(key) {
+            let mut prior = Vec::new();
+            self.inner.get(key, &mut prior)?;
+            self.inner.put(&Self::undo_key(key), &prior)?;
+            Undo::Prior
+        } else {
+            Undo::Absent
+        };
+        st.touched.insert(key.to_string(), undo);
+        self.write_manifest(st)
+    }
+
+    fn write_manifest(&self, st: &JournalState) -> Result<()> {
+        let mut text = format!("epoch {}\n", st.committed + 1);
+        for (k, u) in &st.touched {
+            text.push_str(match u {
+                Undo::Prior => "U ",
+                Undo::Absent => "N ",
+            });
+            text.push_str(k);
+            text.push('\n');
+        }
+        self.inner.put(Self::MANIFEST_KEY, text.as_bytes())
+    }
+}
+
+impl TensorStore for JournalStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        if Self::is_journal_key(key) {
+            return self.inner.put(key, data);
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            self.record_undo(&mut st, key)?;
+        }
+        if crate::util::fault::any_armed()
+            && crate::util::fault::should_fail(&crate::util::fault::scoped(
+                "store:tear_put",
+                &self.fault_scope,
+            ))
+        {
+            // simulated crash mid-write: half the object lands, then the
+            // "process dies" (the caller sees an error). recover() must
+            // restore the pre-image the lines above just saved.
+            self.inner.put(key, &data[..data.len() / 2])?;
+            bail!("injected fault: torn put of '{key}'");
+        }
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()> {
+        self.inner.get(key, out)
+    }
+
+    fn delete(&self, key: &str) -> bool {
+        if !Self::is_journal_key(key) {
+            let mut st = self.state.lock().unwrap();
+            // a delete whose undo cannot be saved must not proceed — it
+            // would be unrecoverable; the backing store failing here is
+            // as fatal as it failing anywhere else
+            self.record_undo(&mut st, key)
+                .expect("journal: save undo record for delete");
+        }
+        self.inner.delete(key)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn len_of(&self, key: &str) -> Option<u64> {
+        self.inner.len_of(key)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.inner.bytes_read()
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn footprint(&self) -> u64 {
+        self.inner.footprint()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
+    }
+
+    fn commit_epoch(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let next = st.committed + 1;
+        // ordering is the whole protocol: the epoch marker lands BEFORE
+        // the undo set is discarded, so a crash between the two reads as
+        // "committed, cleanup pending" — never as an in-flight epoch
+        self.inner.put(Self::EPOCH_KEY, &next.to_le_bytes())?;
+        let touched = std::mem::take(&mut st.touched);
+        for (k, u) in touched {
+            if matches!(u, Undo::Prior) {
+                self.inner.delete(&Self::undo_key(&k));
+            }
+        }
+        self.inner.delete(Self::MANIFEST_KEY);
+        st.committed = next;
+        Ok(())
+    }
+
+    fn recover(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        // the durable marker is the truth — an in-flight epoch never
+        // bumped it
+        st.committed = self.read_epoch()?;
+        if self.inner.contains(Self::MANIFEST_KEY) {
+            let mut raw = Vec::new();
+            self.inner.get(Self::MANIFEST_KEY, &mut raw)?;
+            let text = std::str::from_utf8(&raw)
+                .map_err(|e| anyhow!("journal: manifest is not UTF-8: {e}"))?;
+            let mut lines = text.lines();
+            let header = lines.next().unwrap_or("");
+            let epoch: u64 = header
+                .strip_prefix("epoch ")
+                .and_then(|n| n.parse().ok())
+                .ok_or_else(|| anyhow!("journal: bad manifest header '{header}'"))?;
+            let roll_back = epoch > st.committed;
+            for line in lines {
+                if let Some(key) = line.strip_prefix("U ") {
+                    let ukey = Self::undo_key(key);
+                    if roll_back {
+                        let mut prior = Vec::new();
+                        self.inner.get(&ukey, &mut prior)?;
+                        self.inner.put(key, &prior)?;
+                    }
+                    self.inner.delete(&ukey);
+                } else if let Some(key) = line.strip_prefix("N ") {
+                    if roll_back {
+                        self.inner.delete(key);
+                    }
+                } else {
+                    bail!("journal: bad manifest line '{line}'");
+                }
+            }
+            self.inner.delete(Self::MANIFEST_KEY);
+        }
+        st.touched.clear();
+        Ok(())
+    }
+
+    fn committed_epoch(&self) -> u64 {
+        self.state.lock().unwrap().committed
+    }
+}
+
+// ---------------------------------------------------------------------------
 // PlannedStore
 // ---------------------------------------------------------------------------
 
@@ -898,8 +1207,16 @@ pub struct PlannedStore {
     writes: AtomicU64,
     dram_read: AtomicU64,
     dram_written: AtomicU64,
+    /// Per-device attribution owned by the planner (NOT the devices' own
+    /// counters): committed only after a whole extent set succeeds, so a
+    /// failed put/get attributes nothing (see [`PlannedStore::put`]).
+    nvme_read: Vec<AtomicU64>,
+    nvme_written: Vec<AtomicU64>,
     remote_read: AtomicU64,
     remote_written: AtomicU64,
+    /// Scope qualifier for this store's fault-site names (test isolation;
+    /// see [`crate::util::fault::scoped`]). Empty in production.
+    fault_scope: String,
 }
 
 impl PlannedStore {
@@ -952,6 +1269,7 @@ impl PlannedStore {
             None
         };
         let gates = paths.iter().map(|_| PathGate::new(Self::PATH_DEPTH)).collect();
+        let n_dev = devices.len();
         Ok(PlannedStore {
             devices,
             tier: Tier::new("planned-dram", cfg.dram_capacity),
@@ -966,9 +1284,21 @@ impl PlannedStore {
             writes: AtomicU64::new(0),
             dram_read: AtomicU64::new(0),
             dram_written: AtomicU64::new(0),
+            nvme_read: (0..n_dev).map(|_| AtomicU64::new(0)).collect(),
+            nvme_written: (0..n_dev).map(|_| AtomicU64::new(0)).collect(),
             remote_read: AtomicU64::new(0),
             remote_written: AtomicU64::new(0),
+            fault_scope: String::new(),
         })
+    }
+
+    /// Scope-qualify this store's fault-site names
+    /// ([`crate::util::fault::scoped`]): a test arming
+    /// `planned:write@{scope}` only fails extent writes through THIS
+    /// store, not through every planned store a parallel test is using.
+    pub fn with_fault_scope(mut self, scope: &str) -> Self {
+        self.fault_scope = scope.to_string();
+        self
     }
 
     pub fn n_devices(&self) -> usize {
@@ -996,13 +1326,15 @@ impl PlannedStore {
     }
 
     /// Per-path byte counters — the attribution the whole-object trait
-    /// counters aggregate (`total_read() == bytes_read()` always).
+    /// counters aggregate (`total_read() == bytes_read()` always, INCLUDING
+    /// across failed operations: attribution commits only after a whole
+    /// extent set succeeds, never partially).
     pub fn path_stats(&self) -> PathStats {
         PathStats {
             dram_read: self.dram_read.load(Ordering::Relaxed),
             dram_written: self.dram_written.load(Ordering::Relaxed),
-            nvme_read: self.devices.iter().map(|d| d.bytes_read()).collect(),
-            nvme_written: self.devices.iter().map(|d| d.bytes_written()).collect(),
+            nvme_read: self.nvme_read.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            nvme_written: self.nvme_written.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
             remote_read: self.remote_read.load(Ordering::Relaxed),
             remote_written: self.remote_written.load(Ordering::Relaxed),
         }
@@ -1041,7 +1373,18 @@ impl PlannedStore {
         TransferPlan { len, extents }
     }
 
+    /// Move one extent. Byte attribution is NOT recorded here — the caller
+    /// commits the whole plan's attribution after every extent succeeds,
+    /// so a failed put never leaves partially-attributed counters.
     fn transfer_write(&self, key: &str, path_ix: usize, part: &[u8]) -> Result<()> {
+        if crate::util::fault::any_armed()
+            && crate::util::fault::should_fail(&crate::util::fault::scoped(
+                "planned:write",
+                &self.fault_scope,
+            ))
+        {
+            bail!("injected fault: planned extent write ('{key}', path {path_ix})");
+        }
         let _permit = self.gates[path_ix].acquire();
         match self.paths[path_ix] {
             PathId::Dram => {
@@ -1050,7 +1393,6 @@ impl PlannedStore {
                 }
                 self.dram_throttle.transfer(part.len() as u64);
                 self.state.lock().unwrap().dram.insert(key.to_string(), part.to_vec());
-                self.dram_written.fetch_add(part.len() as u64, Ordering::Relaxed);
             }
             PathId::Nvme(i) => {
                 // even an empty share is written: it clears any stale
@@ -1064,7 +1406,6 @@ impl PlannedStore {
                 let r = self.remote.as_ref().expect("remote path configured");
                 r.write.transfer(part.len() as u64);
                 r.objects.lock().unwrap().insert(key.to_string(), part.to_vec());
-                self.remote_written.fetch_add(part.len() as u64, Ordering::Relaxed);
             }
         }
         Ok(())
@@ -1088,7 +1429,6 @@ impl PlannedStore {
                     out.copy_from_slice(data);
                 }
                 self.dram_throttle.transfer(out.len() as u64);
-                self.dram_read.fetch_add(out.len() as u64, Ordering::Relaxed);
             }
             PathId::Nvme(i) => {
                 let mut buf = Vec::new();
@@ -1114,14 +1454,65 @@ impl PlannedStore {
                 );
                 r.read.transfer(out.len() as u64);
                 out.copy_from_slice(&data);
-                self.remote_read.fetch_add(out.len() as u64, Ordering::Relaxed);
             }
         }
         Ok(())
     }
+
+    /// Commit a whole plan's per-path byte attribution (called only after
+    /// every extent of an operation succeeded).
+    fn commit_attribution(&self, plan: &TransferPlan, write: bool) {
+        for (i, &e) in plan.extents.iter().enumerate() {
+            let (dram, nvme, remote) = if write {
+                (&self.dram_written, &self.nvme_written, &self.remote_written)
+            } else {
+                (&self.dram_read, &self.nvme_read, &self.remote_read)
+            };
+            match self.paths[i] {
+                PathId::Dram => dram.fetch_add(e, Ordering::Relaxed),
+                PathId::Nvme(d) => nvme[d].fetch_add(e, Ordering::Relaxed),
+                PathId::Remote => remote.fetch_add(e, Ordering::Relaxed),
+            };
+        }
+    }
+
+    /// Undo every trace of a failed `put`: the installed plan, the DRAM
+    /// reservation sized from it, and any extents that landed before the
+    /// failure. The key ends ABSENT — the old generation was already
+    /// destroyed when the new plan replaced it, and resurrecting stale
+    /// bytes would be worse than a clean miss (the [`JournalStore`] layer
+    /// above is what restores pre-images). Caller holds the exclusive
+    /// key lock.
+    fn rollback_failed_put(&self, key: &str) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(plan) = st.plans.remove(key) {
+                // release the reservation made at plan time — the DRAM
+                // extent itself may or may not have landed
+                let d = self.dram_extent(&plan);
+                if d > 0 {
+                    self.tier.release(d, category_of(key));
+                }
+            }
+            st.dram.remove(key);
+        }
+        if let Some(r) = &self.remote {
+            r.objects.lock().unwrap().remove(key);
+        }
+        for dev in &self.devices {
+            dev.delete(key);
+        }
+    }
 }
 
 impl TensorStore for PlannedStore {
+    /// Write an object across its plan's paths. **Failure contract:** if
+    /// any extent transfer fails, the whole put rolls back — the plan,
+    /// the DRAM reservation, and every landed extent are removed, no byte
+    /// is attributed to any counter (trait-level or [`PathStats`]), and
+    /// the key is left ABSENT (the previous generation was destroyed by
+    /// the plan replacement; crash-consistent restoration is the
+    /// [`JournalStore`] layer's job).
     fn put(&self, key: &str, data: &[u8]) -> Result<()> {
         let lock = self.key_lock(key);
         let _g = lock.write().unwrap();
@@ -1152,10 +1543,16 @@ impl TensorStore for PlannedStore {
             parts.push(a);
             rest = b;
         }
-        if len < Self::PARALLEL_MIN {
+        let failed = if len < Self::PARALLEL_MIN {
+            // sequential: stop at the first failing extent
+            let mut failed = None;
             for (i, part) in parts.iter().enumerate() {
-                self.transfer_write(key, i, part)?;
+                if let Err(e) = self.transfer_write(key, i, part) {
+                    failed = Some(e);
+                    break;
+                }
             }
+            failed
         } else {
             let results: Vec<Result<()>> = std::thread::scope(|s| {
                 let handles: Vec<_> = parts
@@ -1165,10 +1562,16 @@ impl TensorStore for PlannedStore {
                     .collect();
                 handles.into_iter().map(|h| h.join().expect("planned put thread")).collect()
             });
-            for r in results {
-                r?;
-            }
+            results.into_iter().find_map(|r| r.err())
+        };
+        if let Some(e) = failed {
+            self.rollback_failed_put(key);
+            return Err(e.context(format!(
+                "planned store: put '{key}' failed; rolled back to absent"
+            )));
         }
+        // every extent landed: commit attribution as one unit
+        self.commit_attribution(&plan, true);
         self.writes.fetch_add(len, Ordering::Relaxed);
         Ok(())
     }
@@ -1208,6 +1611,9 @@ impl TensorStore for PlannedStore {
                 r?;
             }
         }
+        // all extents arrived: commit attribution as one unit (a failed
+        // read attributes nothing, mirroring the put contract)
+        self.commit_attribution(&plan, false);
         self.reads.fetch_add(plan.len, Ordering::Relaxed);
         Ok(())
     }
@@ -1720,5 +2126,199 @@ mod tests {
         assert_eq!(category_of("opt_m_l0_t1_e"), Category::OptimizerStates);
         assert_eq!(category_of("ilc_ckpt_l0_mb2"), Category::Checkpoints);
         assert_eq!(category_of("misc"), Category::Working);
+    }
+
+    /// Satellite regression: a dirty entry deleted before any write-back
+    /// must never be resurrected into the inner store by a later flush —
+    /// and the concurrent shape (deleters racing miss-fills and flushers)
+    /// must converge to the same answer.
+    #[test]
+    fn cached_store_deleted_dirty_entry_never_resurrects() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_res")).unwrap());
+        let cache = Arc::new(CachedStore::new(Arc::clone(&inner), 1 << 16));
+        // deterministic single-threaded hammer: dirty put → delete → flush
+        for i in 0..50usize {
+            let k = format!("opt_res{i}");
+            cache.put(&k, &vec![i as u8; 256]).unwrap();
+            assert!(cache.delete(&k));
+            cache.flush().unwrap();
+            assert!(!inner.contains(&k), "flush resurrected deleted dirty '{k}'");
+            assert!(!cache.contains(&k));
+            let mut out = Vec::new();
+            assert!(cache.get(&k, &mut out).is_err());
+        }
+        // concurrent hammer on one hot key: writers put+delete, readers
+        // tolerate absence, a flusher runs throughout
+        let mut handles: Vec<_> = (0..4u8)
+            .map(|t| {
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || {
+                    for i in 0..60usize {
+                        cache.put("opt_hot", &vec![t; 64 + i % 32]).unwrap();
+                        cache.delete("opt_hot");
+                        if i % 8 == 0 {
+                            cache.flush().unwrap();
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles.push({
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || {
+                for _ in 0..120 {
+                    let mut out = Vec::new();
+                    if cache.get("opt_hot", &mut out).is_ok() {
+                        assert!(
+                            !out.is_empty() && out.iter().all(|&b| b == out[0]),
+                            "torn read: {out:?}"
+                        );
+                    }
+                }
+            })
+        });
+        for h in handles {
+            h.join().expect("hammer thread");
+        }
+        // final state: delete + flush leaves the key absent EVERYWHERE
+        cache.delete("opt_hot");
+        cache.flush().unwrap();
+        assert!(!cache.contains("opt_hot"));
+        assert!(!inner.contains("opt_hot"), "delete-then-flush resurrected the key");
+    }
+
+    /// Satellite regression: a put that fails mid-extent-set must leave no
+    /// trace — no partial byte attribution (trait counters or PathStats),
+    /// no leaked DRAM reservation, no torn object — and a retry must land
+    /// cleanly.
+    #[test]
+    fn planned_failed_put_rolls_back_completely() {
+        let cfg = PlannedConfig {
+            nvme: vec![(f64::INFINITY, f64::INFINITY); 2],
+            dram_capacity: 1 << 20,
+            dram_bps: 0.0,
+            remote_bps: 50e6,
+        };
+        // 8 KB objects < PARALLEL_MIN → sequential extents → the n-th
+        // armed hit picks a deterministic failing extent; the fault scope
+        // keeps parallel PlannedStore users from absorbing the arms
+        let s = planned("fail_put", &cfg).with_fault_scope("t_fail_put");
+        let site = crate::util::fault::scoped("planned:write", "t_fail_put");
+        s.put("a", &vec![1u8; 8_000]).unwrap();
+        let written0 = s.bytes_written();
+        let stats0 = s.path_stats();
+        let dram0 = s.dram_bytes();
+        // fail the SECOND extent (first NVMe device): the DRAM extent has
+        // already landed and must be rolled back with its reservation
+        crate::util::fault::arm(&site, 1);
+        let err = s.put("b", &vec![2u8; 8_000]).unwrap_err().to_string();
+        assert!(err.contains("injected fault"), "{err}");
+        assert_eq!(s.bytes_written(), written0, "failed put attributed bytes");
+        assert_eq!(s.path_stats(), stats0, "failed put left partial PathStats");
+        assert_eq!(s.dram_bytes(), dram0, "failed put leaked a DRAM reservation");
+        assert!(!s.contains("b"), "failed put left a plan behind");
+        assert_eq!(s.len_of("b"), None);
+        let mut out = Vec::new();
+        assert!(s.get("b", &mut out).is_err());
+        // the armed site is one-shot: the retry lands whole
+        s.put("b", &vec![2u8; 8_000]).unwrap();
+        s.get("b", &mut out).unwrap();
+        assert_eq!(out, vec![2u8; 8_000]);
+        assert_eq!(s.bytes_written(), written0 + 8_000);
+        assert_eq!(s.path_stats().total_written(), written0 + 8_000);
+        // overwrite failure rolls back to ABSENT (the old generation is
+        // destroyed by the plan replacement — documented contract)
+        crate::util::fault::arm(&site, 0);
+        assert!(s.put("a", &vec![3u8; 100]).is_err());
+        assert!(!s.contains("a"));
+        // "a"'s DRAM extent reservation must also have been released:
+        // only "b"'s extent remains resident
+        assert_eq!(s.dram_bytes(), s.plan_of("b").map(|p| p.extents[0]).unwrap());
+    }
+
+    #[test]
+    fn journal_commit_then_crash_rolls_back_to_epoch_boundary() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("jrnl")).unwrap());
+        let j = JournalStore::new(Arc::clone(&inner)).unwrap();
+        assert_eq!(j.committed_epoch(), 0);
+        j.put("k1", b"v1").unwrap();
+        j.put("k2", b"v2").unwrap();
+        j.commit_epoch().unwrap();
+        assert_eq!(j.committed_epoch(), 1);
+        // epoch 2 in flight: overwrite k1, delete k2, create k3
+        j.put("k1", b"V1B").unwrap();
+        assert!(j.delete("k2"));
+        j.put("k3", b"v3").unwrap();
+        assert!(!j.contains("k2") && j.contains("k3"));
+        // "crash" before commit → recover restores the epoch-1 image
+        j.recover().unwrap();
+        assert_eq!(j.committed_epoch(), 1);
+        let mut out = Vec::new();
+        j.get("k1", &mut out).unwrap();
+        assert_eq!(out, b"v1");
+        j.get("k2", &mut out).unwrap();
+        assert_eq!(out, b"v2");
+        assert!(!j.contains("k3"), "uncommitted new key survived recovery");
+        // no journal residue
+        assert!(!inner.contains("gsj_manifest"));
+        assert!(!inner.contains("gsj_undo_k1"));
+        assert!(!inner.contains("gsj_undo_k2"));
+        // the redo commits cleanly, and recover after commit is a no-op
+        j.put("k1", b"V1B").unwrap();
+        j.delete("k2");
+        j.commit_epoch().unwrap();
+        assert_eq!(j.committed_epoch(), 2);
+        j.recover().unwrap();
+        assert_eq!(j.committed_epoch(), 2);
+        j.get("k1", &mut out).unwrap();
+        assert_eq!(out, b"V1B");
+        assert!(!j.contains("k2"));
+    }
+
+    #[test]
+    fn journal_torn_put_restores_prior_bytes() {
+        let j = JournalStore::new(Arc::new(
+            SsdStorage::create_unthrottled(tmp("jrnl_tear")).unwrap(),
+        ))
+        .unwrap()
+        .with_fault_scope("t_tear");
+        j.put("t", &[1u8; 100]).unwrap();
+        j.commit_epoch().unwrap();
+        crate::util::fault::arm(&crate::util::fault::scoped("store:tear_put", "t_tear"), 0);
+        let err = j.put("t", &[2u8; 100]).unwrap_err().to_string();
+        assert!(err.contains("torn put"), "{err}");
+        // pre-recovery the torn half IS visible — that's the simulated
+        // crash damage
+        let mut out = Vec::new();
+        j.get("t", &mut out).unwrap();
+        assert_eq!(out, vec![2u8; 50]);
+        j.recover().unwrap();
+        j.get("t", &mut out).unwrap();
+        assert_eq!(out, vec![1u8; 100], "recovery must restore the pre-image");
+    }
+
+    /// A new JournalStore over a store that already holds a committed
+    /// epoch marker and a stale in-flight manifest adopts the marker and
+    /// rolls the in-flight epoch back (the reopen-after-crash path).
+    #[test]
+    fn journal_reopen_adopts_marker_and_rolls_back() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("jrnl_reopen")).unwrap());
+        {
+            let j = JournalStore::new(Arc::clone(&inner)).unwrap();
+            j.put("k", b"committed").unwrap();
+            j.commit_epoch().unwrap();
+            j.put("k", b"in-flight").unwrap();
+            // dropped without commit: manifest + undo left in the inner
+        }
+        assert!(inner.contains("gsj_manifest"));
+        let j2 = JournalStore::new(Arc::clone(&inner)).unwrap();
+        assert_eq!(j2.committed_epoch(), 1);
+        let mut out = Vec::new();
+        j2.get("k", &mut out).unwrap();
+        assert_eq!(out, b"committed");
+        assert!(!inner.contains("gsj_manifest"));
     }
 }

@@ -151,6 +151,20 @@ impl ClipMonitor {
         self.pending_scale
     }
 
+    /// Snapshot `(pending_scale, violations)` at an iteration boundary —
+    /// the part of the clip state that must survive a crash/recovery cycle
+    /// (the in-flight `sq_sum` is always 0 at a committed boundary).
+    pub fn snapshot(&self) -> (f32, u64) {
+        (self.pending_scale, self.violations)
+    }
+
+    /// Restore a boundary snapshot taken by [`ClipMonitor::snapshot`].
+    pub fn restore(&mut self, pending_scale: f32, violations: u64) {
+        self.pending_scale = pending_scale;
+        self.violations = violations;
+        self.sq_sum = 0.0;
+    }
+
     /// Finish the iteration: returns the global norm and updates the
     /// corrective scale for the next one.
     pub fn finish_iter(&mut self) -> f64 {

@@ -57,6 +57,12 @@ pub struct DistConfig {
     /// ZeRO-style sharded optimizer states: reduce-scatter + per-rank
     /// update + parameter all-gather instead of the rank-0 optimizer.
     pub shard_optimizer: bool,
+    /// Persistence-sharded master parameters (the runtime `--param-persist`
+    /// mirror): every update round-trips the rank's parameter shard through
+    /// the store — a full p read before and p write after the Adam op
+    /// (÷W per rank in sharded mode), regardless of the placement ratios'
+    /// `param_cpu` (master parameters live on the store, not the host).
+    pub param_persist: bool,
     /// Modeled CPU-DRAM cache tier, bytes (the runtime `--cpu-cache-mb`
     /// mirror): when the schedule's SSD-resident working set fits, its
     /// traffic is served from DRAM — the same fit-or-nothing law
@@ -76,6 +82,7 @@ impl Default for DistConfig {
             ssds: 1,
             io_depth: usize::MAX,
             shard_optimizer: false,
+            param_persist: false,
             cache_bytes: 0,
             byte_mults: ByteMults::ONE,
         }
@@ -199,6 +206,13 @@ fn build_and_run(
     );
     let (p, g, o, c) = (sp.p_lp(), sp.g_fp(), sp.o_bytes(), sp.c_bytes());
     let w_f = w_n as f64; // optimizer shard divisor (sharded mode)
+    // --param-persist byte deltas at every update site: the master-parameter
+    // shard is READ from the store before the Adam op (p_rd) and the updated
+    // shard written back after (p_wr replaces the placement-scaled write) —
+    // the store is the parameter home, so `x.param_cpu` no longer discounts
+    // the update-side parameter bytes.
+    let p_rd = if cfg.param_persist { p } else { 0.0 };
+    let p_wr = if cfg.param_persist { p } else { (1.0 - x.param_cpu) * p };
 
     let parts = partition(m as usize, w_n);
     let active: Vec<usize> = (0..w_n).filter(|&w| !parts[w].is_empty()).collect();
@@ -246,28 +260,30 @@ fn build_and_run(
                 }
                 if shard {
                     for rk in 0..w_n {
-                        let ord =
-                            sim.op(ssd_r(rk), alpha * (1.0 - x.opt_cpu) * o / w_f / r, &[]);
+                        let ord = sim.op(
+                            ssd_r(rk),
+                            alpha * ((1.0 - x.opt_cpu) * o + p_rd) / w_f / r,
+                            &[],
+                        );
                         let mut adeps = prev_grad_ready[l].clone();
                         adeps.push(ord);
                         let ad = sim.op(cpu(rk), alpha * sp.t_adam_layer() / w_f, &adeps);
                         sim.op(
                             ssd_w(rk),
-                            alpha * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p)
-                                / w_f
-                                / wbw,
+                            alpha * ((1.0 - x.opt_cpu) * o + p_wr) / w_f / wbw,
                             &[ad],
                         );
                         delayed_ops[l].push(ad);
                     }
                 } else {
-                    let ord = sim.op(ssd_r(0), alpha * (1.0 - x.opt_cpu) * o / r, &[]);
+                    let ord =
+                        sim.op(ssd_r(0), alpha * ((1.0 - x.opt_cpu) * o + p_rd) / r, &[]);
                     let mut adeps = prev_grad_ready[l].clone();
                     adeps.push(ord);
                     let ad = sim.op(cpu(0), alpha * sp.t_adam_layer(), &adeps);
                     sim.op(
                         ssd_w(0),
-                        alpha * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p) / wbw,
+                        alpha * ((1.0 - x.opt_cpu) * o + p_wr) / wbw,
                         &[ad],
                     );
                     delayed_ops[l].push(ad);
@@ -364,7 +380,7 @@ fn build_and_run(
                     .map(|rk| {
                         let ord = sim.op(
                             ssd_r(rk),
-                            (1.0 - alpha) * (1.0 - x.opt_cpu) * o / w_f / r,
+                            (1.0 - alpha) * ((1.0 - x.opt_cpu) * o + p_rd) / w_f / r,
                             &[],
                         );
                         let ad = sim.op(
@@ -374,10 +390,7 @@ fn build_and_run(
                         );
                         sim.op(
                             ssd_w(rk),
-                            (1.0 - alpha)
-                                * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p)
-                                / w_f
-                                / wbw,
+                            (1.0 - alpha) * ((1.0 - x.opt_cpu) * o + p_wr) / w_f / wbw,
                             &[ad],
                         );
                         ad
@@ -397,13 +410,14 @@ fn build_and_run(
                     .iter()
                     .map(|&w| sim.op(link(w), allreduce_frac * g / lbw, &offs))
                     .collect();
-                let ord = sim.op(ssd_r(0), (1.0 - alpha) * (1.0 - x.opt_cpu) * o / r, &[]);
+                let ord =
+                    sim.op(ssd_r(0), (1.0 - alpha) * ((1.0 - x.opt_cpu) * o + p_rd) / r, &[]);
                 let mut adeps = legs.clone();
                 adeps.push(ord);
                 let ad = sim.op(cpu(0), (1.0 - alpha) * sp.t_adam_layer(), &adeps);
                 sim.op(
                     ssd_w(0),
-                    (1.0 - alpha) * ((1.0 - x.opt_cpu) * o + (1.0 - x.param_cpu) * p) / wbw,
+                    (1.0 - alpha) * ((1.0 - x.opt_cpu) * o + p_wr) / wbw,
                     &[ad],
                 );
                 prev_update[l] = vec![ad];
@@ -599,6 +613,29 @@ mod tests {
                     "α={alpha} shard={shard}"
                 );
             }
+        }
+    }
+
+    /// The `--param-persist` mirror: with everything host-resident except
+    /// the round-tripping master parameters, persistence strictly costs
+    /// SSD time over the in-place host update, and both optimizer modes
+    /// build and run with it.
+    #[test]
+    fn param_persist_adds_ssd_round_trips() {
+        let sp = sp();
+        let x = StorageRatios::ALL_CPU;
+        let base = simulate_dist(&sp, 16, gs(x), cfg(2, 1)).t_iter;
+        let pp =
+            simulate_dist(&sp, 16, gs(x), DistConfig { param_persist: true, ..cfg(2, 1) })
+                .t_iter;
+        assert!(
+            pp > base * 1.01,
+            "param persistence {pp} must cost SSD time over host-resident {base}"
+        );
+        for shard in [false, true] {
+            let c = DistConfig { param_persist: true, shard_optimizer: shard, ..cfg(2, 2) };
+            let r = simulate_dist(&sp, 8, gs(x), c);
+            assert!(r.t_iter.is_finite() && r.t_iter > 0.0, "shard={shard}");
         }
     }
 

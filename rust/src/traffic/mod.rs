@@ -336,6 +336,32 @@ impl Workload {
         self.opt_ssd_round_trip_bytes().div_ceil(workers.max(1))
     }
 
+    /// Master-parameter f32 bytes per shard — the persisted parameter
+    /// state `--param-persist` keeps on SSD (the reproduction substrate's
+    /// master params are f32, so this equals [`Workload::grad_fp`]; the
+    /// manifest-dependent embedding/head group rides the same ~1/W law but
+    /// is outside the model-zoo forms).
+    pub fn param_state_bytes(&self) -> u64 {
+        self.model.n_layers * self.model.params_per_layer() * BYTES_FP / self.shards
+    }
+
+    /// Per-iteration parameter-persistence SSD round trip under
+    /// `--param-persist`: every master-parameter byte is read before the
+    /// update and its updated value written back after → 2·p·N (f32).
+    /// Without sharding ONE rank moves all of it.
+    pub fn param_ssd_round_trip_bytes(&self) -> u64 {
+        2 * self.param_state_bytes()
+    }
+
+    /// Per-RANK parameter-persistence SSD round trip under
+    /// `--shard-optimizer --param-persist`: each rank round-trips only its
+    /// ~1/W parameter shard (total ⧸ W rounded up) — the ~1/W scaling the
+    /// fig17_elastic bench pins against the runtime's per-rank
+    /// `ParamShardCounters`.
+    pub fn sharded_param_ssd_bytes_per_rank(&self, workers: u64) -> u64 {
+        self.param_ssd_round_trip_bytes().div_ceil(workers.max(1))
+    }
+
     // ---- CPU-DRAM cache tier (closed forms shared by runtime + sim) ------
 
     /// SSD-resident working set of one iteration under placement shares
@@ -781,6 +807,28 @@ mod tests {
         let small = Workload { m: 2, ..w };
         assert_eq!(small.reduce_scatter_bytes_total(8), 7 * small.grad_fp());
         assert_eq!(small.allreduce_bytes_total(8), 2 * small.grad_fp());
+    }
+
+    /// `--param-persist` closed forms: master params are f32 (= grad_fp),
+    /// the round trip reads + writes every byte once, and sharding divides
+    /// the per-rank round trip ~1/W (ceil) — the law fig17_elastic pins
+    /// against the runtime's per-rank `ParamShardCounters`.
+    #[test]
+    fn param_persist_round_trip_scales_inverse_w() {
+        let w = wl(16);
+        assert_eq!(w.param_state_bytes(), w.grad_fp());
+        let full = w.param_ssd_round_trip_bytes();
+        assert_eq!(full, 2 * w.param_state_bytes());
+        assert_eq!(w.sharded_param_ssd_bytes_per_rank(1), full);
+        for workers in [2u64, 3, 4, 8] {
+            let per = w.sharded_param_ssd_bytes_per_rank(workers);
+            assert_eq!(per, full.div_ceil(workers), "W={workers}");
+            // ceil never under-counts and over-counts by < W bytes total
+            assert!(per * workers >= full && per * workers < full + workers);
+        }
+        // model-parallel shards divide the persisted parameter state too
+        let w4 = Workload { shards: 4, ..w };
+        assert_eq!(w4.param_state_bytes() * 4, w.param_state_bytes());
     }
 
     /// The DRAM cache tier's fit-or-nothing law and its working-set

@@ -11,10 +11,15 @@
 
 use anyhow::{bail, Result};
 
+use std::sync::Arc;
+
 use crate::coordinator::schedule::{
     CacheSweepSchedule, ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,
 };
-use crate::coordinator::{DataParallelEngine, ModelState, StepEngine, StepStats, TrainerConfig};
+use crate::coordinator::{
+    DataParallelEngine, ModelState, OptimizerStepCoordinator, StepEngine, StepStats, TrainerConfig,
+};
+use crate::memory::store::TensorStore;
 use crate::perfmodel::StorageRatios;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::TokenTensor;
@@ -222,6 +227,17 @@ pub struct RunLog {
     /// Σx² over all optimizer moments (CPU- or SSD-resident) after the
     /// final drain — same role as `param_sq_norm`.
     pub moment_sq_norm: f64,
+    /// Journal recoveries performed (`--journal`): failed steps replayed
+    /// from the last committed epoch boundary. 0 on a clean run; the
+    /// kill-a-worker suite asserts the recovered run's losses and digests
+    /// are bit-identical to an uninterrupted one.
+    pub recoveries: u64,
+    /// Per-rank parameter-shard store bytes READ under `--param-persist`
+    /// (one entry per rank; empty without param persistence) — the runtime
+    /// evidence of the ~1/W per-rank round-trip scaling.
+    pub param_shard_reads: Vec<u64>,
+    /// Per-rank parameter-shard store bytes WRITTEN under `--param-persist`.
+    pub param_shard_writes: Vec<u64>,
 }
 
 impl RunLog {
@@ -267,20 +283,68 @@ pub fn train(
         Single(StepEngine<'a>),
         Dist(DataParallelEngine<'a>),
     }
+    impl Driver<'_> {
+        fn opt(&self) -> Arc<OptimizerStepCoordinator> {
+            match self {
+                Driver::Single(e) => Arc::clone(&e.opt),
+                Driver::Dist(e) => Arc::clone(&e.opt),
+            }
+        }
+        fn set_steps_done(&mut self, n: u64) {
+            match self {
+                Driver::Single(e) => e.set_steps_done(n),
+                Driver::Dist(e) => e.set_steps_done(n),
+            }
+        }
+    }
+    /// Per-step cap on journal recovery retries — a fault that persists
+    /// across replays of the same boundary is a real failure, not a crash.
+    const MAX_RECOVERY_RETRIES: u32 = 3;
+    if cfg.param_persist && !cfg.opt_on_ssd {
+        bail!("--param-persist requires --opt-on-ssd: the store is the master-parameter home");
+    }
+    if cfg.journal && !(cfg.param_persist && cfg.opt_on_ssd) {
+        bail!(
+            "--journal recovery requires --param-persist and --opt-on-ssd, which make the \
+             store the single source of truth a rollback can restore from"
+        );
+    }
     let shape = manifest.config;
     let rt = Runtime::load(&manifest)?;
     let state = ModelState::init(manifest, cfg)?;
     let mut corpus = SyntheticCorpus::new(shape.vocab, state.cfg.seed);
     let workers = state.cfg.workers.max(1);
+    let journal = state.cfg.journal;
     // worker_stall_s grows to the per-step ACTIVE worker count on first use
     let mut log = RunLog::default();
 
     let policy = kind.policy();
-    let mut driver = if workers <= 1 {
-        Driver::Single(StepEngine::new(&state, &rt)?)
-    } else {
-        Driver::Dist(DataParallelEngine::new(&state, &rt, workers)?)
+    fn build_driver<'a>(
+        state: &'a ModelState,
+        rt: &'a Runtime,
+        workers: usize,
+    ) -> Result<Driver<'a>> {
+        Ok(if workers <= 1 {
+            Driver::Single(StepEngine::new(state, rt)?)
+        } else {
+            Driver::Dist(DataParallelEngine::new(state, rt, workers)?)
+        })
+    }
+    // epoch boundary: everything this step's replay must see is on the store
+    let commit_boundary = |driver: &Driver<'_>| -> Result<()> {
+        let opt = driver.opt();
+        opt.quiesce();
+        opt.persist_resume_state(&state)?;
+        state.store.commit_epoch()
     };
+    // Option so recovery can drop the wounded driver (joining its lane
+    // threads and draining the optimizer pool) BEFORE rolling the store
+    // back — no in-flight task may write behind the rollback.
+    let mut driver: Option<Driver<'_>> = Some(build_driver(&state, &rt, workers)?);
+    if journal {
+        // epoch 0: the freshly seeded initial state is the first boundary
+        commit_boundary(driver.as_ref().expect("driver"))?;
+    }
     for s in 0..steps {
         let mut toks = Vec::with_capacity(m);
         let mut tgts = Vec::with_capacity(m);
@@ -290,17 +354,53 @@ pub fn train(
             tgts.push(b);
         }
         let t0 = std::time::Instant::now();
-        let (stats, per_worker): (StepStats, Vec<f64>) = match &mut driver {
-            Driver::Single(engine) => {
-                let st = engine.step(policy.as_ref(), &toks, &tgts)?;
-                let stall = st.io_stall_s;
-                (st, vec![stall])
-            }
-            Driver::Dist(engine) => {
-                let d = engine.step(policy.as_ref(), &toks, &tgts)?;
-                (d.stats, d.worker_stall_s)
+        let mut attempts = 0u32;
+        let (stats, per_worker): (StepStats, Vec<f64>) = loop {
+            let result: Result<(StepStats, Vec<f64>)> =
+                match driver.as_mut().expect("driver present") {
+                    Driver::Single(engine) => engine.step(policy.as_ref(), &toks, &tgts).map(|st| {
+                        let stall = st.io_stall_s;
+                        (st, vec![stall])
+                    }),
+                    Driver::Dist(engine) => engine
+                        .step(policy.as_ref(), &toks, &tgts)
+                        .map(|d| (d.stats, d.worker_stall_s)),
+                };
+            match result {
+                Ok(r) => break r,
+                Err(e) => {
+                    if !journal || attempts >= MAX_RECOVERY_RETRIES {
+                        return Err(e.context(format!("step {s} failed")));
+                    }
+                    attempts += 1;
+                    log.recoveries += 1;
+                    if log_every > 0 {
+                        println!(
+                            "step {s:>5}  recovering from mid-step failure \
+                             (attempt {attempts}/{MAX_RECOVERY_RETRIES}): {e:#}"
+                        );
+                    }
+                    // 1. Tear the wounded driver down completely: dropping it
+                    //    joins the lane threads and drains the optimizer pool.
+                    driver = None;
+                    // 2. Roll the store back to the last committed epoch.
+                    state.store.recover()?;
+                    // 3. Rebuild (seed_ssd is contains-guarded, so the rolled
+                    //    back state is not overwritten) and restore the host
+                    //    half: step counter, clip/held/embed snapshot, and
+                    //    the layer params from the persisted shards.
+                    let mut d = build_driver(&state, &rt, workers)?;
+                    d.set_steps_done(s);
+                    d.opt().restore_resume_state(&state)?;
+                    state.load_params_from_shards()?;
+                    driver = Some(d);
+                    // 4. Retry the SAME batch (the loss curve must replay).
+                }
             }
         };
+        if journal {
+            commit_boundary(driver.as_ref().expect("driver"))?;
+        }
         let dt = t0.elapsed().as_secs_f64();
         log.losses.push(stats.loss);
         log.grad_norms.push(stats.grad_norm);
@@ -334,17 +434,19 @@ pub fn train(
             );
         }
     }
-    match &mut driver {
+    match driver.as_mut().expect("driver present") {
         Driver::Single(engine) => engine.drain()?,
         Driver::Dist(engine) => engine.drain()?,
     }
+    if state.cfg.param_persist {
+        let opt = driver.as_ref().expect("driver").opt();
+        log.param_shard_reads = opt.param_counters.read_by_rank();
+        log.param_shard_writes = opt.param_counters.written_by_rank();
+    }
     log.param_sq_norm = state.param_sq_norm();
     log.moment_sq_norm = state.moment_sq_norm()?;
-    {
-        use crate::memory::store::TensorStore;
-        for (cat, c) in &state.store.cache_stats().by_cat {
-            log.cache_by_cat.push((format!("{cat:?}"), [c.hits, c.misses, c.evictions]));
-        }
+    for (cat, c) in &state.store.cache_stats().by_cat {
+        log.cache_by_cat.push((format!("{cat:?}"), [c.hits, c.misses, c.evictions]));
     }
     Ok(log)
 }
@@ -438,6 +540,54 @@ mod tests {
             assert_eq!(kind.to_string().parse::<ScheduleKind>().unwrap(), kind);
             assert_eq!(kind.policy().name(), kind.to_string());
         }
+    }
+
+    /// A `--journal` run that loses a "worker" mid-run (injected fault at
+    /// the delayed-dispatch site) replays the failed step from the last
+    /// committed epoch boundary and ends bit-identical to an uninterrupted
+    /// run: same loss curve, same Σx² digests.
+    #[test]
+    fn journal_recovery_replays_bit_identical() {
+        let mk = |tag: &str| {
+            let mut c = cfg(tag);
+            c.opt_on_ssd = true;
+            c.param_persist = true;
+            c.journal = true;
+            c
+        };
+        let Some(m1) = crate::runtime::test_artifacts("artifacts/tiny") else { return };
+        let clean = train(m1, mk("jr-clean"), ScheduleKind::Vertical, 4, 2, 0).unwrap();
+        assert_eq!(clean.recoveries, 0);
+
+        let m2 = crate::runtime::test_artifacts("artifacts/tiny").unwrap();
+        let c = mk("jr-fault");
+        // dispatch_delayed runs once per step: hit 2 = the start of step 2.
+        // The site is scoped to this config so parallel tests exercising
+        // dispatch_delayed can neither consume the arm nor absorb the fault.
+        crate::util::fault::arm(&crate::util::fault::scoped("opt:delayed", &c.fault_scope), 2);
+        let faulted = train(m2, c, ScheduleKind::Vertical, 4, 2, 0).unwrap();
+        assert_eq!(faulted.recoveries, 1, "the injected fault must trigger recovery");
+        assert_eq!(clean.losses, faulted.losses, "replayed loss curve must be unchanged");
+        assert_eq!(clean.grad_norms, faulted.grad_norms);
+        assert_eq!(clean.param_sq_norm.to_bits(), faulted.param_sq_norm.to_bits());
+        assert_eq!(clean.moment_sq_norm.to_bits(), faulted.moment_sq_norm.to_bits());
+    }
+
+    /// `--journal` without the store-of-truth flags must refuse to run, and
+    /// `--param-persist` without SSD-resident moments likewise.
+    #[test]
+    fn journal_config_prerequisites_enforced() {
+        let Some(manifest) = crate::runtime::test_artifacts("artifacts/tiny") else { return };
+        let mut c = cfg("jr-bad");
+        c.journal = true;
+        let err = train(manifest, c, ScheduleKind::Vertical, 1, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("--journal"), "{err:#}");
+
+        let Some(manifest) = crate::runtime::test_artifacts("artifacts/tiny") else { return };
+        let mut c = cfg("pp-bad");
+        c.param_persist = true;
+        let err = train(manifest, c, ScheduleKind::Vertical, 1, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("--param-persist"), "{err:#}");
     }
 
     /// Regression: both metrics used to panic / return NaN on `steps == 0`.

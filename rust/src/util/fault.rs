@@ -1,0 +1,155 @@
+//! Deterministic fault-injection registry for crash/recovery testing.
+//!
+//! Tests (and the `GS_TEST_FAULT` CI leg) *arm* a named site to fail on its
+//! n-th hit; production code *checks* sites at a handful of crash-relevant
+//! points — lane op execution ([`crate::exec::lanes::LaneExecutor`]), the
+//! post-reduce-scatter boundary in
+//! [`crate::coordinator::dist::DataParallelEngine`], the delayed optimizer
+//! dispatch, and store `put` paths (torn writes in the journal layer, extent
+//! failures in [`crate::memory::store::PlannedStore`]).
+//!
+//! Design constraints:
+//! * **Zero cost when disarmed** — `should_fail` is a single relaxed atomic
+//!   load when nothing is armed, so the hooks are compiled into release
+//!   builds and exercised by integration tests without a test-only cfg.
+//! * **One-shot and deterministic** — an armed site fires exactly once, on
+//!   its n-th matching hit (0-based), then disarms itself. Recovery retries
+//!   therefore succeed without the test having to race a disarm call.
+//! * **Process-global** — faults cross thread boundaries (lane workers, the
+//!   optimizer pool), which is the point: the "crash" lands wherever the
+//!   victim code runs. Hooks on production paths shared by many parallel
+//!   tests check scope-qualified names ([`scoped`], fed from
+//!   `TrainerConfig::fault_scope` or a store's `with_fault_scope`), so
+//!   each test arms sites only its own objects can hit; bare-name sites
+//!   are reserved for tests that own the hooked object outright (e.g. a
+//!   uniquely named lane).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+struct Arm {
+    /// Fire on the `nth` matching `should_fail` call (0-based).
+    nth: u64,
+    /// Hits observed so far.
+    seen: u64,
+}
+
+static ARMED_SITES: AtomicUsize = AtomicUsize::new(0);
+
+fn registry() -> &'static Mutex<HashMap<String, Arm>> {
+    static REG: OnceLock<Mutex<HashMap<String, Arm>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm `site` to fail on its `nth` (0-based) subsequent hit. Re-arming an
+/// already-armed site resets its hit counter.
+pub fn arm(site: &str, nth: u64) {
+    let mut reg = registry().lock().unwrap();
+    if reg.insert(site.to_string(), Arm { nth, seen: 0 }).is_none() {
+        ARMED_SITES.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Disarm one site (idempotent).
+pub fn disarm(site: &str) {
+    let mut reg = registry().lock().unwrap();
+    if reg.remove(site).is_some() {
+        ARMED_SITES.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Disarm everything — test teardown.
+pub fn disarm_all() {
+    let mut reg = registry().lock().unwrap();
+    let n = reg.len();
+    reg.clear();
+    if n > 0 {
+        ARMED_SITES.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// True iff any site is currently armed (cheap pre-check for hooks that
+/// would otherwise have to format a dynamic site name).
+pub fn any_armed() -> bool {
+    ARMED_SITES.load(Ordering::Relaxed) != 0
+}
+
+/// Scope-qualify a site name: `"{site}@{scope}"`, or `site` unchanged for
+/// an empty scope. Hooks whose call sites are shared by many parallel
+/// tests — the trainer/engine/store sites, which fire inside ordinary
+/// production paths like `dispatch_delayed` or `JournalStore::put` —
+/// qualify their name with a per-config scope (`TrainerConfig::fault_scope`
+/// for the coordinator stack, `with_fault_scope` on the stores), so a test
+/// arming its own scoped site never has hits consumed — or faults
+/// injected — by an unrelated test exercising the same code path. The
+/// production default is an empty scope (bare site names).
+pub fn scoped(site: &str, scope: &str) -> String {
+    if scope.is_empty() {
+        site.to_string()
+    } else {
+        format!("{site}@{scope}")
+    }
+}
+
+/// Hook: returns `true` exactly once, on the armed `nth` hit of `site`,
+/// and disarms the site. Returns `false` (one atomic load) when nothing
+/// is armed anywhere.
+pub fn should_fail(site: &str) -> bool {
+    if ARMED_SITES.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    let mut reg = registry().lock().unwrap();
+    let fire = match reg.get_mut(site) {
+        Some(a) => {
+            let fire = a.seen == a.nth;
+            a.seen += 1;
+            fire
+        }
+        None => false,
+    };
+    if fire {
+        reg.remove(site);
+        ARMED_SITES.fetch_sub(1, Ordering::Relaxed);
+    }
+    fire
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NB: the registry is process-global and tests in this binary run in
+    // parallel — these tests only touch their own `t:*` site names and never
+    // call `disarm_all` (which would disarm other tests' sites mid-flight).
+
+    #[test]
+    fn fires_once_on_nth_hit() {
+        arm("t:once", 2);
+        assert!(any_armed());
+        assert!(!should_fail("t:once"));
+        assert!(!should_fail("t:once"));
+        assert!(should_fail("t:once"));
+        // one-shot: disarmed after firing
+        assert!(!should_fail("t:once"));
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        arm("t:other", 0);
+        assert!(!should_fail("t:unrelated"));
+        assert!(should_fail("t:other"));
+        assert!(!should_fail("t:other"));
+    }
+
+    #[test]
+    fn scoped_names_are_disjoint() {
+        assert_eq!(scoped("t:site", ""), "t:site");
+        assert_eq!(scoped("t:site", "cfg1"), "t:site@cfg1");
+        arm(&scoped("t:site", "cfg2"), 0);
+        // the bare site and other scopes never consume cfg2's arm
+        assert!(!should_fail("t:site"));
+        assert!(!should_fail(&scoped("t:site", "cfg3")));
+        assert!(should_fail(&scoped("t:site", "cfg2")));
+    }
+}

@@ -8,6 +8,7 @@ pub mod bench;
 pub mod bf16;
 pub mod cli;
 pub mod f16;
+pub mod fault;
 pub mod json;
 pub mod prng;
 pub mod prop;

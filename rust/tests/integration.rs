@@ -6,7 +6,7 @@
 //! (with a notice) when the AOT artifacts were never built or PJRT is the
 //! vendored stub, so `cargo test -q` is meaningful on a fresh clone.
 
-use greedysnake::coordinator::TrainerConfig;
+use greedysnake::coordinator::{Schedule, TrainerConfig};
 use greedysnake::lp;
 use greedysnake::machine::MACHINE2_A100;
 use greedysnake::memory::Precision;
@@ -894,6 +894,154 @@ fn mixed_precision_tolerance_equivalence_to_f32() {
                     }
                 }
             }
+        }
+    }
+}
+
+/// The fault phases the kill-a-worker suite injects. CI's fault matrix
+/// narrows it via `GS_TEST_FAULT` (comma-separated ∈ {forward, reduce,
+/// delayed}) so each job pins one crash phase.
+fn test_fault_set() -> Vec<String> {
+    std::env::var("GS_TEST_FAULT")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect::<Vec<String>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| {
+            vec!["forward".to_string(), "reduce".to_string(), "delayed".to_string()]
+        })
+}
+
+/// The (site, nth-hit) a fault phase arms. Each phase lands the crash in a
+/// different part of the step — the forward's parameter load, the moment
+/// right after the reduce-scatter (gradients combined, no state advanced),
+/// and the delayed optimizer dispatch (`nth = 2` is the start of step 2,
+/// since the dispatch site is hit once per step).
+fn fault_arm_for(phase: &str) -> (&'static str, u64) {
+    match phase {
+        "forward" => ("engine:forward", 3),
+        "reduce" => ("dist:post-reduce", 1),
+        "delayed" => ("opt:delayed", 2),
+        other => panic!("unknown GS_TEST_FAULT phase '{other}' (forward|reduce|delayed)"),
+    }
+}
+
+/// The crash-consistency acceptance property (tentpole): for every
+/// schedule × io-depth {0, 2} × W {2, 4}, a journaled `--param-persist`
+/// run that loses a worker mid-step — at the forward prefetch, after the
+/// reduce-scatter, or inside the delayed optimizer dispatch — replays from
+/// the last committed epoch boundary and ends BIT-identical to the
+/// uninterrupted run: same loss curve, gradient norms, and Σx²
+/// parameter/moment digests. The uninterrupted journaled run is itself
+/// bit-identical to the plain W = 1 baseline (persistence sharding and the
+/// journal change where bytes live and when they commit, never a value),
+/// and its per-rank parameter-shard counters carry ~1/W of a W-invariant
+/// byte total each — the elastic-sharding scaling the closed forms predict.
+#[test]
+fn kill_a_worker_replays_bit_identical() {
+    use greedysnake::util::fault;
+    let kinds = [
+        ScheduleKind::Vertical,
+        ScheduleKind::ChunkedVertical(2),
+        ScheduleKind::Horizontal,
+    ];
+    for kind in kinds {
+        for depth in [0usize, 2] {
+            let mk = |w: usize, leg: &str| {
+                let tag = format!("kw_{leg}_w{w}_d{depth}_{kind}").replace(':', "_");
+                let mut c = cfg(&tag);
+                c.io_depth = depth;
+                c.workers = w;
+                c.shard_optimizer = w > 1;
+                c.opt_on_ssd = true;
+                c.param_persist = true;
+                c.journal = true;
+                c
+            };
+            // plain (no persistence, no journal) W = 1 reference digests
+            let mut base_cfg = mk(1, "base");
+            base_cfg.param_persist = false;
+            base_cfg.journal = false;
+            let Some(base) = run("kw_base", kind, base_cfg, 4, 4) else { return };
+            let mut shard_read_totals = Vec::new();
+            for w in [2usize, 4] {
+                let clean = run("kw_clean", kind, mk(w, "clean"), 4, 4).unwrap();
+                assert_eq!(clean.recoveries, 0, "{kind:?} d{depth} W={w}: clean run recovered");
+                assert_eq!(
+                    base.losses, clean.losses,
+                    "{kind:?} d{depth} W={w}: journaled losses diverged from baseline"
+                );
+                assert_eq!(
+                    base.param_sq_norm.to_bits(),
+                    clean.param_sq_norm.to_bits(),
+                    "{kind:?} d{depth} W={w}: journaled parameters diverged from baseline"
+                );
+                assert_eq!(
+                    base.moment_sq_norm.to_bits(),
+                    clean.moment_sq_norm.to_bits(),
+                    "{kind:?} d{depth} W={w}: journaled moments diverged from baseline"
+                );
+                // ~1/W per-rank parameter round trips: one counter per rank,
+                // each within 25 % of the fair share (contiguous partitioning
+                // is element-exact; the slack only covers per-tensor rounding)
+                let rd = &clean.param_shard_reads;
+                assert_eq!(rd.len(), w, "{kind:?} d{depth}: one read counter per rank");
+                let total: u64 = rd.iter().sum();
+                assert!(total > 0, "{kind:?} d{depth} W={w}: no param shard traffic");
+                let fair = total / w as u64;
+                let slack = fair / 4;
+                for (r, &b) in rd.iter().enumerate() {
+                    assert!(
+                        b <= fair + slack && b + slack >= fair,
+                        "{kind:?} d{depth} W={w} rank {r}: {b} bytes vs fair share {fair}"
+                    );
+                }
+                shard_read_totals.push(total);
+                for phase in test_fault_set() {
+                    // the delayed-dispatch site only runs under schedules
+                    // that support the α split (horizontal is a baseline
+                    // without it — the site would never be hit)
+                    if phase == "delayed" && !kind.policy().supports_delay() {
+                        continue;
+                    }
+                    let c = mk(w, &phase);
+                    let (site, nth) = fault_arm_for(&phase);
+                    fault::arm(&fault::scoped(site, &c.fault_scope), nth);
+                    let faulted = run("kw_fault", kind, c, 4, 4).unwrap();
+                    assert!(
+                        faulted.recoveries >= 1,
+                        "{kind:?} d{depth} W={w} {phase}: the injected fault never fired"
+                    );
+                    assert_eq!(
+                        clean.losses, faulted.losses,
+                        "{kind:?} d{depth} W={w} {phase}: replayed loss curve changed"
+                    );
+                    assert_eq!(
+                        clean.grad_norms, faulted.grad_norms,
+                        "{kind:?} d{depth} W={w} {phase}: replayed grad norms changed"
+                    );
+                    assert_eq!(
+                        clean.param_sq_norm.to_bits(),
+                        faulted.param_sq_norm.to_bits(),
+                        "{kind:?} d{depth} W={w} {phase}: recovered parameters diverged"
+                    );
+                    assert_eq!(
+                        clean.moment_sq_norm.to_bits(),
+                        faulted.moment_sq_norm.to_bits(),
+                        "{kind:?} d{depth} W={w} {phase}: recovered moments diverged"
+                    );
+                }
+            }
+            // the per-step parameter byte total is W-invariant (the ranks
+            // tile it), so mean-per-rank scales exactly as total / W
+            assert_eq!(
+                shard_read_totals[0], shard_read_totals[1],
+                "{kind:?} d{depth}: shard read totals must not depend on W"
+            );
         }
     }
 }
