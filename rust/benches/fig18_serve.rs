@@ -1,0 +1,267 @@
+//! Fig. 18 (serving panel) — the forward-only multi-tenant engine on the
+//! phase-generic streaming core:
+//!
+//! * **simulated** (`sim::simulate_serve`, GPT-65B layer bytes): steady-state
+//!   tokens/sec swept over (DRAM cache, SSD stripe count, tenant count T),
+//!   each point checked against the [`serve_token_bound`] closed form and the
+//!   fit-or-nothing cache absorption law — a working set (one shared base
+//!   image + T adapter sets) that fits in cache drops the SSD stream to zero;
+//! * **byte conservation** (stream-only runtime, no artifacts needed): the
+//!   real `ServeEngine` decode counters must equal the
+//!   `traffic::Workload::serve_*` closed forms EXACTLY — per token step,
+//!   base-parameter bytes = ⌈B/G⌉ × model bytes for every schedule and every
+//!   io-depth, and the uncached store moved exactly the metered bytes;
+//! * **cache sharing**: serving T tenants through one `CachedStore` with
+//!   per-tenant admission must hit the SAME cached base objects — parameter
+//!   hits grow with T while parameter misses do not (the base is resident
+//!   once, not per tenant);
+//! * **real runtime** (when the AOT artifacts are built): real
+//!   EmbedFwd/LayerFwd decode over the manifest model — deterministic token
+//!   streams that differ across tenants, same byte law.
+//!
+//! Emits `bench_out/fig18_serve.json` (uploaded as a CI artifact) plus a
+//! human-readable table.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use greedysnake::coordinator::schedule::param_loads;
+use greedysnake::coordinator::serve::{provision, ServeModel};
+use greedysnake::coordinator::ServeEngine;
+use greedysnake::memory::{
+    CacheAdmission, CachedStore, Category, SsdStorage, TensorStore,
+};
+use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
+use greedysnake::sim::{serve_token_bound, simulate_serve, ServeSimConfig};
+use greedysnake::traffic::Workload;
+use greedysnake::trainer::ScheduleKind;
+use greedysnake::util::json::Json;
+use greedysnake::util::stats::fmt_bytes;
+use greedysnake::util::table::Table;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gs_f18_{tag}_{}", std::process::id()))
+}
+
+fn main() {
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    // ---- sim sweep: tokens/sec vs (cache, ssds, tenants) -----------------
+    let lanes = 4u64;
+    let wl = Workload { model: GPT_65B, micro_batch: 2, seq_len: SEQ_LEN, m: lanes, shards: 1 };
+    let base_cfg = ServeSimConfig {
+        n_layers: GPT_65B.n_layers,
+        layer_bytes: wl.ms_lp() as f64 / GPT_65B.n_layers as f64,
+        embed_bytes: 64e6,
+        compute_s_per_visit: 5e-3,
+        lanes,
+        group: u64::MAX, // vertical decode: each layer streamed once per step
+        io_depth: 2,
+        ssds: 1,
+        cache_bytes: 0,
+        working_set_bytes: 0,
+        ssd_read_bps: 3e9,
+        h2d_bps: 20e9,
+    };
+    let mut t = Table::new(
+        "Fig. 18 (serving) — GPT-65B vertical decode, tokens/s vs cache / ssds / tenants",
+        &["T", "ssds", "cache", "absorbed", "tok/s", "bound tok/s", "ssd B/token"],
+    );
+    let mut sweep: Vec<Json> = Vec::new();
+    for tenants in [1u64, 2, 4, 8] {
+        let ws = wl.serve_working_set_bytes(tenants, 64);
+        for ssds in [1u64, 2, 4] {
+            for cache_bytes in [0u64, ws] {
+                let c = ServeSimConfig {
+                    ssds,
+                    cache_bytes,
+                    working_set_bytes: ws,
+                    ..base_cfg
+                };
+                let r = simulate_serve(&c);
+                let bound = serve_token_bound(&c);
+                assert!(
+                    r.t_token_s >= bound * 0.999,
+                    "T={tenants} N={ssds} cache={cache_bytes}: sim {} under bound {}",
+                    r.t_token_s,
+                    bound
+                );
+                // fit-or-nothing: a fitting cache removes the SSD stream
+                assert_eq!(r.absorbed, cache_bytes >= ws && cache_bytes > 0);
+                if r.absorbed {
+                    assert_eq!(r.ssd_read_bytes_per_token, 0.0);
+                }
+                t.row(&[
+                    tenants.to_string(),
+                    ssds.to_string(),
+                    if cache_bytes == 0 { "0".into() } else { fmt_bytes(cache_bytes as f64) },
+                    r.absorbed.to_string(),
+                    format!("{:.2}", r.tokens_per_s),
+                    format!("{:.2}", c.lanes as f64 / bound),
+                    fmt_bytes(r.ssd_read_bytes_per_token),
+                ]);
+                let mut o = BTreeMap::new();
+                o.insert("tenants".into(), Json::Num(tenants as f64));
+                o.insert("ssds".into(), Json::Num(ssds as f64));
+                o.insert("cache_bytes".into(), Json::Num(cache_bytes as f64));
+                o.insert("working_set_bytes".into(), Json::Num(ws as f64));
+                o.insert("absorbed".into(), Json::Bool(r.absorbed));
+                o.insert("tokens_per_s".into(), Json::Num(r.tokens_per_s));
+                o.insert("bound_tokens_per_s".into(), Json::Num(c.lanes as f64 / bound));
+                o.insert("ssd_bytes_per_token".into(), Json::Num(r.ssd_read_bytes_per_token));
+                sweep.push(Json::Obj(o));
+            }
+        }
+        // striping scales the uncached read bottleneck
+        let t1 = simulate_serve(&ServeSimConfig { working_set_bytes: ws, ..base_cfg });
+        let t4 = simulate_serve(&ServeSimConfig { ssds: 4, working_set_bytes: ws, ..base_cfg });
+        assert!(t4.tokens_per_s > t1.tokens_per_s, "striping must help the SSD-bound decode");
+    }
+    t.emit(Some("bench_out/fig18_serve.tsv"));
+    report.insert("sim_sweep".into(), Json::Arr(sweep));
+
+    // the analytic serve forms are the forward leg of the training forms
+    for g in [1u64, 4, 16, lanes] {
+        assert_eq!(
+            2 * wl.serve_param_read_bytes(g),
+            wl.chunked_vertical(g).param_load,
+            "g={g}: serve form is not the forward leg of chunked:{g}"
+        );
+    }
+
+    // ---- byte conservation: runtime counters == closed forms -------------
+    // stream-only decode (no artifacts needed): 6 lanes makes chunked:4
+    // ragged, so the ⌈B/G⌉ ceiling is actually exercised
+    let model = ServeModel::synthetic(4, 4096, 1024, 50257);
+    let b_lanes = 6u64;
+    let model_bytes = model.n_layers as u64 * model.base_layer_bytes();
+    for (sched_name, g) in [("vertical", b_lanes), ("horizontal", 1), ("chunked:4", 4)] {
+        let kind: ScheduleKind = sched_name.parse().expect("schedule grammar");
+        let sched = kind.policy();
+        for depth in [0usize, 2] {
+            let store: Arc<dyn TensorStore> = Arc::new(
+                SsdStorage::create_unthrottled(tmp(&format!("bytes_{g}_{depth}"))).unwrap(),
+            );
+            provision(store.as_ref(), &model, 2, 7).unwrap();
+            let mut eng = ServeEngine::new(model.clone(), Arc::clone(&store), depth, 11);
+            let batch = greedysnake::coordinator::serve::Batch {
+                tenant: 1,
+                requests: (0..b_lanes).collect(),
+            };
+            let tokens = 3usize;
+            eng.decode(sched.as_ref(), &batch, tokens, None).unwrap();
+            let s = eng.stats();
+            let order = sched.forward_order(model.n_layers, b_lanes as usize);
+            let tag = format!("{sched_name} depth={depth}");
+            // per token step: N·⌈B/G⌉ loads, ⌈B/G⌉ × model bytes — the
+            // serve_param_loads / serve_param_read_bytes forms verbatim
+            let loads_per_step = model.n_layers as u64 * b_lanes.div_ceil(g);
+            assert_eq!(param_loads(&order) as u64, loads_per_step, "{tag}: schedule count");
+            assert_eq!(s.param_loads, loads_per_step * tokens as u64, "{tag}: loads");
+            assert_eq!(
+                s.base_bytes_loaded,
+                b_lanes.div_ceil(g) * model_bytes * tokens as u64,
+                "{tag}: base bytes off the closed form"
+            );
+            assert_eq!(
+                s.adapter_bytes_loaded,
+                s.param_loads * model.adapter_layer_bytes(),
+                "{tag}: adapter bytes"
+            );
+            assert_eq!(
+                s.store_bytes_read,
+                s.base_bytes_loaded + s.adapter_bytes_loaded + s.embed_bytes_loaded,
+                "{tag}: store moved bytes the meters missed"
+            );
+        }
+    }
+    println!("byte conservation: decode counters == serve closed forms (3 schedules x 2 depths)");
+    report.insert("byte_conservation".into(), Json::Str("ok".into()));
+
+    // ---- cache sharing: base hits grow with T, misses do not -------------
+    let share_model = ServeModel::synthetic(2, 256, 64, 101);
+    let share = |tenants: u64| {
+        let dev = Arc::new(SsdStorage::create_unthrottled(tmp(&format!("share_{tenants}"))).unwrap());
+        let store: Arc<dyn TensorStore> = Arc::new(CachedStore::with_admission(
+            dev,
+            1 << 20,
+            CacheAdmission::PerTenant { per_tenant_bytes: 1 << 16 },
+        ));
+        provision(store.as_ref(), &share_model, tenants, 9).unwrap();
+        let mut eng = ServeEngine::new(share_model.clone(), Arc::clone(&store), 0, 1);
+        for tenant in 0..tenants {
+            let b = greedysnake::coordinator::serve::Batch { tenant, requests: vec![0, 1] };
+            eng.decode(&greedysnake::coordinator::VerticalSchedule, &b, 2, None).unwrap();
+        }
+        store
+            .cache_stats()
+            .by_cat
+            .get(&Category::Parameters)
+            .cloned()
+            .unwrap_or_default()
+    };
+    let p1 = share(1);
+    let p4 = share(4);
+    assert!(
+        p4.hits > p1.hits,
+        "shared base hits must grow with tenants: T=1 {} vs T=4 {}",
+        p1.hits,
+        p4.hits
+    );
+    assert_eq!(
+        p1.misses, p4.misses,
+        "the base image is resident once, not once per tenant"
+    );
+    println!(
+        "cache sharing: base hits {} (T=1) -> {} (T=4), misses {} == {}",
+        p1.hits, p4.hits, p1.misses, p4.misses
+    );
+    let mut cs = BTreeMap::new();
+    cs.insert("base_hits_t1".into(), Json::Num(p1.hits as f64));
+    cs.insert("base_hits_t4".into(), Json::Num(p4.hits as f64));
+    cs.insert("base_misses_t1".into(), Json::Num(p1.misses as f64));
+    cs.insert("base_misses_t4".into(), Json::Num(p4.misses as f64));
+    report.insert("cache_sharing".into(), Json::Obj(cs));
+
+    // ---- real-runtime decode leg (skips without AOT artifacts) -----------
+    let runtime_status = match greedysnake::runtime::test_artifacts("artifacts/tiny") {
+        None => {
+            println!("runtime decode: skipped (artifacts/tiny not built)");
+            "skipped".to_string()
+        }
+        Some(manifest) => {
+            let rt = greedysnake::runtime::Runtime::load(&manifest).unwrap();
+            let model = ServeModel::from_manifest(&manifest);
+            let store: Arc<dyn TensorStore> =
+                Arc::new(SsdStorage::create_unthrottled(tmp("rt")).unwrap());
+            provision(store.as_ref(), &model, 2, 5).unwrap();
+            let decode = |tenant: u64, seed: u64| {
+                let mut eng = ServeEngine::new(model.clone(), Arc::clone(&store), 2, seed);
+                let b = greedysnake::coordinator::serve::Batch { tenant, requests: vec![0, 1] };
+                let toks = eng
+                    .decode(&greedysnake::coordinator::VerticalSchedule, &b, 2, Some(&rt))
+                    .unwrap();
+                (toks, eng.stats())
+            };
+            let (a, s) = decode(0, 42);
+            let (b, _) = decode(0, 42);
+            let (c, _) = decode(1, 42);
+            assert_eq!(a, b, "real-compute decode must be deterministic");
+            assert_ne!(a, c, "tenant adapters must steer the real token stream");
+            // the byte law holds under real compute too (vertical: ⌈B/G⌉=1)
+            assert_eq!(
+                s.base_bytes_loaded,
+                2 * model.n_layers as u64 * model.base_layer_bytes(),
+                "real-compute decode broke the byte law"
+            );
+            println!("runtime decode: deterministic, tenant-steered, byte law holds");
+            "ok".to_string()
+        }
+    };
+    report.insert("runtime_decode".into(), Json::Str(runtime_status));
+
+    std::fs::create_dir_all("bench_out").expect("create bench_out");
+    let path = "bench_out/fig18_serve.json";
+    std::fs::write(path, Json::Obj(report).to_string_compact()).expect("write serve report");
+    println!("serve report -> {path}");
+}

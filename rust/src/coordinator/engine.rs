@@ -1,4 +1,8 @@
-//! The schedule-agnostic step engine.
+//! The schedule-agnostic training step engine — the TRAINING policy over
+//! the phase-generic [`LayerStreamer`](super::streamer::LayerStreamer)
+//! core (which owns the one-layer residency model, the depth-K lookahead
+//! window, and the parameter byte meter; `coordinator::serve` builds its
+//! forward-only token engine on the same core).
 //!
 //! Everything the vertical and horizontal schedulers used to duplicate
 //! lives here exactly once: stage dispatch (EmbedFwd / LayerFwd / HeadLoss /
@@ -21,7 +25,8 @@
 //!
 //! I/O is asynchronous: since the schedule hands over the full visit order
 //! up front, the engine looks ahead `cfg.io_depth` visits through the
-//! [`IoPipeline`] — issuing the *next* visits' parameter loads (and, in the
+//! [`IoPipeline`](super::io::IoPipeline) — issuing the *next* visits'
+//! parameter loads (and, in the
 //! backward pass, checkpoint reads) while the current visit computes, and
 //! turning checkpoint stores into write-behind with completion tracking.
 //! Depth 0 reproduces the synchronous engine bit-for-bit; either way the
@@ -29,7 +34,6 @@
 //! stall seconds.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -38,10 +42,11 @@ use crate::runtime::tensor::{HostTensor, TokenTensor};
 use crate::runtime::{Runtime, Stage};
 
 use super::ckpt::{ckpt_key, InterLayerCoordinator};
-use super::io::{IoPipeline, IoStats};
+use super::io::IoStats;
 use super::opt::OptimizerStepCoordinator;
 use super::schedule::{validate_order, Schedule};
 use super::state::ModelState;
+use super::streamer::{LayerStreamer, ParamCache};
 
 /// Per-step metrics.
 #[derive(Clone, Copy, Debug)]
@@ -98,29 +103,18 @@ pub fn accumulate(acc: &mut Option<HostTensor>, t: HostTensor) {
     }
 }
 
-/// One-layer parameter-literal cache (the resident layer on the device).
-struct ParamCache {
-    layer: Option<usize>,
-    literals: Vec<xla::Literal>,
-}
-
-impl ParamCache {
-    fn empty() -> Self {
-        ParamCache { layer: None, literals: Vec::new() }
-    }
-}
-
-/// The schedule-agnostic execution engine. Owns the inter-layer and
-/// optimizer coordinators (shared with the I/O lanes via `Arc`); the
-/// [`ModelState`] plays the parameter coordinator.
+/// The training policy over the phase-generic [`LayerStreamer`] core: owns
+/// the inter-layer and optimizer coordinators (shared with the I/O lanes
+/// via `Arc`) and layers grad/ckpt/optimizer logic on the core's
+/// schedule-driven visit iteration; the [`ModelState`] plays the parameter
+/// coordinator.
 pub struct StepEngine<'a> {
     pub state: &'a ModelState,
     pub rt: &'a Runtime,
     pub ilc: Arc<InterLayerCoordinator>,
     pub opt: Arc<OptimizerStepCoordinator>,
-    io: IoPipeline,
+    core: LayerStreamer,
     step: u64,
-    param_bytes_loaded: u64,
 }
 
 impl<'a> StepEngine<'a> {
@@ -141,6 +135,12 @@ impl<'a> StepEngine<'a> {
         rt: &'a Runtime,
         opt: Arc<OptimizerStepCoordinator>,
     ) -> Self {
+        // Bytes one layer's parameter stream moves per load, at the
+        // precision policy's parameter width — half under
+        // `--precision mixed:*` (the low-precision parameter copy is what
+        // streams), 4 B/elem at strict f32.
+        let bpe = state.cfg.precision.policy().parameters.bytes_per_elem();
+        let layer_bytes = state.manifest.layer_numel() as u64 * bpe;
         StepEngine {
             state,
             rt,
@@ -149,9 +149,8 @@ impl<'a> StepEngine<'a> {
                 state.cfg.ckpt_on_ssd,
             )),
             opt,
-            io: IoPipeline::new(state.cfg.io_depth),
+            core: LayerStreamer::new(state.cfg.io_depth, layer_bytes),
             step: 0,
-            param_bytes_loaded: 0,
         }
     }
 
@@ -170,28 +169,22 @@ impl<'a> StepEngine<'a> {
 
     /// Cumulative parameter bytes uploaded across all steps.
     pub fn param_bytes_loaded(&self) -> u64 {
-        self.param_bytes_loaded
+        self.core.param_bytes_loaded()
     }
 
     /// Cumulative I/O-pipeline counters across all steps.
     pub fn io_stats(&self) -> IoStats {
-        self.io.stats()
+        self.core.stats()
     }
 
-    /// Bytes one layer's parameter stream moves per load, at the precision
-    /// policy's parameter width — half under `--precision mixed:*` (the
-    /// low-precision parameter copy is what streams), 4 B/elem at strict
-    /// f32.
-    fn layer_param_bytes(&self) -> u64 {
-        let bpe = self.state.cfg.precision.policy().parameters.bytes_per_elem();
-        self.state.manifest.layer_numel() as u64 * bpe
-    }
-
-    /// Ensure `cache` holds layer `l`'s parameter literals. A prefetched
-    /// snapshot (issued by [`Self::lookahead`]) is claimed when available;
-    /// otherwise the load runs synchronously — optionally waiting for the
-    /// layer's pending optimizer updates first (forward passes must;
-    /// backward passes reuse the forward's params).
+    /// Training's parameter-load policy over the core: ensure `cache` holds
+    /// layer `l`'s literals, claiming a prefetched snapshot (issued by
+    /// [`Self::lookahead`]) when available; otherwise the load runs
+    /// synchronously — optionally waiting for the layer's pending optimizer
+    /// updates first (forward passes must; backward passes reuse the
+    /// forward's params), with the wait on the stall clock (the prefetched
+    /// path performs the same wait on the lane, so both modes charge the
+    /// same blocking set — see [`StepStats::io_stall_s`]).
     fn ensure_params(&mut self, cache: &mut ParamCache, l: usize, wait: bool) -> Result<()> {
         if cache.layer == Some(l) {
             return Ok(());
@@ -205,28 +198,14 @@ impl<'a> StepEngine<'a> {
         {
             bail!("injected fault: forward parameter load (layer {l})");
         }
-        match self.io.take_params(l)? {
-            Some(snapshot) => {
-                // the lane already waited for pending updates and staged the
-                // tensors; only the host→device conversion remains here
-                cache.literals =
-                    snapshot.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+        let state = self.state;
+        let opt = Arc::clone(&self.opt);
+        self.core.ensure_params(cache, l, move || {
+            if wait {
+                opt.wait_layer(l); // params fully updated before use (Fig. 8)
             }
-            None => {
-                // the clock covers the optimizer wait too — the prefetched
-                // path performs the same wait on the lane, so both modes
-                // charge the same blocking set (see StepStats::io_stall_s)
-                let t0 = Instant::now();
-                if wait {
-                    self.opt.wait_layer(l); // params fully updated before use (Fig. 8)
-                }
-                cache.literals = self.state.layer_literals(l)?;
-                self.io.note_sync_stall(t0.elapsed());
-            }
-        }
-        cache.layer = Some(l);
-        self.param_bytes_loaded += self.layer_param_bytes();
-        Ok(())
+            state.layer_literals(l)
+        })
     }
 
     /// Issue the async loads for the next `io_depth` visits after `idx` in
@@ -234,21 +213,19 @@ impl<'a> StepEngine<'a> {
     /// (deduped — the pipeline tracks in-flight layers) and, in the backward
     /// pass, the upcoming visits' checkpoint reads.
     fn lookahead(&mut self, order: &[(usize, usize)], idx: usize, forward: bool) {
-        let depth = self.io.depth();
-        if depth == 0 {
-            return;
-        }
-        // the cache will hold the current visit's layer while the window runs
-        let mut resident = order[idx].0;
-        for &(l, j) in order.iter().skip(idx + 1).take(depth) {
-            if l != resident {
-                self.io.prefetch_params(&self.opt, l, &self.state.layers[l], forward);
-                resident = l;
-            }
-            if !forward {
-                self.io.prefetch_take(&self.ilc, &ckpt_key(l, j));
-            }
-        }
+        let state = self.state;
+        let opt = Arc::clone(&self.opt);
+        let ilc = Arc::clone(&self.ilc);
+        self.core.lookahead(
+            order,
+            idx,
+            |io, l| io.prefetch_params(&opt, l, &state.layers[l], forward),
+            |io, l, j| {
+                if !forward {
+                    io.prefetch_take(&ilc, &ckpt_key(l, j));
+                }
+            },
+        );
     }
 
     /// One training iteration over `m` micro-batches under `schedule`.
@@ -282,8 +259,8 @@ impl<'a> StepEngine<'a> {
         let read0 = self.state.store.bytes_read();
         let written0 = self.state.store.bytes_written();
         let cache0 = self.state.store.cache_stats().total;
-        let loaded0 = self.param_bytes_loaded;
-        let io0 = self.io.stats();
+        let loaded0 = self.core.param_bytes_loaded();
+        let io0 = self.core.stats();
 
         // Kick off the delayed α updates from the previous iteration — they
         // overlap this forward pass; each layer's first forward visit waits.
@@ -315,14 +292,15 @@ impl<'a> StepEngine<'a> {
         let fwd = schedule.forward_order(nl, m);
         validate_order(&fwd, nl, m, false)
             .with_context(|| format!("schedule '{}' forward order", schedule.name()))?;
-        self.io.begin_pass()?;
+        self.core.begin_pass()?;
         let mut cache = ParamCache::empty();
         for (idx, &(l, j)) in fwd.iter().enumerate() {
             self.ensure_params(&mut cache, l, true)?;
             self.lookahead(&fwd, idx, true);
             // the layer's INPUT activation is its backward checkpoint
             // (write-behind: the store overlaps this visit's compute)
-            self.io
+            self.core
+                .io_mut()
                 .put_ckpt(&self.ilc, &ckpt_key(l, j), acts[j].clone())
                 .with_context(|| format!("ckpt store l{l} mb{j}"))?;
             let x_lit = acts[j].to_literal()?;
@@ -369,7 +347,7 @@ impl<'a> StepEngine<'a> {
         let bwd = schedule.backward_order(nl, m);
         validate_order(&bwd, nl, m, true)
             .with_context(|| format!("schedule '{}' backward order", schedule.name()))?;
-        self.io.begin_pass()?;
+        self.core.begin_pass()?;
         // Resident gradient-accumulation buffers. Under the vertical order
         // at most one is live at a time; interleaving orders keep up to one
         // per layer (ZeRO-Infinity's CPU gradient buffers).
@@ -380,7 +358,7 @@ impl<'a> StepEngine<'a> {
         for (idx, &(l, j)) in bwd.iter().enumerate() {
             self.ensure_params(&mut cache, l, false)?;
             self.lookahead(&bwd, idx, false);
-            let x_ckpt = self.io.take_ckpt(&self.ilc, &ckpt_key(l, j))?;
+            let x_ckpt = self.core.io_mut().take_ckpt(&self.ilc, &ckpt_key(l, j))?;
             let (x_lit, dy_lit) = (x_ckpt.to_literal()?, dxs[j].to_literal()?);
             let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &dy_lit];
             inputs.extend(cache.literals.iter());
@@ -446,8 +424,8 @@ impl<'a> StepEngine<'a> {
         // awaited by its take) so the per-step SSD byte deltas are exact and
         // any lane failure surfaces here as an error, not later or as a
         // panic.
-        self.io.flush()?;
-        let io1 = self.io.stats();
+        self.core.flush()?;
+        let io1 = self.core.stats();
 
         let grad_norm = self.opt.finish_iter();
         let cache1 = self.state.store.cache_stats().total;
@@ -456,7 +434,7 @@ impl<'a> StepEngine<'a> {
             grad_norm,
             ssd_bytes_read: self.state.store.bytes_read() - read0,
             ssd_bytes_written: self.state.store.bytes_written() - written0,
-            param_bytes_loaded: self.param_bytes_loaded - loaded0,
+            param_bytes_loaded: self.core.param_bytes_loaded() - loaded0,
             prefetch_hits: io1.prefetch_hits - io0.prefetch_hits,
             prefetch_misses: io1.prefetch_misses - io0.prefetch_misses,
             io_stall_s: io1.stall_seconds - io0.stall_seconds,
@@ -494,8 +472,8 @@ impl<'a> StepEngine<'a> {
         assert!(!mbs.is_empty() && mbs.end <= m, "worker range {mbs:?} outside 0..{m}");
         let nl = self.state.manifest.config.n_layers;
         self.step += 1;
-        let loaded0 = self.param_bytes_loaded;
-        let io0 = self.io.stats();
+        let loaded0 = self.core.param_bytes_loaded();
+        let io0 = self.core.stats();
 
         // ---------------- forward ----------------
         let embed_lits = {
@@ -520,13 +498,14 @@ impl<'a> StepEngine<'a> {
         let local: Vec<(usize, usize)> = fwd.iter().map(|&(l, j)| (l, j - mbs.start)).collect();
         validate_order(&local, nl, mbs.len(), false)
             .with_context(|| format!("schedule '{}' restricted forward order", schedule.name()))?;
-        self.io.begin_pass()?;
+        self.core.begin_pass()?;
         let mut cache = ParamCache::empty();
         for (idx, &(l, j)) in fwd.iter().enumerate() {
             self.ensure_params(&mut cache, l, true)?;
             self.lookahead(&fwd, idx, true);
             let x_prev = acts[j].as_ref().expect("activation for owned micro-batch");
-            self.io
+            self.core
+                .io_mut()
                 .put_ckpt(&self.ilc, &ckpt_key(l, j), x_prev.clone())
                 .with_context(|| format!("ckpt store l{l} mb{j}"))?;
             let x_lit = x_prev.to_literal()?;
@@ -579,14 +558,14 @@ impl<'a> StepEngine<'a> {
         let local: Vec<(usize, usize)> = bwd.iter().map(|&(l, j)| (l, j - mbs.start)).collect();
         validate_order(&local, nl, mbs.len(), true)
             .with_context(|| format!("schedule '{}' restricted backward order", schedule.name()))?;
-        self.io.begin_pass()?;
+        self.core.begin_pass()?;
         let mut layer_grads: Vec<Vec<super::dist::GradContrib>> = Vec::new();
         layer_grads.resize_with(nl, Vec::new);
         let mut cache = ParamCache::empty();
         for (idx, &(l, j)) in bwd.iter().enumerate() {
             self.ensure_params(&mut cache, l, false)?;
             self.lookahead(&bwd, idx, false);
-            let x_ckpt = self.io.take_ckpt(&self.ilc, &ckpt_key(l, j))?;
+            let x_ckpt = self.core.io_mut().take_ckpt(&self.ilc, &ckpt_key(l, j))?;
             let (x_lit, dy_lit) =
                 (x_ckpt.to_literal()?, dxs[j].as_ref().expect("head dx").to_literal()?);
             let mut inputs: Vec<&xla::Literal> = vec![&x_lit, &dy_lit];
@@ -615,14 +594,14 @@ impl<'a> StepEngine<'a> {
 
         // retire all lane I/O before the reduce (exact SSD byte accounting,
         // lane failures surface here)
-        self.io.flush()?;
-        let io1 = self.io.stats();
+        self.core.flush()?;
+        let io1 = self.core.stats();
         Ok(super::dist::WorkerPartial {
             losses,
             layer_grads,
             head_grads,
             embed_grads,
-            param_bytes: self.param_bytes_loaded - loaded0,
+            param_bytes: self.core.param_bytes_loaded() - loaded0,
             prefetch_hits: io1.prefetch_hits - io0.prefetch_hits,
             prefetch_misses: io1.prefetch_misses - io0.prefetch_misses,
             io_stall_s: io1.stall_seconds - io0.stall_seconds,
@@ -633,14 +612,14 @@ impl<'a> StepEngine<'a> {
     /// [`super::dist::DataParallelEngine::drain`] flushes every worker's
     /// lanes, then drives the one shared optimizer coordinator itself.
     pub fn flush_io(&mut self) -> Result<()> {
-        self.io.flush()
+        self.core.flush()
     }
 
     /// Drain all outstanding optimizer and I/O work (end of training). Safe
     /// under every schedule: delayed dispatch is a no-op at α = 0 and the
     /// waits are no-ops when a barrier already ran.
     pub fn drain(&mut self) -> Result<()> {
-        self.io.flush()?;
+        self.core.flush()?;
         self.opt.dispatch_delayed(self.state, Some(self.rt), self.step.max(1))?;
         for l in 0..self.state.manifest.config.n_layers {
             self.opt.wait_layer(l);

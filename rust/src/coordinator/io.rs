@@ -230,7 +230,6 @@ impl IoPipeline {
     /// wait for the layer's pending optimizer updates (forward passes only —
     /// the Fig. 8 "update layer i before its forward" dependency), then
     /// snapshot its tensors for upload. No-op at depth 0 / already in flight.
-    #[allow(clippy::map_entry)] // the insert needs &mut self.ex in between
     pub fn prefetch_params(
         &mut self,
         opt: &Arc<OptimizerStepCoordinator>,
@@ -238,19 +237,34 @@ impl IoPipeline {
         params: &Arc<Mutex<Vec<HostTensor>>>,
         wait_updates: bool,
     ) {
+        let opt2 = Arc::clone(opt);
+        let p2 = Arc::clone(params);
+        self.prefetch_with(layer, move || {
+            if wait_updates {
+                opt2.wait_layer(layer); // params fully updated before use
+            }
+            Ok(p2.lock().unwrap().clone())
+        });
+    }
+
+    /// Phase-generic form of [`IoPipeline::prefetch_params`]: run an
+    /// arbitrary loader on the `param-upload` lane and stage its tensors
+    /// for `layer`. The training engine's optimizer-wait snapshot and the
+    /// serve engine's store-streamed weight read are both instances of
+    /// this. No-op at depth 0 / already in flight.
+    #[allow(clippy::map_entry)] // the insert needs &mut self.ex in between
+    pub fn prefetch_with(
+        &mut self,
+        layer: usize,
+        load: impl FnOnce() -> OpResult<Vec<HostTensor>> + Send + 'static,
+    ) {
         if self.ex.is_none() || self.pending_params.contains_key(&layer) {
             return;
         }
         let slot: Slot<Vec<HostTensor>> = Arc::new(Mutex::new(None));
         let s2 = Arc::clone(&slot);
-        let opt2 = Arc::clone(opt);
-        let p2 = Arc::clone(params);
         let id = self.ex.as_mut().unwrap().submit_on(LANE_PARAM_UPLOAD, &[], move || {
-            if wait_updates {
-                opt2.wait_layer(layer); // params fully updated before use
-            }
-            let snap = p2.lock().unwrap().clone();
-            *s2.lock().unwrap() = Some(Ok(snap));
+            *s2.lock().unwrap() = Some(load());
         });
         self.pending_params.insert(layer, (id, slot));
     }

@@ -19,6 +19,12 @@
 //! resident gradient accumulation, and optimizer submission, while a
 //! pluggable [`schedule::Schedule`] contributes only the traversal order
 //! over the (layer × micro-batch) grid plus flush/delay/barrier policy.
+//! The phase-generic inner loop — one-layer parameter residency, depth-K
+//! lookahead through the pipeline, per-layer byte metering — lives in
+//! [`streamer::LayerStreamer`], shared by the training engine and the
+//! forward-only multi-tenant serving engine ([`serve::ServeEngine`]:
+//! schedule-driven decode passes streaming a shared base image plus
+//! per-tenant adapter deltas from the same `TensorStore` tier).
 //! Three policies ship today: [`schedule::VerticalSchedule`] (GreedySnake,
 //! §3.4), [`schedule::HorizontalSchedule`] (the ZeRO-Infinity baseline,
 //! §3.3), and [`schedule::ChunkedVerticalSchedule`] (`chunked:G` — vertical
@@ -67,7 +73,9 @@ pub mod horizontal;
 pub mod io;
 pub mod opt;
 pub mod schedule;
+pub mod serve;
 pub mod state;
+pub mod streamer;
 pub mod vertical;
 
 pub use ckpt::InterLayerCoordinator;
@@ -79,5 +87,7 @@ pub use opt::OptimizerStepCoordinator;
 pub use schedule::{
     ChunkedVerticalSchedule, HorizontalSchedule, Schedule, VerticalSchedule,
 };
+pub use serve::{ServeEngine, ServeModel, ServeStats};
 pub use state::{ModelState, TrainerConfig};
+pub use streamer::{LayerStreamer, ParamCache};
 pub use vertical::VerticalScheduler;

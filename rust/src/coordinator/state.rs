@@ -234,7 +234,19 @@ pub struct ModelState {
 /// encoded at-rest bytes (rollback restores them verbatim, codec or not)
 /// and its epoch commit/recover calls reach it through the codec's
 /// pass-through delegation.
-fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
+pub(crate) fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
+    build_store_with_admission(cfg, crate::memory::CacheAdmission::All)
+}
+
+/// [`build_store`] with an explicit cache-admission policy — the serve path
+/// (`coordinator::serve`) reuses the whole training store stack (striping,
+/// DRAM cache, journal, codec) but runs the cache tier under its
+/// multi-tenant [`CacheAdmission`](crate::memory::CacheAdmission) policy.
+/// Training always passes `All`, so this split changes nothing there.
+pub(crate) fn build_store_with_admission(
+    cfg: &TrainerConfig,
+    admission: crate::memory::CacheAdmission,
+) -> Result<Arc<dyn TensorStore>> {
     let base: Arc<dyn TensorStore> = if cfg.planned {
         let pc = PlannedConfig {
             nvme: vec![(cfg.ssd_read_bps, cfg.ssd_write_bps); cfg.ssds.max(1)],
@@ -259,7 +271,11 @@ fn build_store(cfg: &TrainerConfig) -> Result<Arc<dyn TensorStore>> {
             )?)
         };
         if cfg.cpu_cache_mb > 0 {
-            Arc::new(CachedStore::new(dev, (cfg.cpu_cache_mb as u64) << 20))
+            Arc::new(CachedStore::with_admission(
+                dev,
+                (cfg.cpu_cache_mb as u64) << 20,
+                admission,
+            ))
         } else {
             dev
         }

@@ -1,0 +1,164 @@
+//! The phase-generic layer-streaming core shared by training and serving.
+//!
+//! [`StepEngine`](super::engine::StepEngine) (training) and
+//! [`ServeEngine`](super::serve::ServeEngine) (forward-only token
+//! generation) execute the same inner loop: walk a
+//! [`Schedule`](super::schedule::Schedule)'s `(layer, micro-batch)` visit
+//! order, keep a one-layer parameter-literal cache resident on the device,
+//! and look ahead `--io-depth K` visits through the [`IoPipeline`] so the
+//! next layer's parameter stream overlaps the current visit's compute.
+//! [`LayerStreamer`] is that loop's substrate, extracted so a forward-only
+//! workload reuses the schedule/prefetch machinery without inheriting any
+//! training policy:
+//!
+//! * **what** a parameter load *is* stays with the phase — the caller hands
+//!   [`LayerStreamer::ensure_params`] a synchronous loader closure (training:
+//!   wait out the layer's pending optimizer updates, then snapshot host
+//!   tensors; serving: read base weights from the `TensorStore` and apply the
+//!   tenant's adapter delta), and hands [`LayerStreamer::lookahead`] the
+//!   matching per-layer / per-visit prefetch issuers;
+//! * **when** loads happen — cache-hit suppression, prefetch claim vs
+//!   synchronous fallback, the depth-K lookahead window walk, stall-clock
+//!   charging, and per-layer byte accounting — lives here exactly once.
+//!
+//! Bit-identity contract: for any fixed sequence of `ensure_params` /
+//! `lookahead` calls this type performs the same [`IoPipeline`] operations
+//! in the same order and charges the same stall clock as the pre-refactor
+//! engine-private code did — the training engine's gradient-equivalence
+//! suites (`rust/tests/integration.rs`) pin that down across schedules ×
+//! io-depth × workers × store backends.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::io::{IoPipeline, IoStats};
+
+/// One-layer parameter-literal cache (the resident layer on the device).
+pub struct ParamCache {
+    pub layer: Option<usize>,
+    pub literals: Vec<xla::Literal>,
+}
+
+impl ParamCache {
+    pub fn empty() -> Self {
+        ParamCache { layer: None, literals: Vec::new() }
+    }
+}
+
+/// Schedule-driven parameter streaming: the one-layer residency model, the
+/// depth-K lookahead window, and the per-layer byte meter. Phase policy
+/// (training vs serving) is injected through closures.
+pub struct LayerStreamer {
+    io: IoPipeline,
+    /// Bytes one layer's parameter stream moves per load (at the precision
+    /// policy's parameter width for training; f32 base + adapter width for
+    /// serving — the caller fixes the constant).
+    layer_bytes: u64,
+    param_bytes_loaded: u64,
+}
+
+impl LayerStreamer {
+    pub fn new(io_depth: usize, layer_bytes: u64) -> Self {
+        LayerStreamer {
+            io: IoPipeline::new(io_depth),
+            layer_bytes,
+            param_bytes_loaded: 0,
+        }
+    }
+
+    /// The lookahead window size K (0 = fully synchronous).
+    pub fn depth(&self) -> usize {
+        self.io.depth()
+    }
+
+    /// Direct pipeline access for the phase's non-parameter traffic
+    /// (checkpoint put/take/prefetch in training; custom prefetch issuers).
+    pub fn io_mut(&mut self) -> &mut IoPipeline {
+        &mut self.io
+    }
+
+    /// Cumulative pipeline counters (snapshot at step boundaries).
+    pub fn stats(&self) -> IoStats {
+        self.io.stats()
+    }
+
+    /// Cumulative parameter bytes uploaded across all passes.
+    pub fn param_bytes_loaded(&self) -> u64 {
+        self.param_bytes_loaded
+    }
+
+    /// Pass boundary: discard stale parameter prefetches (passes may differ
+    /// in load semantics — e.g. training's forward waits for optimizer
+    /// updates, its backward does not).
+    pub fn begin_pass(&mut self) -> Result<()> {
+        self.io.begin_pass()
+    }
+
+    /// Step/request boundary: retire all in-flight lane work; lane failures
+    /// surface here as errors.
+    pub fn flush(&mut self) -> Result<()> {
+        self.io.flush()
+    }
+
+    /// Ensure `cache` holds layer `l`'s parameter literals. A prefetched
+    /// snapshot (issued by [`Self::lookahead`]) is claimed when available;
+    /// otherwise `sync_load` runs on the compute thread with its wall time
+    /// charged to the stall clock — the same blocking set the prefetched
+    /// path performs on the `param-upload` lane, so depth-0 and depth-K
+    /// runs stay comparable. Every cache miss meters `layer_bytes`.
+    pub fn ensure_params(
+        &mut self,
+        cache: &mut ParamCache,
+        l: usize,
+        sync_load: impl FnOnce() -> Result<Vec<xla::Literal>>,
+    ) -> Result<()> {
+        if cache.layer == Some(l) {
+            return Ok(());
+        }
+        match self.io.take_params(l)? {
+            Some(snapshot) => {
+                // the lane already performed the phase's load; only the
+                // host→device conversion remains here
+                cache.literals =
+                    snapshot.iter().map(|t| t.to_literal()).collect::<Result<Vec<_>>>()?;
+            }
+            None => {
+                let t0 = Instant::now();
+                cache.literals = sync_load()?;
+                self.io.note_sync_stall(t0.elapsed());
+            }
+        }
+        cache.layer = Some(l);
+        self.param_bytes_loaded += self.layer_bytes;
+        Ok(())
+    }
+
+    /// Walk the next `depth` visits after `idx` in `order`, issuing
+    /// `on_layer` at every upcoming layer transition (deduped against the
+    /// currently resident layer; the pipeline additionally tracks in-flight
+    /// layers) and `on_visit` for every scanned visit (training's backward
+    /// pass prefetches checkpoint reads here; phases without per-visit
+    /// traffic pass a no-op).
+    pub fn lookahead(
+        &mut self,
+        order: &[(usize, usize)],
+        idx: usize,
+        mut on_layer: impl FnMut(&mut IoPipeline, usize),
+        mut on_visit: impl FnMut(&mut IoPipeline, usize, usize),
+    ) {
+        let depth = self.io.depth();
+        if depth == 0 {
+            return;
+        }
+        // the cache will hold the current visit's layer while the window runs
+        let mut resident = order[idx].0;
+        for &(l, j) in order.iter().skip(idx + 1).take(depth) {
+            if l != resident {
+                on_layer(&mut self.io, l);
+                resident = l;
+            }
+            on_visit(&mut self.io, l, j);
+        }
+    }
+}

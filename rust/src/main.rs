@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train     — real training through the AOT artifacts + PJRT runtime
+//!   serve     — forward-only multi-tenant token generation off the SSD tier
 //!   simulate  — discrete-event simulation of a paper configuration
 //!   search    — LP-based configuration search (Algorithm 1)
 //!   roofline  — print the §3.1 roofline for a model/machine
@@ -54,12 +55,13 @@ fn machine_by_name(name: &str) -> Result<greedysnake::machine::Machine> {
 fn main() -> Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
-        eprintln!("usage: greedysnake <train|simulate|search|roofline> [options]");
+        eprintln!("usage: greedysnake <train|serve|simulate|search|roofline> [options]");
         std::process::exit(2);
     }
     let sub = args.remove(0);
     match sub.as_str() {
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
         "simulate" => cmd_simulate(args),
         "search" => cmd_search(args),
         "roofline" => cmd_roofline(args),
@@ -290,6 +292,138 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
             "journal: {} mid-step failure(s) replayed from the last epoch boundary",
             log.recoveries
         );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: Vec<String>) -> Result<()> {
+    use greedysnake::coordinator::serve::{provision, synthetic_requests, ServeModel};
+    use greedysnake::coordinator::ServeEngine;
+    use greedysnake::memory::{
+        CacheAdmission, CachedStore, SsdStorage, StripedStore, TensorStore,
+    };
+    use std::sync::Arc;
+
+    let cli = Cli::new(
+        "greedysnake serve",
+        "forward-only multi-tenant token generation: decode passes stream a shared \
+         base image plus per-tenant adapter deltas from the SSD tier through the \
+         same schedule/io-depth machinery as training",
+    )
+    .opt("tenants", "fine-tuned variants sharing one base image (T)", Some("4"))
+    .opt("requests", "synthetic generation requests (heavy-concurrent-load traffic)", Some("16"))
+    .opt("tokens", "new tokens generated per request", Some("8"))
+    .opt("max-batch", "decode lanes per batch (batches are single-tenant)", Some("4"))
+    .opt(
+        "schedule",
+        "decode sweep order over the (layer x lane) grid: vertical|horizontal|\
+         chunked:G|cachesweep:G — same grammar as training; vertical streams each \
+         layer once per token step",
+        Some("vertical"),
+    )
+    .opt("io-depth", "async parameter-prefetch lookahead K (0 = synchronous)", Some("2"))
+    .opt("ssds", "stripe the store across N throttled SSD devices", Some("1"))
+    .opt(
+        "cpu-cache-mb",
+        "bounded DRAM cache in front of the SSD tier, MiB (0 = off). Serving uses \
+         per-tenant admission: each tenant's adapter objects get an equal slice, \
+         the shared base image is admitted unconditionally",
+        Some("0"),
+    )
+    .opt("ssd-read-gbps", "simulated SSD read bandwidth (GB/s; 0 = unthrottled)", Some("0"))
+    .opt("ssd-write-gbps", "simulated SSD write bandwidth (GB/s; 0 = unthrottled)", Some("0"))
+    .opt("layers", "synthetic model: layer count", Some("8"))
+    .opt("layer-kb", "synthetic model: f32 KiB per layer", Some("1024"))
+    .opt("embed-kb", "synthetic model: f32 KiB of shared embeddings", Some("256"))
+    .opt("vocab", "synthetic model: vocabulary size", Some("50257"))
+    .opt("seed", "rng seed (provisioning, traffic, and token hashes)", Some("42"))
+    .parse_from(args)?;
+
+    let kind: ScheduleKind = cli.get("schedule").unwrap().parse()?;
+    let tenants: u64 = cli.get_parsed::<u64>("tenants")?.max(1);
+    let n_requests: usize = cli.get_parsed("requests")?;
+    let new_tokens: usize = cli.get_parsed("tokens")?;
+    let max_batch: usize = cli.get_parsed::<usize>("max-batch")?.max(1);
+    let io_depth: usize = cli.get_parsed("io-depth")?;
+    let ssds: usize = cli.get_parsed::<usize>("ssds")?.max(1);
+    let cache_mb: u64 = cli.get_parsed("cpu-cache-mb")?;
+    let seed: u64 = cli.get_parsed("seed")?;
+    let r: f64 = cli.get_parsed("ssd-read-gbps")?;
+    let w: f64 = cli.get_parsed("ssd-write-gbps")?;
+    let read_bps = if r > 0.0 { r * 1e9 } else { f64::INFINITY };
+    let write_bps = if w > 0.0 { w * 1e9 } else { f64::INFINITY };
+
+    let model = ServeModel::synthetic(
+        cli.get_parsed("layers")?,
+        cli.get_parsed::<usize>("layer-kb")?.max(1) * 1024 / 4,
+        cli.get_parsed::<usize>("embed-kb")?.max(1) * 1024 / 4,
+        cli.get_parsed("vocab")?,
+    );
+
+    // store stack: (striped) SSD tier, optionally fronted by the DRAM cache
+    // with the serve-side per-tenant admission bound
+    let ssd_path = std::env::temp_dir().join(format!("gs_serve_{}", std::process::id()));
+    let dev: Arc<dyn TensorStore> = if ssds > 1 {
+        Arc::new(StripedStore::create(&ssd_path, ssds, read_bps, write_bps)?)
+    } else {
+        Arc::new(SsdStorage::create(&ssd_path, read_bps, write_bps)?)
+    };
+    let store: Arc<dyn TensorStore> = if cache_mb > 0 {
+        Arc::new(CachedStore::with_admission(
+            dev,
+            cache_mb << 20,
+            CacheAdmission::PerTenant { per_tenant_bytes: (cache_mb << 20) / tenants },
+        ))
+    } else {
+        dev
+    };
+
+    let rep = provision(store.as_ref(), &model, tenants, seed)?;
+    println!(
+        "serving {} layers x {} KiB, {} tenants over one base image \
+         (base {}, adapters {}/tenant), schedule={kind} io-depth={io_depth} \
+         ssds={ssds} cpu-cache={cache_mb}MiB",
+        model.n_layers,
+        model.base_layer_bytes() / 1024,
+        tenants,
+        greedysnake::util::stats::fmt_bytes(rep.base_bytes as f64),
+        greedysnake::util::stats::fmt_bytes(rep.adapter_bytes_per_tenant as f64),
+    );
+
+    let requests = synthetic_requests(tenants, n_requests, seed);
+    let mut eng = ServeEngine::new(model, store, io_depth, seed);
+    let t0 = std::time::Instant::now();
+    let out = eng.serve(kind.policy().as_ref(), &requests, max_batch, new_tokens, None)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let s = eng.stats();
+    println!(
+        "done: {} requests, {} tokens in {:.2}s ({:.0} tokens/s), \
+         param loads {}, base/adapter/embed read {}/{}/{}",
+        out.len(),
+        s.tokens,
+        wall,
+        s.tokens as f64 / wall.max(1e-9),
+        s.param_loads,
+        greedysnake::util::stats::fmt_bytes(s.base_bytes_loaded as f64),
+        greedysnake::util::stats::fmt_bytes(s.adapter_bytes_loaded as f64),
+        greedysnake::util::stats::fmt_bytes(s.embed_bytes_loaded as f64),
+    );
+    println!(
+        "io: prefetch hit/miss {}/{}, stall {:.2}s, store r/w {}/{}",
+        s.prefetch_hits,
+        s.prefetch_misses,
+        s.stall_seconds,
+        greedysnake::util::stats::fmt_bytes(s.store_bytes_read as f64),
+        greedysnake::util::stats::fmt_bytes(s.store_bytes_written as f64),
+    );
+    if cache_mb > 0 {
+        println!(
+            "cpu-cache: hit/miss/evict {}/{}/{}",
+            s.cache.total.hits, s.cache.total.misses, s.cache.total.evictions,
+        );
+        for (cat, c) in &s.cache.by_cat {
+            println!("cpu-cache: {cat:?}: hit/miss/evict {}/{}/{}", c.hits, c.misses, c.evictions);
+        }
     }
     Ok(())
 }

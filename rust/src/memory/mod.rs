@@ -22,8 +22,9 @@ pub use codec::{Codec, CodecStore, Precision, PrecisionPolicy};
 pub use pinned::PinnedPool;
 pub use ssd::SsdStorage;
 pub use store::{
-    path_weight, plan_shares, CacheCounters, CacheStats, CachedStore, JournalStore, PathId,
-    PathStats, PlannedConfig, PlannedStore, SsdBackend, StripedStore, TensorStore, TransferPlan,
+    category_of, path_weight, plan_shares, tenant_of, CacheAdmission, CacheCounters, CacheStats,
+    CachedStore, JournalStore, PathId, PathStats, PlannedConfig, PlannedStore, SsdBackend,
+    StripedStore, TensorStore, TransferPlan,
 };
 pub use throttle::Throttle;
-pub use tier::Tier;
+pub use tier::{Category, Tier};

@@ -522,17 +522,49 @@ impl CacheStats {
 }
 
 /// The data [`Category`] a store key belongs to (keys are structured:
-/// `opt_*` moment objects, `ilc_*` inter-layer checkpoints/gradients).
-/// Shared by [`CachedStore`]'s per-category counters and the
-/// [`super::codec::PrecisionPolicy`] codec selection.
+/// `opt_*` moment objects, `ilc_*` inter-layer checkpoints/gradients,
+/// `param_*` persisted master parameters / `base_*` serve base images,
+/// `adapter_*` per-tenant serve deltas). Shared by [`CachedStore`]'s
+/// per-category counters and the [`super::codec::PrecisionPolicy`] codec
+/// selection — note the codec maps Parameters/Adapters through the
+/// `working` class (f32 under every policy), so classifying them here
+/// changes stats attribution only, never stored bytes.
 pub fn category_of(key: &str) -> Category {
     if key.starts_with("opt_") {
         Category::OptimizerStates
     } else if key.starts_with("ilc_") {
         Category::Checkpoints
+    } else if key.starts_with("param_") || key.starts_with("base_") {
+        Category::Parameters
+    } else if key.starts_with("adapter_") {
+        Category::Adapters
     } else {
         Category::Working
     }
+}
+
+/// The serving tenant a store key belongs to, parsed from the
+/// `adapter_{tenant}_…` key structure; `None` for every shared object
+/// (base image, training state). The [`CachedStore`] per-tenant admission
+/// policy keys on this.
+pub fn tenant_of(key: &str) -> Option<u64> {
+    let rest = key.strip_prefix("adapter_")?;
+    rest[..rest.find('_')?].parse().ok()
+}
+
+/// Cache-admission policy for [`CachedStore`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CacheAdmission {
+    /// Every object is cacheable — the training default, bit-identical to
+    /// the pre-admission cache.
+    #[default]
+    All,
+    /// Multi-tenant serve policy: shared objects (the base image, anything
+    /// un-tenanted) cache freely, while each tenant's `adapter_*` objects
+    /// may hold at most `per_tenant_bytes` of DRAM — non-admitted traffic
+    /// bypasses the cache (write-through / read-without-fill), so one noisy
+    /// tenant cannot flush the shared base image every other tenant hits.
+    PerTenant { per_tenant_bytes: u64 },
 }
 
 struct CacheEntry {
@@ -540,6 +572,8 @@ struct CacheEntry {
     /// Written since last backing-store sync (write-back on eviction).
     dirty: bool,
     cat: Category,
+    /// Owning serve tenant ([`tenant_of`]); `None` for shared objects.
+    tenant: Option<u64>,
     last_used: u64,
 }
 
@@ -552,7 +586,21 @@ struct CacheState {
     /// was immediately LRU-evicted (or a racing delete) would be shadowed
     /// by a stale clean entry.
     mutations: u64,
+    /// Resident cache bytes per serve tenant (the [`CacheAdmission`]
+    /// budget's meter; shared objects are not counted).
+    tenant_bytes: HashMap<u64, u64>,
     stats: CacheStats,
+}
+
+impl CacheState {
+    /// Drop `e`'s bytes from the per-tenant meter (entry leaving the map).
+    fn release_tenant(&mut self, e: &CacheEntry) {
+        if let Some(t) = e.tenant {
+            if let Some(b) = self.tenant_bytes.get_mut(&t) {
+                *b = b.saturating_sub(e.data.len() as u64);
+            }
+        }
+    }
 }
 
 /// Bounded CPU-DRAM write-back cache in front of any [`TensorStore`].
@@ -568,20 +616,45 @@ struct CacheState {
 pub struct CachedStore {
     inner: Arc<dyn TensorStore>,
     tier: Tier,
+    admission: CacheAdmission,
     state: Mutex<CacheState>,
 }
 
 impl CachedStore {
     pub fn new(inner: Arc<dyn TensorStore>, capacity_bytes: u64) -> Self {
+        Self::with_admission(inner, capacity_bytes, CacheAdmission::All)
+    }
+
+    /// Build the cache under an explicit [`CacheAdmission`] policy — the
+    /// multi-tenant serve path's constructor; [`CachedStore::new`] keeps
+    /// the admit-everything training default.
+    pub fn with_admission(
+        inner: Arc<dyn TensorStore>,
+        capacity_bytes: u64,
+        admission: CacheAdmission,
+    ) -> Self {
         CachedStore {
             inner,
             tier: Tier::new("cpu-cache", capacity_bytes),
+            admission,
             state: Mutex::new(CacheState {
                 map: HashMap::new(),
                 tick: 0,
                 mutations: 0,
+                tenant_bytes: HashMap::new(),
                 stats: CacheStats::default(),
             }),
+        }
+    }
+
+    /// Would caching `bytes` more for `tenant` stay inside the admission
+    /// policy's budget? Shared objects (`tenant == None`) always admit.
+    fn admit(&self, st: &CacheState, tenant: Option<u64>, bytes: u64) -> bool {
+        match (self.admission, tenant) {
+            (CacheAdmission::All, _) | (_, None) => true,
+            (CacheAdmission::PerTenant { per_tenant_bytes }, Some(t)) => {
+                st.tenant_bytes.get(&t).copied().unwrap_or(0) + bytes <= per_tenant_bytes
+            }
         }
     }
 
@@ -628,6 +701,7 @@ impl CachedStore {
             };
             let e = st.map.remove(&k).expect("victim exists");
             self.tier.release(e.data.len() as u64, e.cat);
+            st.release_tenant(&e);
             if e.dirty {
                 self.inner.put(&k, &e.data)?;
             }
@@ -640,31 +714,38 @@ impl CachedStore {
 impl TensorStore for CachedStore {
     fn put(&self, key: &str, data: &[u8]) -> Result<()> {
         let cat = category_of(key);
+        let tenant = tenant_of(key);
         let mut guard = self.state.lock().unwrap();
         let st = &mut *guard;
         st.mutations += 1;
         if let Some(old) = st.map.remove(key) {
             // superseded in place: the old bytes never need a write-back
             self.tier.release(old.data.len() as u64, old.cat);
+            st.release_tenant(&old);
         }
         let bytes = data.len() as u64;
-        if bytes > self.tier.capacity() {
-            // larger than the whole cache: write through
+        if bytes > self.tier.capacity() || !self.admit(st, tenant, bytes) {
+            // larger than the whole cache, or over the tenant's admission
+            // budget: write through
             return self.inner.put(key, data);
         }
         self.make_room(st, bytes)?;
         self.tier.reserve(bytes, cat).expect("make_room freed capacity");
+        if let Some(t) = tenant {
+            *st.tenant_bytes.entry(t).or_default() += bytes;
+        }
         st.tick += 1;
         let tick = st.tick;
         st.map.insert(
             key.to_string(),
-            CacheEntry { data: data.to_vec(), dirty: true, cat, last_used: tick },
+            CacheEntry { data: data.to_vec(), dirty: true, cat, tenant, last_used: tick },
         );
         Ok(())
     }
 
     fn get(&self, key: &str, out: &mut Vec<u8>) -> Result<()> {
         let cat = category_of(key);
+        let tenant = tenant_of(key);
         let mut0 = {
             let mut guard = self.state.lock().unwrap();
             let st = &mut *guard;
@@ -695,15 +776,22 @@ impl TensorStore for CachedStore {
         let bytes = buf.len() as u64;
         // publish into the cache only if no put/delete raced the unlocked
         // read (see CacheState::mutations) — a stale clean entry would
-        // shadow the newer generation the racer left in the backing store
-        if st.mutations == mut0 && bytes <= self.tier.capacity() {
+        // shadow the newer generation the racer left in the backing store —
+        // and the admission policy allows the fill
+        if st.mutations == mut0
+            && bytes <= self.tier.capacity()
+            && self.admit(st, tenant, bytes)
+        {
             self.make_room(st, bytes)?;
             self.tier.reserve(bytes, cat).expect("make_room freed capacity");
+            if let Some(t) = tenant {
+                *st.tenant_bytes.entry(t).or_default() += bytes;
+            }
             st.tick += 1;
             let tick = st.tick;
             st.map.insert(
                 key.to_string(),
-                CacheEntry { data: buf.clone(), dirty: false, cat, last_used: tick },
+                CacheEntry { data: buf.clone(), dirty: false, cat, tenant, last_used: tick },
             );
         }
         out.clear();
@@ -720,6 +808,7 @@ impl TensorStore for CachedStore {
         st.mutations += 1;
         let cached = if let Some(e) = st.map.remove(key) {
             self.tier.release(e.data.len() as u64, e.cat);
+            st.release_tenant(&e);
             true
         } else {
             false
@@ -2125,7 +2214,90 @@ mod tests {
     fn category_classification_follows_key_prefixes() {
         assert_eq!(category_of("opt_m_l0_t1_e"), Category::OptimizerStates);
         assert_eq!(category_of("ilc_ckpt_l0_mb2"), Category::Checkpoints);
+        assert_eq!(category_of("param_l3_w0"), Category::Parameters);
+        assert_eq!(category_of("base_l2_t1"), Category::Parameters);
+        assert_eq!(category_of("base_emb_0"), Category::Parameters);
+        assert_eq!(category_of("adapter_3_l1_t0"), Category::Adapters);
         assert_eq!(category_of("misc"), Category::Working);
+        // tenant ownership rides the adapter key structure only
+        assert_eq!(tenant_of("adapter_3_l1_t0"), Some(3));
+        assert_eq!(tenant_of("adapter_12_l0_t7"), Some(12));
+        assert_eq!(tenant_of("base_l2_t1"), None);
+        assert_eq!(tenant_of("opt_m_l0_t1_e"), None);
+        assert_eq!(tenant_of("adapter_x_l0_t0"), None); // unparsable tenant id
+    }
+
+    /// Satellite regression: cache hit/miss/evict stats must attribute to
+    /// the object's real category — params/base to `Parameters`, adapters
+    /// to `Adapters` — instead of lumping every non-`opt_`/`ilc_` key into
+    /// one `Working` bucket.
+    #[test]
+    fn cache_stats_attribute_param_and_adapter_categories() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_attr")).unwrap());
+        let cache = CachedStore::new(Arc::clone(&inner), 1 << 16);
+        for (key, n) in
+            [("param_l0_w0", 64usize), ("base_l0_t0", 64), ("adapter_1_l0_t0", 8), ("misc", 16)]
+        {
+            cache.put(key, &vec![7u8; n]).unwrap();
+            let mut out = Vec::new();
+            cache.get(key, &mut out).unwrap(); // hit in DRAM
+            assert_eq!(out.len(), n);
+        }
+        // a key the cache has never seen: one miss per category
+        inner.put("adapter_2_l0_t0", &[1u8; 8]).unwrap();
+        let mut out = Vec::new();
+        cache.get("adapter_2_l0_t0", &mut out).unwrap();
+        let stats = cache.cache_stats();
+        let get = |cat: Category| stats.by_cat.get(&cat).copied().unwrap_or_default();
+        assert_eq!(get(Category::Parameters).hits, 2, "param_ + base_ hits");
+        assert_eq!(get(Category::Adapters).hits, 1);
+        assert_eq!(get(Category::Adapters).misses, 1);
+        assert_eq!(get(Category::Working).hits, 1);
+        assert_eq!(get(Category::Working).misses, 0);
+    }
+
+    /// Per-tenant admission: under `CacheAdmission::PerTenant`, each
+    /// tenant's resident adapter bytes stay within its budget (overflow
+    /// writes through to the backing store without evicting anything),
+    /// while shared `base_*` objects admit freely.
+    #[test]
+    fn cached_store_per_tenant_admission_budget() {
+        let inner: Arc<dyn TensorStore> =
+            Arc::new(SsdStorage::create_unthrottled(tmp("cache_adm")).unwrap());
+        let cache = CachedStore::with_admission(
+            Arc::clone(&inner),
+            1 << 16,
+            CacheAdmission::PerTenant { per_tenant_bytes: 512 },
+        );
+        // base image: shared, always cacheable
+        cache.put("base_l0_t0", &[2u8; 1024]).unwrap();
+        // tenant 0: two 256 B adapters fit the 512 B budget exactly
+        cache.put("adapter_0_l0_t0", &[3u8; 256]).unwrap();
+        cache.put("adapter_0_l1_t0", &[4u8; 256]).unwrap();
+        // the third overflows the budget -> write-through, not cached
+        cache.put("adapter_0_l2_t0", &[5u8; 256]).unwrap();
+        assert!(inner.contains("adapter_0_l2_t0"), "over-budget put must write through");
+        // dirty in-budget entries have NOT been written back (still cached)
+        assert!(!inner.contains("adapter_0_l0_t0"));
+        // tenant 1 has its own budget
+        cache.put("adapter_1_l0_t0", &[6u8; 256]).unwrap();
+        assert!(!inner.contains("adapter_1_l0_t0"));
+        // nothing was evicted to make the over-budget put "fit"
+        assert_eq!(cache.cache_stats().total.evictions, 0);
+        // a read of the written-through key must not fill the cache either:
+        // the inner store's read counter grows on BOTH reads
+        let mut out = Vec::new();
+        let r0 = inner.bytes_read();
+        cache.get("adapter_0_l2_t0", &mut out).unwrap();
+        let r1 = inner.bytes_read();
+        cache.get("adapter_0_l2_t0", &mut out).unwrap();
+        let r2 = inner.bytes_read();
+        assert!(r1 > r0 && r2 > r1, "over-budget reads must bypass the fill");
+        // deleting an adapter returns its budget
+        assert!(cache.delete("adapter_0_l0_t0"));
+        cache.put("adapter_0_l3_t0", &[8u8; 256]).unwrap();
+        assert!(!inner.contains("adapter_0_l3_t0"), "freed budget re-admits");
     }
 
     /// Satellite regression: a dirty entry deleted before any write-back

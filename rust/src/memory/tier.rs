@@ -10,22 +10,27 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
-/// Data categories tracked by a tier (the LP's variables).
+/// Data categories tracked by a tier (the LP's variables, plus the serve
+/// path's per-tenant adapter deltas).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Category {
     Parameters,
     Checkpoints,
     Gradients,
     OptimizerStates,
+    /// Per-tenant fine-tuning deltas (`adapter_*` store keys) — small
+    /// objects riding the shared base image in the multi-tenant serve path.
+    Adapters,
     Working,
 }
 
 impl Category {
-    pub const ALL: [Category; 5] = [
+    pub const ALL: [Category; 6] = [
         Category::Parameters,
         Category::Checkpoints,
         Category::Gradients,
         Category::OptimizerStates,
+        Category::Adapters,
         Category::Working,
     ];
 }

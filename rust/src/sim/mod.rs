@@ -22,6 +22,12 @@
 //! bandwidth of the plan's concurrent DRAM/NVMe/remote paths
 //! ([`schedules::planned_bandwidth`] — Σ path rates until a path saturates).
 //!
+//! The forward-only serving engine has its own twin in [`serve`]:
+//! schedule-ordered decode token steps streaming the shared base image (and
+//! per-tenant adapters) under the same io-depth gate, striping, and
+//! fit-or-nothing cache law, reporting steady-state tokens/sec against the
+//! [`serve::serve_token_bound`] closed form (fig18).
+//!
 //! The data-parallel dimension lives in [`dist`]: W workers with their own
 //! compute resources (incl. a first-class inter-GPU interconnect for the
 //! ring-collective legs and a per-worker CPU-optimizer core) over one
@@ -35,6 +41,7 @@
 pub mod dist;
 pub mod engine;
 pub mod schedules;
+pub mod serve;
 
 pub use dist::{simulate_dist, DistConfig};
 pub use engine::{DiscreteSim, Resource, SimOp};
@@ -42,3 +49,4 @@ pub use schedules::{
     planned_bandwidth, simulate, simulate_io, simulate_planned, simulate_store,
     simulate_store_prec, Schedule, SimResult,
 };
+pub use serve::{simulate_serve, serve_token_bound, ServeSimConfig, ServeSimResult};

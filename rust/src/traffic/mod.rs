@@ -441,6 +441,52 @@ impl Workload {
         }
     }
 
+    // ---- serve (forward-only decode) closed forms ------------------------
+
+    /// Layer-parameter LOADS one decode pass of the serve engine performs
+    /// over a batch of `m` lanes (concurrent sequences) under a
+    /// `chunked:G`-style grouping: the lanes sweep the stack in ⌈M/G⌉
+    /// chunks, each re-streaming every layer once — N·⌈M/G⌉ loads. `G ≥ M`
+    /// is the vertical decode order (N loads per token step, the batched-
+    /// decode amortization), `G = 1` the horizontal one (N·M). This count
+    /// is unit-free, so it mirrors the runtime engine EXACTLY: the serve
+    /// engine's per-pass parameter-stream bytes are this count times its
+    /// per-layer base-image bytes (property-pinned in `tests/proptests.rs`
+    /// against `schedule::param_loads` of the actual forward order).
+    pub fn serve_param_loads(&self, group: u64) -> u64 {
+        self.model.n_layers * self.m.div_ceil(group.max(1))
+    }
+
+    /// Parameter bytes the serve engine STREAMS per decode pass in the
+    /// paper's wire units: exactly the TRAINING forward leg of the schedule
+    /// forms — half the round-trip `param_load` of
+    /// [`Workload::chunked_vertical`] (which degenerates to
+    /// [`Workload::vertical`] at G ≥ M and [`Workload::horizontal`] at
+    /// G = 1 — a forward-only pass loads each resident layer once, not
+    /// twice). Identity: `serve_param_read_bytes(g) ==
+    /// chunked_vertical(g).param_load / 2`, property-pinned below.
+    pub fn serve_param_read_bytes(&self, group: u64) -> u64 {
+        self.m.div_ceil(group.max(1)) * self.ms_lp()
+    }
+
+    /// Per-tenant adapter bytes riding one decode pass: every layer load
+    /// also streams the owning tenant's `adapter_*` delta for that layer,
+    /// sized `1/denom` of the layer's parameters (the runtime provisions
+    /// `numel/64`-element deltas; the closed form takes the denominator so
+    /// the two stay one expression).
+    pub fn serve_adapter_read_bytes(&self, group: u64, denom: u64) -> u64 {
+        self.serve_param_read_bytes(group) / denom.max(1)
+    }
+
+    /// The serve store's working set under T tenants: ONE shared base image
+    /// (the multi-tenant sharing law — base bytes do not scale with T) plus
+    /// each tenant's adapter set. This is what a DRAM cache must hold to
+    /// absorb the decode re-streaming; the same fit-or-nothing
+    /// [`Workload::cache_absorbs`] law applies on top.
+    pub fn serve_working_set_bytes(&self, tenants: u64, denom: u64) -> u64 {
+        self.ms_lp() + tenants * (self.ms_lp() / denom.max(1))
+    }
+
     // ---- multi-path planner closed forms (`--planned` mirror) ------------
 
     /// The live store objects of one steady-state iteration, as
@@ -682,6 +728,46 @@ mod tests {
             assert_eq!(w.chunked_vertical(m + 7), w.vertical(), "m={m} oversize group");
             assert_eq!(w.chunked_vertical(1), w.horizontal(), "m={m}");
         }
+    }
+
+    #[test]
+    fn serve_forms_are_the_forward_leg_of_the_schedule_forms() {
+        for m in [1, 2, 5, 16] {
+            let w = wl(m);
+            for g in 1..=m + 3 {
+                // Forward-only decode streams each resident layer ONCE —
+                // exactly half the round-trip param_load of the matching
+                // training schedule.
+                assert_eq!(
+                    2 * w.serve_param_read_bytes(g),
+                    w.chunked_vertical(g).param_load,
+                    "m={m} g={g}"
+                );
+                assert_eq!(
+                    w.serve_param_read_bytes(g),
+                    w.serve_param_loads(g) * w.ms_lp() / w.model.n_layers,
+                    "m={m} g={g}: bytes = loads × per-layer bytes"
+                );
+            }
+            assert_eq!(2 * w.serve_param_read_bytes(m + 7), w.vertical().param_load);
+            assert_eq!(2 * w.serve_param_read_bytes(1), w.horizontal().param_load);
+        }
+    }
+
+    #[test]
+    fn serve_adapter_and_working_set_forms() {
+        let w = wl(4);
+        // Adapters are 1/denom of the parameter stream they ride.
+        assert_eq!(w.serve_adapter_read_bytes(4, 64), w.serve_param_read_bytes(4) / 64);
+        // Working set: one shared base + T per-tenant adapter sets — base
+        // bytes do NOT scale with T (the multi-tenant sharing law).
+        let ws1 = w.serve_working_set_bytes(1, 64);
+        let ws4 = w.serve_working_set_bytes(4, 64);
+        assert_eq!(ws4 - ws1, 3 * (w.ms_lp() / 64));
+        assert!(ws4 < 2 * w.ms_lp(), "4 tenants must cost far less than 4 base images");
+        // Degenerate denominators clamp instead of dividing by zero.
+        assert_eq!(w.serve_param_loads(0), w.serve_param_loads(1));
+        assert_eq!(w.serve_adapter_read_bytes(4, 0), w.serve_param_read_bytes(4));
     }
 
     /// The satellite ordering property: bytes read off the host/SSD tier

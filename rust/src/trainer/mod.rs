@@ -542,6 +542,55 @@ mod tests {
         }
     }
 
+    /// Chunk-group boundary legs: `G = 1` is the smallest accepted group
+    /// (0 is a parse error, pinned above) and degenerates the whole
+    /// analytic family to horizontal per-micro-batch reloads; any
+    /// `G > M` clamps to a single chunk — fully vertical traffic — for
+    /// the training round trips and the serve forward forms alike.
+    #[test]
+    fn chunk_group_boundaries_match_named_schedules() {
+        let m = 4u64;
+        let w = Workload {
+            model: crate::modelcfg::GPT_65B,
+            micro_batch: 2,
+            seq_len: crate::modelcfg::SEQ_LEN,
+            m,
+            shards: 1,
+        };
+        let one: ScheduleKind = "chunked:1".parse().unwrap();
+        assert_eq!(one, ScheduleKind::ChunkedVertical(1));
+        assert_eq!(
+            one.traffic(&w).param_load,
+            ScheduleKind::Horizontal.traffic(&w).param_load,
+            "G=1 must reload like horizontal"
+        );
+        assert_eq!(w.serve_param_read_bytes(1), m * w.ms_lp());
+        // every G > M (the boundary G = M+1 and far beyond) is accepted
+        // and clamps to one vertical sweep
+        for g in [m + 1, 10 * m, 1_000_000] {
+            let big: ScheduleKind = format!("chunked:{g}").parse().unwrap();
+            assert_eq!(big, ScheduleKind::ChunkedVertical(g as usize));
+            assert_eq!(
+                big.traffic(&w).param_load,
+                ScheduleKind::Vertical.traffic(&w).param_load,
+                "G={g} > M must load like vertical"
+            );
+            assert_eq!(w.serve_param_read_bytes(g), w.ms_lp());
+            // the emitted order is legal and single-sweep at the boundary
+            let order = big.policy().forward_order(3, m as usize);
+            assert_eq!(crate::coordinator::schedule::param_loads(&order), 3);
+        }
+        // cachesweep shares the byte family at both boundaries
+        assert_eq!(
+            "cachesweep:1".parse::<ScheduleKind>().unwrap().traffic(&w).param_load,
+            one.traffic(&w).param_load
+        );
+        assert_eq!(
+            format!("cachesweep:{}", m + 1).parse::<ScheduleKind>().unwrap().traffic(&w).param_load,
+            ScheduleKind::Vertical.traffic(&w).param_load
+        );
+    }
+
     /// A `--journal` run that loses a "worker" mid-run (injected fault at
     /// the delayed-dispatch site) replays the failed step from the last
     /// committed epoch boundary and ends bit-identical to an uninterrupted

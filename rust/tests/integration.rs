@@ -6,7 +6,7 @@
 //! (with a notice) when the AOT artifacts were never built or PJRT is the
 //! vendored stub, so `cargo test -q` is meaningful on a fresh clone.
 
-use greedysnake::coordinator::{Schedule, TrainerConfig};
+use greedysnake::coordinator::TrainerConfig;
 use greedysnake::lp;
 use greedysnake::machine::MACHINE2_A100;
 use greedysnake::memory::Precision;
@@ -1042,6 +1042,108 @@ fn kill_a_worker_replays_bit_identical() {
                 shard_read_totals[0], shard_read_totals[1],
                 "{kind:?} d{depth}: shard read totals must not depend on W"
             );
+        }
+    }
+}
+
+/// The serve matrix legs: `(tenants, cache MiB)` pairs the serving
+/// equivalence suite runs. CI's serve matrix narrows it via
+/// `GS_TEST_SERVE` (comma-separated `T:cacheMB` pairs, e.g. "4:64") so
+/// each job pins one leg; the default covers tenants {1, 4} × cache
+/// {0, 64 MiB}.
+fn test_serve_set() -> Vec<(u64, u64)> {
+    std::env::var("GS_TEST_SERVE")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| {
+                    let (t, c) = x.trim().split_once(':')?;
+                    Some((t.trim().parse().ok()?, c.trim().parse().ok()?))
+                })
+                .collect::<Vec<(u64, u64)>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![(1, 0), (1, 64), (4, 0), (4, 64)])
+}
+
+/// The serving acceptance property (tentpole): across every matrix leg —
+/// tenant count × DRAM-cache config — and io-depth {0, 2}, the engine
+/// serves BYTE-IDENTICAL token streams (storage topology may change where
+/// bytes live, never what is generated), the per-token parameter-stream
+/// bytes obey the closed-form law on the uncached legs, a fitting cache
+/// absorbs SSD reads without changing tokens, and T tenants share one base
+/// image (per-tenant footprint ≈ adapter bytes only).
+#[test]
+fn serve_matrix_token_streams_and_byte_laws() {
+    use greedysnake::coordinator::serve::{provision, synthetic_requests, ServeModel};
+    use greedysnake::coordinator::ServeEngine;
+    use greedysnake::memory::{CacheAdmission, CachedStore, SsdStorage, TensorStore};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    let model = ServeModel::synthetic(3, 256, 64, 50021);
+    let (n_requests, max_batch, new_tokens) = (8usize, 3usize, 2usize);
+    let tmp = |tag: &str| {
+        std::env::temp_dir().join(format!("gs_it_serve_{tag}_{}", std::process::id()))
+    };
+    // token-stream baseline per tenant count (plain store, synchronous I/O)
+    let mut baselines: HashMap<u64, Vec<(u64, Vec<u32>)>> = HashMap::new();
+    for (tenants, cache_mb) in test_serve_set() {
+        for depth in [0usize, 2] {
+            let tag = format!("t{tenants}_c{cache_mb}_d{depth}");
+            let dev: Arc<dyn TensorStore> =
+                Arc::new(SsdStorage::create_unthrottled(tmp(&tag)).unwrap());
+            let store: Arc<dyn TensorStore> = if cache_mb > 0 {
+                Arc::new(CachedStore::with_admission(
+                    dev,
+                    cache_mb << 20,
+                    CacheAdmission::PerTenant {
+                        per_tenant_bytes: (cache_mb << 20) / tenants,
+                    },
+                ))
+            } else {
+                dev
+            };
+            let rep = provision(store.as_ref(), &model, tenants, 5).unwrap();
+            if cache_mb == 0 {
+                // T tenants share ONE base image on the SSD: the footprint
+                // grows only by each tenant's adapter set
+                assert_eq!(
+                    store.footprint(),
+                    rep.base_bytes + tenants * rep.adapter_bytes_per_tenant,
+                    "{tag}: footprint is not base + T x adapters"
+                );
+            }
+            let requests = synthetic_requests(tenants, n_requests, 5);
+            let mut eng = ServeEngine::new(model.clone(), Arc::clone(&store), depth, 9);
+            let sched = ScheduleKind::Vertical.policy();
+            let out = eng
+                .serve(sched.as_ref(), &requests, max_batch, new_tokens, None)
+                .unwrap();
+            let s = eng.stats();
+            // storage topology must never change what is generated
+            let baseline = baselines.entry(tenants).or_insert_with(|| out.clone());
+            assert_eq!(
+                &out, baseline,
+                "{tag}: token streams depend on the storage/io-depth config"
+            );
+            // byte law: metered bytes are exact on every leg; the store
+            // moved exactly those bytes when uncached, at most them when
+            // the DRAM cache absorbs re-reads
+            let metered =
+                s.base_bytes_loaded + s.adapter_bytes_loaded + s.embed_bytes_loaded;
+            assert_eq!(
+                s.base_bytes_loaded,
+                s.param_loads * model.base_layer_bytes(),
+                "{tag}: base bytes"
+            );
+            if cache_mb == 0 {
+                assert_eq!(s.store_bytes_read, metered, "{tag}: uncached bytes");
+            } else {
+                assert!(s.store_bytes_read <= metered, "{tag}: cache added reads");
+                let c = s.cache.total;
+                assert!(c.hits > 0, "{tag}: a fitting cache must hit: {c:?}");
+            }
         }
     }
 }

@@ -881,3 +881,123 @@ fn prop_codec_specials_preserved() {
         Ok(())
     });
 }
+
+/// Serving: the forward-only engine's parameter-read bytes equal the
+/// training forward leg of the traffic closed forms for EVERY schedule
+/// grouping and io-depth — per token step, `⌈B/G⌉ × model bytes` of base
+/// image and `N·⌈B/G⌉` layer loads, with the uncached store moving exactly
+/// the metered bytes (`serve_param_loads` / `serve_param_read_bytes`
+/// realized by real store traffic).
+#[test]
+fn prop_serve_decode_bytes_equal_forward_closed_form() {
+    use greedysnake::coordinator::schedule::ChunkedVerticalSchedule;
+    use greedysnake::coordinator::serve::{provision, Batch, ServeModel};
+    use greedysnake::coordinator::ServeEngine;
+    use greedysnake::memory::{SsdStorage, TensorStore};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    check("serve-byte-law", 25, |rng| {
+        let n_layers = gen::usize_in(rng, 1, 5);
+        let layer_numel = gen::usize_in(rng, 8, 128);
+        let lanes = gen::usize_in(rng, 1, 6) as u64;
+        // g=1 ≡ horizontal reloads, g ≥ lanes ≡ vertical — the sweep covers
+        // both degeneracies plus the ragged middle
+        let g = gen::usize_in(rng, 1, lanes as usize + 2) as u64;
+        let tokens = gen::usize_in(rng, 1, 3);
+        let model = ServeModel::synthetic(n_layers, layer_numel, 16, 997);
+        let sched = ChunkedVerticalSchedule::new(g as usize);
+        for depth in [0usize, 2] {
+            let uniq = UNIQ.fetch_add(1, Ordering::Relaxed);
+            let path = std::env::temp_dir().join(format!(
+                "gs_prop_serve_{}_{uniq}",
+                std::process::id()
+            ));
+            let store: Arc<dyn TensorStore> =
+                Arc::new(SsdStorage::create_unthrottled(path).map_err(|e| e.to_string())?);
+            provision(store.as_ref(), &model, 2, 7).map_err(|e| e.to_string())?;
+            let mut eng = ServeEngine::new(model.clone(), Arc::clone(&store), depth, 11);
+            let batch = Batch { tenant: 1, requests: (0..lanes).collect() };
+            eng.decode(&sched, &batch, tokens, None).map_err(|e| e.to_string())?;
+            let s = eng.stats();
+            let loads = n_layers as u64 * lanes.div_ceil(g) * tokens as u64;
+            let base = lanes.div_ceil(g)
+                * (n_layers as u64 * model.base_layer_bytes())
+                * tokens as u64;
+            if s.param_loads != loads {
+                return Err(format!(
+                    "nl={n_layers} B={lanes} g={g} depth={depth}: loads {} != {loads}",
+                    s.param_loads
+                ));
+            }
+            if s.base_bytes_loaded != base {
+                return Err(format!(
+                    "nl={n_layers} B={lanes} g={g} depth={depth}: base bytes {} != {base}",
+                    s.base_bytes_loaded
+                ));
+            }
+            if s.adapter_bytes_loaded != loads * model.adapter_layer_bytes() {
+                return Err(format!("g={g} depth={depth}: adapter bytes off"));
+            }
+            let metered = s.base_bytes_loaded + s.adapter_bytes_loaded + s.embed_bytes_loaded;
+            if s.store_bytes_read != metered {
+                return Err(format!(
+                    "g={g} depth={depth}: store read {} != metered {metered}",
+                    s.store_bytes_read
+                ));
+            }
+        }
+        // the analytic family agrees: the serve form is exactly half the
+        // chunked schedule's parameter round trip (forward leg only)
+        let wl = Workload { model: GPT_65B, micro_batch: 2, seq_len: SEQ_LEN, m: lanes, shards: 1 };
+        if 2 * wl.serve_param_read_bytes(g) != wl.chunked_vertical(g).param_load {
+            return Err(format!("g={g}: analytic serve form is not the forward leg"));
+        }
+        Ok(())
+    });
+}
+
+/// Serving: batch formation is a pure function of the request SET — any
+/// arrival permutation forms byte-identical batches, every batch is
+/// single-tenant with ascending ids and ≤ max_batch lanes, and no request
+/// is dropped or duplicated.
+#[test]
+fn prop_serve_batcher_arrival_order_invariant() {
+    use greedysnake::coordinator::serve::{form_batches, Request};
+    check("serve-batcher", 100, |rng| {
+        let tenants = gen::usize_in(rng, 1, 5) as u64;
+        let n = gen::usize_in(rng, 0, 40);
+        let max_batch = gen::usize_in(rng, 1, 6);
+        let mut reqs: Vec<Request> = (0..n as u64)
+            .map(|id| Request { tenant: rng.next_below(tenants), id })
+            .collect();
+        let baseline = form_batches(&reqs, max_batch);
+        for _ in 0..3 {
+            // Fisher–Yates arrival shuffle
+            for i in (1..reqs.len()).rev() {
+                let j = rng.next_below(i as u64 + 1) as usize;
+                reqs.swap(i, j);
+            }
+            if form_batches(&reqs, max_batch) != baseline {
+                return Err(format!("arrival order changed the batches (n={n})"));
+            }
+        }
+        let mut seen: Vec<(u64, u64)> = Vec::new();
+        for b in &baseline {
+            if b.requests.is_empty() || b.requests.len() > max_batch {
+                return Err(format!("batch size {} out of [1, {max_batch}]", b.requests.len()));
+            }
+            if !b.requests.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("ids not ascending: {:?}", b.requests));
+            }
+            seen.extend(b.requests.iter().map(|&id| (b.tenant, id)));
+        }
+        let mut expect: Vec<(u64, u64)> = reqs.iter().map(|r| (r.tenant, r.id)).collect();
+        seen.sort_unstable();
+        expect.sort_unstable();
+        if seen != expect {
+            return Err("requests dropped or duplicated".to_string());
+        }
+        Ok(())
+    });
+}
