@@ -5,7 +5,9 @@
 //! EXPERIMENTS.md §Perf before/after log.
 
 use greedysnake::machine::MACHINE2_A100;
-use greedysnake::memory::{plan_shares, PlannedConfig, PlannedStore, SsdStorage};
+use greedysnake::memory::{
+    plan_shares, BatchConfig, DeviceProfile, PlannedConfig, PlannedStore, SsdStorage,
+};
 use greedysnake::modelcfg::{GPT_65B, SEQ_LEN};
 use greedysnake::optimizer::{adam_step_hlo, adam_step_rust, AdamParams, AdamState};
 use greedysnake::perfmodel::SystemParams;
@@ -48,6 +50,60 @@ fn main() -> anyhow::Result<()> {
         flat.get("pk", &mut raw).unwrap();
         black_box(raw.len())
     });
+
+    // --- NVMe device model (no artifacts needed) ----------------------------
+    // the per-submit pricing cost (eff_bps runs on every throttled transfer)
+    // and the io_uring-style ring window on a latency-floored device: 4
+    // concurrent submitters × 8 small puts, unbatched vs batched — the
+    // delta IS the amortized latency floor.
+    let mut b6 = Bench::new("nvme").warmup(1).iters(5);
+    let curve = DeviceProfile {
+        read_bps: 3.2e9,
+        write_bps: 2.8e9,
+        qd_knee: 8,
+        sat_bytes: 256 << 10,
+        mix_penalty: 0.1,
+        op_latency_s: 60e-6,
+    };
+    b6.run("eff_bps_eval", || {
+        let mut acc = 0.0f64;
+        for qd in 1usize..=32 {
+            acc += curve.eff_bps(qd % 2 == 0, (qd as u64) << 12, qd, 4);
+        }
+        black_box(acc)
+    });
+    let floor = DeviceProfile {
+        read_bps: f64::INFINITY,
+        write_bps: f64::INFINITY,
+        qd_knee: 4,
+        sat_bytes: 1 << 20,
+        mix_penalty: 0.0,
+        op_latency_s: 30e-6,
+    };
+    let small_put_burst = |store: &SsdStorage| {
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let data = vec![t as u8; 16 << 10];
+                    for i in 0..8 {
+                        store.put(&format!("b_{t}_{i}"), &data).unwrap();
+                    }
+                });
+            }
+        });
+    };
+    let un = SsdStorage::with_profile(
+        std::env::temp_dir().join(format!("gs_bench_nvme_un_{}", std::process::id())),
+        floor,
+        None,
+    )?;
+    let ba = SsdStorage::with_profile(
+        std::env::temp_dir().join(format!("gs_bench_nvme_ba_{}", std::process::id())),
+        floor,
+        Some(BatchConfig::default()),
+    )?;
+    b6.run("small_put_burst_unbatched", || small_put_burst(&un));
+    b6.run("small_put_burst_batched", || small_put_burst(&ba));
 
     let manifest = Manifest::load("artifacts/tiny")?;
     let rt = Runtime::load(&manifest)?;

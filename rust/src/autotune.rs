@@ -1,0 +1,454 @@
+//! `greedysnake autotune` — sim-driven configuration search over the FULL
+//! CLI knob surface for a measured hardware profile.
+//!
+//! Algorithm 1 ([`crate::lp`]) optimizes the paper's three knobs — micro-
+//! batch count, delay ratio α, and the storage placement ratios — under a
+//! *flat* SSD bandwidth pair. The runtime grew many more knobs (schedule
+//! family and chunk group G, `--io-depth`, `--ssds`, `--cpu-cache-mb`,
+//! `--workers`, `--shard-optimizer`, `--param-persist`, `--precision`,
+//! `--io-batch`), and a real NVMe is not flat: its delivered bandwidth
+//! ramps with queue depth and request size, pays a mix penalty and a
+//! per-op latency floor ([`DeviceProfile`]). This module closes that gap:
+//!
+//! 1. **Seed** from Algorithm 1: `lp::find_optimal_config` picks the
+//!    micro-batch count, and `lp::solve_config` keeps every candidate's
+//!    (α, placement) CPU-memory-feasible on the profiled machine.
+//! 2. **Refine** by coordinate descent over the discrete knobs, one knob at
+//!    a time, keeping a move only when it improves the objective; repeat
+//!    until a full sweep finds nothing better (≤ [`SWEEPS`] rounds).
+//! 3. **Objective**: [`crate::sim::simulate_dist_dev`] — the discrete-event
+//!    simulator with the SSD tier priced by the profile's QD/size curves
+//!    and the `--io-batch` window amortization, so the search *sees* that
+//!    a deeper io-depth rides the QD ramp and that batching amortizes the
+//!    latency floor. Hand-tuned flat-model configs systematically misprice
+//!    both.
+//!
+//! The search starts FROM the hand-picked default configuration
+//! ([`default_knobs`]) and only ever keeps improvements, so the tuned
+//! result is never worse than the default under the same objective — the
+//! fig19 acceptance bar. Output is a [`TunedConfig`]: the winning knobs,
+//! ready-to-paste `greedysnake train` flags ([`TunedConfig::cli_flags`]),
+//! and the predicted gap to the §3.1 roofline envelope.
+//!
+//! Hardware profiles come from JSON ([`HwProfile::parse`], format in the
+//! [`crate::memory`] module docs) or from the built-in Table 1 machines
+//! ([`HwProfile::builtin`]).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::lp;
+use crate::machine::{Machine, GIB};
+use crate::memory::{BatchConfig, DeviceProfile, Precision};
+use crate::modelcfg::{ModelCfg, SEQ_LEN};
+use crate::perfmodel::{ByteMults, StorageRatios, SystemParams};
+use crate::roofline::Roofline;
+use crate::sim::{simulate_dist_dev, DistConfig, SimResult};
+use crate::trainer::ScheduleKind;
+use crate::util::json::Json;
+
+/// Full coordinate-descent sweeps before giving up on further improvement.
+const SWEEPS: usize = 3;
+
+/// Micro-batch-count cap for the sim objective: the event sim's cost grows
+/// with M and the throughput ranking of the *other* knobs is stable well
+/// below Algorithm 1's stopping M, so the search evaluates at
+/// `min(seed M, 12)` and reports that M.
+const M_EVAL_CAP: u64 = 12;
+
+/// A measured machine: Table 1 numbers plus per-device NVMe curves.
+#[derive(Clone, Debug)]
+pub struct HwProfile {
+    /// Capacities, PCIe/link bandwidths, sustained compute. The flat SSD
+    /// bandwidth pair is the first device's peaks (the sim re-prices it
+    /// through the curve).
+    pub machine: Machine,
+    /// One [`DeviceProfile`] per physical NVMe; `--ssds N` stripes over the
+    /// first N. Non-empty.
+    pub devices: Vec<DeviceProfile>,
+}
+
+impl HwProfile {
+    /// A built-in Table 1 machine wearing a generic datacenter-NVMe curve
+    /// (QD knee 8, 256 KiB saturating request, 10 % mix penalty, 60 µs op
+    /// latency) re-rated to its measured sequential peaks.
+    pub fn builtin(machine: Machine) -> HwProfile {
+        let dev = DeviceProfile {
+            read_bps: machine.ssd_read_bw,
+            write_bps: machine.ssd_write_bw,
+            qd_knee: 8,
+            sat_bytes: 256 << 10,
+            mix_penalty: 0.1,
+            op_latency_s: 60e-6,
+        };
+        HwProfile { machine, devices: vec![dev] }
+    }
+
+    /// Parse the hardware-profile JSON (format in the [`crate::memory`]
+    /// module docs): `gpu_mem_gib`, `cpu_mem_gib`, `pcie_gbps`,
+    /// `link_gbps`, `gpu_tflops`, `cpu_adam_gelems`, and a non-empty
+    /// `devices` array of NVMe curve objects.
+    pub fn parse(text: &str) -> Result<HwProfile> {
+        let j = Json::parse(text).context("hardware profile JSON")?;
+        let f = |key: &str| -> Result<f64> {
+            j.get(key)?.as_f64().with_context(|| format!("hardware profile field '{key}'"))
+        };
+        let devices: Vec<DeviceProfile> = j
+            .get("devices")?
+            .as_arr()
+            .context("'devices' must be an array")?
+            .iter()
+            .map(DeviceProfile::from_json)
+            .collect::<Result<_>>()?;
+        ensure!(!devices.is_empty(), "hardware profile needs at least one device");
+        let machine = Machine {
+            // `Machine::name` is &'static; every JSON-loaded machine is
+            // reported under this constant label.
+            name: "custom",
+            gpu_mem: (f("gpu_mem_gib")? * GIB as f64) as u64,
+            cpu_mem: (f("cpu_mem_gib")? * GIB as f64) as u64,
+            pcie_bw: f("pcie_gbps")? * 1e9,
+            link_bw: f("link_gbps")? * 1e9,
+            ssd_read_bw: devices[0].read_bps,
+            ssd_write_bw: devices[0].write_bps,
+            gpu_flops: f("gpu_tflops")? * 1e12,
+            cpu_adam_elems_per_s: f("cpu_adam_gelems")? * 1e9,
+        };
+        ensure!(machine.gpu_mem > 0 && machine.cpu_mem > 0, "memory capacities must be positive");
+        ensure!(
+            machine.pcie_bw > 0.0 && machine.link_bw > 0.0 && machine.gpu_flops > 0.0,
+            "bandwidths and compute must be positive"
+        );
+        Ok(HwProfile { machine, devices })
+    }
+
+    /// The device curve `--ssds n` runs each stripe member at (devices are
+    /// assumed symmetric; the first profile speaks for the stripe set).
+    fn device(&self) -> &DeviceProfile {
+        &self.devices[0]
+    }
+}
+
+/// One point in the search space — the `greedysnake train` knob surface.
+#[derive(Clone, Copy, Debug)]
+pub struct Knobs {
+    pub schedule: ScheduleKind,
+    pub alpha: f64,
+    /// Storage placement (CPU-DRAM fractions) — always an LP-feasible
+    /// solution for (α, precision) on this machine, never a free variable.
+    pub ratios: StorageRatios,
+    /// Micro-batches per iteration.
+    pub m: u64,
+    pub io_depth: usize,
+    pub ssds: usize,
+    pub cache_mb: u64,
+    pub workers: usize,
+    pub shard_optimizer: bool,
+    pub param_persist: bool,
+    pub precision: Precision,
+    /// `None` = unbatched submissions.
+    pub io_batch: Option<BatchConfig>,
+}
+
+/// The search result: winning knobs plus the sim's prediction for them.
+#[derive(Clone, Copy, Debug)]
+pub struct TunedConfig {
+    pub knobs: Knobs,
+    /// Predicted steady-state seconds per iteration.
+    pub t_iter: f64,
+    /// Predicted training throughput, tokens/s.
+    pub tokens_per_s: f64,
+    /// §3.1 roofline envelope at the tuned M — the best any system could do.
+    pub ideal_tokens_per_s: f64,
+}
+
+impl TunedConfig {
+    /// Predicted fraction of the roofline envelope achieved ∈ (0, 1].
+    pub fn roofline_frac(&self) -> f64 {
+        (self.tokens_per_s / self.ideal_tokens_per_s).min(1.0)
+    }
+
+    /// Ready-to-paste `greedysnake train` flags for the tuned point.
+    pub fn cli_flags(&self) -> String {
+        let k = &self.knobs;
+        let mut s = format!(
+            "--schedule {} --alpha {:.2} --micro-batches {} --io-depth {} --ssds {} \
+             --cpu-cache-mb {} --workers {} --precision {}",
+            k.schedule, k.alpha, k.m, k.io_depth, k.ssds, k.cache_mb, k.workers, k.precision,
+        );
+        if let Some(b) = k.io_batch {
+            s.push_str(&format!(" --io-batch {}:{}", b.max_bytes, b.max_ops));
+        }
+        if k.shard_optimizer {
+            s.push_str(" --shard-optimizer");
+        }
+        if k.param_persist {
+            s.push_str(" --param-persist");
+        }
+        s
+    }
+}
+
+/// The operating point the objective runs at (the dist sim models the GPUs
+/// explicitly, so the node is always `with_gpus(1)`).
+fn sys(hw: &HwProfile, model: ModelCfg, micro_batch: u64) -> SystemParams {
+    SystemParams::new(hw.machine.with_gpus(1), model, micro_batch, SEQ_LEN)
+}
+
+/// An LP-feasible placement for (α, precision) at `m` micro-batches —
+/// `None` when the configuration cannot fit CPU memory.
+fn feasible_ratios(
+    sp: &SystemParams,
+    m: u64,
+    alpha: f64,
+    precision: Precision,
+) -> Option<StorageRatios> {
+    let sp = sp.with_byte_mults(ByteMults::for_precision(precision));
+    lp::solve_config(&sp, m, alpha).map(|r| r.ratios)
+}
+
+/// Evaluate one knob point with the device-curve simulator — the search
+/// objective, public so the fig19 bench and the tests can score the
+/// hand-picked default with the *same* ruler as the tuned result.
+pub fn eval_knobs(hw: &HwProfile, model: ModelCfg, micro_batch: u64, k: &Knobs) -> SimResult {
+    let sp = sys(hw, model, micro_batch);
+    let alpha = if k.schedule.supports_delay() { k.alpha } else { 0.0 };
+    let sched = k.schedule.sim_schedule(alpha, k.ratios);
+    let cfg = DistConfig {
+        workers: k.workers.max(1),
+        ssds: k.ssds.max(1),
+        io_depth: k.io_depth,
+        shard_optimizer: k.shard_optimizer,
+        param_persist: k.param_persist,
+        cache_bytes: k.cache_mb << 20,
+        byte_mults: ByteMults::for_precision(k.precision),
+    };
+    // Steady request size: one layer's low-precision parameter object,
+    // split across the stripe set — the dominant transfer the lanes issue.
+    let req = (model.layer_param_bytes_lp() / k.ssds.max(1) as u64).max(4096);
+    let batch_ops = match k.io_batch {
+        Some(b) => b.max_ops.min(b.max_bytes / req).max(1),
+        None => 1,
+    };
+    simulate_dist_dev(&sp, k.m, sched, cfg, hw.device(), req, req, batch_ops)
+}
+
+/// The hand-picked default configuration — what a careful operator writes
+/// down from the paper without a device model: vertical schedule, α = 0.25
+/// (LP placement at that α), `--io-depth 2`, one SSD, no cache, one
+/// worker, strict f32, unbatched. Also the point the search starts from.
+pub fn default_knobs(hw: &HwProfile, model: ModelCfg, micro_batch: u64) -> Knobs {
+    let sp = sys(hw, model, micro_batch);
+    let seed = lp::find_optimal_config(&sp);
+    let m = seed.map(|s| s.m).unwrap_or(8).clamp(1, M_EVAL_CAP);
+    let alpha = 0.25;
+    let ratios =
+        feasible_ratios(&sp, m, alpha, Precision::F32).unwrap_or(StorageRatios::ALL_SSD);
+    Knobs {
+        schedule: ScheduleKind::Vertical,
+        alpha,
+        ratios,
+        m,
+        io_depth: 2,
+        ssds: 1,
+        cache_mb: 0,
+        workers: 1,
+        shard_optimizer: false,
+        param_persist: false,
+        precision: Precision::F32,
+        io_batch: None,
+    }
+}
+
+/// Run the search. Returns the tuned configuration; never worse than
+/// [`default_knobs`] under [`eval_knobs`] (the search starts there and
+/// keeps only improvements).
+pub fn autotune(hw: &HwProfile, model: ModelCfg, micro_batch: u64) -> Result<TunedConfig> {
+    ensure!(!hw.devices.is_empty(), "hardware profile needs at least one device");
+    let sp = sys(hw, model, micro_batch);
+    let mut best = default_knobs(hw, model, micro_batch);
+    let mut best_r = eval_knobs(hw, model, micro_batch, &best);
+
+    // One knob move: keep it iff it strictly improves the objective.
+    let consider = |cand: Knobs, best: &mut Knobs, best_r: &mut SimResult| {
+        let r = eval_knobs(hw, model, micro_batch, &cand);
+        if r.tokens_per_s > best_r.tokens_per_s {
+            *best = cand;
+            *best_r = r;
+        }
+    };
+
+    for _ in 0..SWEEPS {
+        let at_entry = best_r.tokens_per_s;
+
+        // schedule family × chunk group
+        for schedule in [
+            ScheduleKind::Vertical,
+            ScheduleKind::ChunkedVertical(2),
+            ScheduleKind::ChunkedVertical(4),
+            ScheduleKind::ChunkedVertical(8),
+            ScheduleKind::CacheSweep(2),
+            ScheduleKind::CacheSweep(4),
+            ScheduleKind::CacheSweep(8),
+            ScheduleKind::Horizontal,
+        ] {
+            consider(Knobs { schedule, ..best }, &mut best, &mut best_r);
+        }
+
+        // io-depth rides the device's QD ramp
+        for io_depth in [1usize, 2, 4, 8, 16] {
+            consider(Knobs { io_depth, ..best }, &mut best, &mut best_r);
+        }
+
+        // stripe width, bounded by the physical device count
+        for ssds in 1..=hw.devices.len() {
+            consider(Knobs { ssds, ..best }, &mut best, &mut best_r);
+        }
+
+        // DRAM cache tier, bounded by the machine's CPU memory
+        let cpu_mb = hw.machine.cpu_mem >> 20;
+        for cache_mb in [0u64, 4096, 16384, 65536] {
+            if cache_mb < cpu_mb {
+                consider(Knobs { cache_mb, ..best }, &mut best, &mut best_r);
+            }
+        }
+
+        // data-parallel workers + the two sharding switches
+        for workers in [1usize, 2, 4] {
+            consider(Knobs { workers, ..best }, &mut best, &mut best_r);
+        }
+        for shard_optimizer in [false, true] {
+            consider(Knobs { shard_optimizer, ..best }, &mut best, &mut best_r);
+        }
+        for param_persist in [false, true] {
+            consider(Knobs { param_persist, ..best }, &mut best, &mut best_r);
+        }
+
+        // storage precision — placement must be re-solved per precision
+        for precision in [Precision::F32, Precision::MixedF16, Precision::MixedBf16] {
+            if let Some(ratios) = feasible_ratios(&sp, best.m, best.alpha, precision) {
+                consider(Knobs { precision, ratios, ..best }, &mut best, &mut best_r);
+            }
+        }
+
+        // submission batching amortizes the latency floor
+        for io_batch in [
+            None,
+            Some(BatchConfig::default()),
+            Some(BatchConfig { max_bytes: 4 << 20, max_ops: 64 }),
+        ] {
+            consider(Knobs { io_batch, ..best }, &mut best, &mut best_r);
+        }
+
+        // delay ratio α on the shared Algorithm 1 grid (every 5th point),
+        // with its LP placement
+        for alpha in lp::alpha_grid().into_iter().skip(4).step_by(5) {
+            if let Some(ratios) = feasible_ratios(&sp, best.m, alpha, best.precision) {
+                consider(Knobs { alpha, ratios, ..best }, &mut best, &mut best_r);
+            }
+        }
+
+        if best_r.tokens_per_s <= at_entry * 1.0001 {
+            break; // converged: a full sweep moved nothing
+        }
+    }
+
+    let roofline =
+        Roofline { node: hw.machine.with_gpus(1), model, micro_batch, seq_len: SEQ_LEN };
+    Ok(TunedConfig {
+        knobs: best,
+        t_iter: best_r.t_iter,
+        tokens_per_s: best_r.tokens_per_s,
+        ideal_tokens_per_s: roofline.ideal_tokens_per_s(best.m),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::{MACHINE1_A5000, MACHINE2_A100};
+    use crate::modelcfg::{GPT_30B, GPT_65B};
+
+    /// A memory-starved host forces SSD-resident optimizer states even for
+    /// shortened test models, so the device curve actually binds.
+    fn tight_hw(base: Machine, cpu_gib: u64) -> HwProfile {
+        let mut m = base;
+        m.cpu_mem = cpu_gib * GIB;
+        HwProfile::builtin(m)
+    }
+
+    fn short(model: ModelCfg, n_layers: u64) -> ModelCfg {
+        let mut m = model;
+        m.n_layers = n_layers;
+        m
+    }
+
+    #[test]
+    fn hw_profile_json_parses() {
+        let hw = HwProfile::parse(
+            r#"{"gpu_mem_gib": 24, "cpu_mem_gib": 128, "pcie_gbps": 16,
+                "link_gbps": 56, "gpu_tflops": 70, "cpu_adam_gelems": 2.0,
+                "devices": [{"read_gbps": 3.2, "write_gbps": 2.8,
+                             "qd_knee": 8, "sat_kib": 256,
+                             "mix_penalty": 0.15, "op_latency_us": 80},
+                            {"read_gbps": 3.2, "write_gbps": 2.8}]}"#,
+        )
+        .unwrap();
+        assert_eq!(hw.machine.name, "custom");
+        assert_eq!(hw.machine.gpu_mem, 24 * GIB);
+        assert_eq!(hw.machine.cpu_mem, 128 * GIB);
+        assert_eq!(hw.devices.len(), 2);
+        assert_eq!(hw.machine.ssd_read_bw, 3.2e9);
+        assert_eq!(hw.devices[0].qd_knee, 8);
+        assert!(hw.devices[1].is_flat());
+        assert!(HwProfile::parse(r#"{"gpu_mem_gib": 24}"#).is_err());
+        assert!(HwProfile::parse(
+            r#"{"gpu_mem_gib": 24, "cpu_mem_gib": 128, "pcie_gbps": 16,
+                "link_gbps": 56, "gpu_tflops": 70, "cpu_adam_gelems": 2.0,
+                "devices": []}"#
+        )
+        .is_err());
+    }
+
+    /// The acceptance bar: on ≥ 2 (hardware profile × model) pairs the
+    /// tuned configuration strictly beats the hand-picked default under
+    /// the same sim objective. The defaults misprice the QD ramp
+    /// (`--io-depth 2` on a knee-8 device leaves 4× read bandwidth on the
+    /// table), so the search must find a strict win, not a tie.
+    #[test]
+    fn tuned_beats_handpicked_default_on_two_pairs() {
+        let pairs = [
+            (tight_hw(MACHINE1_A5000, 16), short(GPT_65B, 8)),
+            (tight_hw(MACHINE2_A100, 8), short(GPT_30B, 8)),
+        ];
+        for (hw, model) in &pairs {
+            let def = default_knobs(hw, *model, 2);
+            let def_r = eval_knobs(hw, *model, 2, &def);
+            let tuned = autotune(hw, *model, 2).unwrap();
+            assert!(
+                tuned.tokens_per_s > def_r.tokens_per_s,
+                "{}: tuned {} must strictly beat default {} ({})",
+                model.name,
+                tuned.tokens_per_s,
+                def_r.tokens_per_s,
+                tuned.cli_flags(),
+            );
+            assert!(tuned.roofline_frac() > 0.0 && tuned.roofline_frac() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn cli_flags_round_trip_the_knob_surface() {
+        let hw = tight_hw(MACHINE1_A5000, 16);
+        let model = short(GPT_65B, 8);
+        let tuned = autotune(&hw, model, 2).unwrap();
+        let flags = tuned.cli_flags();
+        for needle in
+            ["--schedule ", "--alpha ", "--micro-batches ", "--io-depth ", "--precision "]
+        {
+            assert!(flags.contains(needle), "'{needle}' missing from '{flags}'");
+        }
+        // every emitted schedule spelling parses back through the grammar
+        let k: ScheduleKind = tuned.knobs.schedule.to_string().parse().unwrap();
+        assert_eq!(k, tuned.knobs.schedule);
+    }
+}

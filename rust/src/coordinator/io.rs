@@ -28,6 +28,13 @@
 //! tier, any of them under the mixed-precision codec layer
 //! (`--precision`), which halves the checkpoint bytes each lane op moves —
 //! so lookahead depth, backend, and storage precision compose freely.
+//! When the run carries an NVMe device curve (`--nvme-profile`) with a
+//! submission window (`--io-batch`), these lanes are also what *feeds* the
+//! per-device batcher ([`crate::memory::DeviceThrottle`]): lookahead keeps
+//! several sub-saturating transfers in flight on the same device at once,
+//! which is exactly the concurrency the io_uring-style window coalesces to
+//! amortize the per-op latency floor. Batching changes wall time only —
+//! lane ordering, stored bytes, and results stay bit-identical.
 //!
 //! Lane-op failures (I/O errors *and* panics) surface as `anyhow` errors at
 //! this boundary — a panicked op poisons the executor

@@ -8,7 +8,7 @@ use crate::memory::codec::{CodecStore, Precision};
 use crate::memory::store::{
     CachedStore, JournalStore, PlannedConfig, PlannedStore, StripedStore, TensorStore,
 };
-use crate::memory::SsdStorage;
+use crate::memory::{BatchConfig, DeviceProfile, SsdStorage};
 use crate::optimizer::{AdamParams, AdamState};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::HostTensor;
@@ -65,6 +65,20 @@ pub struct TrainerConfig {
     pub ssd_path: std::path::PathBuf,
     pub ssd_read_bps: f64,
     pub ssd_write_bps: f64,
+    /// NVMe device-curve shape (`--nvme-profile`): QD knee, saturating
+    /// request size, read/write mix penalty, and per-op latency floor
+    /// applied to every backing device, re-rated to
+    /// `ssd_read_bps`/`ssd_write_bps` ([`DeviceProfile::with_rates`]).
+    /// `None` (the default) keeps the flat pre-profile throttle —
+    /// bit-identical AND timing-identical to the seed engine. Profiles
+    /// change timing only: losses and Σx² digests stay bit-identical.
+    pub nvme: Option<DeviceProfile>,
+    /// io_uring-style submission-batching window (`--io-batch BYTES[:OPS]`)
+    /// on every backing device: concurrent sub-saturating submissions
+    /// coalesce into one ring submission and amortize the profile's
+    /// latency floor. `None` = unbatched. Never changes results — only
+    /// wall time (the batching determinism contract).
+    pub io_batch: Option<BatchConfig>,
     /// Number of independent SSD devices to stripe the store across
     /// (`--ssds`; the runtime twin of the sim flag). 1 = the single-device
     /// [`SsdStorage`] path; N > 1 = [`StripedStore`] — each object's
@@ -152,6 +166,8 @@ impl Default for TrainerConfig {
                 .join(format!("greedysnake_ssd_{}", std::process::id())),
             ssd_read_bps: f64::INFINITY,
             ssd_write_bps: f64::INFINITY,
+            nvme: None,
+            io_batch: None,
             ssds: 1,
             cpu_cache_mb: 0,
             planned: false,
@@ -254,21 +270,27 @@ pub(crate) fn build_store_with_admission(
             dram_bps: 0.0, // PlannedStore::DRAM_BPS
             remote_bps: cfg.remote_mbps * 1e6,
         };
-        Arc::new(PlannedStore::create(&cfg.ssd_path, &pc)?.with_fault_scope(&cfg.fault_scope))
+        Arc::new(
+            PlannedStore::create_profiled(&cfg.ssd_path, &pc, cfg.nvme.as_ref(), cfg.io_batch)?
+                .with_fault_scope(&cfg.fault_scope),
+        )
     } else {
+        // Re-rate the configured curve shape (if any) to the configured
+        // bandwidth pair; flat otherwise — identical to the seed engine.
+        let profile = match cfg.nvme {
+            Some(p) => p.with_rates(cfg.ssd_read_bps, cfg.ssd_write_bps),
+            None => DeviceProfile::flat(cfg.ssd_read_bps, cfg.ssd_write_bps),
+        };
         let dev: Arc<dyn TensorStore> = if cfg.ssds > 1 {
-            Arc::new(StripedStore::create(
+            Arc::new(StripedStore::create_profiled(
                 &cfg.ssd_path,
                 cfg.ssds,
-                cfg.ssd_read_bps,
-                cfg.ssd_write_bps,
+                profile,
+                cfg.io_batch,
+                StripedStore::DEFAULT_STRIPE,
             )?)
         } else {
-            Arc::new(SsdStorage::create(
-                &cfg.ssd_path,
-                cfg.ssd_read_bps,
-                cfg.ssd_write_bps,
-            )?)
+            Arc::new(SsdStorage::with_profile(&cfg.ssd_path, profile, cfg.io_batch)?)
         };
         if cfg.cpu_cache_mb > 0 {
             Arc::new(CachedStore::with_admission(

@@ -19,21 +19,23 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`autotune`] | sim-driven configuration search over the full CLI knob surface (`greedysnake autotune`): hardware-profile JSON in ([`autotune::HwProfile`]: machine capacities + per-device NVMe curves), Algorithm-1 seed, coordinate descent over schedule × io-depth × ssds × cache × workers × sharding × precision × io-batch with [`sim::simulate_dist_dev`] as the objective, ready-to-paste train flags + predicted roofline gap out ([`autotune::TunedConfig`]) |
 //! | [`util`] | PRNG, stats, f16/bf16 conversion, TSV tables, CLI parsing, bench + property-test harnesses, the deterministic fault-injection registry ([`util::fault`]: arm a named site to fail on its n-th hit; scope-qualified names keep parallel tests disjoint) |
 //! | [`exec`] | thread pool and dependency-aware lane executor (the asyncio-pipeline substrate; lane panics surface as errors, not deadlocks) |
-//! | [`memory`] | GPU/CPU tier accounting, file-backed throttled SSD (positioned I/O, concurrent read/write lanes, atomic layout transitions, shrinking high-water mark), the pluggable [`memory::store::TensorStore`] object tier (single SSD / striped multi-SSD `--ssds N` / DRAM-cached `--cpu-cache-mb` / the multi-path [`memory::store::PlannedStore`] planner `--planned`: every object splits into per-path extents served concurrently from the DRAM tier + each NVMe device + the simulated `--remote-mbps` tier, bandwidth-proportional shares, per-path depth gates, [`memory::store::PathStats`] byte attribution) under the crash-consistency layer ([`memory::store::JournalStore`], `--journal`: write-behind undo journal + epoch markers, `recover()` rolls an in-flight epoch back to the last committed boundary) and the mixed-precision codec layer ([`memory::codec::CodecStore`]: per-category `--precision` policies, f16/bf16 wire formats; two-tier equivalence contract — backends are byte-identical under any fixed codec, strict f32 is bit-identical to the bare stack, mixed policies are tolerance-pinned), pinned-buffer pool |
+//! | [`memory`] | GPU/CPU tier accounting, file-backed throttled SSD (positioned I/O, concurrent read/write lanes, atomic layout transitions, shrinking high-water mark) under the QD-aware NVMe device model ([`memory::DeviceProfile`]: per-device QD→bandwidth curve, request-size ramp, read/write mix penalty, per-op latency floor — flat profile ≡ the plain throttle bit- and timing-identically) with io_uring-style submission batching ([`memory::BatchConfig`], `--io-batch`: concurrent sub-saturating submissions coalesce into one ring window, amortizing the latency floor; timing-only, results bit-identical), the pluggable [`memory::store::TensorStore`] object tier (single SSD / striped multi-SSD `--ssds N` / DRAM-cached `--cpu-cache-mb` / the multi-path [`memory::store::PlannedStore`] planner `--planned`: every object splits into per-path extents served concurrently from the DRAM tier + each NVMe device + the simulated `--remote-mbps` tier, bandwidth-proportional shares, per-path depth gates, [`memory::store::PathStats`] byte attribution) under the crash-consistency layer ([`memory::store::JournalStore`], `--journal`: write-behind undo journal + epoch markers, `recover()` rolls an in-flight epoch back to the last committed boundary) and the mixed-precision codec layer ([`memory::codec::CodecStore`]: per-category `--precision` policies, f16/bf16 wire formats; two-tier equivalence contract — backends are byte-identical under any fixed codec, strict f32 is bit-identical to the bare stack, mixed policies are tolerance-pinned), pinned-buffer pool |
 //! | [`modelcfg`] | Table 2 model zoo and per-layer size/FLOP arithmetic |
 //! | [`machine`] | Table 1 machine specs (bandwidths, capacities, compute rates) |
 //! | [`traffic`] | analytic data-movement model: horizontal vs vertical vs single-pass, per-worker data-parallel forms (`*_dp`), the sharded-optimizer closed forms (reduce-scatter / all-gather ring bytes, per-rank ~1/W optimizer SSD round trips), the persistence-sharded parameter forms (per-rank ~1/W parameter SSD round trips under `--param-persist`), the DRAM-cache absorption forms (fit-or-nothing working-set law + runtime store byte mirrors), the encoded-byte `*_enc` family (per-[`memory::codec::PrecisionPolicy`] store bytes matching the runtime counters exactly), the multi-path `planned_*` forms (per-path byte splits under the planner's weights, conserving the aggregate exactly), and the `serve_*` family (per-token-step decode loads/bytes — the forward leg of the schedule forms — plus the multi-tenant shared-base working-set law) |
 //! | [`roofline`] | the §3.1 I/O + compute roofline |
 //! | [`lp`] | dense simplex solver + Algorithm 1 configuration search, incl. the cache-aware solve ([`lp::solve_config_cached`] + [`lp::ssd_working_set`]: DRAM-cache fit-or-nothing absorption folded into the placement objective) |
 //! | [`perfmodel`] | per-layer time prediction and iteration-time composition |
-//! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake / chunked), incl. the multi-worker shared-SSD builder ([`sim::simulate_dist`]: first-class inter-GPU link resource for the ring legs, delayed-α modeling, rank-0 or ZeRO-style sharded optimizer), the storage-tier mirror ([`sim::simulate_store`]: `--ssds` striping bandwidth, DRAM-cache absorption; [`sim::simulate_store_prec`]: per-category `--precision` byte multipliers; [`sim::simulate_planned`] + [`sim::planned_bandwidth`]: the multi-path planner's aggregate-bandwidth law), and the serving twin ([`sim::simulate_serve`] + [`sim::serve_token_bound`]: steady-state tokens/sec of schedule-ordered decode under io-depth gating, striping, and the fit-or-nothing cache law) |
+//! | [`sim`] | discrete-event pipeline simulator (ZeRO-Infinity / Ratel / TeraIO / GreedySnake / chunked), incl. the multi-worker shared-SSD builder ([`sim::simulate_dist`]: first-class inter-GPU link resource for the ring legs, delayed-α modeling, rank-0 or ZeRO-style sharded optimizer), the storage-tier mirror ([`sim::simulate_store`]: `--ssds` striping bandwidth, DRAM-cache absorption; [`sim::simulate_store_prec`]: per-category `--precision` byte multipliers; [`sim::simulate_planned`] + [`sim::planned_bandwidth`]: the multi-path planner's aggregate-bandwidth law; [`sim::simulate_io_dev`] + [`sim::simulate_dist_dev`]: the SSD tier priced by an NVMe [`memory::DeviceProfile`] curve with `--io-batch` window amortization, flat profile = exact identity), and the serving twin ([`sim::simulate_serve`] + [`sim::serve_token_bound`]: steady-state tokens/sec of schedule-ordered decode under io-depth gating, striping, and the fit-or-nothing cache law) |
 //! | [`runtime`] | PJRT client wrapper, artifact manifests, executable cache |
 //! | [`optimizer`] | mixed-precision Adam, gradient accumulation, delay-α split, clipping |
 //! | [`coordinator`] | the three coordinators + the schedule-agnostic [`coordinator::StepEngine`], pluggable [`coordinator::Schedule`] policies (vertical, horizontal, `chunked:G`, the cache-friendly `cachesweep:G` subgroup sweep), the phase-generic streaming core ([`coordinator::LayerStreamer`]: one-layer parameter residency + depth-K lookahead + per-layer byte metering, shared by training and serving), the async [`coordinator::io::IoPipeline`] (`--io-depth K` lookahead prefetch + write-behind; K=0 ≡ synchronous), the forward-only multi-tenant serving engine ([`coordinator::ServeEngine`], `greedysnake serve`: schedule-ordered decode passes streaming one shared base image + per-tenant adapter deltas, deterministic arrival-order-invariant batching, per-tenant [`memory::store::CacheAdmission`]), and the data-parallel [`coordinator::dist::DataParallelEngine`] (`--workers W`, deterministic chunked ring all-reduce — or, with `--shard-optimizer`, ZeRO-style reduce-scatter + per-rank shard updates + parameter all-gather; every W bit-identical to W=1 either way), plus persistence-sharded master parameters (`--param-persist`: each rank round-trips ~1/W of the parameter bytes per step, embedding/head group included) with deterministic elastic re-shard (`coordinator::opt::reshard_store`, W→W′ bit-identical to a fresh run at W′) |
 //! | [`trainer`] | end-to-end training loop; [`trainer::ScheduleKind`] names schedules uniformly across runtime, simulator, and traffic model; with `--journal` the loop commits an epoch boundary per step and replays a mid-step failure from the last committed boundary (kill-a-worker recovery, bit-identical loss curve) |
 
+pub mod autotune;
 pub mod coordinator;
 pub mod exec;
 pub mod lp;

@@ -6,6 +6,7 @@ pub mod search;
 pub mod simplex;
 
 pub use search::{
-    find_optimal_config, solve_config, solve_config_cached, ssd_working_set, ConfigResult,
+    alpha_grid, find_optimal_config, solve_config, solve_config_cached, ssd_working_set,
+    ConfigResult,
 };
 pub use simplex::{LinProg, LpOutcome};

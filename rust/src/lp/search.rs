@@ -261,9 +261,16 @@ fn solve_config_absorbed(sp: &SystemParams, m: u64, alpha: f64) -> Option<Config
     }
 }
 
+/// The α grid Algorithm 1 searches (0.01 … 0.50 in steps of 0.01) — shared
+/// with the [`crate::autotune`] refinement so both searches quantize the
+/// delay ratio identically.
+pub fn alpha_grid() -> Vec<f64> {
+    (1..=50).map(|i| i as f64 / 100.0).collect()
+}
+
 /// The outer search of Algorithm 1.
 pub fn find_optimal_config(sp: &SystemParams) -> Option<ConfigResult> {
-    let alphas: Vec<f64> = (1..=50).map(|i| i as f64 / 100.0).collect();
+    let alphas: Vec<f64> = alpha_grid();
     let mut best_overall: Option<ConfigResult> = None;
     let mut max_throughput = 0.0_f64;
     let mut m = 0u64;

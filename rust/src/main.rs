@@ -5,6 +5,8 @@
 //!   serve     — forward-only multi-tenant token generation off the SSD tier
 //!   simulate  — discrete-event simulation of a paper configuration
 //!   search    — LP-based configuration search (Algorithm 1)
+//!   autotune  — sim-driven search over the full knob surface for a
+//!               hardware profile (device curves + machine + model)
 //!   roofline  — print the §3.1 roofline for a model/machine
 //!
 //! `greedysnake <subcommand> --help` lists options.
@@ -14,7 +16,7 @@ use anyhow::{bail, Result};
 use greedysnake::coordinator::TrainerConfig;
 use greedysnake::lp;
 use greedysnake::machine::{MACHINE1_A5000, MACHINE2_A100};
-use greedysnake::memory::Precision;
+use greedysnake::memory::{BatchConfig, DeviceProfile, Precision};
 use greedysnake::modelcfg::{ModelCfg, GPT_175B, GPT_30B, GPT_65B, SEQ_LEN};
 use greedysnake::perfmodel::{ByteMults, SystemParams};
 use greedysnake::roofline::Roofline;
@@ -22,6 +24,7 @@ use greedysnake::runtime::Manifest;
 use greedysnake::sim::{simulate_dist, simulate_store_prec, DistConfig, Schedule};
 use greedysnake::trainer::{train, ScheduleKind};
 use greedysnake::util::cli::Cli;
+use greedysnake::util::json::Json;
 use greedysnake::util::table::Table;
 
 fn model_by_name(name: &str) -> Result<ModelCfg> {
@@ -55,7 +58,7 @@ fn machine_by_name(name: &str) -> Result<greedysnake::machine::Machine> {
 fn main() -> Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
-        eprintln!("usage: greedysnake <train|serve|simulate|search|roofline> [options]");
+        eprintln!("usage: greedysnake <train|serve|simulate|search|autotune|roofline> [options]");
         std::process::exit(2);
     }
     let sub = args.remove(0);
@@ -64,6 +67,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(args),
         "simulate" => cmd_simulate(args),
         "search" => cmd_search(args),
+        "autotune" => cmd_autotune(args),
         "roofline" => cmd_roofline(args),
         other => bail!("unknown subcommand '{other}'"),
     }
@@ -93,6 +97,23 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
         .opt("seed", "rng seed", Some("42"))
         .opt("ssd-read-gbps", "simulated SSD read bandwidth (GB/s; 0 = unthrottled)", Some("0"))
         .opt("ssd-write-gbps", "simulated SSD write bandwidth (GB/s; 0 = unthrottled)", Some("0"))
+        .opt(
+            "nvme-profile",
+            "JSON file with an NVMe device-curve object (read_gbps/write_gbps required; \
+             qd_knee, sat_kib, mix_penalty, op_latency_us optional — see the memory \
+             module docs). Shapes every backing device's timing; explicit \
+             --ssd-read/write-gbps re-rate the curve's peaks. Results stay \
+             bit-identical to the flat throttle — only timing changes",
+            None,
+        )
+        .opt(
+            "io-batch",
+            "io_uring-style submission-batching window BYTES[:OPS] (default OPS 32): \
+             concurrent sub-saturating transfers on one device coalesce into one ring \
+             submission, amortizing the profile's per-op latency floor. Timing-only; \
+             losses and digests are bit-identical at any window",
+            None,
+        )
         .opt(
             "io-depth",
             "async I/O lookahead K: prefetch the next K visits' parameter loads and \
@@ -176,6 +197,30 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
     let alpha: f64 = cli.get_parsed("alpha")?;
     let r: f64 = cli.get_parsed("ssd-read-gbps")?;
     let w: f64 = cli.get_parsed("ssd-write-gbps")?;
+    let nvme: Option<DeviceProfile> = match cli.get("nvme-profile") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading --nvme-profile '{path}': {e}"))?;
+            Some(DeviceProfile::from_json(&Json::parse(&text)?)?)
+        }
+        None => None,
+    };
+    let io_batch: Option<BatchConfig> = match cli.get("io-batch") {
+        Some(s) => Some(BatchConfig::parse(&s)?),
+        None => None,
+    };
+    // explicit bandwidth flags win; otherwise a profile supplies its own
+    // measured peaks; otherwise unthrottled
+    let read_bps = if r > 0.0 {
+        r * 1e9
+    } else {
+        nvme.map(|p| p.read_bps).unwrap_or(f64::INFINITY)
+    };
+    let write_bps = if w > 0.0 {
+        w * 1e9
+    } else {
+        nvme.map(|p| p.write_bps).unwrap_or(f64::INFINITY)
+    };
     let cfg = TrainerConfig {
         alpha: if kind.supports_delay() { alpha } else { 0.0 },
         opt_on_ssd: !cli.has_flag("opt-on-cpu"),
@@ -190,8 +235,10 @@ fn cmd_train(args: Vec<String>) -> Result<()> {
             weight_decay: 0.01,
             ..Default::default()
         },
-        ssd_read_bps: if r > 0.0 { r * 1e9 } else { f64::INFINITY },
-        ssd_write_bps: if w > 0.0 { w * 1e9 } else { f64::INFINITY },
+        ssd_read_bps: read_bps,
+        ssd_write_bps: write_bps,
+        nvme,
+        io_batch,
         ssds: cli.get_parsed::<usize>("ssds")?.max(1),
         cpu_cache_mb: cli.get_parsed("cpu-cache-mb")?,
         planned: cli.has_flag("planned"),
@@ -589,6 +636,73 @@ fn cmd_search(args: Vec<String>) -> Result<()> {
         }
         None => println!("no feasible configuration"),
     }
+    Ok(())
+}
+
+fn cmd_autotune(args: Vec<String>) -> Result<()> {
+    use greedysnake::autotune::{autotune, default_knobs, eval_knobs, HwProfile};
+    let cli = Cli::new(
+        "greedysnake autotune",
+        "sim-driven configuration search: seed with Algorithm 1, refine every CLI knob \
+         (schedule, io-depth, ssds, cache, workers, sharding, precision, io-batch) by \
+         coordinate descent with the NVMe-device-curve simulator as the objective, and \
+         print the winning train flags plus the predicted roofline gap",
+    )
+    .opt(
+        "hw",
+        "hardware-profile JSON file: machine capacities/compute plus a 'devices' array \
+         of NVMe curve objects (see the memory module docs). Omit to use --machine's \
+         built-in profile",
+        None,
+    )
+    .opt("machine", "a5000|a100 built-in profile when no --hw file is given", Some("a100"))
+    .opt("model", "30b|65b|175b", Some("65b"))
+    .opt("micro-batch", "micro-batch size B", Some("2"))
+    .parse_from(args)?;
+
+    let hw = match cli.get("hw") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading --hw '{path}': {e}"))?;
+            HwProfile::parse(&text)?
+        }
+        None => HwProfile::builtin(machine_by_name(&cli.get("machine").unwrap())?),
+    };
+    let model = model_by_name(&cli.get("model").unwrap())?;
+    let micro_batch: u64 = cli.get_parsed("micro-batch")?;
+
+    let dev = &hw.devices[0];
+    println!(
+        "autotuning {} on {} ({} device(s): {:.1}/{:.1} GB/s r/w, QD knee {}, \
+         sat {} KiB, mix {:.0}%, op latency {:.0}us)",
+        model.name,
+        hw.machine.name,
+        hw.devices.len(),
+        dev.read_bps / 1e9,
+        dev.write_bps / 1e9,
+        dev.qd_knee,
+        dev.sat_bytes >> 10,
+        100.0 * dev.mix_penalty,
+        dev.op_latency_s * 1e6,
+    );
+
+    let def = default_knobs(&hw, model, micro_batch);
+    let def_r = eval_knobs(&hw, model, micro_batch, &def);
+    let tuned = autotune(&hw, model, micro_batch)?;
+    println!(
+        "hand-picked default: {:.1}s/iter, {:.0} tokens/s (schedule={} io-depth={})",
+        def_r.t_iter, def_r.tokens_per_s, def.schedule, def.io_depth,
+    );
+    println!(
+        "tuned:               {:.1}s/iter, {:.0} tokens/s ({:.2}x default, \
+         {:.0}% of the roofline envelope's {:.0} tokens/s)",
+        tuned.t_iter,
+        tuned.tokens_per_s,
+        tuned.tokens_per_s / def_r.tokens_per_s.max(1e-9),
+        100.0 * tuned.roofline_frac(),
+        tuned.ideal_tokens_per_s,
+    );
+    println!("greedysnake train {}", tuned.cli_flags());
     Ok(())
 }
 

@@ -10,6 +10,52 @@
 //! [`tier::Category`] (two-tier equivalence: bit-identity at f32,
 //! tolerance-pinned at f16/bf16 — see `store.rs`), and the §5 pinned-buffer
 //! pool with the dynamic-programming power-of-two packing.
+//!
+//! # The NVMe device model
+//!
+//! The SSD tier's timing comes from a [`DeviceProfile`] enforced by a
+//! [`DeviceThrottle`] (see [`throttle`]). A profile shapes the flat peak
+//! bandwidth pair with four effects, all disabled in the degenerate
+//! [`DeviceProfile::flat`] form (which is bit- and timing-identical to the
+//! pre-profile token-bucket [`Throttle`] pair):
+//!
+//! * **QD ramp** — delivered bandwidth × `min(1, QD / qd_knee)`, QD sampled
+//!   from the transfers actually outstanding on the device;
+//! * **size ramp** — × `min(1, request_bytes / sat_bytes)` (`sat_bytes` is
+//!   the saturating request size; 0 disables);
+//! * **mix penalty** — × `(1 − mix_penalty)` while the other direction has
+//!   traffic in flight;
+//! * **latency floor** — every submission pays `op_latency_s` up front,
+//!   unless it coalesces into an open `--io-batch` submission window
+//!   ([`BatchConfig`]): concurrent sub-`sat_bytes` submissions that arrive
+//!   while the device is busy join one ring submission (≤ `max_ops` ops /
+//!   `max_bytes` bytes) and only the window's first op pays the floor.
+//!
+//! Only *timing* depends on the profile and the batch window — stored
+//! bytes, object layout, and every byte counter are invariant, so flat and
+//! profiled runs are bit-identical (the batching determinism contract).
+//!
+//! # Hardware-profile JSON
+//!
+//! `greedysnake autotune --hw FILE` and `--nvme-profile FILE` read device
+//! curves from JSON. A device object (parsed by
+//! [`DeviceProfile::from_json`]) looks like:
+//!
+//! ```json
+//! {"read_gbps": 3.2, "write_gbps": 2.8, "qd_knee": 8,
+//!  "sat_kib": 256, "mix_penalty": 0.15, "op_latency_us": 80}
+//! ```
+//!
+//! `read_gbps`/`write_gbps` are required; the curve fields default to the
+//! flat profile. The full hardware profile (see [`crate::autotune`]) wraps
+//! a machine description plus a `"devices"` array of these objects:
+//!
+//! ```json
+//! {"gpu_mem_gib": 24, "cpu_mem_gib": 128, "pcie_gbps": 16,
+//!  "link_gbps": 56, "gpu_tflops": 70, "cpu_adam_gelems": 2.0,
+//!  "devices": [{"read_gbps": 3.2, "write_gbps": 2.8, "qd_knee": 8,
+//!               "sat_kib": 256, "op_latency_us": 80}]}
+//! ```
 
 pub mod codec;
 pub mod pinned;
@@ -26,5 +72,5 @@ pub use store::{
     CachedStore, JournalStore, PathId, PathStats, PlannedConfig, PlannedStore, SsdBackend,
     StripedStore, TensorStore, TransferPlan,
 };
-pub use throttle::Throttle;
+pub use throttle::{BatchConfig, DeviceProfile, DeviceThrottle, Throttle};
 pub use tier::{Category, Tier};

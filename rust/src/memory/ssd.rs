@@ -1,10 +1,16 @@
-//! File-backed SSD tier with independent read/write bandwidth throttles.
+//! File-backed SSD tier with a QD-aware device model on independent
+//! read/write lanes.
 //!
 //! Substitution for the paper's NVMe namespace (DESIGN.md): objects are
 //! stored in one flat backing file managed with a free-list, I/O goes through
-//! real `pread`/`pwrite` positioned syscalls, and a [`Throttle`] caps the
-//! rates to the paper's few-GB/s regime. The optimizer-state round trip that
-//! creates the §3.1 I/O roofline therefore happens byte-for-byte.
+//! real `pread`/`pwrite` positioned syscalls, and a [`DeviceThrottle`] caps
+//! the rates to the paper's few-GB/s regime — flat by default
+//! ([`SsdStorage::create`], exactly the old [`Throttle`](super::Throttle)
+//! pair), or shaped by a full [`DeviceProfile`] (QD/size curves, mix
+//! penalty, per-op latency floor) with optional io_uring-style submission
+//! batching ([`SsdStorage::with_profile`]). The optimizer-state round trip
+//! that creates the §3.1 I/O roofline therefore happens byte-for-byte, and
+//! with a profiled device it is *priced* the way a real NVMe prices it.
 //!
 //! Concurrency: the layout (object table + free list) lives behind one short
 //! mutex, but data transfer itself is lock-free — positioned I/O
@@ -28,7 +34,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use super::throttle::Throttle;
+use super::throttle::{BatchConfig, DeviceProfile, DeviceThrottle};
 
 /// Key type for stored objects.
 pub type Key = String;
@@ -56,20 +62,36 @@ struct Layout {
     next_gen: u64,
 }
 
-/// Flat-file object store with throttled read/write paths.
+/// Flat-file object store with a profiled device model on the I/O paths.
 pub struct SsdStorage {
     /// No mutex: positioned I/O takes `&File`, so reads and writes to
     /// disjoint extents run concurrently.
     file: File,
     layout: Mutex<Layout>,
-    read_throttle: Throttle,
-    write_throttle: Throttle,
+    dev: DeviceThrottle,
     path: std::path::PathBuf,
 }
 
 impl SsdStorage {
-    /// Create (truncating) a backing file at `path` with the given byte rates.
+    /// Create (truncating) a backing file at `path` with the given flat
+    /// byte rates — exactly the pre-profile throttle semantics
+    /// ([`DeviceProfile::flat`]), bit- and timing-identical to the old
+    /// two-[`Throttle`](super::Throttle) store.
     pub fn create<P: AsRef<Path>>(path: P, read_bps: f64, write_bps: f64) -> Result<Self> {
+        Self::with_profile(path, DeviceProfile::flat(read_bps, write_bps), None)
+    }
+
+    /// Create with a full device model: the profile's QD/size curves, mix
+    /// penalty, and latency floor shape every transfer's timing, and
+    /// `batch` (the `--io-batch` window) coalesces concurrent
+    /// sub-saturating submissions io_uring-style. Only timing depends on
+    /// `(profile, batch)` — stored bytes and the byte counters are
+    /// invariant (the determinism contract the batching proptests pin).
+    pub fn with_profile<P: AsRef<Path>>(
+        path: P,
+        profile: DeviceProfile,
+        batch: Option<BatchConfig>,
+    ) -> Result<Self> {
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -80,8 +102,7 @@ impl SsdStorage {
         Ok(SsdStorage {
             file,
             layout: Mutex::new(Layout::default()),
-            read_throttle: Throttle::new(read_bps),
-            write_throttle: Throttle::new(write_bps),
+            dev: DeviceThrottle::new(profile, batch),
             path: path.as_ref().to_path_buf(),
         })
     }
@@ -89,6 +110,11 @@ impl SsdStorage {
     /// Unthrottled store (tests, setup paths).
     pub fn create_unthrottled<P: AsRef<Path>>(path: P) -> Result<Self> {
         Self::create(path, f64::INFINITY, f64::INFINITY)
+    }
+
+    /// The device model enforcing this store's transfer timing.
+    pub fn device(&self) -> &DeviceThrottle {
+        &self.dev
     }
 
     fn allocate(&self, len: u64) -> Extent {
@@ -159,7 +185,7 @@ impl SsdStorage {
     /// outside the layout lock on the write throttle.
     pub fn put(&self, key: &str, data: &[u8]) -> Result<()> {
         let extent = self.allocate(data.len() as u64);
-        self.write_throttle.transfer(data.len() as u64);
+        self.dev.write(data.len() as u64);
         if let Err(e) = self.file.write_all_at(data, extent.offset) {
             // do not leak the extent we failed to fill
             Self::free_extent(&mut self.layout.lock().unwrap(), extent);
@@ -189,7 +215,7 @@ impl SsdStorage {
                 .objects
                 .get(key)
                 .ok_or_else(|| anyhow!("ssd: no object '{key}'"))?;
-            self.read_throttle.transfer(obj.extent.len);
+            self.dev.read(obj.extent.len);
             out.resize(obj.extent.len as usize, 0);
             self.file
                 .read_exact_at(out, obj.extent.offset)
@@ -258,11 +284,11 @@ impl SsdStorage {
 
     /// Total bytes moved through the read / write paths.
     pub fn bytes_read(&self) -> u64 {
-        self.read_throttle.total_bytes()
+        self.dev.bytes_read()
     }
 
     pub fn bytes_written(&self) -> u64 {
-        self.write_throttle.total_bytes()
+        self.dev.bytes_written()
     }
 
     /// Current backing-file high-water mark.
@@ -498,6 +524,86 @@ mod tests {
         let dt = t0.elapsed();
         // parallel: ~50 ms; serialized they would need ~100 ms
         assert!(dt < std::time::Duration::from_millis(95), "{dt:?}");
+    }
+
+    /// The `with_profile` satellite: a flat profile is bit-identical to the
+    /// plain `create` store (same stored bytes, same counters) AND
+    /// timing-equivalent within tolerance — every pre-profile suite keeps
+    /// its meaning.
+    #[test]
+    fn flat_profile_side_by_side_with_create() {
+        use super::super::throttle::DeviceProfile;
+        let rate = 20_000_000.0; // 20 MB/s
+        let plain = SsdStorage::create(tmp("flat_plain"), rate, rate).unwrap();
+        let prof = SsdStorage::with_profile(
+            tmp("flat_prof"),
+            DeviceProfile::flat(rate, rate),
+            None,
+        )
+        .unwrap();
+        let blob: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        let time = |s: &SsdStorage| {
+            let t0 = std::time::Instant::now();
+            s.put("k", &blob).unwrap(); // 10 ms at 20 MB/s
+            let mut out = Vec::new();
+            s.get("k", &mut out).unwrap(); // 10 ms
+            (t0.elapsed(), out)
+        };
+        let (dt_plain, out_plain) = time(&plain);
+        let (dt_prof, out_prof) = time(&prof);
+        // bit identity of the data plane and the counters
+        assert_eq!(out_plain, out_prof);
+        assert_eq!(out_prof, blob);
+        assert_eq!(plain.bytes_read(), prof.bytes_read());
+        assert_eq!(plain.bytes_written(), prof.bytes_written());
+        assert_eq!(prof.device().batched_ops(), 0, "flat profiles never batch");
+        // timing equivalence within tolerance (both should be ~20 ms)
+        let (a, b) = (dt_plain.as_secs_f64(), dt_prof.as_secs_f64());
+        assert!(a >= 0.018 && b >= 0.018, "{a} {b}");
+        assert!((a - b).abs() < 0.5 * a.max(b), "flat timing diverged: {a}s vs {b}s");
+    }
+
+    /// A profiled + batched device stores the same bytes as the flat one;
+    /// only wall time differs, and the batcher actually coalesces under
+    /// concurrent small puts.
+    #[test]
+    fn profiled_batched_device_round_trips_and_coalesces() {
+        use super::super::throttle::{BatchConfig, DeviceProfile};
+        let profile = DeviceProfile {
+            qd_knee: 4,
+            sat_bytes: 1 << 20,
+            mix_penalty: 0.1,
+            op_latency_s: 5e-4,
+            ..DeviceProfile::flat(f64::INFINITY, f64::INFINITY)
+        };
+        let ssd = std::sync::Arc::new(
+            SsdStorage::with_profile(
+                tmp("profbatch"),
+                profile,
+                Some(BatchConfig { max_bytes: 1 << 20, max_ops: 8 }),
+            )
+            .unwrap(),
+        );
+        let handles: Vec<_> = (0..4u8)
+            .map(|t| {
+                let ssd = std::sync::Arc::clone(&ssd);
+                std::thread::spawn(move || {
+                    for i in 0..8usize {
+                        let key = format!("k{t}_{i}");
+                        ssd.put(&key, &vec![t; 4096 + i]).unwrap();
+                        let mut out = Vec::new();
+                        ssd.get(&key, &mut out).unwrap();
+                        assert_eq!(out, vec![t; 4096 + i]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        ssd.check_consistency().unwrap();
+        assert!(ssd.device().batched_ops() > 0, "no submission ever joined a window");
+        assert_eq!(ssd.bytes_read(), ssd.bytes_written());
     }
 
     #[test]

@@ -298,12 +298,33 @@ impl StripedStore {
         write_bps: f64,
         stripe: u64,
     ) -> Result<Self> {
+        Self::create_profiled(
+            base,
+            devices,
+            crate::memory::DeviceProfile::flat(read_bps, write_bps),
+            None,
+            stripe,
+        )
+    }
+
+    /// [`StripedStore::with_stripe`] with a full device model: every device
+    /// gets the same [`DeviceProfile`](crate::memory::DeviceProfile)
+    /// (QD/size curves, latency floor) and the same optional `--io-batch`
+    /// submission window. A flat profile without batching is exactly
+    /// `with_stripe`.
+    pub fn create_profiled<P: AsRef<Path>>(
+        base: P,
+        devices: usize,
+        profile: crate::memory::DeviceProfile,
+        batch: Option<crate::memory::BatchConfig>,
+        stripe: u64,
+    ) -> Result<Self> {
         ensure!(devices >= 1, "striped store needs at least one device");
         ensure!(stripe >= 1, "stripe chunk must be at least one byte");
         let devices = (0..devices)
             .map(|i| {
                 let path = format!("{}.d{i}", base.as_ref().display());
-                SsdStorage::create(path, read_bps, write_bps)
+                SsdStorage::with_profile(path, profile, batch)
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(StripedStore { devices, stripe, locks: Mutex::new(HashMap::new()) })
@@ -1323,6 +1344,22 @@ impl PlannedStore {
     /// device. The DRAM path participates when `cfg.dram_capacity > 0`,
     /// the remote path when `cfg.remote_bps > 0`.
     pub fn create<P: AsRef<Path>>(base: P, cfg: &PlannedConfig) -> Result<Self> {
+        Self::create_profiled(base, cfg, None, None)
+    }
+
+    /// [`PlannedStore::create`] with a device model: `shape` supplies the
+    /// curve shape (QD knee, size ramp, mix penalty, latency floor) that
+    /// every NVMe device shares, re-rated per device to its `cfg.nvme`
+    /// bandwidth pair ([`DeviceProfile::with_rates`](crate::memory::DeviceProfile::with_rates)),
+    /// and `batch` is the per-device `--io-batch` submission window.
+    /// `shape = None` (or a flat shape) without batching is exactly
+    /// `create`.
+    pub fn create_profiled<P: AsRef<Path>>(
+        base: P,
+        cfg: &PlannedConfig,
+        shape: Option<&crate::memory::DeviceProfile>,
+        batch: Option<crate::memory::BatchConfig>,
+    ) -> Result<Self> {
         ensure!(!cfg.nvme.is_empty(), "planned store needs at least one NVMe device");
         let devices = cfg
             .nvme
@@ -1330,7 +1367,11 @@ impl PlannedStore {
             .enumerate()
             .map(|(i, &(r, w))| {
                 let path = format!("{}.d{i}", base.as_ref().display());
-                SsdStorage::create(path, r, w)
+                let profile = match shape {
+                    Some(p) => p.with_rates(r, w),
+                    None => crate::memory::DeviceProfile::flat(r, w),
+                };
+                SsdStorage::with_profile(path, profile, batch)
             })
             .collect::<Result<Vec<_>>>()?;
         let dram_bps = if cfg.dram_bps > 0.0 { cfg.dram_bps } else { Self::DRAM_BPS };

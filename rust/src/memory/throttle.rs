@@ -1,12 +1,27 @@
-//! Token-bucket bandwidth throttle.
+//! Token-bucket bandwidth throttle and the QD-aware NVMe device model.
 //!
-//! The SSD tier and the simulated PCIe links use this to reproduce the
-//! paper's bandwidth regimes (a few GB/s host↔SSD) on hardware where the
+//! The SSD tier and the simulated PCIe links use [`Throttle`] to reproduce
+//! the paper's bandwidth regimes (a few GB/s host↔SSD) on hardware where the
 //! backing file may actually be much faster. The throttle *adds* delay to
 //! reach the target rate; it never makes a slow medium faster.
+//!
+//! [`DeviceProfile`] generalizes the flat throttle into a real NVMe device
+//! model — queue-depth ramp, request-size ramp, read/write mix penalty, and
+//! a per-op latency floor — and [`DeviceThrottle`] enforces it at runtime
+//! with an io_uring-style submission-batching window ([`BatchConfig`]) that
+//! amortizes the latency floor across concurrent sub-saturating
+//! submissions. A flat profile degenerates EXACTLY to two [`Throttle`]s
+//! (one per direction), which is how every pre-profile suite keeps its
+//! meaning. See the [`crate::memory`] module docs for the profile JSON
+//! format and the curve semantics.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
 
 /// Enforces an average byte rate over a sliding window.
 #[derive(Debug)]
@@ -55,8 +70,13 @@ impl Throttle {
             let start = st.busy_until.max(now);
             st.busy_until = start + dur;
             st.total_bytes += bytes;
-            let wait = st.busy_until.saturating_duration_since(now);
-            st.total_wait += wait;
+            // Each transfer charges its own service time exactly once, so
+            // Σ total_wait == Σ bytes/rate regardless of how callers
+            // overlap. (The old code charged the full queue delay to every
+            // concurrent caller — N overlapping transfers recorded
+            // ~N(N+1)/2 × dur instead of N × dur, so reported wait could
+            // exceed wall-clock × callers.)
+            st.total_wait += dur;
             st.busy_until
         };
         let now = Instant::now();
@@ -71,6 +91,355 @@ impl Throttle {
 
     pub fn total_wait(&self) -> Duration {
         self.state.lock().unwrap().total_wait
+    }
+}
+
+/// Per-device NVMe throughput model (the "Breaking the Memory Wall" curve
+/// family): a direction-split peak bandwidth shaped by three effects real
+/// flat throttles ignore —
+///
+/// * **queue-depth ramp** — delivered bandwidth scales `min(1, QD/qd_knee)`:
+///   a device with `qd_knee = 8` needs 8 outstanding requests to saturate,
+///   so a synchronous (QD 1) caller sees 1/8 of peak;
+/// * **request-size ramp** — scales `min(1, size/sat_bytes)`: requests
+///   below the saturating size `sat_bytes` waste the parallelism of the
+///   flash channels (0 disables the ramp);
+/// * **read/write mix penalty** — concurrent traffic in the other
+///   direction multiplies the rate by `1 − mix_penalty`;
+/// * **per-op latency floor** — every submission pays `op_latency_s`
+///   before its bytes move, which dominates small requests and is exactly
+///   what the [`BatchConfig`] submission window amortizes.
+///
+/// `flat(r, w)` — knee 1, no size ramp, no mix penalty, zero latency — is
+/// bit- and timing-identical to two plain [`Throttle`]s, which keeps every
+/// pre-profile suite meaningful ([`DeviceProfile::is_flat`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceProfile {
+    /// Peak read bandwidth, bytes/s (`f64::INFINITY` = unthrottled).
+    pub read_bps: f64,
+    /// Peak write bandwidth, bytes/s.
+    pub write_bps: f64,
+    /// Queue depth at which the device saturates (≥ 1).
+    pub qd_knee: u32,
+    /// Request size (bytes) at which the device saturates; 0 = no ramp.
+    pub sat_bytes: u64,
+    /// Bandwidth fraction LOST while the other direction is active ∈ [0, 1).
+    pub mix_penalty: f64,
+    /// Fixed per-submission latency, seconds (0 = none).
+    pub op_latency_s: f64,
+}
+
+impl DeviceProfile {
+    /// The degenerate profile: a flat bandwidth pair, exactly today's
+    /// [`Throttle`] semantics.
+    pub fn flat(read_bps: f64, write_bps: f64) -> DeviceProfile {
+        DeviceProfile {
+            read_bps,
+            write_bps,
+            qd_knee: 1,
+            sat_bytes: 0,
+            mix_penalty: 0.0,
+            op_latency_s: 0.0,
+        }
+    }
+
+    /// True when every curve effect is disabled and the profile is
+    /// equivalent to two flat [`Throttle`]s.
+    pub fn is_flat(&self) -> bool {
+        self.qd_knee <= 1
+            && self.sat_bytes == 0
+            && self.mix_penalty == 0.0
+            && self.op_latency_s == 0.0
+    }
+
+    /// Same curve shape, re-rated peaks (the striped/planned stores re-rate
+    /// one measured profile per device).
+    pub fn with_rates(&self, read_bps: f64, write_bps: f64) -> DeviceProfile {
+        DeviceProfile { read_bps, write_bps, ..*self }
+    }
+
+    /// Parse one device object from the hardware-profile JSON (see the
+    /// [`crate::memory`] module docs): `read_gbps`/`write_gbps` required,
+    /// `qd_knee`, `sat_kib`, `mix_penalty`, `op_latency_us` optional
+    /// (defaulting to the flat profile's values).
+    pub fn from_json(v: &Json) -> Result<DeviceProfile> {
+        let gbps = |key: &str| -> Result<f64> {
+            v.get(key)?.as_f64().with_context(|| format!("device profile field '{key}'"))
+        };
+        let opt = |key: &str, default: f64| -> Result<f64> {
+            match v.get(key) {
+                Ok(x) => x.as_f64().with_context(|| format!("device profile field '{key}'")),
+                Err(_) => Ok(default),
+            }
+        };
+        let p = DeviceProfile {
+            read_bps: gbps("read_gbps")? * 1e9,
+            write_bps: gbps("write_gbps")? * 1e9,
+            qd_knee: opt("qd_knee", 1.0)? as u32,
+            sat_bytes: (opt("sat_kib", 0.0)? * 1024.0) as u64,
+            mix_penalty: opt("mix_penalty", 0.0)?,
+            op_latency_s: opt("op_latency_us", 0.0)? * 1e-6,
+        };
+        ensure!(p.read_bps > 0.0 && p.write_bps > 0.0, "device rates must be positive");
+        ensure!(p.qd_knee >= 1, "qd_knee must be >= 1");
+        ensure!((0.0..1.0).contains(&p.mix_penalty), "mix_penalty must be in [0, 1)");
+        ensure!(p.op_latency_s >= 0.0, "op_latency_us must be >= 0");
+        Ok(p)
+    }
+
+    /// Queue-depth bandwidth fraction: `min(1, qd/qd_knee)`.
+    pub fn qd_frac(&self, qd: usize) -> f64 {
+        (qd.max(1) as f64 / self.qd_knee.max(1) as f64).min(1.0)
+    }
+
+    /// Request-size bandwidth fraction: `min(1, bytes/sat_bytes)` (1 when
+    /// the ramp is disabled or the request is empty-but-free).
+    pub fn size_frac(&self, bytes: u64) -> f64 {
+        if self.sat_bytes == 0 {
+            1.0
+        } else {
+            (bytes as f64 / self.sat_bytes as f64).min(1.0)
+        }
+    }
+
+    /// Bandwidth fraction retained under mixed read/write traffic.
+    pub fn mix_frac(&self) -> f64 {
+        1.0 - self.mix_penalty
+    }
+
+    /// Closed-form effective bandwidth for a steady stream of
+    /// `req_bytes`-sized requests at queue depth `qd` with `batch_ops`
+    /// submissions coalesced per ring window (1 = unbatched) — what the
+    /// simulator and the autotuner price I/O with. Each window moves
+    /// `req_bytes × batch_ops` at the curve rate (the window is what the
+    /// device sees, so the size ramp applies to the window) and pays the
+    /// latency floor once:
+    ///
+    /// ```text
+    /// eff = window_bytes / (op_latency + window_bytes / stream_rate)
+    /// stream_rate = peak × size_frac(window_bytes) × qd_frac(qd)
+    /// ```
+    ///
+    /// A flat profile returns the peak rate exactly, for every
+    /// `(req_bytes, qd, batch_ops)` — the sim identity the pin tests hold.
+    pub fn eff_bps(&self, write: bool, req_bytes: u64, qd: usize, batch_ops: u64) -> f64 {
+        let peak = if write { self.write_bps } else { self.read_bps };
+        let k = batch_ops.max(1);
+        let window = (req_bytes.max(1)).saturating_mul(k);
+        let stream = peak * self.size_frac(window) * self.qd_frac(qd);
+        if self.op_latency_s == 0.0 {
+            // No latency floor: the stream rate IS the effective rate. This
+            // short-circuit keeps the flat identity exact (×1.0 is exact in
+            // f64; `w / (w / peak)` is not).
+            return stream;
+        }
+        let service = if stream.is_infinite() { 0.0 } else { window as f64 / stream };
+        window as f64 / (self.op_latency_s + service)
+    }
+}
+
+/// The `--io-batch` submission window: concurrent sub-saturating
+/// submissions that arrive while the device is still busy coalesce into one
+/// ring submission of at most `max_ops` requests / `max_bytes` bytes, and
+/// only the window's FIRST request pays the profile's latency floor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchConfig {
+    pub max_bytes: u64,
+    pub max_ops: u64,
+}
+
+impl Default for BatchConfig {
+    /// One typical ring: 1 MiB / 32 submissions per window.
+    fn default() -> Self {
+        BatchConfig { max_bytes: 1 << 20, max_ops: 32 }
+    }
+}
+
+impl BatchConfig {
+    /// Parse the `--io-batch BYTES[:OPS]` CLI form.
+    pub fn parse(s: &str) -> Result<BatchConfig> {
+        let (bytes, ops) = match s.split_once(':') {
+            Some((b, o)) => (b, Some(o)),
+            None => (s, None),
+        };
+        let max_bytes: u64 =
+            bytes.trim().parse().with_context(|| format!("io-batch bytes in '{s}'"))?;
+        let max_ops: u64 = match ops {
+            Some(o) => o.trim().parse().with_context(|| format!("io-batch ops in '{s}'"))?,
+            None => BatchConfig::default().max_ops,
+        };
+        ensure!(max_bytes >= 1 && max_ops >= 1, "io-batch window must be at least 1:1");
+        Ok(BatchConfig { max_bytes, max_ops })
+    }
+}
+
+/// Per-direction device state. The window counters track the open ring
+/// submission window: ops that join it skip the latency floor.
+#[derive(Debug)]
+struct DirState {
+    busy_until: Instant,
+    total_bytes: u64,
+    total_wait: Duration,
+    total_ops: u64,
+    batched_ops: u64,
+    window_ops: u64,
+    window_bytes: u64,
+}
+
+impl DirState {
+    fn new() -> DirState {
+        DirState {
+            busy_until: Instant::now(),
+            total_bytes: 0,
+            total_wait: Duration::ZERO,
+            total_ops: 0,
+            batched_ops: 0,
+            window_ops: 0,
+            window_bytes: 0,
+        }
+    }
+}
+
+/// Runtime enforcement of a [`DeviceProfile`]: one device, two directions
+/// (independent read/write lanes, like the flat throttle pair it replaces),
+/// with queue depth sampled from the actually-outstanding transfers and an
+/// optional [`BatchConfig`] submission window. Only *timing* depends on the
+/// profile — byte movement and counters are identical for every profile,
+/// which is the batching determinism contract.
+#[derive(Debug)]
+pub struct DeviceThrottle {
+    profile: DeviceProfile,
+    batch: Option<BatchConfig>,
+    read: Mutex<DirState>,
+    write: Mutex<DirState>,
+    inflight_read: AtomicU64,
+    inflight_write: AtomicU64,
+}
+
+impl DeviceThrottle {
+    pub fn new(profile: DeviceProfile, batch: Option<BatchConfig>) -> Self {
+        assert!(profile.read_bps > 0.0 && profile.write_bps > 0.0);
+        DeviceThrottle {
+            profile,
+            batch,
+            read: Mutex::new(DirState::new()),
+            write: Mutex::new(DirState::new()),
+            inflight_read: AtomicU64::new(0),
+            inflight_write: AtomicU64::new(0),
+        }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    pub fn batch(&self) -> Option<BatchConfig> {
+        self.batch
+    }
+
+    /// Account + delay a read of `bytes`.
+    pub fn read(&self, bytes: u64) {
+        self.transfer(false, bytes)
+    }
+
+    /// Account + delay a write of `bytes`.
+    pub fn write(&self, bytes: u64) {
+        self.transfer(true, bytes)
+    }
+
+    fn transfer(&self, write: bool, bytes: u64) {
+        let peak = if write { self.profile.write_bps } else { self.profile.read_bps };
+        let dir = if write { &self.write } else { &self.read };
+        // Unthrottled with no latency floor — or an empty transfer, which
+        // moves nothing and submits nothing: count only (the flat
+        // throttle's infinite-rate fast path).
+        if bytes == 0 || (peak.is_infinite() && self.profile.op_latency_s == 0.0) {
+            let mut st = dir.lock().unwrap();
+            st.total_bytes += bytes;
+            st.total_ops += 1;
+            return;
+        }
+        let (own, other) = if write {
+            (&self.inflight_write, &self.inflight_read)
+        } else {
+            (&self.inflight_read, &self.inflight_write)
+        };
+        // Queue depth is sampled at submission: this transfer plus every
+        // other one still outstanding in the same direction.
+        let qd = own.fetch_add(1, Ordering::SeqCst) as usize + 1;
+        let mixed = other.load(Ordering::SeqCst) > 0;
+        let mut rate = peak * self.profile.size_frac(bytes) * self.profile.qd_frac(qd);
+        if mixed {
+            rate *= self.profile.mix_frac();
+        }
+        let service = if rate.is_infinite() { 0.0 } else { bytes as f64 / rate };
+        let wake = {
+            let mut st = dir.lock().unwrap();
+            let now = Instant::now();
+            // io_uring-style coalescing: a sub-saturating submission that
+            // arrives while the device is busy joins the open ring window
+            // (if the window has room) and skips the latency floor — one
+            // doorbell per window, not per op.
+            let sub_sat = self.profile.sat_bytes == 0 || bytes < self.profile.sat_bytes;
+            let joined = match self.batch {
+                Some(b) => {
+                    self.profile.op_latency_s > 0.0
+                        && sub_sat
+                        && now < st.busy_until
+                        && st.window_ops > 0
+                        && st.window_ops < b.max_ops
+                        && st.window_bytes + bytes <= b.max_bytes
+                }
+                None => false,
+            };
+            let dur = if joined {
+                st.window_ops += 1;
+                st.window_bytes += bytes;
+                st.batched_ops += 1;
+                Duration::from_secs_f64(service)
+            } else {
+                st.window_ops = 1;
+                st.window_bytes = bytes;
+                Duration::from_secs_f64(self.profile.op_latency_s + service)
+            };
+            let start = st.busy_until.max(now);
+            st.busy_until = start + dur;
+            st.total_bytes += bytes;
+            // per-transfer service (+ latency) time, charged exactly once
+            // (the same accounting law as `Throttle::transfer`)
+            st.total_wait += dur;
+            st.total_ops += 1;
+            st.busy_until
+        };
+        let now = Instant::now();
+        if wake > now {
+            std::thread::sleep(wake - now);
+        }
+        own.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.read.lock().unwrap().total_bytes
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.write.lock().unwrap().total_bytes
+    }
+
+    /// Total submissions, both directions.
+    pub fn total_ops(&self) -> u64 {
+        self.read.lock().unwrap().total_ops + self.write.lock().unwrap().total_ops
+    }
+
+    /// Submissions that joined an open ring window (skipped the latency
+    /// floor) — the batcher's effectiveness counter.
+    pub fn batched_ops(&self) -> u64 {
+        self.read.lock().unwrap().batched_ops + self.write.lock().unwrap().batched_ops
+    }
+
+    /// Modeled device-busy time charged so far, both directions.
+    pub fn total_wait(&self) -> Duration {
+        self.read.lock().unwrap().total_wait + self.write.lock().unwrap().total_wait
     }
 }
 
@@ -119,5 +488,198 @@ mod tests {
         t.transfer(1000);
         t.transfer(2000);
         assert_eq!(t.total_bytes(), 3000);
+    }
+
+    /// Regression for the `total_wait` over-count: N overlapping transfers
+    /// used to each record the full queue delay (Σ ≈ N(N+1)/2 × dur);
+    /// per-transfer service time must be recorded once, so the sum pins to
+    /// Σ bytes/rate and can never exceed the concurrent elapsed wall clock
+    /// times the caller count.
+    #[test]
+    fn total_wait_records_service_time_once() {
+        let rate = 10_000_000.0; // 10 MB/s
+        let t = std::sync::Arc::new(Throttle::new(rate));
+        let per = 250_000u64; // 25 ms each
+        let n = 4u64;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let t = std::sync::Arc::clone(&t);
+                std::thread::spawn(move || t.transfer(per))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        let expect = Duration::from_secs_f64((n * per) as f64 / rate); // 100 ms
+        let wait = t.total_wait();
+        assert_eq!(wait, expect, "Σ total_wait must equal Σ bytes/rate exactly");
+        // the old over-count would have recorded ~(1+2+3+4)×25 = 250 ms here
+        assert!(
+            wait <= elapsed + Duration::from_millis(5),
+            "recorded wait {wait:?} exceeds elapsed {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn flat_profile_is_flat_and_degenerate() {
+        let p = DeviceProfile::flat(3.2e9, 2.8e9);
+        assert!(p.is_flat());
+        for (req, qd, k) in [(1u64, 1usize, 1u64), (4096, 8, 16), (1 << 20, 64, 1)] {
+            assert_eq!(p.eff_bps(false, req, qd, k), 3.2e9);
+            assert_eq!(p.eff_bps(true, req, qd, k), 2.8e9);
+        }
+        assert!(!DeviceProfile { qd_knee: 8, ..p }.is_flat());
+        assert!(!DeviceProfile { op_latency_s: 1e-4, ..p }.is_flat());
+    }
+
+    #[test]
+    fn curves_are_monotone_in_qd_size_and_batch() {
+        let p = DeviceProfile {
+            read_bps: 3.2e9,
+            write_bps: 2.8e9,
+            qd_knee: 8,
+            sat_bytes: 256 * 1024,
+            mix_penalty: 0.2,
+            op_latency_s: 80e-6,
+        };
+        // QD ramp up to the knee, then flat
+        let e1 = p.eff_bps(false, 64 * 1024, 1, 1);
+        let e4 = p.eff_bps(false, 64 * 1024, 4, 1);
+        let e8 = p.eff_bps(false, 64 * 1024, 8, 1);
+        let e16 = p.eff_bps(false, 64 * 1024, 16, 1);
+        assert!(e1 < e4 && e4 < e8, "{e1} {e4} {e8}");
+        assert_eq!(e8, e16, "flat past the knee");
+        // size ramp toward sat_bytes
+        let s4k = p.eff_bps(false, 4 * 1024, 8, 1);
+        let s64k = p.eff_bps(false, 64 * 1024, 8, 1);
+        let s1m = p.eff_bps(false, 1 << 20, 8, 1);
+        assert!(s4k < s64k && s64k < s1m, "{s4k} {s64k} {s1m}");
+        // saturated requests approach (but never exceed) peak
+        assert!(s1m <= 3.2e9 && s1m > 0.9 * 3.2e9, "{s1m}");
+        // batching amortizes the latency floor for small requests
+        let b1 = p.eff_bps(false, 16 * 1024, 8, 1);
+        let b8 = p.eff_bps(false, 16 * 1024, 8, 8);
+        assert!(b8 > 1.5 * b1, "batched {b8} vs unbatched {b1}");
+        // mix penalty
+        assert_eq!(p.mix_frac(), 0.8);
+    }
+
+    #[test]
+    fn profile_json_roundtrip_and_defaults() {
+        let full = Json::parse(
+            r#"{"read_gbps": 3.2, "write_gbps": 2.8, "qd_knee": 8,
+                "sat_kib": 256, "mix_penalty": 0.15, "op_latency_us": 80}"#,
+        )
+        .unwrap();
+        let p = DeviceProfile::from_json(&full).unwrap();
+        assert_eq!(p.read_bps, 3.2e9);
+        assert_eq!(p.write_bps, 2.8e9);
+        assert_eq!(p.qd_knee, 8);
+        assert_eq!(p.sat_bytes, 256 * 1024);
+        assert_eq!(p.mix_penalty, 0.15);
+        assert!((p.op_latency_s - 80e-6).abs() < 1e-12);
+        // omitted curve fields default to the flat profile
+        let min = Json::parse(r#"{"read_gbps": 1.0, "write_gbps": 1.0}"#).unwrap();
+        assert!(DeviceProfile::from_json(&min).unwrap().is_flat());
+        // missing rates are an error
+        let bad = Json::parse(r#"{"read_gbps": 1.0}"#).unwrap();
+        assert!(DeviceProfile::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn io_batch_cli_parse() {
+        assert_eq!(
+            BatchConfig::parse("1048576:16").unwrap(),
+            BatchConfig { max_bytes: 1 << 20, max_ops: 16 }
+        );
+        assert_eq!(BatchConfig::parse("65536").unwrap().max_bytes, 65536);
+        assert_eq!(BatchConfig::parse("65536").unwrap().max_ops, 32);
+        assert!(BatchConfig::parse("0:4").is_err());
+        assert!(BatchConfig::parse("nope").is_err());
+    }
+
+    /// Flat-profile timing compatibility: the device throttle at a flat
+    /// profile enforces the same rate as the plain throttle it replaces.
+    #[test]
+    fn flat_device_throttle_enforces_rate() {
+        let d = DeviceThrottle::new(DeviceProfile::flat(f64::INFINITY, 10_000_000.0), None);
+        let t0 = Instant::now();
+        d.write(500_000); // 50 ms at 10 MB/s
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(45), "{dt:?}");
+        assert!(dt < Duration::from_millis(500), "{dt:?}");
+        // reads are unthrottled and instant
+        let t0 = Instant::now();
+        d.read(1 << 30);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        assert_eq!(d.bytes_read(), 1 << 30);
+        assert_eq!(d.bytes_written(), 500_000);
+        assert_eq!(d.batched_ops(), 0);
+    }
+
+    /// The latency floor is real: ops pay it unbatched, and the submission
+    /// window amortizes it — same bytes, far less wall time.
+    #[test]
+    fn batch_window_amortizes_latency_floor() {
+        let profile = DeviceProfile {
+            op_latency_s: 2e-3,
+            sat_bytes: 1 << 20,
+            ..DeviceProfile::flat(f64::INFINITY, f64::INFINITY)
+        };
+        let run = |batch: Option<BatchConfig>| {
+            let d = std::sync::Arc::new(DeviceThrottle::new(profile, batch));
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let d = std::sync::Arc::clone(&d);
+                    std::thread::spawn(move || {
+                        for _ in 0..10 {
+                            d.write(4096);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            (t0.elapsed(), d.total_ops(), d.batched_ops())
+        };
+        let (un, un_ops, un_batched) = run(None);
+        let (ba, ba_ops, ba_batched) = run(Some(BatchConfig { max_bytes: 1 << 20, max_ops: 8 }));
+        assert_eq!((un_ops, ba_ops), (40, 40));
+        assert_eq!(un_batched, 0);
+        assert!(ba_batched > 0, "window never coalesced");
+        // 40 × 2 ms unbatched ≈ 80 ms; batched pays one floor per window
+        assert!(un >= Duration::from_millis(70), "{un:?}");
+        assert!(
+            ba.as_secs_f64() < 0.6 * un.as_secs_f64(),
+            "batched {ba:?} vs unbatched {un:?}"
+        );
+    }
+
+    /// Byte counters are profile- and batch-invariant (the determinism
+    /// contract: only timing may change).
+    #[test]
+    fn counters_invariant_across_profiles() {
+        let flat = DeviceThrottle::new(DeviceProfile::flat(f64::INFINITY, f64::INFINITY), None);
+        let curved = DeviceThrottle::new(
+            DeviceProfile {
+                qd_knee: 4,
+                sat_bytes: 64 * 1024,
+                op_latency_s: 1e-5,
+                ..DeviceProfile::flat(1e12, 1e12)
+            },
+            Some(BatchConfig::default()),
+        );
+        for d in [&flat, &curved] {
+            d.write(1000);
+            d.write(2000);
+            d.read(500);
+        }
+        assert_eq!(flat.bytes_written(), curved.bytes_written());
+        assert_eq!(flat.bytes_read(), curved.bytes_read());
+        assert_eq!(flat.total_ops(), curved.total_ops());
     }
 }

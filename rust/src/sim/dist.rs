@@ -109,6 +109,36 @@ pub fn simulate_dist(sp: &SystemParams, m: u64, schedule: Schedule, cfg: DistCon
     }
 }
 
+/// [`simulate_dist`] with the shared SSD tier priced by an NVMe
+/// [`DeviceProfile`](crate::memory::DeviceProfile) curve — the dist twin of
+/// [`simulate_io_dev`](super::schedules::simulate_io_dev), and the
+/// objective the [`crate::autotune`] search minimizes. Effective per-device
+/// read/write rates come from
+/// [`eff_bps`](crate::memory::DeviceProfile::eff_bps) at the steady request
+/// sizes (`read_req`/`write_req` bytes) and the per-worker queue depth,
+/// times the mix penalty (training traffic interleaves both directions);
+/// each of the `cfg.ssds` modeled devices then runs at that rate. A flat
+/// profile at `sp`'s own SSD bandwidths is exactly [`simulate_dist`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_dist_dev(
+    sp: &SystemParams,
+    m: u64,
+    schedule: Schedule,
+    cfg: DistConfig,
+    profile: &crate::memory::DeviceProfile,
+    read_req: u64,
+    write_req: u64,
+    batch_ops: u64,
+) -> SimResult {
+    let qd = cfg.io_depth.clamp(1, 1 << 20);
+    let r = profile.eff_bps(false, read_req, qd, batch_ops) * profile.mix_frac();
+    let w = profile.eff_bps(true, write_req, qd, batch_ops) * profile.mix_frac();
+    let mut sp2 = *sp;
+    sp2.node.machine.ssd_read_bw = r;
+    sp2.node.machine.ssd_write_bw = w;
+    simulate_dist(&sp2, m, schedule, cfg)
+}
+
 /// Storage ratios the schedule implies (the dist builder needs only x; the
 /// horizontal baselines use their heuristic placement).
 fn ratios_of(sp: &SystemParams, m: u64, schedule: Schedule) -> StorageRatios {
@@ -449,6 +479,33 @@ mod tests {
 
     fn cfg(workers: usize, ssds: usize) -> DistConfig {
         DistConfig { workers, ssds, ..DistConfig::default() }
+    }
+
+    /// Device-curve pin: a flat profile at the machine's own rates leaves
+    /// `simulate_dist_dev` bit-identical to `simulate_dist`, and a curved
+    /// profile strictly slows small-request SSD-bound traffic.
+    #[test]
+    fn simulate_dist_dev_flat_identity() {
+        use crate::memory::DeviceProfile;
+        let sp = sp();
+        let x = StorageRatios::ALL_SSD;
+        let (r, w) = (sp.node.machine.ssd_read_bw, sp.node.machine.ssd_write_bw);
+        let flat = DeviceProfile::flat(r, w);
+        let dev = simulate_dist_dev(&sp, 16, gs(x), cfg(2, 1), &flat, 4096, 4096, 1);
+        let plain = simulate_dist(&sp, 16, gs(x), cfg(2, 1));
+        assert_eq!(dev.t_iter, plain.t_iter, "flat identity");
+        let curvy =
+            DeviceProfile { qd_knee: 8, sat_bytes: 1 << 20, op_latency_s: 100e-6, ..flat };
+        let mut c = cfg(2, 1);
+        c.io_depth = 2;
+        let slow = simulate_dist_dev(&sp, 16, gs(x), c, &curvy, 64 << 10, 64 << 10, 1);
+        let base = simulate_dist(&sp, 16, gs(x), c);
+        assert!(
+            slow.t_iter > base.t_iter,
+            "curved small-request profile {} must be slower than flat {}",
+            slow.t_iter,
+            base.t_iter
+        );
     }
 
     /// The satellite contention property: two workers hammering ONE SSD are

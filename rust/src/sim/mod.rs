@@ -21,6 +21,12 @@
 //! the multi-path `PlannedStore`: the SSD tier runs at the aggregate
 //! bandwidth of the plan's concurrent DRAM/NVMe/remote paths
 //! ([`schedules::planned_bandwidth`] — Σ path rates until a path saturates).
+//! [`schedules::simulate_io_dev`] and [`dist::simulate_dist_dev`] replace
+//! the flat SSD peak with an NVMe [`crate::memory::DeviceProfile`] curve —
+//! QD ramp, request-size ramp, mix penalty, per-op latency floor, and the
+//! `--io-batch` submission-window amortization — so small requests are
+//! priced honestly; a flat profile is the exact identity, and these are the
+//! objective the [`crate::autotune`] search minimizes.
 //!
 //! The forward-only serving engine has its own twin in [`serve`]:
 //! schedule-ordered decode token steps streaming the shared base image (and
@@ -43,10 +49,10 @@ pub mod engine;
 pub mod schedules;
 pub mod serve;
 
-pub use dist::{simulate_dist, DistConfig};
+pub use dist::{simulate_dist, simulate_dist_dev, DistConfig};
 pub use engine::{DiscreteSim, Resource, SimOp};
 pub use schedules::{
-    planned_bandwidth, simulate, simulate_io, simulate_planned, simulate_store,
+    planned_bandwidth, simulate, simulate_io, simulate_io_dev, simulate_planned, simulate_store,
     simulate_store_prec, Schedule, SimResult,
 };
 pub use serve::{simulate_serve, serve_token_bound, ServeSimConfig, ServeSimResult};

@@ -177,6 +177,42 @@ pub fn simulate_planned(
     simulate_io(&sp2, m, schedule2, io_depth)
 }
 
+/// Simulate with the SSD tier priced by an NVMe
+/// [`DeviceProfile`](crate::memory::DeviceProfile) curve instead of flat
+/// peak bandwidth: the effective read/write rates come from
+/// [`eff_bps`](crate::memory::DeviceProfile::eff_bps) at the run's steady
+/// request sizes (`read_req`/`write_req` bytes — typically a layer's
+/// checkpoint or parameter object, divided across the striped devices),
+/// queue depth `io_depth` (the lanes keep that many transfers in flight),
+/// and `batch_ops` submissions coalesced per `--io-batch` ring window
+/// (1 = unbatched). Training traffic interleaves both directions, so the
+/// mix penalty applies to each. This is how `simulate_io` prices small
+/// requests *honestly*: sub-`sat_bytes` objects pay the size ramp and the
+/// per-op latency floor unless batching amortizes it.
+///
+/// With a [`flat`](crate::memory::DeviceProfile::flat) profile at `sp`'s
+/// own SSD bandwidths this is exactly [`simulate_io`] — the identity the
+/// pin test holds bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_io_dev(
+    sp: &SystemParams,
+    m: u64,
+    schedule: Schedule,
+    io_depth: usize,
+    profile: &crate::memory::DeviceProfile,
+    read_req: u64,
+    write_req: u64,
+    batch_ops: u64,
+) -> SimResult {
+    let qd = io_depth.clamp(1, 1 << 20); // usize::MAX ⇒ past any knee
+    let r = profile.eff_bps(false, read_req, qd, batch_ops) * profile.mix_frac();
+    let w = profile.eff_bps(true, write_req, qd, batch_ops) * profile.mix_frac();
+    let mut sp2 = *sp;
+    sp2.node.machine.ssd_read_bw = r;
+    sp2.node.machine.ssd_write_bw = w;
+    simulate_io(&sp2, m, schedule, io_depth)
+}
+
 /// N striped devices = N× aggregate SSD bandwidth (each device keeps its
 /// own full-rate throttle; shares move in parallel).
 pub(crate) fn scale_ssd_bandwidth(sp: &SystemParams, ssds: usize) -> SystemParams {
@@ -1076,6 +1112,46 @@ mod tests {
             multi.t_iter,
             plain.t_iter
         );
+    }
+
+    /// Device-curve sim pins: a flat profile at the machine's own rates is
+    /// bit-identical to plain `simulate_io` at every io-depth; a profiled
+    /// device makes small requests strictly slower on an SSD-bound
+    /// schedule, and coalescing submissions (`batch_ops > 1`) claws the
+    /// loss back monotonically.
+    #[test]
+    fn simulate_io_dev_flat_identity_and_curve_effects() {
+        use crate::memory::DeviceProfile;
+        let sp = sp();
+        let sched = Schedule::GreedySnake { alpha: 0.0, x: StorageRatios::ALL_SSD };
+        let (r, w) = (sp.node.machine.ssd_read_bw, sp.node.machine.ssd_write_bw);
+        let flat = DeviceProfile::flat(r, w);
+        for depth in [1usize, 2, usize::MAX] {
+            let dev = simulate_io_dev(&sp, 8, sched, depth, &flat, 4096, 4096, 1);
+            let plain = simulate_io(&sp, 8, sched, depth);
+            assert_eq!(dev.t_iter, plain.t_iter, "flat identity at depth {depth}");
+        }
+        // A realistic curve: small requests pay the size ramp + latency
+        // floor and the run slows down...
+        let curvy = DeviceProfile {
+            qd_knee: 8,
+            sat_bytes: 1 << 20,
+            mix_penalty: 0.1,
+            op_latency_s: 100e-6,
+            ..flat
+        };
+        let small = simulate_io_dev(&sp, 8, sched, 2, &curvy, 64 << 10, 64 << 10, 1);
+        let plain = simulate_io(&sp, 8, sched, 2);
+        assert!(
+            small.t_iter > plain.t_iter,
+            "profiled small requests {} must be slower than flat {}",
+            small.t_iter,
+            plain.t_iter
+        );
+        // ...and batching monotonically recovers toward (never past) flat.
+        let b8 = simulate_io_dev(&sp, 8, sched, 2, &curvy, 64 << 10, 64 << 10, 8);
+        assert!(b8.t_iter <= small.t_iter, "batched must not be slower than unbatched");
+        assert!(b8.t_iter >= plain.t_iter * 0.999, "curve never beats flat peak");
     }
 
     #[test]

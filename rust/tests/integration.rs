@@ -709,6 +709,110 @@ fn store_backends_bit_identical_to_seed() {
     }
 }
 
+/// The NVMe device-model legs the bit-identity suite compares against the
+/// flat-throttle baseline. CI's nvme matrix narrows it via `GS_TEST_NVME`
+/// (comma-separated ∈ {flat, profiled, batched}); "flat" is the baseline
+/// itself and compares trivially.
+fn test_nvme_set() -> Vec<String> {
+    std::env::var("GS_TEST_NVME")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect::<Vec<String>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec!["profiled".to_string(), "batched".to_string()])
+}
+
+fn apply_nvme_leg(c: &mut TrainerConfig, leg: &str) {
+    use greedysnake::memory::{BatchConfig, DeviceProfile};
+    // every curve effect on, rates left at the config's (unthrottled)
+    // peaks so the suite stays fast: the curve shapes TIMING only, which
+    // is exactly what bit-identity must be invariant to
+    let curvy = DeviceProfile {
+        read_bps: f64::INFINITY,
+        write_bps: f64::INFINITY,
+        qd_knee: 4,
+        sat_bytes: 1 << 20,
+        mix_penalty: 0.1,
+        op_latency_s: 20e-6,
+    };
+    match leg {
+        "flat" => {}
+        "profiled" => c.nvme = Some(curvy),
+        "batched" => {
+            c.nvme = Some(curvy);
+            c.io_batch = Some(BatchConfig { max_bytes: 1 << 20, max_ops: 8 });
+        }
+        other => panic!("unknown GS_TEST_NVME leg '{other}' (flat|profiled|batched)"),
+    }
+}
+
+/// The device-model determinism contract (tentpole): a profiled NVMe curve
+/// (QD ramp + size ramp + mix penalty + latency floor) and the `--io-batch`
+/// submission window change ONLY timing — losses, gradient norms, Σx²
+/// parameter/moment digests, and the SSD byte counters are bit-identical
+/// to the flat-throttle seed at every schedule × io-depth, including the
+/// striped multi-device store.
+#[test]
+fn nvme_device_model_bit_identical_to_seed() {
+    let kinds = [ScheduleKind::Vertical, ScheduleKind::ChunkedVertical(2)];
+    for kind in kinds {
+        for depth in [0usize, 2] {
+            for ssds in [1usize, 2] {
+                let mk = |leg: &str| {
+                    let tag = format!("nv_{leg}_d{depth}_s{ssds}_{kind}").replace(':', "_");
+                    let mut c = cfg(&tag);
+                    c.io_depth = depth;
+                    c.ssds = ssds;
+                    c.opt_on_ssd = true;
+                    c.ckpt_on_ssd = true;
+                    apply_nvme_leg(&mut c, leg);
+                    c
+                };
+                let Some(base) = run("nv_base", kind, mk("flat"), 3, 4) else { return };
+                assert!(base.ssd_read > 0, "{kind:?}: offloaded run must touch the SSD");
+                for leg in test_nvme_set() {
+                    if leg == "flat" {
+                        continue; // the baseline itself
+                    }
+                    let log = run("nv_leg", kind, mk(&leg), 3, 4).unwrap();
+                    assert_eq!(
+                        base.losses, log.losses,
+                        "{kind:?} d{depth} ssds={ssds} {leg}: losses diverged"
+                    );
+                    assert_eq!(
+                        base.grad_norms, log.grad_norms,
+                        "{kind:?} d{depth} ssds={ssds} {leg}: grad norms diverged"
+                    );
+                    assert_eq!(
+                        base.param_sq_norm.to_bits(),
+                        log.param_sq_norm.to_bits(),
+                        "{kind:?} d{depth} ssds={ssds} {leg}: parameters diverged"
+                    );
+                    assert_eq!(
+                        base.moment_sq_norm.to_bits(),
+                        log.moment_sq_norm.to_bits(),
+                        "{kind:?} d{depth} ssds={ssds} {leg}: moments diverged"
+                    );
+                    // the byte laws: a curve reprices transfers, it never
+                    // changes what moves
+                    assert_eq!(
+                        base.ssd_read, log.ssd_read,
+                        "{kind:?} d{depth} ssds={ssds} {leg}: read bytes diverged"
+                    );
+                    assert_eq!(
+                        base.ssd_written, log.ssd_written,
+                        "{kind:?} d{depth} ssds={ssds} {leg}: written bytes diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// The striping acceptance property (runtime half): under a throttled SSD
 /// with both moments and checkpoints offloaded, striping over 2 devices
 /// strictly reduces wall-clock — each device carries half the bytes on its

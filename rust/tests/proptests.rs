@@ -699,6 +699,134 @@ fn prop_planned_store_matches_ssd_backend() {
     });
 }
 
+/// The batching determinism contract: an [`SsdStorage`] on a profiled,
+/// `--io-batch`-batched device is byte-identical to the unthrottled store —
+/// same contents, presence, lengths, and byte counters — over arbitrary
+/// put/get/delete sequences AND a concurrent multi-thread put burst (the
+/// traffic shape that actually opens coalescing windows). Only timing may
+/// differ; any divergence in what's stored is a bug in the batcher.
+#[test]
+fn prop_batched_ssd_matches_unbatched() {
+    use greedysnake::memory::{BatchConfig, DeviceProfile, SsdStorage};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    check("batched-ssd-equiv", 15, |rng| {
+        let uniq = UNIQ.fetch_add(1, Ordering::Relaxed);
+        let flat_path = std::env::temp_dir()
+            .join(format!("gs_prop_batch_flat_{}_{uniq}", std::process::id()));
+        let dev_path = std::env::temp_dir()
+            .join(format!("gs_prop_batch_dev_{}_{uniq}", std::process::id()));
+        let flat = SsdStorage::create_unthrottled(flat_path).map_err(|e| e.to_string())?;
+        // infinite peaks keep the test fast; the latency floor + window are
+        // what the batcher actually exercises
+        let profile = DeviceProfile {
+            read_bps: f64::INFINITY,
+            write_bps: f64::INFINITY,
+            qd_knee: gen::usize_in(rng, 1, 8) as u32,
+            sat_bytes: 1 << 20,
+            mix_penalty: 0.1,
+            op_latency_s: 30e-6,
+        };
+        let batch = BatchConfig { max_bytes: 1 << 20, max_ops: gen::usize_in(rng, 2, 16) as u64 };
+        let batched = SsdStorage::with_profile(&dev_path, profile, Some(batch))
+            .map_err(|e| e.to_string())?;
+        // phase 1: mirrored random sequential ops
+        let keys = ["a", "b", "c", "d", "e"];
+        for op in 0..30 {
+            let key = keys[gen::usize_in(rng, 0, keys.len() - 1)];
+            match gen::usize_in(rng, 0, 3) {
+                0 | 1 => {
+                    let len = gen::usize_in(rng, 0, 5000);
+                    let fill = gen::usize_in(rng, 0, 255) as u8;
+                    let data: Vec<u8> = (0..len).map(|i| fill.wrapping_add(i as u8)).collect();
+                    flat.put(key, &data).map_err(|e| e.to_string())?;
+                    batched.put(key, &data).map_err(|e| e.to_string())?;
+                }
+                2 => {
+                    let a = flat.delete(key);
+                    let b = batched.delete(key);
+                    if a != b {
+                        return Err(format!("op {op}: delete('{key}') {a} vs {b}"));
+                    }
+                }
+                _ => {
+                    let mut x = Vec::new();
+                    let mut y = Vec::new();
+                    let ra = flat.get(key, &mut x);
+                    let rb = batched.get(key, &mut y);
+                    if ra.is_ok() != rb.is_ok() {
+                        return Err(format!(
+                            "op {op}: get('{key}') presence {} vs {}",
+                            ra.is_ok(),
+                            rb.is_ok()
+                        ));
+                    }
+                    if ra.is_ok() && x != y {
+                        return Err(format!("op {op}: get('{key}') content mismatch"));
+                    }
+                }
+            }
+            if flat.contains(key) != batched.contains(key) {
+                return Err(format!("op {op}: contains('{key}') diverged"));
+            }
+            if flat.len_of(key) != batched.len_of(key) {
+                return Err(format!("op {op}: len_of('{key}') diverged"));
+            }
+            if flat.bytes_read() != batched.bytes_read()
+                || flat.bytes_written() != batched.bytes_written()
+            {
+                return Err(format!(
+                    "op {op}: accounting r/w {}/{} vs {}/{}",
+                    flat.bytes_read(),
+                    flat.bytes_written(),
+                    batched.bytes_read(),
+                    batched.bytes_written()
+                ));
+            }
+        }
+        // phase 2: concurrent disjoint-key burst on each store — the shape
+        // that opens coalescing windows on the batched device
+        let n_threads = 4usize;
+        let per = 6usize;
+        for store in [&flat, &batched] {
+            std::thread::scope(|s| {
+                for t in 0..n_threads {
+                    let store = &*store;
+                    s.spawn(move || {
+                        for i in 0..per {
+                            let data: Vec<u8> =
+                                (0..2048).map(|j| (t * 31 + i * 7 + j) as u8).collect();
+                            store.put(&format!("t{t}_k{i}"), &data).unwrap();
+                        }
+                    });
+                }
+            });
+        }
+        for t in 0..n_threads {
+            for i in 0..per {
+                let key = format!("t{t}_k{i}");
+                let mut x = Vec::new();
+                let mut y = Vec::new();
+                flat.get(&key, &mut x).map_err(|e| e.to_string())?;
+                batched.get(&key, &mut y).map_err(|e| e.to_string())?;
+                if x != y {
+                    return Err(format!("burst: '{key}' content diverged"));
+                }
+            }
+        }
+        if flat.bytes_written() != batched.bytes_written() {
+            return Err(format!(
+                "burst: write accounting {} vs {}",
+                flat.bytes_written(),
+                batched.bytes_written()
+            ));
+        }
+        flat.check_consistency().map_err(|e| e.to_string())?;
+        batched.check_consistency().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
 /// The DRAM-cache residual closed form composes with the schedule traffic
 /// forms: for any M and capacity, the residual is either 0 (fits) or the
 /// full store traffic (doesn't) — never anything in between — and the
